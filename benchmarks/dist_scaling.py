@@ -1,0 +1,40 @@
+"""Beyond-paper: multi-device weak-scaling of the distributed seeding
+(the paper stops at 1 GPU; this is the pod-level design). Runs in a
+subprocess-free way IF the process was started with multiple fake devices;
+otherwise reports the collective-volume model (bytes/round, device count)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.data.synthetic import blobs
+
+
+def run(rows: list):
+    n_dev = jax.device_count()
+    if n_dev >= 4:
+        from repro.core import dist_kmeanspp
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        for n in (2 ** 14, 2 ** 16):
+            pts = jnp.asarray(blobs(n, 2, 50, seed=0)[0])
+            t = time_fn(lambda: dist_kmeanspp(jax.random.PRNGKey(0), pts, 50,
+                                              mesh=mesh, axes="data"),
+                        warmup=1, iters=3)
+            rows.append({"bench": "dist_seeding", "n": n, "devices": n_dev,
+                         "seconds": f"{t:.4f}"})
+    # collective model: per seeding round, independent of N
+    for k, d, dev in ((50, 2, 256), (256, 128, 256), (4096, 128, 512)):
+        per_round = 4 + 4 + d * 4          # psum(phi) + argmax pair + winner row
+        rows.append({"bench": "dist_collective_model", "n": f"k={k},d={d}",
+                     "devices": dev, "seconds": f"{per_round * k}B_total"})
+
+
+def main():
+    rows = []
+    run(rows)
+    emit(rows, ["bench", "n", "devices", "seconds"])
+
+
+if __name__ == "__main__":
+    main()

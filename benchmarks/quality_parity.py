@@ -1,0 +1,78 @@
+"""Paper §I claim — "reduce running time while MAINTAINING THE QUALITY of the
+serial algorithm". Inertia parity across variants + init-method comparison
+(random vs k-means++ vs k-means||), plus the beyond-paper integrations'
+quality numbers (KV-PQ reconstruction, kmeans++ router balance)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import (kmeans_parallel_init, kmeanspp, lloyd, quality,
+                        random_init)
+from repro.data.synthetic import blobs
+
+N, D, K = 2 ** 15, 2, 50
+
+
+def run(rows: list):
+    pts = jnp.asarray(blobs(N, D, K, seed=0)[0])
+    seeds = {}
+    for s in range(3):
+        key = jax.random.PRNGKey(s)
+        seeds[("serial", s)] = kmeanspp(key, pts, K, variant="serial",
+                                        sampler="cdf").centroids
+        seeds[("fused", s)] = kmeanspp(key, pts, K, variant="fused",
+                                       sampler="cdf").centroids
+        seeds[("gumbel", s)] = kmeanspp(key, pts, K, variant="fused",
+                                        sampler="gumbel").centroids
+        seeds[("kmeans||", s)] = kmeans_parallel_init(key, pts, K).centroids
+        seeds[("random", s)] = random_init(key, pts, K).centroids
+
+    for method in ("serial", "fused", "gumbel", "kmeans||", "random"):
+        phi_seed, phi_final = [], []
+        for s in range(3):
+            c = seeds[(method, s)]
+            phi_seed.append(float(quality.inertia(pts, c)))
+            phi_final.append(float(lloyd(pts, c, max_iters=30).inertia))
+        rows.append({"bench": "quality_parity", "method": method,
+                     "phi_seed": f"{sum(phi_seed)/3:.1f}",
+                     "phi_after_lloyd": f"{sum(phi_final)/3:.1f}"})
+
+
+def run_integrations(rows: list):
+    # KV-PQ reconstruction error (paper integration #1)
+    from repro.serve import kvquant
+    key = jax.random.PRNGKey(0)
+    base = jax.random.normal(key, (16, 128))
+    coef = jax.random.normal(jax.random.fold_in(key, 1), (8192, 16))
+    kv = coef @ base + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 2), (8192, 128))
+    for n_sub in (4, 8, 16):
+        pq = kvquant.compress_kv(key, kv, n_sub=n_sub)
+        rows.append({"bench": "kvpq", "method": f"n_sub={n_sub}",
+                     "phi_seed": f"{float(kvquant.reconstruction_error(kv, pq)):.4f}",
+                     "phi_after_lloyd": f"{kvquant.compression_ratio(kv, pq):.1f}x"})
+
+    # router init balance (paper integration #2)
+    from repro.core.quality import balance
+    emb = jnp.asarray(blobs(4096, 64, 16, seed=1, spread=0.3)[0])
+    rand_router = jax.random.normal(key, (64, 16)) * 0.02
+    km = kmeanspp(jax.random.PRNGKey(2), emb, 16).centroids
+    km_router = (km / (jnp.linalg.norm(km, axis=1, keepdims=True) + 1e-6)).T
+    for name, router in (("random", rand_router), ("kmeans++", km_router)):
+        a = jnp.argmax(emb @ router, axis=-1)
+        rows.append({"bench": "router_init_balance", "method": name,
+                     "phi_seed": f"{float(balance(a, 16)):.2f}",
+                     "phi_after_lloyd": ""})
+
+
+def main():
+    rows = []
+    run(rows)
+    run_integrations(rows)
+    emit(rows, ["bench", "method", "phi_seed", "phi_after_lloyd"])
+
+
+if __name__ == "__main__":
+    main()

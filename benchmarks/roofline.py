@@ -1,0 +1,27 @@
+"""§Roofline benchmark — reads artifacts/dryrun/*.json (produced by
+repro.launch.dryrun) and emits the per-(arch x shape x mesh) roofline terms."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.roofline.report import csv_rows
+
+
+def run(rows: list):
+    got = csv_rows()
+    if not got:
+        rows.append({"arch": "(no artifacts — run "
+                             "`python -m repro.launch.dryrun` first)"})
+        return
+    rows.extend({"bench": "roofline", **r} for r in got)
+
+
+def main():
+    rows = []
+    run(rows)
+    emit(rows, ["bench", "arch", "shape", "mesh", "compute_s", "memory_s",
+                "collective_s", "bound_s", "dominant", "useful_ratio",
+                "mfu_bound", "roofline_fraction"])
+
+
+if __name__ == "__main__":
+    main()

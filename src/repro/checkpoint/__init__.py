@@ -1,0 +1,4 @@
+"""repro.checkpoint — atomic, async, reshardable checkpoints."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

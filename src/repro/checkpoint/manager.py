@@ -1,0 +1,142 @@
+"""Checkpointing: atomic step directories, async writer, reshard-on-restore.
+
+Format: one ``.npz`` per checkpoint holding every leaf as a FULL array
+(gathered from the mesh) + a JSON manifest with the pytree structure and the
+PartitionSpec of every leaf. Restoring ``device_put``s each full array with
+the CURRENT mesh's NamedSharding — so a run checkpointed on 512 chips
+restarts on 256 (or 8, or 1): elastic re-scaling is a restore-time property,
+not a format property.
+
+Commit protocol (crash-safe): write into ``step_<N>.tmp/`` then atomically
+``rename`` to ``step_<N>/``; readers only ever see renamed (complete)
+directories. The async writer thread makes the save non-blocking for the
+train loop (the arrays are snapshotted to host first, so the step can
+continue mutating device state).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def name(path):
+        parts = []
+        for e in path:
+            if isinstance(e, jax.tree_util.DictKey):
+                parts.append(str(e.key))
+            elif isinstance(e, jax.tree_util.SequenceKey):
+                parts.append(str(e.idx))
+            elif isinstance(e, jax.tree_util.GetAttrKey):
+                parts.append(e.name)
+            else:
+                parts.append(str(e))
+        return "/".join(parts)
+
+    return [(name(p), leaf) for p, leaf in leaves]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Any, *, blocking: bool = False):
+        """Snapshot `state` (pytree of jax/np arrays) and write step_<step>."""
+        named = []
+        dtypes = []
+        for n, x in _flatten_with_names(state):
+            a = np.asarray(jax.device_get(x))
+            dtypes.append(str(a.dtype))
+            # npz can't serialize ml_dtypes (bfloat16 etc.) — store raw bytes;
+            # restore() rebuilds from the manifest dtype + the template leaf
+            if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
+                a = a.view(np.uint8) if a.ndim else np.frombuffer(
+                    a.tobytes(), np.uint8)
+            named.append((n, a))
+        treedef = jax.tree_util.tree_structure(state)
+        manifest = {"step": step, "treedef": str(treedef),
+                    "leaves": [n for n, _ in named], "dtypes": dtypes}
+
+        def write():
+            tmp = self.dir / f"step_{step:08d}.tmp"
+            final = self.dir / f"step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            np.savez(tmp / "arrays.npz",
+                     **{f"leaf_{i}": a for i, (_, a) in enumerate(named)})
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            os.replace(tmp, final)       # atomic commit
+            self._gc()
+
+        self.wait()
+        if self.async_save and not blocking:
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.iterdir()
+                      if p.is_dir() and p.name.startswith("step_")
+                      and not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, *, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[int, Any]:
+        """Restore into the structure of `like`. shardings: optional pytree of
+        NamedShardings (the CURRENT mesh) — this is where elastic resharding
+        happens; None keeps arrays on the default device."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        arrays = np.load(d / "arrays.npz")
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        vals = []
+        for i, l in enumerate(leaves_like):
+            v = arrays[f"leaf_{i}"]
+            want = np.dtype(getattr(l, "dtype", v.dtype))
+            saved = manifest.get("dtypes", [str(v.dtype)] * (i + 1))[i]
+            if v.dtype == np.uint8 and saved != "uint8":
+                # raw-byte leaf (ml_dtypes): rebuild via the template dtype
+                v = np.frombuffer(v.tobytes(), dtype=want).reshape(l.shape)
+            elif v.dtype != want:
+                v = v.astype(want)
+            vals.append(v)
+        tree = jax.tree_util.tree_unflatten(treedef, vals)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return step, tree

@@ -1,0 +1,6 @@
+"""repro.configs — one module per assigned architecture (FULL + SMOKE) +
+the paper's own k-means workload config; registry.get_config resolves
+--arch names; specs.input_specs builds ShapeDtypeStruct stand-ins."""
+from repro.configs.registry import ARCH_NAMES, get_config, get_shape, supported_shapes
+
+__all__ = ["ARCH_NAMES", "get_config", "get_shape", "supported_shapes"]

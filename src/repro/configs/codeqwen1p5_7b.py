@@ -1,0 +1,16 @@
+"""codeqwen1.5-7b [dense] — qwen1.5-arch. 32L d_model=4096 32H (GQA kv=32)
+d_ff=13440 vocab=92416. [hf:Qwen/CodeQwen1.5-7B; hf]
+(qwen1.5's attention QKV bias omitted — noted in DESIGN.md)"""
+from repro.configs.common import ArchConfig
+
+FULL = ArchConfig(
+    name="codeqwen1.5-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, d_ff=13440,
+    vocab=92416, rope_theta=1_000_000.0,
+)
+
+SMOKE = ArchConfig(
+    name="codeqwen-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=512,
+    rope_theta=1_000_000.0,
+)

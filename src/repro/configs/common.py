@@ -1,0 +1,171 @@
+"""Architecture config dataclass shared by all 10 assigned archs + the paper's
+own k-means workload config. Everything the model builders / sharding rules /
+input_specs need is derivable from these fields."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                   # query heads (0 for attn-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+
+    # -- attention extras --
+    sliding_window: int = 0        # 0 = none; gemma2 local layers
+    alt_local_global: bool = False # gemma2: even layers local, odd global
+    attn_softcap: float = 0.0      # gemma2 attention logit softcap
+    logit_softcap: float = 0.0     # gemma2 final logit softcap
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE (t, h, w) dims
+
+    # -- MoE --
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0              # routed-expert hidden dim (if != d_ff)
+    capacity_factor: float = 1.25
+    moe_chunk: int = 32_768        # tokens per dispatch chunk (0 = all at once)
+    expert_pad: int = 16           # pad expert arrays so EP divides the mesh
+    moe_dispatch: str = "gather"   # gather (GSPMD baseline) | a2a (shard_map
+                                   # all-to-all — §Perf hillclimb A)
+
+    # -- SSM / hybrid --
+    ssm_state: int = 0             # mamba2 d_state
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    attn_every: int = 0            # zamba2: shared attn block period
+    rwkv_head_dim: int = 64
+
+    # -- enc-dec (whisper) --
+    encoder_layers: int = 0
+    encoder_seq: int = 0           # precomputed frame embeddings length
+
+    # -- vlm --
+    vision_tokens: int = 0         # patch embeddings per example (stub frontend)
+
+    # -- performance variants (§Perf hillclimb; defaults = paper-faithful) --
+    seq_shard: bool = False        # sequence-parallel residual stream
+                                   # (Korthikanti SP): activations sharded
+                                   # over "model" between blocks
+    serve_dtype: str = ""          # cast float params for serving ("bfloat16")
+    attn_stub: bool = False        # measurement-only: replace attention with
+                                   # a linear-cost stand-in to ATTRIBUTE the
+                                   # HBM traffic of attention (never used for
+                                   # real runs — see EXPERIMENTS.md §Perf B)
+
+    # -- numerics / training --
+    post_norms: bool = False       # gemma2 pre+post sandwich norms
+    embed_scale: bool = False      # gemma: scale embeddings by sqrt(d_model)
+    act: str = "silu"              # mlp gate activation (gemma: gelu)
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    remat: bool = True
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    ssm_chunk: int = 128
+
+    # which input shapes this arch supports (long_500k only for sub-quadratic)
+    supports_long_context: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab, 128)
+
+    @property
+    def padded_experts(self) -> int:
+        """Expert arrays padded so the EP dim divides the model axis (e.g.
+        qwen2's 60 experts -> 64). Pad experts receive no tokens: the router
+        has only n_experts logits."""
+        return pad_to(self.n_experts, self.expert_pad) if self.n_experts else 0
+
+    @property
+    def d_inner(self) -> int:      # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def n_rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (used for 6ND model-FLOPs)."""
+        d, f, V = self.d_model, self.d_ff, self.padded_vocab
+        hd = self.resolved_head_dim
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":   # rwkv6
+            per = 4 * d * d + d * d // 2 + 3 * d * f // 1  # r,k,v,g,o + ffn
+            per = 5 * d * d + 2 * d * f
+            return emb + self.n_layers * per
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        if self.family == "moe":
+            fe = self.moe_d_ff or f
+            moe = self.n_experts * 3 * d * fe + self.n_shared_experts * 3 * d * fe
+            per = attn + moe
+        elif self.family == "hybrid":
+            din, ds, H = self.d_inner, self.ssm_state, self.n_ssm_heads
+            mamba = 2 * d * din + 2 * d * ds + d * H + din * d
+            per = mamba  # shared attn counted once below
+            return emb + self.n_layers * per + (attn + 3 * d * f) + 2 * d * d
+        else:
+            per = attn + 3 * d * f
+        n = emb + self.n_layers * per
+        if self.family == "encdec":
+            n += self.encoder_layers * (attn + 2 * d * f)
+        return n
+
+    def active_param_count(self) -> int:
+        """N_active for MoE (6*N_active*D model-FLOPs)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, V = self.d_model, self.padded_vocab
+        hd = self.resolved_head_dim
+        fe = self.moe_d_ff or self.d_ff
+        attn = d * (self.n_heads * hd) * 2 + d * (self.n_kv_heads * hd) * 2
+        act = (self.n_experts_per_tok + self.n_shared_experts) * 3 * d * fe
+        return V * d * 2 + self.n_layers * (attn + act)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k":   ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

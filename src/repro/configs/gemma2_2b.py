@@ -1,0 +1,24 @@
+"""gemma2-2b [dense] — local+global alternating attention, logit softcaps,
+sandwich norms, GeGLU. 26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000.
+[arXiv:2408.00118; hf]"""
+from repro.configs.common import ArchConfig
+
+FULL = ArchConfig(
+    name="gemma2-2b", family="dense",
+    n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, d_ff=9216,
+    vocab=256_000, head_dim=256,
+    sliding_window=4096, alt_local_global=True,
+    attn_softcap=50.0, logit_softcap=30.0,
+    post_norms=True, embed_scale=True, act="gelu",
+    tie_embeddings=True,
+)
+
+SMOKE = ArchConfig(
+    name="gemma2-smoke", family="dense",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+    head_dim=16,
+    sliding_window=32, alt_local_global=True,
+    attn_softcap=50.0, logit_softcap=30.0,
+    post_norms=True, embed_scale=True, act="gelu",
+    tie_embeddings=True,
+)

@@ -1,0 +1,14 @@
+"""granite-8b [dense] — llama-arch, code. 36L d_model=4096 32H (GQA kv=8)
+d_ff=14336 vocab=49152. [arXiv:2405.04324; hf]"""
+from repro.configs.common import ArchConfig
+
+FULL = ArchConfig(
+    name="granite-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=49152,
+)
+
+SMOKE = ArchConfig(
+    name="granite-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_ff=128, vocab=512,
+)

@@ -1,0 +1,17 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4. 24L d_model=2048 16H
+(GQA kv=16) expert d_ff=1408 vocab=151936. [hf:Qwen/Qwen1.5-MoE-A2.7B]"""
+from repro.configs.common import ArchConfig
+
+FULL = ArchConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab=151936,
+    n_experts=60, n_experts_per_tok=4, n_shared_experts=4, moe_d_ff=1408,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=64, vocab=512,
+    n_experts=6, n_experts_per_tok=4, n_shared_experts=2, moe_d_ff=64,
+    capacity_factor=8.0,
+)

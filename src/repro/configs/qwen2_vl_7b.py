@@ -1,0 +1,21 @@
+"""qwen2-vl-7b [vlm] — M-RoPE, dynamic resolution (patch frontend STUB:
+input_specs provides precomputed patch embeddings + 3D positions).
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064. [arXiv:2409.12191]"""
+from repro.configs.common import ArchConfig
+
+FULL = ArchConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, d_ff=18944,
+    vocab=152064, head_dim=128,
+    mrope_sections=(16, 24, 24),       # t/h/w splits of head_dim//2
+    rope_theta=1_000_000.0,
+    vision_tokens=1024,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-vl-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=512,
+    head_dim=16,
+    mrope_sections=(4, 2, 2),
+    vision_tokens=8,
+)

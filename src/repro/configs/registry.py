@@ -1,0 +1,41 @@
+"""--arch lookup: full + smoke configs for the 10 assigned architectures."""
+from __future__ import annotations
+
+from repro.configs import (codeqwen1p5_7b, deepseek_7b, gemma2_2b, granite_8b,
+                           phi3p5_moe, qwen2_moe_a2p7b, qwen2_vl_7b, rwkv6_7b,
+                           whisper_large_v3, zamba2_1p2b)
+from repro.configs.common import SHAPES, ArchConfig, ShapeConfig
+
+_MODULES = {
+    "zamba2-1.2b": zamba2_1p2b,
+    "deepseek-7b": deepseek_7b,
+    "gemma2-2b": gemma2_2b,
+    "granite-8b": granite_8b,
+    "codeqwen1.5-7b": codeqwen1p5_7b,
+    "whisper-large-v3": whisper_large_v3,
+    "phi3.5-moe-42b-a6.6b": phi3p5_moe,
+    "qwen2-moe-a2.7b": qwen2_moe_a2p7b,
+    "qwen2-vl-7b": qwen2_vl_7b,
+    "rwkv6-7b": rwkv6_7b,
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get_config(name: str, *, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return _MODULES[name].SMOKE if smoke else _MODULES[name].FULL
+
+
+def supported_shapes(cfg: ArchConfig) -> list[str]:
+    """All archs run train_4k / prefill_32k / decode_32k; long_500k needs
+    sub-quadratic attention (SSM / hybrid) — skips recorded in DESIGN.md."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        shapes.append("long_500k")
+    return shapes
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]

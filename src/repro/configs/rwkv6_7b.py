@@ -1,0 +1,17 @@
+"""rwkv6-7b "Finch" [ssm] — attention-free, data-dependent decay.
+32L d_model=4096 d_ff=14336 vocab=65536. [arXiv:2404.05892; hf]"""
+from repro.configs.common import ArchConfig
+
+FULL = ArchConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=0, n_kv_heads=0, d_ff=14336,
+    vocab=65536, rwkv_head_dim=64,
+    supports_long_context=True,
+)
+
+SMOKE = ArchConfig(
+    name="rwkv6-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=0, n_kv_heads=0, d_ff=128, vocab=512,
+    rwkv_head_dim=16,
+    supports_long_context=True,
+)

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell — the
+dry-run lowers against these; nothing is allocated."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig, ShapeConfig
+from repro.models.registry import get_model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _extras(cfg: ArchConfig, B: int, S: int):
+    ex = {}
+    if cfg.family == "encdec":
+        ex["encoder_feats"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.family == "vlm":
+        ex["vision_embeds"] = _sds((B, cfg.vision_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+        ex["vision_mask"] = _sds((B, S), jnp.bool_)
+        ex["positions"] = _sds((B, 3, S), jnp.int32)
+    return ex
+
+
+def train_specs(cfg: ArchConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+            **_extras(cfg, B, S)}
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": _sds((B, S), jnp.int32), **_extras(cfg, B, S)}
+
+
+def cache_specs(cfg: ArchConfig, B: int, S_max: int):
+    model = get_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(B, S_max))
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """serve_step: one new token against a cache of seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"token": _sds((B, 1), jnp.int32),
+             "cache": cache_specs(cfg, B, S)}
+    if cfg.family == "vlm":
+        specs["positions"] = _sds((B, 3, 1), jnp.int32)
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Returns (kind, specs) for the cell's step function."""
+    if shape.kind == "train":
+        return "train", train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return "prefill", prefill_specs(cfg, shape)
+    if shape.kind == "decode":
+        return "decode", decode_specs(cfg, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,17 @@
+"""whisper-large-v3 [audio] — enc-dec backbone; conv/mel frontend STUB
+(input_specs provides precomputed frame embeddings). 32L d_model=1280 20H
+(kv=20) d_ff=5120 vocab=51866. [arXiv:2212.04356; unverified]"""
+from repro.configs.common import ArchConfig
+
+FULL = ArchConfig(
+    name="whisper-large-v3", family="encdec",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20, d_ff=5120,
+    vocab=51866,
+    encoder_layers=32, encoder_seq=1500,
+)
+
+SMOKE = ArchConfig(
+    name="whisper-smoke", family="encdec",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=512,
+    encoder_layers=2, encoder_seq=32,
+)

@@ -1,0 +1,24 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention block.
+38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+[arXiv:2411.15242; hf]"""
+from repro.configs.common import ArchConfig
+
+FULL = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=32000, head_dim=64,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, conv_width=4,
+    attn_every=6,                       # 6 groups of 6 + 2 tail mamba layers
+    tie_embeddings=True,
+    supports_long_context=True,
+)
+
+SMOKE = ArchConfig(
+    name="zamba2-smoke", family="hybrid",
+    n_layers=5, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab=512, head_dim=16,
+    ssm_state=16, ssm_head_dim=16, ssm_expand=2, conv_width=4,
+    attn_every=2, ssm_chunk=16,
+    tie_embeddings=True,
+    supports_long_context=True,
+)

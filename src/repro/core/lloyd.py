@@ -1,0 +1,106 @@
+"""Lloyd iterations (the clustering phase). The paper keeps this identical to
+standard k-means; we provide a blocked, weighted implementation plus the fused
+Pallas assignment kernel for the hot path."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeanspp import pairwise_d2
+
+
+class LloydResult(NamedTuple):
+    centroids: jax.Array      # (k, d)
+    assignment: jax.Array     # (n,) int32
+    inertia: jax.Array        # () sum of squared distances to assigned centroid
+    n_iters: jax.Array        # () int32
+
+
+def assign(points: jax.Array, centroids: jax.Array, *, block: int = 4096,
+           use_pallas: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Assignment step: nearest centroid per point. Returns (assignment, min_d2).
+
+    Blocked over points so the (n, k) distance matrix never materializes whole
+    (the TPU kernel tiles the same way: point tiles streamed, centroids resident).
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.lloyd_assign(points, centroids)
+
+    n, d = points.shape
+    pad = (-n) % block
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+
+    def blk(x):
+        d2 = pairwise_d2(x.astype(jnp.float32), centroids.astype(jnp.float32))
+        a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+        return a, jnp.min(d2, axis=1)
+
+    a, m = jax.lax.map(blk, pts.reshape(-1, block, d))
+    return a.reshape(-1)[:n], m.reshape(-1)[:n]
+
+
+def update(points: jax.Array, assignment: jax.Array, k: int,
+           weights: Optional[jax.Array] = None,
+           prev_centroids: Optional[jax.Array] = None) -> jax.Array:
+    """Update step: per-cluster (weighted) means via segment-sum. Empty clusters
+    keep their previous centroid (the standard production fallback)."""
+    pts = points.astype(jnp.float32)
+    w = jnp.ones((points.shape[0],), jnp.float32) if weights is None else weights
+    sums = jax.ops.segment_sum(pts * w[:, None], assignment, num_segments=k)
+    counts = jax.ops.segment_sum(w, assignment, num_segments=k)
+    means = sums / jnp.maximum(counts, 1e-12)[:, None]
+    if prev_centroids is not None:
+        means = jnp.where((counts > 0)[:, None], means,
+                          prev_centroids.astype(jnp.float32))
+    return means
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "block", "use_pallas"))
+def lloyd(points: jax.Array, init_centroids: jax.Array, *, max_iters: int = 50,
+          tol: float = 1e-6, weights: Optional[jax.Array] = None,
+          block: int = 4096, use_pallas: bool = False) -> LloydResult:
+    """Run Lloyd iterations until the inertia improvement falls below `tol`
+    (relative) or `max_iters` is hit. The k-means potential is monotonically
+    non-increasing — a property test asserts this."""
+    k = init_centroids.shape[0]
+
+    def cond(state):
+        i, _, prev_inertia, inertia, _ = state
+        rel = (prev_inertia - inertia) / jnp.maximum(prev_inertia, 1e-30)
+        return jnp.logical_and(i < max_iters,
+                               jnp.logical_or(i < 2, rel > tol))
+
+    def body(state):
+        i, cents, _, inertia, _ = state
+        a, m = assign(points, cents, block=block, use_pallas=use_pallas)
+        w = m if weights is None else m * weights
+        new_inertia = jnp.sum(w)
+        new_cents = update(points, a, k, weights=weights, prev_centroids=cents)
+        return i + 1, new_cents, inertia, new_inertia, a
+
+    n = points.shape[0]
+    init = (jnp.zeros((), jnp.int32), init_centroids.astype(jnp.float32),
+            jnp.inf, jnp.inf, jnp.zeros((n,), jnp.int32))
+    i, cents, _, inertia, a = jax.lax.while_loop(cond, body, init)
+    return LloydResult(cents.astype(points.dtype), a, inertia, i)
+
+
+def kmeans(key: jax.Array, points: jax.Array, k: int, *, init: str = "kmeans++",
+           variant: str = "fused", max_iters: int = 50,
+           use_pallas: bool = False) -> LloydResult:
+    """End-to-end k-means: seeding (paper's phase) + Lloyd clustering."""
+    from repro.core.kmeanspp import kmeanspp as _kmeanspp, random_init
+    if init == "kmeans++":
+        seeds = _kmeanspp(key, points, k, variant=variant).centroids
+    elif init == "kmeans||":
+        from repro.core.kmeans_parallel import kmeans_parallel_init
+        seeds = kmeans_parallel_init(key, points, k).centroids
+    elif init == "random":
+        seeds = random_init(key, points, k).centroids
+    else:
+        raise ValueError(f"unknown init {init!r}")
+    return lloyd(points, seeds, max_iters=max_iters, use_pallas=use_pallas)

@@ -1,0 +1,44 @@
+"""Clustering-quality metrics — the paper's claim is speedup *while maintaining
+the quality of the serial algorithm*; these are what the parity bench asserts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeanspp import pairwise_d2
+
+
+def inertia(points: jax.Array, centroids: jax.Array, *, block: int = 8192) -> jax.Array:
+    """Sum over points of squared distance to the nearest centroid (phi)."""
+    n, d = points.shape
+    pad = (-n) % block
+    pts = jnp.pad(points.astype(jnp.float32), ((0, pad), (0, 0)))
+    c = centroids.astype(jnp.float32)
+
+    def blk(x):
+        return jnp.sum(jnp.min(pairwise_d2(x, c), axis=1))
+
+    parts = jax.lax.map(blk, pts.reshape(-1, block, d))
+    # padded zeros contribute their distance to the nearest centroid — subtract
+    pad_contrib = blk(jnp.zeros((1, d), jnp.float32))[None] * 0  # shape helper
+    total = jnp.sum(parts)
+    if pad:
+        total = total - jnp.min(jnp.sum(c * c, axis=1)) * pad
+    return total
+
+
+def quantization_error(points: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Mean squared quantization error (inertia / n) — used by KV-PQ."""
+    return inertia(points, centroids) / points.shape[0]
+
+
+def cluster_sizes(assignment: jax.Array, k: int) -> jax.Array:
+    return jax.ops.segment_sum(jnp.ones_like(assignment, jnp.float32),
+                               assignment, num_segments=k)
+
+
+def balance(assignment: jax.Array, k: int) -> jax.Array:
+    """Load-balance statistic max/mean cluster size (1.0 = perfectly balanced).
+    Used to evaluate kmeans++ MoE router init vs random init."""
+    sizes = cluster_sizes(assignment, k)
+    return jnp.max(sizes) / jnp.maximum(jnp.mean(sizes), 1e-12)

@@ -1,0 +1,67 @@
+"""Weighted categorical sampling primitives for k-means++ seeding.
+
+Two exact methods:
+  * inverse-CDF (`cdf`) — the classic serial method (cumsum + searchsorted).
+    Used to prove serial == parallel seed selection under a matched PRNG key.
+  * Gumbel-max (`gumbel`) — argmax(log w + Gumbel noise). Embarrassingly
+    parallel, no prefix sum, and composes across shards with a tiny all-gather:
+    the basis of the distributed seeding in `repro.core.distributed`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -jnp.inf
+
+
+def categorical(key: jax.Array, weights: jax.Array, *,
+                total: Optional[jax.Array] = None, method: str = "cdf") -> jax.Array:
+    if method == "cdf":
+        return categorical_cdf(key, weights, total=total)
+    if method == "gumbel":
+        return gumbel_max(key, safe_log(weights))
+    raise ValueError(f"unknown sampler {method!r}")
+
+
+def safe_log(w: jax.Array) -> jax.Array:
+    """log(w) with log(0) -> -inf (zero-weight entries can never be sampled)."""
+    return jnp.where(w > 0, jnp.log(jnp.where(w > 0, w, 1.0)), _NEG_INF)
+
+
+def categorical_cdf(key: jax.Array, weights: jax.Array, *,
+                    total: Optional[jax.Array] = None) -> jax.Array:
+    """Inverse-CDF sampling: idx such that cumsum[idx-1] <= r < cumsum[idx]."""
+    cdf = jnp.cumsum(weights)
+    tot = cdf[-1] if total is None else total
+    r = jax.random.uniform(key, (), weights.dtype) * tot
+    idx = jnp.searchsorted(cdf, r, side="right")
+    return jnp.clip(idx, 0, weights.shape[0] - 1).astype(jnp.int32)
+
+
+def gumbel_max(key: jax.Array, log_weights: jax.Array) -> jax.Array:
+    g = jax.random.gumbel(key, log_weights.shape, log_weights.dtype)
+    return jnp.argmax(log_weights + g).astype(jnp.int32)
+
+
+def gumbel_topk(key: jax.Array, log_weights: jax.Array, k: int):
+    """Exact weighted sampling *without replacement* of k indices (Gumbel top-k)."""
+    g = jax.random.gumbel(key, log_weights.shape, log_weights.dtype)
+    scores = log_weights + g
+    _, idx = jax.lax.top_k(scores, k)
+    return idx.astype(jnp.int32)
+
+
+def gumbel_max_local(key: jax.Array, log_weights: jax.Array):
+    """Per-shard half of a distributed Gumbel-max: returns (best_score, best_idx).
+
+    Combining rule: the global argmax of (score, idx) pairs over shards is an
+    exact sample from the global categorical — used inside shard_map with a
+    small all_gather (see repro.core.distributed.dist_gumbel_choice).
+    """
+    g = jax.random.gumbel(key, log_weights.shape, log_weights.dtype)
+    scores = log_weights + g
+    best = jnp.argmax(scores).astype(jnp.int32)
+    return scores[best], best

@@ -1,0 +1,7 @@
+"""repro.data — synthetic sources, sharded pipeline, semantic dedup."""
+from repro.data.pipeline import DataPipeline, host_slice
+from repro.data.semdedup import DedupResult, semdedup
+from repro.data.synthetic import TokenStream, blobs, zipf_probs
+
+__all__ = ["DataPipeline", "host_slice", "DedupResult", "semdedup",
+           "TokenStream", "blobs", "zipf_probs"]

@@ -1,0 +1,57 @@
+"""Semantic dedup of document embeddings (paper integration #3).
+
+SemDeDup (Abbas et al. 2023) clusters document embeddings with k-means and
+drops near-duplicate pairs *within* each cluster — the clustering makes the
+O(N^2) pairwise check tractable (only intra-cluster pairs are compared).
+Seeding quality is the paper's phase: better seeds -> tighter clusters ->
+fewer cross-cluster duplicate escapes at the same k.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans
+
+
+class DedupResult(NamedTuple):
+    keep_mask: jax.Array      # (n,) bool
+    assignment: jax.Array     # (n,) int32 cluster per doc
+    n_kept: jax.Array         # ()
+
+
+def semdedup(key: jax.Array, embeds: jax.Array, *, k: int,
+             threshold: float = 0.95, init: str = "kmeans++",
+             max_iters: int = 25) -> DedupResult:
+    """Drop docs whose cosine similarity to an earlier doc in the SAME cluster
+    exceeds `threshold`. embeds (n, d)."""
+    n, d = embeds.shape
+    x = embeds.astype(jnp.float32)
+    x = x / (jnp.linalg.norm(x, axis=1, keepdims=True) + 1e-8)
+
+    res = kmeans(key, x, k, init=init, max_iters=max_iters)
+    a = res.assignment
+
+    # pairwise cos-sim masked to same-cluster, earlier-index pairs.
+    # done in row blocks to bound memory at (block, n).
+    block = max(min(2048, n), 1)
+    pad = (-n) % block
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    ap = jnp.pad(a, (0, pad), constant_values=-1)
+    idx = jnp.arange(n + pad)
+
+    def blk(i):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i * block, block, 0)
+        arows = jax.lax.dynamic_slice_in_dim(ap, i * block, block, 0)
+        irows = i * block + jnp.arange(block)
+        sim = rows @ x.T                                    # (block, n)
+        same = arows[:, None] == a[None, :]
+        earlier = idx[None, :n] < irows[:, None]
+        dup = jnp.any((sim > threshold) & same & earlier, axis=1)
+        return dup
+
+    dup = jax.lax.map(blk, jnp.arange((n + pad) // block)).reshape(-1)[:n]
+    keep = ~dup
+    return DedupResult(keep, a, jnp.sum(keep.astype(jnp.int32)))

@@ -1,0 +1,57 @@
+"""Synthetic data generators.
+
+* ``blobs`` — Gaussian mixtures for the k-means benchmarks (the paper's
+  workload: N up to 10M points, d=2, k clusters).
+* ``token_stream`` — deterministic pseudo-corpus for LM training: a mixture
+  of Zipfian unigrams and a repeated-ngram process so the loss actually
+  decreases (pure-uniform tokens give a flat loss — useless for the
+  end-to-end example).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def blobs(n: int, d: int, k: int, *, seed: int = 0, spread: float = 0.05,
+          dtype=np.float32) -> tuple[np.ndarray, np.ndarray]:
+    """n points from k Gaussian blobs in [0,1]^d. Returns (points, labels)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0.0, 1.0, size=(k, d))
+    labels = rng.integers(0, k, size=n)
+    pts = centers[labels] + rng.normal(0.0, spread, size=(n, d))
+    return pts.astype(dtype), labels.astype(np.int32)
+
+
+def zipf_probs(vocab: int, alpha: float = 1.1) -> np.ndarray:
+    r = np.arange(1, vocab + 1, dtype=np.float64)
+    p = r ** -alpha
+    return (p / p.sum()).astype(np.float64)
+
+
+class TokenStream:
+    """Deterministic, seekable synthetic token corpus.
+
+    ``read(step, batch, seq)`` is a pure function of (seed, step) — the
+    pipeline can therefore resume at any step after a restart without
+    replaying (fault-tolerance requirement; see train/loop.py).
+    """
+
+    def __init__(self, vocab: int, *, seed: int = 0, alpha: float = 1.1,
+                 ngram_repeat: int = 8):
+        self.vocab = vocab
+        self.seed = seed
+        self.probs = zipf_probs(vocab, alpha)
+        self.ngram_repeat = ngram_repeat
+
+    def read(self, step: int, batch: int, seq: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        toks = rng.choice(self.vocab, size=(batch, seq + 1), p=self.probs)
+        # inject learnable structure: tile a short motif through each row
+        motif_len = self.ngram_repeat
+        motif = rng.choice(self.vocab, size=(batch, motif_len), p=self.probs)
+        reps = (seq + 1) // motif_len + 1
+        tiled = np.tile(motif, (1, reps))[:, : seq + 1]
+        mask = rng.random((batch, seq + 1)) < 0.5
+        toks = np.where(mask, tiled, toks)
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the compute hot-spots (validated interpret=True
+on CPU; compiled by Mosaic on a TPU backend — ops.py dispatches):
+
+  kmeans_distance.py  — THE PAPER: fused D^2 min-update + partial sums;
+                        centroid block VMEM-resident (constant-memory
+                        analogue) or streamed (global-memory analogue)
+  lloyd_assign.py     — fused assignment + per-cluster sums/counts
+                        (one-hot MXU matmul instead of atomics)
+  flash_attention.py  — online-softmax attention, scores never leave VMEM
+                        (EXPERIMENTS.md §Perf B memory-term kernel)
+  pq_decode.py        — decode attention over k-means++ product-quantized
+                        KV codes; codebooks VMEM-resident (§Perf C)
+
+ops.py — jit'd dispatch wrappers;  ref.py — pure-jnp oracles for every
+kernel (tests sweep shapes/dtypes and assert_allclose against these).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,149 @@
+"""Flash attention (Pallas TPU): online-softmax attention with the score
+matrix NEVER materialized to HBM.
+
+Why it's here: the dry-run roofline shows every dense train/prefill cell is
+MEMORY-bound, dominated by attention-score traffic — at the HLO level the
+blocked-softmax scan still writes O(B*H*Sq*Skv) f32 score/prob blocks to HBM
+each layer. This kernel keeps the (block_q, block_k) score tile, the running
+max/sum and the output accumulator in VMEM across the sequential TPU grid,
+so HBM traffic drops to O(q + k + v + out) — the §Perf iteration for the
+memory term (EXPERIMENTS.md §Perf B).
+
+Layout: grid (B, H, nq, nk) — the kv dim iterates innermost (TPU grids are
+sequential), with VMEM scratch carrying (m, l, acc) across kv steps for one
+(b, h, iq) tile. GQA: the kv BlockSpec maps query head h -> kv head h // G.
+Causal + sliding-window masking by global position; fully-masked tiles skip
+the matmuls under pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_q: int, block_k: int, seq_q: int, seq_kv: int,
+            causal: bool, window: int, cap: float, scale: float,
+            q_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = (q_offset + iq * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0))
+    k_pos = (ik * block_k
+             + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1))
+    mask = (k_pos < seq_kv) & (q_pos < seq_q + q_offset)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+
+    # skip tiles that are entirely masked (causal upper triangle / window)
+    @pl.when(jnp.any(mask))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (block_q, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (block_k, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if cap > 0:
+            s = cap * jnp.tanh(s / cap)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]                            # (block_q,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "cap", "block_q", "block_k",
+                              "q_offset", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, cap: float = 0.0,
+                    block_q: int = 512, block_k: int = 512,
+                    q_offset: int = 0, interpret: bool = True) -> jax.Array:
+    """q (B, Sq, H, hd); k/v (B, Skv, KH, hd), H = KH * G. Returns like q.
+
+    VMEM working set per grid step: q/k/v/out tiles + the (block_q, hd) f32
+    accumulator — block 512, hd 128: ~1.8 MB, far under the ~64 MB budget,
+    leaving the Pallas pipeline room to double-buffer the k/v streams.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = max(H // KH, 1)
+    scale = hd ** -0.5
+
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    qt = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    kt = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    vt = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))).transpose(0, 2, 1, 3)
+    nq = qt.shape[2] // block_q
+    nk = kt.shape[2] // block_k
+
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, seq_q=Sq, seq_kv=Skv,
+        causal=causal, window=window, cap=cap, scale=scale, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max
+            pltpu.VMEM((block_q,), jnp.float32),       # running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+def hbm_bytes_model(B: int, Sq: int, Skv: int, H: int, KH: int, hd: int,
+                    dtype_bytes: int = 2) -> dict:
+    """Analytic HBM traffic: this kernel vs the HLO blocked-softmax path.
+    Used by the §Perf memory-term iteration (the kernel cannot lower on the
+    CPU dry-run backend, so its effect on the roofline is derived)."""
+    kernel = dtype_bytes * (B * Sq * H * hd            # q read
+                            + 2 * B * Skv * KH * hd    # k, v read (per q-pass:
+                            + B * Sq * H * hd)         # out write    see note)
+    # the kv stream re-reads k/v once per q block row that touches it; for
+    # causal attention that is ~nq/2 passes — report the worst case nq passes
+    hlo_scores = 4 * B * H * Sq * Skv                  # f32 score + prob blocks
+    return {"kernel_bytes": kernel, "hlo_score_bytes_lower_bound": hlo_scores}

@@ -1,0 +1,68 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On a TPU backend the kernels compile to Mosaic; everywhere else they run in
+interpret mode (Python evaluation of the kernel body — bit-correct, slow),
+which is how this CPU container validates them. Block sizes are chosen so the
+working set (points tile + resident centroids + accumulators) fits a v5e
+VMEM budget of ~64 MB with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans_distance import distance_min_update_pallas
+from repro.kernels.lloyd_assign import lloyd_assign_pallas
+
+_VMEM_BUDGET = 48 * 1024 * 1024  # leave headroom out of ~64-128MB
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
+                 max_block: int = 4096) -> int:
+    """Largest power-of-two point-tile height whose double-buffered working set
+    (2 x points tile + resident centroids + (block_n, k) distance tile) fits."""
+    bn = max_block
+    while bn > 128:
+        working = dtype_bytes * (2 * bn * d + k * d + bn * k + 4 * bn)
+        if working <= _VMEM_BUDGET:
+            return bn
+        bn //= 2
+    return 128
+
+
+def distance_min_update(points: jax.Array, centroids: jax.Array,
+                        min_d2: jax.Array, *, resident_centroids: bool = True,
+                        block_n: int | None = None,
+                        interpret: bool | None = None):
+    """One k-means++ seeding round: fused D^2 min-update + per-tile partials."""
+    n, d = points.shape
+    k = centroids.shape[0]
+    if block_n is None:
+        block_n = min(pick_block_n(d, k), max(128, 1 << (n - 1).bit_length()))
+    if interpret is None:
+        interpret = not _on_tpu()
+    return distance_min_update_pallas(points, centroids, min_d2,
+                                      block_n=block_n,
+                                      resident=resident_centroids,
+                                      interpret=interpret)
+
+
+def lloyd_assign(points: jax.Array, centroids: jax.Array, *,
+                 block_n: int | None = None, interpret: bool | None = None):
+    """Fused assignment + per-cluster partial sums/counts."""
+    n, d = points.shape
+    k = centroids.shape[0]
+    if block_n is None:
+        block_n = min(pick_block_n(d, k), max(128, 1 << (n - 1).bit_length()))
+    if interpret is None:
+        interpret = not _on_tpu()
+    a, md, sums, counts = lloyd_assign_pallas(points, centroids,
+                                              block_n=block_n,
+                                              interpret=interpret)
+    return a, md, sums, counts

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels. Every kernel test sweeps shapes and
+dtypes and asserts allclose against these."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _d2(x: jax.Array, c: jax.Array) -> jax.Array:
+    """(n, d) x (k, d) -> (n, k) squared distances in fp32."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)
+    cn = jnp.sum(c * c, axis=-1)
+    return jnp.maximum(xn - 2.0 * (x @ c.T) + cn[None, :], 0.0)
+
+
+def distance_min_update_ref(points: jax.Array, centroids: jax.Array,
+                            min_d2: jax.Array):
+    """Oracle for kernels.kmeans_distance: one k-means++ seeding round.
+
+    Returns (new_min_d2 (n,), total (,)): the min-distance array updated against
+    the new centroid(s) and the sum of the updated array (the paper's
+    thrust::reduce term).
+    """
+    d2 = jnp.min(_d2(points, centroids), axis=1)
+    new = jnp.minimum(min_d2.astype(jnp.float32), d2)
+    return new, jnp.sum(new)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0,
+                        q_offset=0):
+    """Oracle for kernels.flash_attention: exact softmax attention in fp32.
+    q (B, Sq, H, hd); k/v (B, Skv, KH, hd) with H = KH * G."""
+    B, Sq, H, hd = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qf = q.astype(jnp.float32).reshape(B, Sq, KH, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kf) * (hd ** -0.5)
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, vf)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def lloyd_assign_ref(points: jax.Array, centroids: jax.Array):
+    """Oracle for kernels.lloyd_assign: fused assignment + per-cluster partials.
+
+    Returns (assignment (n,) int32, min_d2 (n,), sums (k, d) fp32, counts (k,)).
+    """
+    d2 = _d2(points, centroids)
+    a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    m = jnp.min(d2, axis=1)
+    k = centroids.shape[0]
+    onehot = jax.nn.one_hot(a, k, dtype=jnp.float32)
+    sums = onehot.T @ points.astype(jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    return a, m, sums, counts

@@ -1,0 +1,5 @@
+"""repro.launch — mesh construction, the multi-pod dry-run, train/serve CLIs.
+
+NOTE: dryrun.py must be executed as __main__ (it sets XLA_FLAGS before any
+jax import); this package __init__ deliberately imports nothing heavy.
+"""

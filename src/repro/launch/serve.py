@@ -1,0 +1,56 @@
+"""Serving driver: batched generation with the Engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+      --requests 16 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models.registry import get_model
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(0, cfg.vocab, size=rng.integers(
+        args.prompt_len // 2, args.prompt_len + 1)).astype(np.int32)
+        for _ in range(args.requests)]
+
+    scfg = ServeConfig(max_batch=args.batch,
+                       max_len=args.prompt_len + args.max_new,
+                       max_new_tokens=args.max_new,
+                       temperature=args.temperature)
+    eng = Engine(cfg, params, scfg)
+    t0 = time.perf_counter()
+    outs = eng.generate(prompts, seed=args.seed)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(o) for o in outs)
+    print(f"[serve] {args.requests} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s incl. compile)")
+    print("[serve] first completion:", outs[0][:16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

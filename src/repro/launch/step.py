@@ -1,0 +1,272 @@
+"""train_step / serve_step builders + input & cache sharding rules.
+
+Everything the dry-run, the trainer and the server jit is built here, so the
+sharding story lives in one place:
+
+  * params / optimizer moments  -> repro.models.partition (TP over "model")
+  * batch inputs                -> batch dim over ("pod","data") when divisible
+  * KV caches                   -> batch over data axes; kv-heads over "model"
+                                   when divisible, else SEQUENCE-sharded over
+                                   "model" (flash-decoding style: GSPMD turns
+                                   the softmax over the sharded S dim into
+                                   partial-max/partial-sum psums)
+  * long_500k (batch=1)         -> cache sequence dim sharded over BOTH
+                                   ("data","model") — batch-1 decode still
+                                   spreads the cache + attention over the pod
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.common import ArchConfig, ShapeConfig
+from repro.launch.mesh import batch_axes, n_batch_shards
+from repro.models import partition
+from repro.models.registry import get_model
+from repro.optim import adamw
+from repro.optim.grad_compress import CompressConfig, compress_with_ef, init_ef
+
+
+# ---------------------------------------------------------------------------
+# input shardings
+# ---------------------------------------------------------------------------
+
+def _bdim(mesh: Mesh, B: int):
+    """Batch-dim spec entry: the DP axes when they divide B, else None."""
+    axes = batch_axes(mesh)
+    return axes if axes and B % n_batch_shards(mesh) == 0 else None
+
+
+def batch_shardings(mesh: Mesh, specs: dict) -> dict:
+    """NamedShardings for a train/prefill input-spec dict (batch-major)."""
+    out = {}
+    for name, sds in specs.items():
+        b = _bdim(mesh, sds.shape[0])
+        out[name] = NamedSharding(mesh, P(*([b] + [None] * (sds.ndim - 1))))
+    return out
+
+
+def _seq_axes(mesh: Mesh, B: int):
+    """Axes available to shard a cache SEQUENCE dim: "model" plus — when the
+    batch can't use them (B=1 long-context) — the data axes too."""
+    axes = []
+    if _bdim(mesh, B) is None:
+        axes += list(batch_axes(mesh))
+    if "model" in mesh.axis_names:
+        axes.append("model")
+    return tuple(axes)
+
+
+def cache_pspecs(cfg: ArchConfig, mesh: Mesh, cache_tree) -> Any:
+    """PartitionSpecs for a serving cache pytree (any family)."""
+    model_n = mesh.shape.get("model", 1)
+
+    def rule(path, leaf):
+        names = [str(e.key) for e in path
+                 if isinstance(e, jax.tree_util.DictKey)]
+        name = names[-1] if names else ""
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        # KV caches: (L|G, B, S, KH, hd) — incl. whisper cross-attn xk/xv
+        if name in ("k", "v", "xk", "xv") and nd == 5:
+            _, B, S, KH, _ = leaf.shape
+            b = _bdim(mesh, B)
+            if KH % model_n == 0:
+                return P(None, b, None, "model", None)
+            seq = _seq_axes(mesh, B)
+            n_seq = 1
+            for a in seq:
+                n_seq *= mesh.shape[a]
+            if seq and S % n_seq == 0:
+                return P(None, b, seq, None, None)
+            return P(None, b, None, None, None)   # e.g. whisper S_enc=1500
+        # rwkv wkv state: (L, B, H, hd, hd)
+        if name == "wkv" and nd == 5:
+            H = leaf.shape[2]
+            return P(None, _bdim(mesh, leaf.shape[1]),
+                     "model" if H % model_n == 0 else None, None, None)
+        # mamba ssm state: (L, B, H, ds, hd)
+        if name == "ssm" and nd == 5:
+            H = leaf.shape[2]
+            return P(None, _bdim(mesh, leaf.shape[1]),
+                     "model" if H % model_n == 0 else None, None, None)
+        # conv states (inside the "conv" tuple): (L, B, cw, C)
+        if "conv" in names and nd == 4:
+            C = leaf.shape[-1]
+            return P(None, _bdim(mesh, leaf.shape[1]), None,
+                     "model" if C % model_n == 0 and C >= model_n * 8 else None)
+        # token-shift snapshots (L, B, 1, d) and anything else batched
+        if nd >= 2:
+            return P(*([None, _bdim(mesh, leaf.shape[1])]
+                       + [None] * (nd - 2)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, cache_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_pspecs(cfg, mesh, cache_tree))
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def init_train_state(cfg: ArchConfig, key, *, compress: Optional[CompressConfig] = None):
+    model = get_model(cfg)
+    params = model.init_params(key)
+    state = {"params": params, "opt": adamw.init(params),
+             "rng": jax.random.PRNGKey(0)}
+    if compress is not None and compress.codec != "none":
+        state["ef"] = init_ef(params)
+    return state
+
+
+def train_state_shardings(mesh: Mesh, state) -> Any:
+    pspecs = partition.param_specs(state["params"])
+    sh = {
+        "params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+        "opt": adamw.OptState(
+            m=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+            v=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs),
+            step=NamedSharding(mesh, P())),
+        "rng": NamedSharding(mesh, P()),
+    }
+    if "ef" in state:
+        sh["ef"] = type(state["ef"])(
+            residual=jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs))
+    return sh
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    *, compress: Optional[CompressConfig] = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    model = get_model(cfg)
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(state["params"], batch)
+        rng, sub = jax.random.split(state["rng"])
+        new_state = dict(state, rng=rng)
+        if compress is not None and compress.codec != "none":
+            grads, new_state["ef"] = compress_with_ef(
+                compress, grads, state["ef"], sub)
+        params, opt, metrics = adamw.apply(opt_cfg, state["params"], grads,
+                                           state["opt"])
+        new_state["params"] = params
+        new_state["opt"] = opt
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, *, cache_len: Optional[int] = None):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    model = get_model(cfg)
+
+    def decode_step(params, token, cache, **kw):
+        return model.decode_step(params, token, cache, **kw)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# jit assembly for one (arch x shape) cell — shared by dryrun and drivers
+# ---------------------------------------------------------------------------
+
+def jitted_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                *, opt_cfg: Optional[adamw.AdamWConfig] = None,
+                compress: Optional[CompressConfig] = None):
+    """Returns (jitted_fn, example_args) for the cell's step:
+    train -> train_step(state, batch); prefill -> prefill(params, batch);
+    decode -> decode_step(params, token, cache). example_args are
+    ShapeDtypeStructs with .sharding set — ready for .lower()."""
+    from repro.configs import specs as S
+
+    model = get_model(cfg)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def sds_with(sharding_tree, shape_tree):
+        return jax.tree.map(
+            lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                 sharding=sh),
+            shape_tree, sharding_tree)
+
+    if shape.kind == "train":
+        specs = S.train_specs(cfg, shape)
+        bsh = batch_shardings(mesh, specs)
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(cfg, jax.random.PRNGKey(0),
+                                     compress=compress))
+        ssh = train_state_shardings(mesh, state_shape)
+        fn = make_train_step(cfg, opt_cfg, compress=compress)
+        jf = jax.jit(fn, in_shardings=(ssh, bsh), out_shardings=(ssh, None),
+                     donate_argnums=(0,))
+        return jf, (sds_with(ssh, state_shape), sds_with(bsh, specs))
+
+    params_shape = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0)))
+    if cfg.serve_dtype:
+        # §Perf: serving casts float params (stored fp32 for the optimizer)
+        # to bf16 — halves the weight-streaming memory term at decode.
+        sd = jnp.dtype(cfg.serve_dtype)
+        params_shape = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, sd if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype),
+            params_shape)
+    pspecs = partition.param_specs(params_shape)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    if shape.kind == "prefill":
+        specs = S.prefill_specs(cfg, shape)
+        bsh = batch_shardings(mesh, specs)
+        fn = make_prefill_step(cfg)
+        cache_shape = jax.eval_shape(fn, params_shape, specs)[1]
+        csh = cache_shardings(cfg, mesh, cache_shape)
+        jf = jax.jit(fn, in_shardings=(psh, bsh), out_shardings=(None, csh))
+        return jf, (sds_with(psh, params_shape), sds_with(bsh, specs))
+
+    if shape.kind == "decode":
+        dspecs = S.decode_specs(cfg, shape)
+        cache_shape = dspecs["cache"]
+        csh = cache_shardings(cfg, mesh, cache_shape)
+        B = shape.global_batch
+        tok_sh = NamedSharding(mesh, P(_bdim(mesh, B), None))
+        fn = make_decode_step(cfg)
+        kw_sh = {}
+        args = [sds_with(psh, params_shape),
+                sds_with(tok_sh, dspecs["token"]),
+                sds_with(csh, cache_shape)]
+        in_sh = [psh, tok_sh, csh]
+        if "positions" in dspecs:
+            pos_sh = NamedSharding(mesh, P(_bdim(mesh, B), None, None))
+            kw_sh["positions"] = pos_sh
+            args.append(sds_with(pos_sh, dspecs["positions"]))
+            fn_pos = fn
+
+            def fn(params, token, cache, positions):
+                return fn_pos(params, token, cache, positions=positions)
+            in_sh.append(pos_sh)
+        logits_sh = NamedSharding(mesh, P(_bdim(mesh, B), "model"))
+        jf = jax.jit(fn, in_shardings=tuple(in_sh),
+                     out_shardings=(logits_sh, csh), donate_argnums=(2,))
+        return jf, tuple(args)
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,11 @@
+"""repro.models — the 10 assigned architectures as pure-JAX pytree models.
+
+registry.get_model(cfg) returns the uniform interface (init_params, forward,
+loss_fn, prefill, decode_step, init_cache) for any family: dense / moe / vlm
+(transformer.py), hybrid Mamba2+shared-attn (hybrid.py), attention-free
+RWKV6 (rwkv_model.py), enc-dec whisper (encdec.py). partition.py holds the
+TP/EP PartitionSpec rules; sharding.py the mesh-context constraint helpers.
+"""
+from repro.models.registry import get_model
+
+__all__ = ["get_model"]

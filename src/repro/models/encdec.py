@@ -1,0 +1,237 @@
+"""Whisper-style encoder-decoder backbone. The conv/mel frontend is a STUB:
+`input_specs()` provides precomputed frame embeddings (B, S_enc, d_model);
+the encoder is a bidirectional transformer over them, the decoder a causal
+transformer with cross-attention. Decode shapes exercise the DECODER
+(self-attn KV cache + precomputed cross-attn KV)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+
+def init_params(key, cfg: ArchConfig):
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+
+    def enc_layer(k):
+        ks = jax.random.split(k, 2)
+        return {"ln1": jnp.ones((d,), jnp.float32),
+                "ln2": jnp.ones((d,), jnp.float32),
+                "attn": L.attn_init(ks[0], cfg),
+                "mlp": L.mlp_init(ks[1], d, cfg.d_ff, cfg.n_layers,
+                                  gated=False)}
+
+    def dec_layer(k):
+        ks = jax.random.split(k, 3)
+        return {"ln1": jnp.ones((d,), jnp.float32),
+                "ln2": jnp.ones((d,), jnp.float32),
+                "ln3": jnp.ones((d,), jnp.float32),
+                "attn": L.attn_init(ks[0], cfg),
+                "xattn": L.attn_init(ks[1], cfg),
+                "mlp": L.mlp_init(ks[2], d, cfg.d_ff, cfg.n_layers,
+                                  gated=False)}
+
+    enc_keys = jax.random.split(keys[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(keys[1], cfg.n_layers)
+    return {
+        "enc_layers": jax.vmap(enc_layer)(enc_keys),
+        "dec_layers": jax.vmap(dec_layer)(dec_keys),
+        "enc_pos": L.embed_init(keys[2], (cfg.encoder_seq, d)),
+        "dec_pos": L.embed_init(keys[3], (40960, d)),  # covers 32k decode cells
+        "embed": L.embed_init(keys[4], (cfg.padded_vocab, d)),
+        "ln_enc": jnp.ones((d,), jnp.float32),
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+
+
+def encode(params, cfg: ArchConfig, feats):
+    """feats (B, S_enc, d_model) precomputed frame embeddings (stub frontend)."""
+    dt = cfg.compute_dtype
+    S = feats.shape[1]
+    h = feats.astype(dt) + params["enc_pos"][:S].astype(dt)[None]
+    h = constrain(h, "batch", None, None)
+
+    def body(h, p):
+        def inner(h, p):
+            a_in = L.rms_norm(h, p["ln1"], eps=cfg.norm_eps)
+            q, k, v = L.attn_qkv(p["attn"], a_in, cfg, None, None, rope=False)
+            o = L.blocked_attention(q, k, v, causal=False,
+                                    block_q=cfg.attn_block_q,
+                                    block_kv=cfg.attn_block_kv)
+            h = h + L.attn_out(p["attn"], o, cfg)
+            m = L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln2"],
+                                                 eps=cfg.norm_eps), act="gelu")
+            return constrain(h + m, "batch", None, None)
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        return inner(h, p), None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return L.rms_norm(h, params["ln_enc"], eps=cfg.norm_eps)
+
+
+def _decoder(params, cfg: ArchConfig, tokens, enc_out, *, collect_kv=False):
+    dt = cfg.compute_dtype
+    B, S = tokens.shape
+    h = L.embed_lookup(params["embed"], tokens, dt) \
+        + params["dec_pos"][:S].astype(dt)[None]
+    h = constrain(h, "batch", None, None)
+
+    def body(h, p):
+        def inner(h, p):
+            a_in = L.rms_norm(h, p["ln1"], eps=cfg.norm_eps)
+            q, k, v = L.attn_qkv(p["attn"], a_in, cfg, None, None, rope=False)
+            o = L.blocked_attention(q, k, v, causal=True,
+                                    block_q=cfg.attn_block_q,
+                                    block_kv=cfg.attn_block_kv)
+            h = h + L.attn_out(p["attn"], o, cfg)
+            x_in = L.rms_norm(h, p["ln2"], eps=cfg.norm_eps)
+            qx = (x_in @ p["xattn"]["wq"].astype(dt)).reshape(
+                B, S, cfg.n_heads, cfg.resolved_head_dim)
+            kx, vx = _enc_kv(p, enc_out, cfg)
+            ox = L.blocked_attention(qx, kx, vx, causal=False,
+                                     block_q=cfg.attn_block_q,
+                                     block_kv=cfg.attn_block_kv)
+            h = h + L.attn_out(p["xattn"], ox, cfg)
+            m = L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln3"],
+                                                 eps=cfg.norm_eps), act="gelu")
+            return h + m
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        return inner(h, p), None
+
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    return L.rms_norm(h, params["ln_f"], eps=cfg.norm_eps)
+
+
+def _enc_kv(p, enc_out, cfg: ArchConfig):
+    """Cross-attention K/V from encoder output (no rope)."""
+    B, Se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    dt = cfg.compute_dtype
+    k = (enc_out @ p["xattn"]["wk"].astype(dt)).reshape(B, Se,
+                                                        cfg.n_kv_heads, hd)
+    v = (enc_out @ p["xattn"]["wv"].astype(dt)).reshape(B, Se,
+                                                        cfg.n_kv_heads, hd)
+    return k, v
+
+
+def forward(params, cfg: ArchConfig, batch):
+    enc_out = encode(params, cfg, batch["encoder_feats"])
+    h = _decoder(params, cfg, batch["tokens"], enc_out)
+    logits = L.unembed(h, params["embed"], cap=cfg.logit_softcap)
+    return constrain(logits, "batch", None, "model")
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    return L.cross_entropy(forward(params, cfg, batch), batch["labels"],
+                           vocab=cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# serving (decoder KV cache + cached cross KV)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, B: int, S_max: int):
+    hd = cfg.resolved_head_dim
+    Lc = cfg.n_layers
+    return {
+        "k": jnp.zeros((Lc, B, S_max, cfg.n_kv_heads, hd), jnp.bfloat16),
+        "v": jnp.zeros((Lc, B, S_max, cfg.n_kv_heads, hd), jnp.bfloat16),
+        "xk": jnp.zeros((Lc, B, cfg.encoder_seq, cfg.n_kv_heads, hd),
+                        jnp.bfloat16),
+        "xv": jnp.zeros((Lc, B, cfg.encoder_seq, cfg.n_kv_heads, hd),
+                        jnp.bfloat16),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ArchConfig, batch, *,
+            cache_len: Optional[int] = None):
+    """Encode audio features + run the prompt tokens through the decoder."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    S_max = cache_len or S
+    dt = cfg.compute_dtype
+    enc_out = encode(params, cfg, batch["encoder_feats"])
+    h = L.embed_lookup(params["embed"], tokens, dt) \
+        + params["dec_pos"][:S].astype(dt)[None]
+
+    def body(h, p):
+        a_in = L.rms_norm(h, p["ln1"], eps=cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], a_in, cfg, None, None, rope=False)
+        o = L.blocked_attention(q, k, v, causal=True,
+                                block_q=cfg.attn_block_q,
+                                block_kv=cfg.attn_block_kv)
+        h = h + L.attn_out(p["attn"], o, cfg)
+        x_in = L.rms_norm(h, p["ln2"], eps=cfg.norm_eps)
+        qx = (x_in @ p["xattn"]["wq"].astype(dt)).reshape(
+            B, S, cfg.n_heads, cfg.resolved_head_dim)
+        kx, vx = _enc_kv(p, enc_out, cfg)
+        ox = L.blocked_attention(qx, kx, vx, causal=False,
+                                 block_q=cfg.attn_block_q,
+                                 block_kv=cfg.attn_block_kv)
+        h = h + L.attn_out(p["xattn"], ox, cfg)
+        m = L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln3"], eps=cfg.norm_eps),
+                        act="gelu")
+        h = h + m
+        return h, (k, v, kx, vx)
+
+    h, (k_all, v_all, xk_all, xv_all) = jax.lax.scan(body, h,
+                                                     params["dec_layers"])
+
+    def fix(x, s_to):
+        pad = s_to - x.shape[2]
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) \
+            .astype(jnp.bfloat16)
+
+    cache = {"k": fix(k_all, S_max), "v": fix(v_all, S_max),
+             "xk": xk_all.astype(jnp.bfloat16),
+             "xv": xv_all.astype(jnp.bfloat16),
+             "pos": jnp.asarray(S, jnp.int32)}
+    hl = L.rms_norm(h[:, -1:], params["ln_f"], eps=cfg.norm_eps)
+    logits = L.unembed(hl, params["embed"], cap=cfg.logit_softcap)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, **_):
+    B = token.shape[0]
+    pos = cache["pos"]
+    dt = cfg.compute_dtype
+    h = L.embed_lookup(params["embed"], token, dt) \
+        + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0) \
+        .astype(dt)[None]
+
+    def body(h, xs):
+        p, k_g, v_g, xk_g, xv_g = xs
+        a_in = L.rms_norm(h, p["ln1"], eps=cfg.norm_eps)
+        q, k, v = L.attn_qkv(p["attn"], a_in, cfg, None, None, rope=False)
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            k_g, k.astype(jnp.bfloat16), pos, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            v_g, v.astype(jnp.bfloat16), pos, axis=1)
+        o = L.decode_attention(q, k_c, v_c, pos + 1)
+        h = h + L.attn_out(p["attn"], o, cfg)
+        x_in = L.rms_norm(h, p["ln2"], eps=cfg.norm_eps)
+        qx = (x_in @ p["xattn"]["wq"].astype(dt)).reshape(
+            B, 1, cfg.n_heads, cfg.resolved_head_dim)
+        ox = L.decode_attention(qx, xk_g, xv_g, xk_g.shape[1])
+        h = h + L.attn_out(p["xattn"], ox, cfg)
+        m = L.mlp_apply(p["mlp"], L.rms_norm(h, p["ln3"], eps=cfg.norm_eps),
+                        act="gelu")
+        h = h + m
+        return h, (k_c, v_c)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = L.rms_norm(h, params["ln_f"], eps=cfg.norm_eps)
+    logits = L.unembed(h, params["embed"], cap=cfg.logit_softcap)
+    new_cache = {**cache, "k": k_new, "v": v_new, "pos": pos + 1}
+    return logits[:, 0], new_cache

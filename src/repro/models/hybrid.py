@@ -1,0 +1,269 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared attention+MLP block
+(same weights every invocation) applied every `attn_every` mamba layers, fed
+with concat(hidden, first-layer embedding) through a shared down-projection.
+
+Scan structure: scan over groups of `attn_every` mamba layers; the shared
+block runs after every group (shared weights live OUTSIDE the scanned stack,
+so lax.scan sees a uniform body — no per-step param stacking).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.sharding import constrain
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    """Full groups of attn_every mamba layers + 1 shared-attn invocation;
+    n_layers % attn_every trailing mamba layers run after the scan (no attn)."""
+    return cfg.n_layers // cfg.attn_every
+
+
+def n_tail(cfg: ArchConfig) -> int:
+    return cfg.n_layers - n_groups(cfg) * cfg.attn_every
+
+
+def init_params(key, cfg: ArchConfig):
+    G, T = n_groups(cfg), n_tail(cfg)
+    keys = jax.random.split(key, 6)
+    lkeys = jax.random.split(keys[0], G * cfg.attn_every)
+    tkeys = jax.random.split(keys[5], max(T, 1))
+
+    def layer_init(k):
+        return {"mamba": M.mamba2_init(k, cfg),
+                "ln": jnp.ones((cfg.d_model,), jnp.float32)}
+
+    def group_init(gkeys):
+        return [layer_init(gkeys[i]) for i in range(cfg.attn_every)]
+
+    stacked = jax.vmap(group_init)(
+        lkeys.reshape(G, cfg.attn_every, *lkeys.shape[1:]))
+    tail = jax.vmap(layer_init)(tkeys[:T]) if T else None
+    shared = {
+        "proj_in": L.dense_init(keys[1], (2 * cfg.d_model, cfg.d_model)),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": L.attn_init(keys[2], cfg),
+        "mlp": L.mlp_init(keys[3], cfg.d_model, cfg.d_ff, cfg.n_layers),
+    }
+    params = {
+        "layers": stacked,
+        "shared": shared,
+        "embed": L.embed_init(keys[4], (cfg.padded_vocab, cfg.d_model)),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if tail is not None:
+        params["tail"] = tail
+    return params
+
+
+def _tail_apply(params, cfg: ArchConfig, h, *, states=None):
+    """Trailing mamba layers (scan, no shared attention). states: stacked
+    decode states (T, ...) or None for full-seq. Returns (h, new_states)."""
+    if "tail" not in params:
+        return h, states
+
+    if states is None:
+        def body(hh, p):
+            x = L.rms_norm(hh, p["ln"], eps=cfg.norm_eps)
+            y, st = M.mamba2_apply(p["mamba"], x, cfg)
+            return hh + y, st
+        h, sts = jax.lax.scan(body, h, params["tail"])
+        return h, sts
+
+    def body(hh, xs):
+        p, st = xs
+        x = L.rms_norm(hh, p["ln"], eps=cfg.norm_eps)
+        y, st_new = M.mamba2_decode(p["mamba"], x, cfg, st)
+        return hh + y, st_new
+    h, sts = jax.lax.scan(body, h, (params["tail"], states))
+    return h, sts
+
+
+def _shared_block(p, h, h0, cfg: ArchConfig, cos, sin, *, cache=None, pos=None):
+    """Shared attention+MLP. Returns (delta, (k, v) or updated cache slice)."""
+    dt = cfg.compute_dtype
+    x = jnp.concatenate([h, h0], axis=-1) @ p["proj_in"].astype(dt)
+    a_in = L.rms_norm(x, p["ln1"], eps=cfg.norm_eps)
+    q, k, v = L.attn_qkv(p["attn"], a_in, cfg, cos, sin)
+    if cache is None:
+        o = L.blocked_attention(q, k, v, causal=True,
+                                block_q=cfg.attn_block_q,
+                                block_kv=cfg.attn_block_kv)
+        kv = (k, v)
+    else:
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            cache[0], k.astype(jnp.bfloat16), pos, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            cache[1], v.astype(jnp.bfloat16), pos, axis=1)
+        o = L.decode_attention(q, k_c, v_c, pos + 1)
+        kv = (k_c, v_c)
+    o = L.attn_out(p["attn"], o, cfg)
+    x = x + o
+    m = L.mlp_apply(p["mlp"], L.rms_norm(x, p["ln2"], eps=cfg.norm_eps))
+    return x + m, kv
+
+
+def forward(params, cfg: ArchConfig, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    dt = cfg.compute_dtype
+    h = L.embed_lookup(params["embed"], tokens, dt)
+    h0 = h
+    h = constrain(h, "batch", None, None)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    shared = params["shared"]
+
+    def group_body(h, group_params):
+        def inner(h, group_params):
+            for i in range(cfg.attn_every):
+                p = group_params[i]
+                x = L.rms_norm(h, p["ln"], eps=cfg.norm_eps)
+                y, _ = M.mamba2_apply(p["mamba"], x, cfg)
+                h = constrain(h + y, "batch", None, None)
+            delta, _ = _shared_block(shared, h, h0, cfg, cos, sin)
+            return constrain(h + delta, "batch", None, None)
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        return inner(h, group_params), None
+
+    h, _ = jax.lax.scan(group_body, h, params["layers"])
+    h, _ = _tail_apply(params, cfg, h)
+    h = L.rms_norm(h, params["ln_f"], eps=cfg.norm_eps)
+    logits = L.unembed(h, params["embed"], cap=cfg.logit_softcap)
+    return constrain(logits, "batch", None, "model")
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    return L.cross_entropy(forward(params, cfg, batch), batch["labels"],
+                           vocab=cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, B: int, S_max: int):
+    G, T = n_groups(cfg), n_tail(cfg)
+    hd = cfg.resolved_head_dim
+    kv_shape = (G, B, S_max, cfg.n_kv_heads, hd)
+    ssm = M.mamba2_state_init(cfg, B)
+
+    def rep(n):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), ssm)
+
+    cache = {
+        "k": jnp.zeros(kv_shape, jnp.bfloat16),
+        "v": jnp.zeros(kv_shape, jnp.bfloat16),
+        "ssm": rep(G * cfg.attn_every),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if T:
+        cache["tail_ssm"] = rep(T)
+    return cache
+
+
+def prefill(params, cfg: ArchConfig, batch, *, cache_len: Optional[int] = None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    S_max = cache_len or S
+    dt = cfg.compute_dtype
+    h = L.embed_lookup(params["embed"], tokens, dt)
+    h0 = h
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    shared = params["shared"]
+    G, T = n_groups(cfg), n_tail(cfg)
+
+    def group_body(h, group_params):
+        ssm_states = []
+        for i in range(cfg.attn_every):
+            p = group_params[i]
+            x = L.rms_norm(h, p["ln"], eps=cfg.norm_eps)
+            y, st = M.mamba2_apply(p["mamba"], x, cfg)
+            ssm_states.append(st)
+            h = h + y
+        delta, (k, v) = _shared_block(shared, h, h0, cfg, cos, sin)
+        h = h + delta
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_states)
+        return h, (stacked, k, v)
+
+    h, (ssm_all, k_all, v_all) = jax.lax.scan(group_body, h, params["layers"])
+    h, tail_states = _tail_apply(params, cfg, h)
+
+    def fix_kv(x):
+        pad = S_max - S
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) \
+            .astype(jnp.bfloat16)
+
+    cache = {
+        "k": fix_kv(k_all), "v": fix_kv(v_all),
+        # (G, ae, ...) -> (G*ae, ...): exact states incl. the conv tail
+        "ssm": jax.tree.map(
+            lambda x: x.reshape((G * cfg.attn_every,) + x.shape[2:]), ssm_all),
+        "pos": jnp.asarray(S, jnp.int32),
+    }
+    if T:
+        cache["tail_ssm"] = tail_states
+    hl = L.rms_norm(h[:, -1:], params["ln_f"], eps=cfg.norm_eps)
+    logits = L.unembed(hl, params["embed"], cap=cfg.logit_softcap)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, **_):
+    B = token.shape[0]
+    pos = cache["pos"]
+    dt = cfg.compute_dtype
+    h = L.embed_lookup(params["embed"], token, dt)
+    h0 = h
+    cos, sin = L.rope_cos_sin(jnp.full((B, 1), pos, jnp.int32),
+                              cfg.resolved_head_dim, cfg.rope_theta)
+    shared = params["shared"]
+    G, T = n_groups(cfg), n_tail(cfg)
+    ae = cfg.attn_every
+
+    def fold(x):
+        return x.reshape((G, ae) + x.shape[1:])
+
+    ssm_f = jax.tree.map(fold, cache["ssm"])
+
+    def group_body(h, xs):
+        group_params, ssm_g, k_g, v_g = xs
+        new_states = []
+        for i in range(ae):
+            p = group_params[i]
+            st = jax.tree.map(lambda x: x[i], ssm_g)
+            x = L.rms_norm(h, p["ln"], eps=cfg.norm_eps)
+            y, st_new = M.mamba2_decode(p["mamba"], x, cfg, st)
+            new_states.append(st_new)
+            h = h + y
+        delta, (k_new, v_new) = _shared_block(shared, h, h0, cfg, cos, sin,
+                                              cache=(k_g, v_g), pos=pos)
+        h = h + delta
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_states)
+        return h, (stacked, k_new, v_new)
+
+    h, (ssm_new, k_new, v_new) = jax.lax.scan(
+        group_body, h, (params["layers"], ssm_f, cache["k"], cache["v"]))
+
+    new_cache = {
+        "k": k_new, "v": v_new,
+        "ssm": jax.tree.map(
+            lambda x: x.reshape((G * ae,) + x.shape[2:]), ssm_new),
+        "pos": pos + 1,
+    }
+    if T:
+        h, tail_new = _tail_apply(params, cfg, h, states=cache["tail_ssm"])
+        new_cache["tail_ssm"] = tail_new
+
+    h = L.rms_norm(h, params["ln_f"], eps=cfg.norm_eps)
+    logits = L.unembed(h, params["embed"], cap=cfg.logit_softcap)
+    return logits[:, 0], new_cache

@@ -1,0 +1,279 @@
+"""Shared model building blocks (pure JAX, functional, pytree params).
+
+Design notes:
+  * Everything is written so a stack of layers can be `lax.scan`ned (HLO size
+    O(1) in depth — required for tractable 512-device dry-run compiles).
+  * Attention is a blocked, online-softmax ("flash-style") scan over KV blocks:
+    O(S * block) memory, works at 32k prefill; wrapped in jax.checkpoint by the
+    layer stacks so the backward recomputes instead of materializing scores.
+  * Params are stored fp32 (optimizer precision), compute is cfg.dtype (bf16).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: float = 1.0):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std)
+
+
+def embed_init(key, shape):
+    return jax.random.normal(key, shape, jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, *, eps: float = 1e-6, plus_one: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale) if plus_one else scale
+    return (x * s).astype(dt)
+
+
+def layer_norm(x, scale, bias, *, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale + bias).astype(dt)
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim//2)."""
+    inv = rope_freqs(head_dim, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions, head_dim: int, theta: float, sections):
+    """qwen2-vl M-RoPE. positions (B, 3, S); sections sum to head_dim//2.
+    Frequency slot i takes its position from component t/h/w per `sections`."""
+    inv = rope_freqs(head_dim, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (B, 3, S, hd/2)
+    parts, start = [], 0
+    for comp, sec in enumerate(sections):
+        parts.append(ang[:, comp, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                   # (B, S, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B, S, H, hd); cos/sin (B, S, hd/2) or (S, hd/2). Half-rotation."""
+    if cos.ndim == 2:
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k, scale):
+    """q (B, bq, KH, G, hd) x k (B, bkv, KH, hd) -> (B, KH, G, bq, bkv) fp32."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def blocked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      cap: float = 0.0, block_q: int = 512,
+                      block_kv: int = 1024, q_offset: int = 0):
+    """Online-softmax attention, scanned over KV blocks.
+
+    q (B, Sq, H, hd); k/v (B, Skv, KH, hd) with H = KH * G. Memory per step is
+    O(B * Sq * H/KH * block_kv) — never the full (Sq, Skv) score matrix.
+    `q_offset` shifts query positions (decode/chunked prefill).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = hd ** -0.5
+    bkv = min(block_kv, Skv)
+    pad_kv = (-Skv) % bkv
+    nkv = (Skv + pad_kv) // bkv
+
+    qh = q.reshape(B, Sq, KH, G, hd).astype(jnp.bfloat16)
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0))).astype(jnp.bfloat16)
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0))).astype(jnp.bfloat16)
+    kb = kp.reshape(B, nkv, bkv, KH, hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nkv, bkv, KH, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, k_j, v_j = inp
+        s = _gqa_scores(qh, k_j, scale)            # (B, KH, G, Sq, bkv)
+        s = softcap(s, cap)
+        kv_pos = j * bkv + jnp.arange(bkv)
+        mask = kv_pos[None, :] < Skv               # padded tail
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf) against NaN exp
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(jnp.bfloat16), v_j,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KH, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nkv), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     cap: float = 0.0):
+    """Single-position decode: q (B, 1, H, hd) vs cache (B, S, KH, hd).
+    `cache_len` = number of valid positions (the new token's kv already
+    written at cache_len - 1)."""
+    B, _, H, hd = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    scale = hd ** -0.5
+    qh = q.reshape(B, KH, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, cap)
+    pos = jnp.arange(S)
+    mask = pos[None] < cache_len
+    if window > 0:
+        mask = mask & (pos[None] > cache_len - 1 - window)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + apply)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ArchConfig, *, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd)),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd)),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd)),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d),
+                         scale=1.0 / (2 * max(cfg.n_layers, 1)) ** 0.5),
+    }
+
+
+def attn_qkv(p, x, cfg: ArchConfig, cos, sin, *, rope: bool = True):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = cfg.compute_dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, cfg.n_kv_heads, hd)
+    if rope:
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_out(p, o, cfg: ArchConfig):
+    B, S = o.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"].astype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, n_layers: int, *, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d, f)),
+         "wo": dense_init(ks[2], (f, d), scale=1.0 / (2 * n_layers) ** 0.5)}
+    if gated:
+        p["wg"] = dense_init(ks[1], (d, f))
+    return p
+
+
+def mlp_apply(p, x, *, act: str = "silu"):
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if "wg" in p:
+        g = x @ p["wg"].astype(dt)
+        if act == "gelu":
+            h = jax.nn.gelu(g.astype(jnp.float32)).astype(dt) * h
+        else:
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(dt)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_lookup(table, tokens, dtype):
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(x, table, *, cap: float = 0.0):
+    logits = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return softcap(logits, cap)
+
+
+def cross_entropy(logits, labels, *, vocab: int):
+    """Mean next-token CE; labels < 0 or >= vocab are masked (vocab padding)."""
+    logits = logits.astype(jnp.float32)
+    valid = (labels >= 0) & (labels < vocab)
+    safe = jnp.clip(labels, 0, logits.shape[-1] - 1)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

@@ -1,0 +1,168 @@
+"""Mamba2 (SSD) layer — chunked state-space dual algorithm, TPU/MXU-friendly.
+
+The SSD recurrence per head (A scalar-identity per head, the Mamba2 choice):
+
+    S_t = a_t * S_{t-1} + dt_t * B_t (x) x_t        S in R^{d_state x head_dim}
+    y_t = C_t . S_t + D * x_t
+
+Chunked evaluation (chunk = cfg.ssm_chunk): intra-chunk term is a masked
+(c x c) matmul per head (MXU), inter-chunk term is a scan over chunk states —
+O(S*c) memory instead of O(S^2), O(1)/token decode via the recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def mamba2_init(key, cfg: ArchConfig):
+    d, din, ds, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 10)
+    return {
+        "wz": dense_init(ks[0], (d, din)),
+        "wx": dense_init(ks[1], (d, din)),
+        "wB": dense_init(ks[2], (d, ds)),
+        "wC": dense_init(ks[3], (d, ds)),
+        "wdt": dense_init(ks[4], (d, H)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "conv_x": dense_init(ks[5], (cw, din), scale=cw ** 0.5),
+        "conv_B": dense_init(ks[6], (cw, ds), scale=cw ** 0.5),
+        "conv_C": dense_init(ks[7], (cw, ds), scale=cw ** 0.5),
+        "norm": jnp.ones((din,), jnp.float32),
+        "wo": dense_init(ks[8], (din, d),
+                         scale=1.0 / (2 * max(cfg.n_layers, 1)) ** 0.5),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x (B, S, C), w (cw, C). state (B, cw-1, C) for
+    decode continuity. Returns (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(cw))
+    return y, xp[:, -(cw - 1):]
+
+
+def _proj_conv(p, x, cfg: ArchConfig, conv_state=None):
+    """Shared projection + conv for both chunked and decode paths."""
+    dt_c = cfg.compute_dtype
+    z = x @ p["wz"].astype(dt_c)
+    xs = x @ p["wx"].astype(dt_c)
+    Bm = x @ p["wB"].astype(dt_c)
+    Cm = x @ p["wC"].astype(dt_c)
+    dt = x @ p["wdt"].astype(dt_c)
+    # Three separate depthwise convs (not one fused concat): identical math,
+    # but xs is TP-sharded over d_inner while B/C are replicated (d_state is
+    # tiny) — a concat would force GSPMD to materialize xs unsharded.
+    if conv_state is None:
+        st_x = st_B = st_C = None
+    else:
+        st_x, st_B, st_C = conv_state
+    xs, new_x = _causal_conv(xs, p["conv_x"], st_x)
+    Bm, new_B = _causal_conv(Bm, p["conv_B"], st_B)
+    Cm, new_C = _causal_conv(Cm, p["conv_C"], st_C)
+    new_conv = (new_x, new_B, new_C)
+    act = lambda t: jax.nn.silu(t.astype(jnp.float32)).astype(dt_c)
+    xs, Bm, Cm = act(xs), act(Bm), act(Cm)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return z, xs, Bm, Cm, dt, new_conv
+
+
+def mamba2_apply(p, x, cfg: ArchConfig, *, init_state=None):
+    """Full-sequence (train/prefill) chunked SSD. x (B, S, d_model).
+    Returns (y (B, S, d_model), state dict {"ssm", "conv"}) — the state is
+    exact (incl. the depthwise-conv tail), so prefill->decode is seamless."""
+    B_, S, _ = x.shape
+    H, hd, ds = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    c = min(cfg.ssm_chunk, S)
+    assert S % c == 0, f"seq {S} % chunk {c} != 0"
+    nc = S // c
+    dt_c = cfg.compute_dtype
+
+    z, xs, Bm, Cm, dt, conv_tail = _proj_conv(p, x, cfg)
+    xh = xs.reshape(B_, nc, c, H, hd)
+    Bc = Bm.reshape(B_, nc, c, ds).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nc, c, ds).astype(jnp.float32)
+    dtc = dt.reshape(B_, nc, c, H)                       # fp32
+    A = -jnp.exp(p["A_log"])                             # (H,) negative
+    la = dtc * A                                         # log decay <= 0
+    cum = jnp.cumsum(la, axis=2)                         # (B, nc, c, H)
+
+    if init_state is None:
+        init_state = jnp.zeros((B_, H, ds, hd), jnp.float32)
+
+    def chunk_step(S_in, inp):
+        xj, Bj, Cj, laj, cumj, dtj = inp                 # per-chunk slices
+        # intra-chunk: scores[t, j] = (C_t . B_j) * exp(cum_t - cum_j) * dt_j
+        G = jnp.einsum("bid,bjd->bij", Cj, Bj,
+                       preferred_element_type=jnp.float32)       # (B, c, c)
+        # mask BEFORE exp: upper-triangle exponents are positive (overflow to
+        # inf, which poisons the backward pass as inf*0 -> NaN); exp(-inf)=0
+        # with a zero gradient is safe.
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        ediff = cumj[:, :, None, :] - cumj[:, None, :, :]          # (B,c,c,H)
+        decay = jnp.exp(jnp.where(mask[None, :, :, None], ediff, -jnp.inf))
+        scores = G[..., None] * decay * dtj[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", scores,
+                             xj.astype(jnp.float32))
+        # inter-chunk: y_t += C_t . (exp(cum_t) * S_in)
+        Cdec = Cj[:, :, None, :] * jnp.exp(cumj)[:, :, :, None]  # (B,c,H,ds)
+        y_inter = jnp.einsum("bihd,bhdp->bihp", Cdec, S_in)
+        # state update: S_out = exp(cum_last) * S_in + sum_j exp(cum_last-cum_j) dt_j B_j (x) x_j
+        seg = jnp.exp(cumj[:, -1:, :] - cumj)                     # (B, c, H)
+        Bw = Bj[:, :, None, :] * (seg * dtj)[..., None]           # (B,c,H,ds)
+        S_new = jnp.einsum("bjhd,bjhp->bhdp", Bw, xj.astype(jnp.float32))
+        S_out = jnp.exp(cumj[:, -1])[:, :, None, None] * S_in + S_new
+        return S_out, (y_intra + y_inter)
+
+    xs_t = xh.transpose(1, 0, 2, 3, 4)
+    inp = (xs_t, Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3),
+           la.reshape(B_, nc, c, H).transpose(1, 0, 2, 3),
+           cum.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3))
+    final_state, ys = jax.lax.scan(chunk_step, init_state, inp)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S, H, hd)
+    y = y + xh.reshape(B_, S, H, hd).astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, -1).astype(dt_c)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_c)
+    y = rms_norm(y, p["norm"], eps=cfg.norm_eps)
+    return y @ p["wo"].astype(dt_c), {"ssm": final_state, "conv": conv_tail}
+
+
+def mamba2_decode(p, x, cfg: ArchConfig, state):
+    """One-token step. x (B, 1, d). state = dict(ssm (B,H,ds,hd), conv)."""
+    H, hd, ds = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dt_c = cfg.compute_dtype
+    z, xs, Bm, Cm, dt, new_conv = _proj_conv(p, x, cfg, state["conv"])
+    B_ = x.shape[0]
+    xh = xs.reshape(B_, H, hd).astype(jnp.float32)
+    Bv = Bm.reshape(B_, ds).astype(jnp.float32)
+    Cv = Cm.reshape(B_, ds).astype(jnp.float32)
+    dtv = dt.reshape(B_, H)
+    a = jnp.exp(dtv * -jnp.exp(p["A_log"]))              # (B, H)
+    S = state["ssm"]
+    S = a[:, :, None, None] * S + jnp.einsum(
+        "bd,bhp->bhdp", Bv, xh * dtv[..., None])
+    y = jnp.einsum("bd,bhdp->bhp", Cv, S) + xh * p["D"][None, :, None]
+    y = y.reshape(B_, 1, -1).astype(dt_c)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_c)
+    y = rms_norm(y, p["norm"], eps=cfg.norm_eps)
+    return y @ p["wo"].astype(dt_c), {"ssm": S, "conv": new_conv}
+
+
+def mamba2_state_init(cfg: ArchConfig, batch: int):
+    H, hd, ds = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cw = cfg.conv_width - 1
+    dt = cfg.compute_dtype
+    return {"ssm": jnp.zeros((batch, H, ds, hd), jnp.float32),
+            "conv": (jnp.zeros((batch, cw, cfg.d_inner), dt),
+                     jnp.zeros((batch, cw, ds), dt),
+                     jnp.zeros((batch, cw, ds), dt))}

@@ -1,0 +1,109 @@
+"""Per-parameter PartitionSpec rules (Megatron-style TP over the "model" axis).
+
+Rules are keyed by the leaf's *name* (last pytree path component) and apply to
+the TRAILING dims of the tensor; any leading dims (the lax.scan layer-stacking
+dim G, or the expert dim handled explicitly) are unsharded. This makes one
+rule table cover every family: dense / moe / hybrid / ssm / encdec / vlm.
+
+Column-parallel (output-dim sharded, no collective on entry):
+    wq wk wv wi wg           attention QKV + MLP up/gate
+    wz wx wdt                mamba2 in-projections (d_inner / heads sharded)
+    wr wk wv wg(rwkv) ck cr  rwkv6 time/channel-mix in-projections
+    wB_lora                  rwkv6 decay LoRA up
+Row-parallel (input-dim sharded, one psum on exit):
+    wo cv                    attention/MLP/mamba/rwkv out-projections
+Vocab-sharded:  embed unembed    (V, d) -> ("model", None)
+Expert-sharded: experts_*        (E, d, f) -> ("model", None, None)
+Head/channel vectors (sharded like the dim they scale):
+    A_log D dt_bias (H,) ; norm ln_x w0 u (din/d/H,hd)
+Everything else (norms, router, biases, mu): replicated.
+
+Optimizer moments reuse the same specs (same tree structure).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name -> spec over the TRAILING dims
+_COL = {"wq", "wk", "wv", "wi", "wg", "wz", "wx", "wdt",
+        "wr", "ck", "cr", "wB_lora", "proj_in"}
+_ROW = {"wo", "cv"}
+_VOCAB = {"embed", "unembed"}
+_EXPERT = {"experts_wi", "experts_wg", "experts_wo"}
+_SHARDED_VEC = {"A_log", "D", "dt_bias", "norm", "ln_x", "w0"}
+_SHARDED_2D = {"u"}          # (H, hd) -> ("model", None)
+_REPLICATED = {"router", "mu", "cmu", "ln1", "ln2", "ln3", "ln1_post",
+               "ln2_post", "ln_f", "ln_in", "ln_enc", "wA_lora",
+               "wB", "wC", "conv_x", "conv_B", "conv_C",
+               "enc_pos", "dec_pos"}
+# conv_x (cw, din) is sharded on its channel dim:
+_CONV_SHARDED = {"conv_x"}
+
+
+def spec_for(path, leaf) -> P:
+    """PartitionSpec for one param leaf given its pytree path."""
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = str(entry.key)
+            break
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            name = entry.name
+            break
+    ndim = leaf.ndim
+    lead = ()
+
+    def trail(*spec):
+        assert len(spec) <= ndim, (name, spec, leaf.shape)
+        return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+    if name in _EXPERT:
+        # (E, d, f): EP over model axis on the expert dim
+        return P(*(["model"] + [None] * (ndim - 1))[-ndim:]) if ndim >= 1 else P()
+    if name in _CONV_SHARDED:
+        return trail(None, "model")
+    if name in _VOCAB:
+        return trail("model", None)
+    if name in _COL:
+        return trail(None, "model")
+    if name in _ROW:
+        return trail("model", None)
+    if name in _SHARDED_2D:
+        return trail("model", None)
+    if name in _SHARDED_VEC:
+        return trail("model")
+    return P()  # replicated (norm scales, router, biases, small tables)
+
+
+def _expert_aware_spec(path, leaf) -> P:
+    """Expert tensors keep their stacked-layer leading dim unsharded but the
+    expert dim (dim -3 for (G, E, d, f) or dim 0 for (E, d, f)) on "model"."""
+    name = None
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            name = str(entry.key)
+            break
+    if name in _EXPERT:
+        # trailing three dims are (E, d|f, f|d)
+        ndim = leaf.ndim
+        spec = [None] * ndim
+        spec[ndim - 3] = "model"
+        return P(*spec)
+    return spec_for(path, leaf)
+
+
+def param_specs(params) -> Any:
+    """Pytree of PartitionSpecs matching `params`."""
+    return jax.tree_util.tree_map_with_path(_expert_aware_spec, params)
+
+
+def param_shardings(mesh: Mesh, params) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params))
+
+
+def shardings_like(mesh: Mesh, tree, specs) -> Any:
+    del tree
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)

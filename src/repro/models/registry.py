@@ -1,0 +1,33 @@
+"""Uniform model interface: family -> (init_params, forward, loss_fn,
+prefill, decode_step, init_cache)."""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from repro.configs.common import ArchConfig
+from repro.models import encdec, hybrid, rwkv_model, transformer
+
+
+def get_model(cfg: ArchConfig) -> SimpleNamespace:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif cfg.family == "hybrid":
+        mod = hybrid
+    elif cfg.family == "ssm":
+        mod = rwkv_model
+    elif cfg.family == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return SimpleNamespace(
+        init_params=lambda key: mod.init_params(key, cfg),
+        forward=lambda params, batch: mod.forward(params, cfg, batch),
+        loss_fn=lambda params, batch: mod.loss_fn(params, cfg, batch),
+        prefill=lambda params, batch, **kw: mod.prefill(params, cfg, batch,
+                                                        **kw),
+        decode_step=lambda params, token, cache, **kw: mod.decode_step(
+            params, cfg, token, cache, **kw),
+        init_cache=lambda B, S_max: mod.init_cache(cfg, B, S_max),
+        module=mod,
+        cfg=cfg,
+    )

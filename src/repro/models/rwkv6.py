@@ -1,0 +1,176 @@
+"""RWKV6 "Finch" — attention-free token mixer with data-dependent decay.
+
+Per head (hd = key/value dim per head):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T              S in R^{hd x hd}
+    y_t = r_t . (S_{t-1}) + (r_t (.) u . k_t) v_t    (u = per-head bonus)
+
+Chunked evaluation: a scan over chunks carries the (B, H, hd, hd) state;
+within a chunk the pairwise decay  exp(ecum_t - cum_j)  (elementwise over the
+key dim) turns the recurrence into masked matmuls. The exponent is <= 0 for
+every in-chunk pair (j < t), so we materialize the (c, c, hd) decay tensor
+directly rather than using the exp(a)*exp(-b) factorization, which overflows
+under strong decay. Memory per chunk step: B*H*c^2*hd fp32 — bounded by the
+chunk size (default 64 for RWKV6). O(1)/token decode via the recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models.layers import dense_init
+
+_LORA = 64  # low-rank size for the data-dependent decay
+
+RWKV_CHUNK = 64
+
+
+def rwkv6_init(key, cfg: ArchConfig):
+    d, H, hd = cfg.d_model, cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    f = cfg.d_ff
+    ks = jax.random.split(key, 12)
+    out_scale = 1.0 / (2 * max(cfg.n_layers, 1)) ** 0.5
+    return {
+        # time mix
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32),  # r,k,v,w,g mixes
+        "wr": dense_init(ks[1], (d, d)),
+        "wk": dense_init(ks[2], (d, d)),
+        "wv": dense_init(ks[3], (d, d)),
+        "wg": dense_init(ks[4], (d, d)),
+        "w0": jnp.full((d,), -2.0, jnp.float32),               # base decay
+        "wA_lora": dense_init(ks[5], (d, _LORA)),
+        "wB_lora": dense_init(ks[6], (_LORA, d)),
+        "u": dense_init(ks[7], (H, hd)),                       # bonus
+        "ln_x": jnp.ones((d,), jnp.float32),                   # head groupnorm
+        "wo": dense_init(ks[8], (d, d), scale=out_scale),
+        # channel mix
+        "cmu": jax.random.uniform(ks[9], (2, d), jnp.float32),  # k, r mixes
+        "ck": dense_init(ks[10], (d, f)),
+        "cv": dense_init(ks[11], (f, d), scale=out_scale),
+        "cr": dense_init(jax.random.fold_in(key, 99), (d, d)),
+    }
+
+
+def _shift(x, prev):
+    """Token shift: concat(prev_token, x[:-1]). prev (B, 1, d)."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _group_norm(y, scale, H, eps=1e-5):
+    """Per-head layer norm over the value dim (RWKV's GroupNorm(H))."""
+    B, S, d = y.shape
+    yh = y.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, S, d) * scale).astype(y.dtype)
+
+
+def _rkvwg(p, x, x_prev, cfg: ArchConfig):
+    dt = cfg.compute_dtype
+    xs = _shift(x, x_prev)
+    mixed = [x + (xs - x) * p["mu"][i].astype(dt) for i in range(5)]
+    r = mixed[0] @ p["wr"].astype(dt)
+    k = mixed[1] @ p["wk"].astype(dt)
+    v = mixed[2] @ p["wv"].astype(dt)
+    g = mixed[4] @ p["wg"].astype(dt)
+    # data-dependent decay (LoRA): log w in (-inf, 0)
+    ww = p["w0"] + jnp.tanh(mixed[3].astype(jnp.float32) @ p["wA_lora"]) @ p["wB_lora"]
+    log_w = -jnp.exp(ww)                                   # (B, S, d) < 0
+    return r, k, v, g, log_w
+
+
+def rwkv6_time_mix(p, x, cfg: ArchConfig, *, x_prev=None, state=None):
+    """Full-sequence chunked WKV. x (B, S, d). Returns (y, (last_x, state))."""
+    B, S, d = x.shape
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    c = min(RWKV_CHUNK, S)
+    assert S % c == 0
+    nc = S // c
+    dt = cfg.compute_dtype
+
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, d), dt)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    r, k, v, g, log_w = _rkvwg(p, x, x_prev, cfg)
+    rh = r.reshape(B, nc, c, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, nc, c, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, nc, c, H, hd).astype(jnp.float32)
+    cum = jnp.cumsum(log_w.reshape(B, nc, c, H, hd), axis=2)   # inclusive, <= 0
+    u = p["u"]                                                  # (H, hd)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)               # strictly lower
+
+    def chunk_step(S_in, inp):
+        rj, kj, vj, cumj = inp                                  # (B, c, H, hd)
+        ecum = jnp.pad(cumj[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0)))
+        # inter-chunk: y_t += (r_t (.) exp(ecum_t)) . S_in      (exp <= 1)
+        y_inter = jnp.einsum("bihd,bhdv->bihv", rj * jnp.exp(ecum), S_in)
+        # intra-chunk, exact pairwise decay (exponent <= 0 for j < t):
+        pair = jnp.exp(jnp.where(mask[None, :, :, None, None],
+                                 ecum[:, :, None] - cumj[:, None, :], -jnp.inf))
+        scores = jnp.einsum("bihd,bjhd,bijhd->bhij", rj, kj, pair)
+        y_intra = jnp.einsum("bhij,bjhv->bihv", scores, vj)
+        # bonus u on the diagonal: y_t += (r_t (.) u . k_t) v_t
+        diag = jnp.einsum("bihd,bihd->bih", rj * u[None, None], kj)
+        y_intra = y_intra + diag[..., None] * vj
+        # state: S_out = exp(cum_last) (.) S_in + sum_j (k_j (.) exp(cum_last - cum_j)) v_j^T
+        kdec = kj * jnp.exp(cumj[:, -1:] - cumj)                # <= 1
+        S_out = jnp.exp(cumj[:, -1])[..., None] * S_in + \
+            jnp.einsum("bjhd,bjhv->bhdv", kdec, vj)
+        return S_out, y_inter + y_intra
+
+    inp = (rh.transpose(1, 0, 2, 3, 4), kh.transpose(1, 0, 2, 3, 4),
+           vh.transpose(1, 0, 2, 3, 4), cum.transpose(1, 0, 2, 3, 4))
+    S_fin, ys = jax.lax.scan(chunk_step, state, inp)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, d)
+    y = _group_norm(y.astype(dt), p["ln_x"], H)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(dt)
+    return y @ p["wo"].astype(dt), (x[:, -1:], S_fin)
+
+
+def rwkv6_time_mix_decode(p, x, cfg: ArchConfig, x_prev, state):
+    """One-token step. x (B, 1, d)."""
+    B, _, d = x.shape
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    dt = cfg.compute_dtype
+    r, k, v, g, log_w = _rkvwg(p, x, x_prev, cfg)
+    rh = r.reshape(B, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, H, hd).astype(jnp.float32)
+    w = jnp.exp(log_w.reshape(B, H, hd))
+    u = p["u"]
+    y = jnp.einsum("bhd,bhdv->bhv", rh, state) + \
+        jnp.einsum("bhd,bhd->bh", rh * u[None], kh)[..., None] * vh
+    state = w[..., None] * state + jnp.einsum("bhd,bhv->bhdv", kh, vh)
+    y = y.reshape(B, 1, d).astype(dt)
+    y = _group_norm(y, p["ln_x"], H)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(dt)
+    return y @ p["wo"].astype(dt), (x, state)
+
+
+def rwkv6_channel_mix(p, x, cfg: ArchConfig, *, x_prev=None):
+    """RWKV channel mix (the FFN). Returns (y, last_x)."""
+    B, S, d = x.shape
+    dt = cfg.compute_dtype
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, d), dt)
+    xs = _shift(x, x_prev)
+    xk = x + (xs - x) * p["cmu"][0].astype(dt)
+    xr = x + (xs - x) * p["cmu"][1].astype(dt)
+    kk = jnp.square(jax.nn.relu((xk @ p["ck"].astype(dt)).astype(jnp.float32)))
+    rr = jax.nn.sigmoid((xr @ p["cr"].astype(dt)).astype(jnp.float32))
+    y = rr * (kk.astype(dt) @ p["cv"].astype(dt)).astype(jnp.float32)
+    return y.astype(dt), x[:, -1:]
+
+
+def rwkv6_state_init(cfg: ArchConfig, batch: int):
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    dt = cfg.compute_dtype
+    return {
+        "tm_x": jnp.zeros((batch, 1, cfg.d_model), dt),
+        "cm_x": jnp.zeros((batch, 1, cfg.d_model), dt),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

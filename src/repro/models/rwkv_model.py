@@ -1,0 +1,117 @@
+"""RWKV6 full model (attention-free SSM family). Decode carries per-layer
+(shift tokens + wkv state) — O(1) memory per token, so long_500k runs natively."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models import layers as L
+from repro.models import rwkv6 as R
+from repro.models.sharding import constrain
+
+
+def init_params(key, cfg: ArchConfig):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+
+    def layer_init(k):
+        return {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+                "mix": R.rwkv6_init(k, cfg)}
+
+    stacked = jax.vmap(layer_init)(keys[:cfg.n_layers])
+    return {
+        "layers": stacked,
+        "embed": L.embed_init(keys[-1], (cfg.padded_vocab, cfg.d_model)),
+        "ln_in": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "unembed": L.embed_init(keys[-2], (cfg.padded_vocab, cfg.d_model)),
+    }
+
+
+def forward(params, cfg: ArchConfig, batch):
+    tokens = batch["tokens"]
+    dt = cfg.compute_dtype
+    h = L.embed_lookup(params["embed"], tokens, dt)
+    h = L.rms_norm(h, params["ln_in"], eps=cfg.norm_eps)
+    h = constrain(h, "batch", None, None)
+
+    def body(h, p):
+        def inner(h, p):
+            y, _ = R.rwkv6_time_mix(p["mix"],
+                                    L.rms_norm(h, p["ln1"], eps=cfg.norm_eps),
+                                    cfg)
+            h = constrain(h + y, "batch", None, None)
+            y, _ = R.rwkv6_channel_mix(p["mix"],
+                                       L.rms_norm(h, p["ln2"],
+                                                  eps=cfg.norm_eps), cfg)
+            return constrain(h + y, "batch", None, None)
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        return inner(h, p), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h, params["ln_f"], eps=cfg.norm_eps)
+    logits = L.unembed(h, params["unembed"], cap=cfg.logit_softcap)
+    return constrain(logits, "batch", None, "model")
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    return L.cross_entropy(forward(params, cfg, batch), batch["labels"],
+                           vocab=cfg.vocab)
+
+
+def init_cache(cfg: ArchConfig, B: int, S_max: int = 0):
+    st = R.rwkv6_state_init(cfg, B)
+    return {
+        "state": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), st),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ArchConfig, batch, *, cache_len: Optional[int] = None):
+    """Prompt pass; returns (last logits, recurrent state cache)."""
+    tokens = batch["tokens"]
+    dt = cfg.compute_dtype
+    h = L.embed_lookup(params["embed"], tokens, dt)
+    h = L.rms_norm(h, params["ln_in"], eps=cfg.norm_eps)
+
+    def body(h, p):
+        x1 = L.rms_norm(h, p["ln1"], eps=cfg.norm_eps)
+        y, (tm_x, wkv) = R.rwkv6_time_mix(p["mix"], x1, cfg)
+        h = h + y
+        x2 = L.rms_norm(h, p["ln2"], eps=cfg.norm_eps)
+        y, cm_x = R.rwkv6_channel_mix(p["mix"], x2, cfg)
+        h = h + y
+        return h, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+
+    h, states = jax.lax.scan(body, h, params["layers"])
+    hl = L.rms_norm(h[:, -1:], params["ln_f"], eps=cfg.norm_eps)
+    logits = L.unembed(hl, params["unembed"], cap=cfg.logit_softcap)
+    cache = {"state": states, "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, **_):
+    dt = cfg.compute_dtype
+    h = L.embed_lookup(params["embed"], token, dt)
+    h = L.rms_norm(h, params["ln_in"], eps=cfg.norm_eps)
+
+    def body(h, xs):
+        p, st = xs
+        x1 = L.rms_norm(h, p["ln1"], eps=cfg.norm_eps)
+        y, (tm_x, wkv) = R.rwkv6_time_mix_decode(p["mix"], x1, cfg,
+                                                 st["tm_x"], st["wkv"])
+        h = h + y
+        x2 = L.rms_norm(h, p["ln2"], eps=cfg.norm_eps)
+        y, cm_x = R.rwkv6_channel_mix(p["mix"], x2, cfg, x_prev=st["cm_x"])
+        h = h + y
+        return h, {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv}
+
+    h, states = jax.lax.scan(body, h, (params["layers"], cache["state"]))
+    h = L.rms_norm(h, params["ln_f"], eps=cfg.norm_eps)
+    logits = L.unembed(h, params["unembed"], cap=cfg.logit_softcap)
+    return logits[:, 0], {"state": states, "pos": cache["pos"] + 1}

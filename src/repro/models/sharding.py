@@ -1,0 +1,67 @@
+"""Mesh-context sharding constraints for model code.
+
+Model functions call `constrain(x, "batch", None, "model")` with LOGICAL axis
+names; if a mesh context is active (set by the launcher) the constraint is
+applied, otherwise it is a no-op — so the same model code runs in single-device
+tests and in the 512-chip dry-run.
+
+Logical -> physical mapping: "batch" -> every pod/data axis present in the
+mesh; "model" -> the model axis; "data" -> the data axes only (sequence
+parallelism); None -> replicated.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _ctx.mesh = mesh
+    try:
+        yield
+    finally:
+        _ctx.mesh = prev
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def resolve(mesh: Mesh, *logical) -> P:
+    phys = []
+    for ax in logical:
+        if ax is None:
+            phys.append(None)
+        elif ax == "batch":
+            phys.append(batch_axes(mesh))
+        elif ax == "data":
+            phys.append(tuple(a for a in ("data",) if a in mesh.axis_names))
+        elif ax == "model":
+            phys.append("model" if "model" in mesh.axis_names else None)
+        else:
+            raise ValueError(f"unknown logical axis {ax!r}")
+    return P(*phys)
+
+
+def constrain(x, *logical):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(mesh, *logical)))
+
+
+def sharding(mesh: Mesh, *logical) -> NamedSharding:
+    return NamedSharding(mesh, resolve(mesh, *logical))

@@ -1,0 +1,316 @@
+"""Decoder-only LM stack: dense (llama-like), gemma2 (alt local/global,
+softcaps, sandwich norms), MoE (phi3.5 / qwen2-moe), VLM (qwen2-vl M-RoPE).
+
+Layer stacks are lax.scan'd over a repeating pattern of layer kinds (dense
+archs: pattern length 1; gemma2: [local, global]) with stacked params —
+HLO size is O(pattern), not O(L), which keeps 512-device dry-run compiles
+tractable. Each pattern-group body is jax.checkpoint'ed (remat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# layer pattern
+# ---------------------------------------------------------------------------
+
+def layer_pattern(cfg: ArchConfig):
+    """List of per-layer attention windows; scan iterates groups of this size."""
+    if cfg.alt_local_global:
+        return [cfg.sliding_window, 0]       # gemma2: even local, odd global
+    return [cfg.sliding_window]
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    p = len(layer_pattern(cfg))
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return cfg.n_layers // p
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": L.attn_init(ks[0], cfg),
+    }
+    if cfg.post_norms:
+        p["ln1_post"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ln2_post"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.family == "moe":
+        p["moe"] = MOE.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.n_layers)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    pat = len(layer_pattern(cfg))
+    G = n_groups(cfg)
+
+    def group_init(gkey):
+        gks = jax.random.split(gkey, pat)
+        return [_layer_init(gks[i], cfg) for i in range(pat)]
+
+    stacked = jax.vmap(group_init)(keys[:G])
+    params = {
+        "layers": stacked,                       # list of pat dicts, (G, ...)
+        "embed": L.embed_init(keys[-1], (cfg.padded_vocab, cfg.d_model)),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.embed_init(keys[-2],
+                                         (cfg.padded_vocab, cfg.d_model))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _rope_for(cfg: ArchConfig, positions):
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections:
+        return L.mrope_cos_sin(positions, hd, cfg.rope_theta,
+                               cfg.mrope_sections)
+    return L.rope_cos_sin(positions, hd, cfg.rope_theta)
+
+
+def _res_constrain(h, cfg: ArchConfig):
+    """Residual-stream sharding between blocks. Baseline: replicated over
+    "model". With cfg.seq_shard (§Perf hillclimb B, Korthikanti-style SP):
+    the SEQUENCE dim is sharded over "model" — norm/elementwise work and the
+    layer-scan carry stacks shrink by the TP degree; GSPMD replaces the
+    per-block psum with reduce-scatter + all-gather pairs of equal volume."""
+    if cfg.seq_shard and h.shape[1] > 1:
+        return constrain(h, "batch", "model", None)
+    return constrain(h, "batch", None, None)
+
+
+def _attn_block(p, h, cfg: ArchConfig, cos, sin, window: int, *,
+                q_offset: int = 0):
+    a_in = L.rms_norm(h, p["ln1"], eps=cfg.norm_eps)
+    q, k, v = L.attn_qkv(p["attn"], a_in, cfg, cos, sin)
+    q = constrain(q, "batch", None, "model", None)
+    if cfg.attn_stub:
+        # measurement-only stand-in (ArchConfig.attn_stub): causal cumsum of
+        # v — linear cost, zero score materialization. Used ONLY to attribute
+        # attention HBM traffic for §Perf B; never a real model.
+        G = cfg.n_heads // max(cfg.n_kv_heads, 1)
+        o = jnp.cumsum(v.astype(jnp.float32), axis=1).astype(v.dtype)
+        o = jnp.repeat(o, G, axis=2)
+    else:
+        o = L.blocked_attention(q, k, v, causal=True, window=window,
+                                cap=cfg.attn_softcap,
+                                block_q=cfg.attn_block_q,
+                                block_kv=cfg.attn_block_kv,
+                                q_offset=q_offset)
+    o = L.attn_out(p["attn"], o, cfg)
+    if cfg.post_norms:
+        o = L.rms_norm(o, p["ln1_post"], eps=cfg.norm_eps)
+    return o, (k, v)
+
+
+def _ffn_block(p, h, cfg: ArchConfig):
+    m_in = L.rms_norm(h, p["ln2"], eps=cfg.norm_eps)
+    if cfg.family == "moe":
+        m, aux = MOE.moe_apply(p["moe"], m_in, cfg)
+    else:
+        m, aux = L.mlp_apply(p["mlp"], m_in, act=cfg.act), {}
+    if cfg.post_norms:
+        m = L.rms_norm(m, p["ln2_post"], eps=cfg.norm_eps)
+    return m, aux
+
+
+def _embed_tokens(params, cfg: ArchConfig, batch):
+    h = L.embed_lookup(params["embed"], batch["tokens"], cfg.compute_dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        # stub frontend: merge precomputed patch embeddings at masked positions
+        mask = batch["vision_mask"]                       # (B, S) bool
+        vis_idx = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1
+        vis_idx = jnp.clip(vis_idx, 0, batch["vision_embeds"].shape[1] - 1)
+        vis = jnp.take_along_axis(
+            batch["vision_embeds"].astype(cfg.compute_dtype),
+            vis_idx[..., None], axis=1)
+        h = jnp.where(mask[..., None], vis, h)
+    return h
+
+
+def forward(params, cfg: ArchConfig, batch):
+    """Training/eval forward. batch: tokens (B, S) [+ positions / vision].
+    Returns logits (B, S, padded_vocab)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed_tokens(params, cfg, batch)
+    h = _res_constrain(h, cfg)
+
+    if cfg.mrope_sections:
+        positions = batch["positions"]                    # (B, 3, S)
+    else:
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+    cos, sin = _rope_for(cfg, positions)
+
+    pat = layer_pattern(cfg)
+
+    def group_body(h, group_params):
+        def inner(h, group_params):
+            for i, window in enumerate(pat):
+                p = group_params[i]
+                o, _ = _attn_block(p, h, cfg, cos, sin, window)
+                h = _res_constrain(h + o, cfg)
+                m, _ = _ffn_block(p, h, cfg)
+                h = _res_constrain(h + m, cfg)
+            return h
+        if cfg.remat:
+            inner = jax.checkpoint(inner)
+        return inner(h, group_params), None
+
+    # params["layers"] is a list (len pat) of stacked dicts -> rearrange for scan
+    stacked = params["layers"]
+    h, _ = jax.lax.scan(lambda hh, gp: group_body(hh, gp), h, stacked)
+
+    h = L.rms_norm(h, params["ln_f"], eps=cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = L.unembed(h, table, cap=cfg.logit_softcap)
+    return constrain(logits, "batch", None, "model")
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    logits = forward(params, cfg, batch)
+    return L.cross_entropy(logits, batch["labels"], vocab=cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _cache_layout(cfg: ArchConfig, B: int, S_max: int):
+    hd = cfg.resolved_head_dim
+    return jax.ShapeDtypeStruct((cfg.n_layers, B, S_max, cfg.n_kv_heads, hd),
+                                jnp.bfloat16)
+
+
+def init_cache(cfg: ArchConfig, B: int, S_max: int):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, B, S_max, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, jnp.bfloat16),
+            "v": jnp.zeros(shape, jnp.bfloat16),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ArchConfig, batch, *, cache_len: Optional[int] = None):
+    """Run the prompt through the stack, filling a KV cache of length
+    cache_len (>= S). Returns (last-position logits, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    S_max = cache_len or S
+    h = _embed_tokens(params, cfg, batch)
+    if cfg.mrope_sections:
+        positions = batch["positions"]
+    else:
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+    cos, sin = _rope_for(cfg, positions)
+    pat = layer_pattern(cfg)
+
+    def group_body(h, group_params):
+        ks, vs = [], []
+        for i, window in enumerate(pat):
+            p = group_params[i]
+            o, (k, v) = _attn_block(p, h, cfg, cos, sin, window)
+            h = constrain(h + o, "batch", None, None)
+            m, _ = _ffn_block(p, h, cfg)
+            h = constrain(h + m, "batch", None, None)
+            ks.append(k)
+            vs.append(v)
+        return h, (jnp.stack(ks), jnp.stack(vs))          # (pat, B, S, KH, hd)
+
+    h, (k_all, v_all) = jax.lax.scan(group_body, h, params["layers"])
+    # (G, pat, B, S, KH, hd) -> (L, B, S_max, KH, hd)
+    def fix(x):
+        x = x.reshape(cfg.n_layers, B, S, cfg.n_kv_heads, -1)
+        pad = S_max - S
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) \
+            .astype(jnp.bfloat16)
+    cache = {"k": fix(k_all), "v": fix(v_all),
+             "pos": jnp.asarray(S, jnp.int32)}
+
+    h = L.rms_norm(h[:, -1:], params["ln_f"], eps=cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = L.unembed(h, table, cap=cfg.logit_softcap)
+    return logits[:, 0], cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, *, positions=None):
+    """One decode step. token (B, 1) int32; cache from init_cache/prefill.
+    Returns (logits (B, vocab), new cache)."""
+    B = token.shape[0]
+    pos = cache["pos"]
+    batch = {"tokens": token}
+    if cfg.family == "vlm":
+        pos3 = positions if positions is not None \
+            else jnp.broadcast_to(pos, (B, 3, 1)).astype(jnp.int32)
+        cos, sin = _rope_for(cfg, pos3)
+    else:
+        cos, sin = _rope_for(cfg, jnp.full((B, 1), pos, jnp.int32))
+    h = _embed_tokens(params, cfg, batch)
+
+    pat = layer_pattern(cfg)
+    G = n_groups(cfg)
+
+    def fold(x):  # (L, ...) -> (G, pat, ...)
+        return x.reshape((G, len(pat)) + x.shape[1:])
+
+    k_cache, v_cache = fold(cache["k"]), fold(cache["v"])
+
+    def group_body(h, xs):
+        group_params, k_g, v_g = xs
+        k_out, v_out = [], []
+        for i, window in enumerate(pat):
+            p = group_params[i]
+            a_in = L.rms_norm(h, p["ln1"], eps=cfg.norm_eps)
+            q, k, v = L.attn_qkv(p["attn"], a_in, cfg, cos, sin)
+            k_i = jax.lax.dynamic_update_slice_in_dim(
+                k_g[i], k.astype(jnp.bfloat16), pos, axis=1)
+            v_i = jax.lax.dynamic_update_slice_in_dim(
+                v_g[i], v.astype(jnp.bfloat16), pos, axis=1)
+            o = L.decode_attention(q, k_i, v_i, pos + 1, window=window,
+                                   cap=cfg.attn_softcap)
+            o = L.attn_out(p["attn"], o, cfg)
+            if cfg.post_norms:
+                o = L.rms_norm(o, p["ln1_post"], eps=cfg.norm_eps)
+            h = constrain(h + o, "batch", None, None)
+            m, _ = _ffn_block(p, h, cfg)
+            h = constrain(h + m, "batch", None, None)
+            k_out.append(k_i)
+            v_out.append(v_i)
+        return h, (jnp.stack(k_out), jnp.stack(v_out))
+
+    h, (k_new, v_new) = jax.lax.scan(
+        group_body, h, (params["layers"], k_cache, v_cache))
+
+    h = L.rms_norm(h, params["ln_f"], eps=cfg.norm_eps)
+    table = params.get("unembed", params["embed"])
+    logits = L.unembed(h, table, cap=cfg.logit_softcap)
+
+    def unfold(x):
+        return x.reshape((cfg.n_layers,) + x.shape[2:])
+
+    new_cache = {"k": unfold(k_new), "v": unfold(v_new), "pos": pos + 1}
+    return logits[:, 0], new_cache

@@ -1,0 +1,9 @@
+"""repro.optim — AdamW + schedules + gradient compression (error feedback)."""
+from repro.optim.adamw import (AdamWConfig, OptState, apply, clip_by_global_norm,
+                               global_norm, init, schedule)
+from repro.optim.grad_compress import (CompressConfig, EFState, compress_with_ef,
+                                       init_ef, roundtrip, wire_bytes)
+
+__all__ = ["AdamWConfig", "OptState", "apply", "init", "schedule",
+           "global_norm", "clip_by_global_norm", "CompressConfig", "EFState",
+           "compress_with_ef", "init_ef", "roundtrip", "wire_bytes"]

@@ -1,0 +1,4 @@
+"""repro.roofline — HLO collective parsing + three-term roofline analysis."""
+from repro.roofline.hlo import collective_bytes, scan_trip_counts
+
+__all__ = ["collective_bytes", "scan_trip_counts"]

@@ -1,0 +1,372 @@
+"""Scan-aware analysis of compiled HLO text: FLOPs, bytes, collectives.
+
+Why not ``compiled.cost_analysis()``? XLA's cost analysis counts each
+while-loop body ONCE, but ``lax.scan`` over 30 transformer layers means the
+body runs 30x — the reported FLOPs are ~30x low. The compiled HLO carries the
+exact trip count in ``backend_config={"known_trip_count":{"n":"30"}}``, so we
+do our own accounting with per-computation multipliers:
+
+  * FLOPs       — every `dot` op: 2 * prod(result dims) * prod(lhs contracting
+                  dims); the MXU work that dominates every model here.
+  * HBM bytes   — every materializing op: result bytes + operand bytes
+                  (post-optimization HLO is fused, so op boundaries ARE the
+                  HBM round-trips; producer-write + consumer-read both count).
+  * collectives — all-reduce / all-gather / reduce-scatter / all-to-all /
+                  collective-permute wire bytes per device (ring algorithm),
+                  with replica-group sizes parsed per op.
+
+All numbers are PER DEVICE (the HLO module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops that do not materialize / are accounted elsewhere. `copy` is skipped
+# because the CPU backend materializes loop-carry copies that TPU buffer
+# aliasing elides — counting them inflates HBM traffic by the full carry
+# (incl. gradient-stacking buffers) once per loop iteration.
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "rng-get-and-update-state",
+    "copy", "copy-start", "copy-done",
+    "all-reduce-done", "all-gather-done", "send", "recv",
+    "send-done", "recv-done", "optimization-barrier", "domain", "reshape",
+}
+# ops that write/read only a SLICE of their full-shaped operand/result
+# (in-place on TPU): count 2x the moved bytes, not the whole buffer.
+_SLICE_RESULT = {"dynamic-slice", "slice", "gather"}
+_SLICE_UPDATE = {"dynamic-update-slice"}      # operand 1 is the update
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"            # result name
+    r"((?:\([^=]*?\)|[\w\[\]\{\},\s]+?))\s+"           # result type (+layout)
+    r"([\w\-]+)\(")                                    # op kind
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return max(n_devices, 1)
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(result_bytes) * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(result_bytes)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# module structure
+# ---------------------------------------------------------------------------
+
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _split_computations(hlo: str) -> tuple[Dict[str, list], Optional[str]]:
+    """name -> list of body lines (column-0 headers end with '{')."""
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace():
+            if line.startswith("}"):
+                cur = None
+                continue
+            m = _HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def scan_trip_counts(hlo: str) -> Dict[str, int]:
+    """while-BODY computation name -> known trip count (from backend_config)."""
+    trips: Dict[str, int] = {}
+    for line in hlo.splitlines():
+        if " while(" not in line:
+            continue
+        mb = re.search(r"body=%?([\w\.\-]+)", line)
+        mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+        if mb:
+            trips[mb.group(1)] = int(mt.group(1)) if mt else 1
+    return trips
+
+
+def _multipliers(comps: Dict[str, list], entry: Optional[str],
+                 trips: Dict[str, int]) -> Dict[str, float]:
+    mult: Dict[str, float] = defaultdict(float)
+    if entry:
+        mult[entry] = 1.0
+    for _ in range(30):  # fixpoint over nesting depth
+        changed = False
+        for name, body in comps.items():
+            base = mult.get(name, 0.0)
+            if base <= 0:
+                continue
+            for line in body:
+                for m in re.finditer(r"(?:condition|body)=%?([\w\.\-]+)", line):
+                    callee = m.group(1)
+                    new = base * trips.get(callee, 1)
+                    if mult.get(callee, 0.0) < new:
+                        mult[callee] = new
+                        changed = True
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", line):
+                    callee = m.group(1)
+                    if mult.get(callee, 0.0) < base:
+                        mult[callee] = base
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _symbol_table(hlo: str) -> Dict[str, str]:
+    """op result name -> result type string."""
+    table: Dict[str, str] = {}
+    for line in hlo.splitlines():
+        m = _OP_RE.match(line)
+        if m:
+            table[m.group(1)] = m.group(2)
+    return table
+
+
+def _fusion_bytes(callee_lines: list, table: Dict[str, str],
+                  result_type: str) -> int:
+    """HBM traffic of one fusion call, introspecting the fused body:
+
+      * a parameter consumed ONLY by dynamic-slice ops is read at the SLICE
+        size (scan bodies slice one layer's weights out of the (L, ...) stack
+        — reading the whole stack would be counted L times otherwise);
+      * a parameter that is operand 0 of a ROOT dynamic-update-slice is the
+        in-place aliased accumulator: read 0 (TPU aliases it), write at the
+        UPDATE size;
+      * everything else: full size, plus the root write at full size.
+    """
+    params: Dict[str, str] = {}      # param name -> type
+    uses: Dict[str, list] = {}       # name -> list of (kind, pos, rtype)
+    defs: Dict[str, tuple] = {}      # name -> (kind, operands, rtype)
+    for line in callee_lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rtype, kind = m.groups()
+        if kind == "parameter":
+            params[name] = rtype
+            continue
+        opnames = re.findall(r"[(,]\s*%?([\w\.\-]+)", line[line.index("("):])
+        defs[name] = (kind, opnames, rtype)
+        for i, on in enumerate(opnames):
+            uses.setdefault(on, []).append((kind, i, rtype))
+
+    _PASS = {"convert", "copy", "bitcast", "reshape", "transpose"}
+
+    def trace_param(name, depth=0):
+        """Follow convert/copy/... chains back to a parameter name (or None)."""
+        if name in params:
+            return name
+        if depth > 8 or name not in defs:
+            return None
+        kind, opnames, _ = defs[name]
+        if kind in _PASS and opnames:
+            return trace_param(opnames[0], depth + 1)
+        return None
+
+    # in-place buffers: every dynamic-update-slice whose operand 0 chains
+    # back to a parameter aliases that parameter (scan carries: the KV-cache /
+    # gradient-stack writeback). Write = update size; the aliased param reads
+    # only what the slice touches (~update size, counted with the write).
+    aliased = set()
+    dus_update_bytes = 0
+    has_dus = False
+    for name, (kind, opnames, rtype) in defs.items():
+        if kind != "dynamic-update-slice" or not opnames:
+            continue
+        has_dus = True
+        src = trace_param(opnames[0])
+        if src is not None:
+            aliased.add(src)
+        upd = opnames[1] if len(opnames) > 1 else None
+        if upd in params:
+            dus_update_bytes += _shape_bytes(params[upd])
+        elif upd in defs:
+            dus_update_bytes += _shape_bytes(defs[upd][2])
+
+    write = 2 * dus_update_bytes if has_dus and aliased \
+        else _shape_bytes(result_type)
+    total = write
+    for pname, ptype in params.items():
+        if pname in aliased:
+            continue
+        use = uses.get(pname, [])
+        if use and all(k == "dynamic-slice" and i == 0
+                       for k, i, _ in use):
+            total += sum(_shape_bytes(rt) for _, _, rt in use)
+        else:
+            total += _shape_bytes(ptype)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# public analysis
+# ---------------------------------------------------------------------------
+
+def analyze(hlo: str, *, n_devices: int = 0) -> dict:
+    """Scan-aware per-device totals: flops, bytes, collective wire bytes."""
+    comps, entry = _split_computations(hlo)
+    trips = scan_trip_counts(hlo)
+    mult = _multipliers(comps, entry, trips)
+    table = _symbol_table(hlo)
+    if not n_devices:
+        m = re.search(r"num_partitions=(\d+)", hlo)
+        n_devices = int(m.group(1)) if m else 1
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll_by_kind: Dict[str, float] = defaultdict(float)
+    coll_ops = []
+    fusion_bytes = 0.0
+
+    for name, body in comps.items():
+        cmult = mult.get(name, 0.0)
+        if cmult <= 0 or name.startswith("fused_computation") \
+                or name.startswith("wrapped_"):
+            # fusion bodies are accounted at their call sites
+            continue
+        for line in body:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            _, rtype, kind = m.groups()
+            if kind.endswith("-start"):
+                kind = kind[: -len("-start")]
+            # ----- collectives -----
+            if kind in _COLL_KINDS:
+                rb = _shape_bytes(rtype)
+                # the CPU backend PROMOTES bf16 all-reduces to f32 (no bf16
+                # arithmetic); the TPU target runs them in bf16 — count the
+                # wire at the pre-promotion width (to_apply name carries the
+                # "_promoted" marker).
+                if "promoted" in line and "f32" in rtype:
+                    rb //= 2
+                g = _group_size(line, n_devices)
+                wb = _wire_bytes(kind, rb, g)
+                coll_by_kind[kind] += wb * cmult
+                op_name = ""
+                mm = re.search(r'op_name="([^"]*)"', line)
+                if mm:
+                    op_name = mm.group(1).split("/")[-2:][0]
+                coll_ops.append({"kind": kind, "bytes": wb, "count": cmult,
+                                 "group": g, "computation": name,
+                                 "op_name": op_name})
+                bytes_accessed += 2 * rb * cmult  # read+write HBM side
+                continue
+            # ----- flops (dot) -----
+            if kind == "dot":
+                rdims = _shape_dims(rtype)
+                rsize = 1
+                for _, dims in rdims:
+                    for d in dims:
+                        rsize *= d
+                lhs = re.search(r"\(%?([\w\.\-]+)", line[line.index(kind):])
+                csz = 1
+                mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                if lhs and mc and lhs.group(1) in table:
+                    ldims = _shape_dims(table[lhs.group(1)])
+                    if ldims:
+                        dims = ldims[0][1]
+                        for ci in mc.group(1).split(","):
+                            if ci:
+                                csz *= dims[int(ci)]
+                flops += 2.0 * rsize * csz * cmult
+            # ----- bytes -----
+            if kind in _SKIP_BYTES:
+                continue
+            if kind in _SLICE_RESULT:
+                b = 2 * _shape_bytes(rtype)
+            elif kind in _SLICE_UPDATE:
+                opnames = re.findall(r"[(,]\s*%?([\w\.\-]+)",
+                                     line[line.index("("):])
+                upd = table.get(opnames[1], "") if len(opnames) > 1 else ""
+                b = 2 * _shape_bytes(upd)
+            elif kind == "fusion":
+                mcall = re.search(r"calls=%?([\w\.\-]+)", line)
+                callee = comps.get(mcall.group(1), []) if mcall else []
+                b = _fusion_bytes(callee, table, rtype)
+            else:
+                b = _shape_bytes(rtype)
+                for om in re.finditer(r"[(,]\s*%?([\w\.\-]+)",
+                                      line[line.index("("):]):
+                    b += _shape_bytes(table.get(om.group(1), ""))
+            bytes_accessed += b * cmult
+            if kind == "fusion":
+                fusion_bytes += b * cmult
+
+    return {
+        "flops": flops,
+        "bytes": bytes_accessed,
+        "n_devices": n_devices,
+        "collectives": {
+            "total_bytes": float(sum(coll_by_kind.values())),
+            "by_kind": dict(coll_by_kind),
+            "ops": sorted(coll_ops,
+                          key=lambda o: -o["bytes"] * o["count"])[:64],
+        },
+    }
+
+
+def collective_bytes(hlo: str, *, n_devices: int = 0) -> dict:
+    """Back-compat wrapper: just the collective schedule."""
+    res = analyze(hlo, n_devices=n_devices)
+    out = dict(res["collectives"])
+    out["n_devices"] = res["n_devices"]
+    return out

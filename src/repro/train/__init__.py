@@ -1,0 +1,4 @@
+"""repro.train — fault-tolerant training loop."""
+from repro.train.loop import LoopConfig, StepStats, train
+
+__all__ = ["LoopConfig", "StepStats", "train"]

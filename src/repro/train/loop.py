@@ -1,0 +1,134 @@
+"""Fault-tolerant training loop.
+
+Production behaviours implemented (and exercised by tests/examples):
+  * auto-resume: newest committed checkpoint + data pipeline ``skip_to`` —
+    a restarted cohort continues exactly where the dead one stopped;
+  * preemption save: SIGTERM/SIGINT triggers an immediate blocking
+    checkpoint then a clean exit (the standard TPU-pod preemption contract);
+  * periodic async checkpoints every ``save_every`` steps;
+  * straggler / slow-step monitor: per-step wall time EWMA + variance; steps
+    slower than mu + k*sigma are logged with their step index — at pod scale
+    this feeds the re-scheduling policy (here: a log line + counter);
+  * NaN-loss circuit breaker (skip update, count; abort after a run of them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    save_every: int = 200
+    log_every: int = 10
+    straggler_k: float = 3.0      # flag steps slower than mu + k*sigma
+    max_nan_steps: int = 5
+
+
+@dataclasses.dataclass
+class StepStats:
+    ewma: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    stragglers: int = 0
+
+    def update(self, dt: float, k: float) -> bool:
+        """Returns True if this step is a straggler."""
+        if self.n == 0:
+            self.ewma, self.var = dt, 0.0
+        slow = (self.n > 10
+                and dt > self.ewma + k * max(self.var, 1e-12) ** 0.5)
+        a = 0.05
+        d = dt - self.ewma
+        self.ewma += a * d
+        self.var = (1 - a) * (self.var + a * d * d)
+        self.n += 1
+        self.stragglers += int(slow)
+        return slow
+
+
+def train(state: Any,
+          train_step: Callable[[Any, dict], tuple[Any, dict]],
+          pipeline,
+          loop_cfg: LoopConfig,
+          *,
+          ckpt: Optional[CheckpointManager] = None,
+          resume: bool = True,
+          state_shardings: Any = None,
+          log_fn: Callable[[str], None] = print) -> tuple[Any, dict]:
+    """Runs up to loop_cfg.total_steps. Returns (final_state, summary)."""
+    start_step = 0
+    if ckpt is not None and resume and ckpt.latest_step() is not None:
+        start_step, state = ckpt.restore(state, shardings=state_shardings)
+        log_fn(f"[train] resumed from step {start_step}")
+    pipeline.skip_to(start_step)
+
+    preempted = {"flag": False}
+
+    def _handler(signum, frame):
+        preempted["flag"] = True
+        log_fn(f"[train] signal {signum}: preemption save requested")
+
+    old_term = signal.signal(signal.SIGTERM, _handler)
+    old_int = signal.signal(signal.SIGINT, _handler)
+
+    stats = StepStats()
+    losses: list[float] = []
+    nan_run = 0
+    step = start_step
+    try:
+        it = iter(pipeline)
+        while step < loop_cfg.total_steps:
+            step_idx, batch = next(it)
+            assert step_idx == step, (step_idx, step)
+            t0 = time.perf_counter()
+            new_state, metrics = train_step(state, batch)
+            loss = float(jax.device_get(metrics["loss"]))
+            dt = time.perf_counter() - t0
+
+            if np.isnan(loss) or np.isinf(loss):
+                nan_run += 1
+                log_fn(f"[train] step {step}: NaN/inf loss — update SKIPPED "
+                       f"({nan_run}/{loop_cfg.max_nan_steps})")
+                if nan_run >= loop_cfg.max_nan_steps:
+                    raise FloatingPointError("persistent NaN loss")
+            else:
+                nan_run = 0
+                state = new_state
+                losses.append(loss)
+
+            if stats.update(dt, loop_cfg.straggler_k):
+                log_fn(f"[train] step {step}: STRAGGLER {dt*1e3:.0f}ms "
+                       f"(ewma {stats.ewma*1e3:.0f}ms)")
+            if step % loop_cfg.log_every == 0:
+                log_fn(f"[train] step {step} loss {loss:.4f} "
+                       f"{dt*1e3:.0f}ms lr {float(metrics.get('lr', 0)):.2e}")
+
+            step += 1
+            if ckpt is not None and (step % loop_cfg.save_every == 0):
+                ckpt.save(step, state)
+            if preempted["flag"]:
+                if ckpt is not None:
+                    ckpt.save(step, state, blocking=True)
+                    log_fn(f"[train] preemption checkpoint at step {step}")
+                break
+    finally:
+        pipeline.stop()
+        signal.signal(signal.SIGTERM, old_term)
+        signal.signal(signal.SIGINT, old_int)
+        if ckpt is not None:
+            ckpt.wait()
+
+    summary = {"final_step": step, "losses": losses,
+               "stragglers": stats.stragglers,
+               "mean_step_ms": stats.ewma * 1e3,
+               "preempted": preempted["flag"]}
+    return state, summary

@@ -1,0 +1,164 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch
+instantiates its reduced config and runs forward + one train step on CPU,
+asserting output shapes and no NaNs; decode is checked against full prefill."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_NAMES, get_config, supported_shapes
+from repro.models.registry import get_model
+from repro.optim import AdamWConfig
+from repro.launch.step import init_train_state, make_train_step
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        vm = jnp.zeros((B, S), bool).at[:, :cfg.vision_tokens].set(True)
+        batch["vision_mask"] = vm
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (B, 3, S)).astype(jnp.int32)
+    if cfg.family == "encdec":
+        batch["encoder_feats"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_shapes_no_nan(arch):
+    cfg = get_config(arch, smoke=True)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = model.forward(params, batch)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_train_step_decreases_nothing_nan(arch):
+    cfg = get_config(arch, smoke=True)
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=1,
+                                                    decay_steps=10)))
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(3):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(l) for l in losses), losses
+    assert losses[-1] < losses[0], losses   # same batch: must overfit
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_decode_matches_prefill(arch):
+    """Last-token logits from (prefill S-1 + decode 1) == full prefill S."""
+    cfg = get_config(arch, smoke=True)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    S = 16
+    batch = _batch(cfg, B=2, S=S, seed=2)
+    batch.pop("labels")
+    full_logits, _ = model.prefill(params, batch)
+
+    pre = {k: (v[:, : S - 1] if k in ("tokens", "vision_mask") else v)
+           for k, v in batch.items()}
+    if "positions" in pre:
+        pre["positions"] = batch["positions"][:, :, : S - 1]
+    _, cache = model.prefill(params, pre, cache_len=S + 4)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["positions"] = jnp.full((2, 3, 1), S - 1, jnp.int32)
+    dec_logits, cache2 = model.decode_step(
+        params, batch["tokens"][:, S - 1:S], cache, **kw)
+    diff = float(jnp.max(jnp.abs(full_logits.astype(jnp.float32)
+                                 - dec_logits.astype(jnp.float32))))
+    assert diff < 0.06, f"{arch}: prefill/decode mismatch {diff}"
+    assert int(cache2["pos"]) == S
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_shape_support_matrix(arch):
+    cfg = get_config(arch)
+    shapes = supported_shapes(cfg)
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes)
+    if arch in ("zamba2-1.2b", "rwkv6-7b"):
+        assert "long_500k" in shapes     # sub-quadratic families
+    else:
+        assert "long_500k" not in shapes
+
+
+def test_full_configs_match_assignment():
+    """The exact figures from the assignment brief."""
+    spec = {
+        "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32, d_ff=8192,
+                            vocab=32000, ssm_state=64),
+        "deepseek-7b": dict(n_layers=30, d_model=4096, n_heads=32,
+                            n_kv_heads=32, d_ff=11008, vocab=102400),
+        "gemma2-2b": dict(n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4,
+                          d_ff=9216, vocab=256000),
+        "granite-8b": dict(n_layers=36, d_model=4096, n_heads=32,
+                           n_kv_heads=8, d_ff=14336, vocab=49152),
+        "codeqwen1.5-7b": dict(n_layers=32, d_model=4096, n_heads=32,
+                               n_kv_heads=32, d_ff=13440, vocab=92416),
+        "whisper-large-v3": dict(n_layers=32, d_model=1280, n_heads=20,
+                                 n_kv_heads=20, d_ff=5120, vocab=51866),
+        "phi3.5-moe-42b-a6.6b": dict(n_layers=32, d_model=4096, n_heads=32,
+                                     n_kv_heads=8, moe_d_ff=6400, vocab=32064,
+                                     n_experts=16, n_experts_per_tok=2),
+        "qwen2-moe-a2.7b": dict(n_layers=24, d_model=2048, n_heads=16,
+                                n_kv_heads=16, moe_d_ff=1408, vocab=151936,
+                                n_experts=60, n_experts_per_tok=4),
+        "qwen2-vl-7b": dict(n_layers=28, d_model=3584, n_heads=28,
+                            n_kv_heads=4, d_ff=18944, vocab=152064),
+        "rwkv6-7b": dict(n_layers=32, d_model=4096, d_ff=14336, vocab=65536),
+    }
+    for arch, fields in spec.items():
+        cfg = get_config(arch)
+        for f, v in fields.items():
+            assert getattr(cfg, f) == v, (arch, f, getattr(cfg, f), v)
+
+
+def test_moe_chunked_dispatch_equivalence():
+    """Chunked MoE dispatch == single-shot dispatch when capacity is ample."""
+    import dataclasses
+    from repro.models import moe as MOE
+    cfg = get_config("qwen2-moe-a2.7b", smoke=True)
+    cfg_big = dataclasses.replace(cfg, capacity_factor=8.0, moe_chunk=0)
+    cfg_chunk = dataclasses.replace(cfg, capacity_factor=8.0, moe_chunk=32)
+    p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                          jnp.float32).astype(cfg.compute_dtype)
+    y1, _ = MOE.moe_apply(p, x, cfg_big)
+    y2, _ = MOE.moe_apply(p, x, cfg_chunk)
+    # bf16 compute: chunked dispatch reorders accumulations -> ~1 ulp noise
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=6e-2)
+
+
+def test_kmeans_router_init_balances():
+    """Paper integration #2: k-means++ router init beats random on balance."""
+    from repro.models import moe as MOE
+    from repro.core.quality import balance
+    cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    # clustered token embeddings (realistic: token embeds live on a manifold)
+    from repro.data.synthetic import blobs
+    emb, _ = blobs(2048, cfg.d_model, cfg.n_experts, seed=1, spread=0.3)
+    emb = jnp.asarray(emb)
+    p = MOE.moe_init(key, cfg)
+    p_km = MOE.kmeans_router_init(jax.random.PRNGKey(2), p, emb, cfg)
+
+    def top1_balance(router):
+        logits = emb @ router
+        a = jnp.argmax(logits, axis=-1)
+        return float(balance(a, cfg.n_experts))
+
+    b_rand = top1_balance(p["router"])
+    b_km = top1_balance(p_km["router"])
+    assert b_km <= b_rand * 1.05, (b_km, b_rand)

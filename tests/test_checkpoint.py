@@ -1,0 +1,76 @@
+"""Checkpoint manager: atomic commit, async save, GC, dtype fidelity."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)),
+                   "b16": jax.random.normal(k, (4,), jnp.bfloat16)},
+        "opt": {"m": jnp.zeros((8, 4)), "step": jnp.asarray(7, jnp.int32)},
+        "rng": jax.random.PRNGKey(3),
+    }
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    state = _state()
+    mgr.save(5, state)
+    step, got = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+    assert step == 5
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_flatten_with_path(state)[0],
+            jax.tree_util.tree_flatten_with_path(got)[0]):
+        assert a.dtype == b.dtype, pa
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_async_save_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    s = _state()
+    mgr.save(1, s)
+    mgr.save(2, s)
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_gc_keeps_newest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    s = _state()
+    for step in (1, 2, 3, 4):
+        mgr.save(step, s)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dirs are never listed as restorable steps."""
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    (tmp_path / "step_00000009.tmp").mkdir()
+    s = _state()
+    mgr.save(1, s)
+    assert mgr.all_steps() == [1]
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=0, async_save=False)
+    s1, s2 = _state(1), _state(2)
+    mgr.save(1, s1)
+    mgr.save(2, s2)
+    _, got = mgr.restore(jax.tree.map(jnp.zeros_like, s1), step=1)
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(s1["params"]["w"]))
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore({"x": jnp.zeros(())})

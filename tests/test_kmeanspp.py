@@ -1,0 +1,205 @@
+"""Core paper tests: serial == parallel seed selection, sampling correctness,
+Lloyd monotonicity, k-means|| behaviour. Includes hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (kmeanspp, kmeans, lloyd, random_init,
+                        kmeans_parallel_init, quality, sampling)
+from repro.core.kmeanspp import pairwise_d2
+from repro.core.lloyd import assign, update
+from repro.data.synthetic import blobs
+
+
+def _points(n=512, d=2, k=8, seed=0):
+    pts, _ = blobs(n, d, k, seed=seed)
+    return jnp.asarray(pts)
+
+
+# ---------------------------------------------------------------------------
+# paper claim: parallel variants pick THE SAME seeds as the serial baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["global", "fused"])
+def test_parallel_matches_serial_exactly(variant):
+    pts = _points()
+    key = jax.random.PRNGKey(42)
+    ref = kmeanspp(key, pts, 10, variant="serial", sampler="cdf")
+    got = kmeanspp(key, pts, 10, variant=variant, sampler="cdf")
+    np.testing.assert_array_equal(np.asarray(ref.indices),
+                                  np.asarray(got.indices))
+    np.testing.assert_allclose(np.asarray(ref.centroids),
+                               np.asarray(got.centroids), rtol=1e-6)
+
+
+@pytest.mark.parametrize("variant", ["pallas_constant", "pallas_fused"])
+def test_pallas_variants_match_serial(variant):
+    pts = _points(n=256)
+    key = jax.random.PRNGKey(7)
+    ref = kmeanspp(key, pts, 6, variant="serial", sampler="cdf")
+    got = kmeanspp(key, pts, 6, variant=variant, sampler="cdf")
+    np.testing.assert_array_equal(np.asarray(ref.indices),
+                                  np.asarray(got.indices))
+
+
+def test_seeds_are_data_points():
+    pts = _points(n=300, d=5)
+    res = kmeanspp(jax.random.PRNGKey(0), pts, 12)
+    cents = np.asarray(res.centroids)
+    P = np.asarray(pts)
+    for i, idx in enumerate(np.asarray(res.indices)):
+        np.testing.assert_allclose(cents[i], P[idx], rtol=1e-6)
+
+
+def test_min_d2_is_final_potential():
+    pts = _points()
+    res = kmeanspp(jax.random.PRNGKey(1), pts, 8)
+    expect = np.min(np.asarray(pairwise_d2(pts, res.centroids)), axis=1)
+    np.testing.assert_allclose(np.asarray(res.min_d2), expect,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sampling ∝ D^2 (the k-means++ distribution itself)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["cdf", "gumbel"])
+def test_categorical_samples_proportional(method):
+    w = jnp.asarray([1.0, 0.0, 3.0, 6.0])
+    keys = jax.random.split(jax.random.PRNGKey(3), 4000)
+    idx = jax.vmap(lambda k: sampling.categorical(k, w, method=method))(keys)
+    counts = np.bincount(np.asarray(idx), minlength=4)
+    assert counts[1] == 0, "zero-weight index must never be sampled"
+    freq = counts / counts.sum()
+    expect = np.asarray(w) / float(jnp.sum(w))
+    np.testing.assert_allclose(freq, expect, atol=0.03)
+
+
+def test_gumbel_topk_without_replacement():
+    w = jnp.arange(1.0, 33.0)
+    idx = sampling.gumbel_topk(jax.random.PRNGKey(0), jnp.log(w), 8)
+    assert len(set(np.asarray(idx).tolist())) == 8
+
+
+# ---------------------------------------------------------------------------
+# Lloyd clustering
+# ---------------------------------------------------------------------------
+
+def test_lloyd_potential_monotone():
+    pts = _points(n=600, d=3, k=6)
+    seeds = kmeanspp(jax.random.PRNGKey(0), pts, 6).centroids
+    cents = seeds
+    prev = np.inf
+    for _ in range(8):
+        a, m = assign(pts, cents)
+        inertia = float(jnp.sum(m))
+        assert inertia <= prev + 1e-4, "k-means potential must not increase"
+        prev = inertia
+        cents = update(pts, a, 6, prev_centroids=cents)
+
+
+def test_kmeanspp_beats_random_init():
+    pts = _points(n=2048, d=2, k=16, seed=3)
+    kpp = rnd = 0.0
+    for s in range(3):
+        key = jax.random.PRNGKey(s)
+        kpp += float(quality.inertia(pts, kmeanspp(key, pts, 16).centroids))
+        rnd += float(quality.inertia(pts, random_init(key, pts, 16).centroids))
+    assert kpp < rnd, (kpp, rnd)
+
+
+def test_kmeans_end_to_end_quality():
+    pts = _points(n=2048, d=2, k=8, seed=5)
+    res = kmeans(jax.random.PRNGKey(0), pts, 8)
+    # well-separated blobs with spread 0.05: inertia/point ~ d * spread^2
+    assert float(res.inertia) / 2048 < 3 * 2 * 0.05 ** 2
+    assert int(res.n_iters) <= 50
+
+
+def test_empty_cluster_keeps_prev_centroid():
+    pts = jnp.asarray([[0.0, 0.0], [1.0, 1.0], [1.1, 1.0]])
+    cents = jnp.asarray([[0.0, 0.0], [1.0, 1.0], [99.0, 99.0]])
+    a, _ = assign(pts, cents)
+    new = update(pts, a, 3, prev_centroids=cents)
+    np.testing.assert_allclose(np.asarray(new)[2], [99.0, 99.0])
+
+
+# ---------------------------------------------------------------------------
+# k-means|| (Bahmani) baseline
+# ---------------------------------------------------------------------------
+
+def test_kmeans_parallel_init_valid():
+    pts = _points(n=1024, d=2, k=8)
+    res = kmeans_parallel_init(jax.random.PRNGKey(0), pts, 8, rounds=4)
+    assert res.centroids.shape == (8, 2)
+    P = np.asarray(pts)
+    for i, idx in enumerate(np.asarray(res.indices)):
+        np.testing.assert_allclose(np.asarray(res.centroids)[i], P[idx],
+                                   rtol=1e-5)
+
+
+def test_kmeans_parallel_quality_close_to_kmeanspp():
+    pts = _points(n=4096, d=2, k=16, seed=9)
+    key = jax.random.PRNGKey(0)
+    phi_pp = float(quality.inertia(pts, kmeanspp(key, pts, 16).centroids))
+    phi_par = float(quality.inertia(
+        pts, kmeans_parallel_init(key, pts, 16).centroids))
+    assert phi_par < 5 * phi_pp, (phi_par, phi_pp)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 128), d=st.integers(1, 8), k=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_valid_result(n, d, k, seed):
+    k = min(k, n)
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    res = kmeanspp(jax.random.PRNGKey(seed + 1), pts, k)
+    idx = np.asarray(res.indices)
+    assert ((0 <= idx) & (idx < n)).all()
+    assert np.isfinite(np.asarray(res.centroids)).all()
+    md = np.asarray(res.min_d2)
+    assert (md >= 0).all() and np.isfinite(md).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_serial_parallel_equal(seed):
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (64, 3))
+    key = jax.random.PRNGKey(seed ^ 0x5EED)
+    a = kmeanspp(key, pts, 5, variant="serial", sampler="cdf")
+    b = kmeanspp(key, pts, 5, variant="fused", sampler="cdf")
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_duplicate_points_zero_d2(seed):
+    """All-identical points: after the first seed every D^2 is 0 and sampling
+    must still terminate with valid indices."""
+    pts = jnp.ones((32, 4)) * 3.14
+    res = kmeanspp(jax.random.PRNGKey(seed), pts, 4)
+    assert np.asarray(res.min_d2).max() < 1e-6
+    idx = np.asarray(res.indices)
+    assert ((0 <= idx) & (idx < 32)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 64), k=st.integers(2, 6), seed=st.integers(0, 10**6))
+def test_property_lloyd_never_increases(n, k, seed):
+    k = min(k, n)
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (n, 2))
+    seeds = kmeanspp(jax.random.PRNGKey(seed + 1), pts, k).centroids
+    cents = seeds
+    prev = np.inf
+    for _ in range(4):
+        a, m = assign(pts, cents)
+        cur = float(jnp.sum(m))
+        assert cur <= prev * (1 + 1e-5) + 1e-6
+        prev = cur
+        cents = update(pts, a, k, prev_centroids=cents)

@@ -1,0 +1,65 @@
+"""End-to-end behaviour tests for the paper's system: the full pipeline
+(cluster -> train-with-kmeans-features -> serve) on CPU-sized configs."""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_NAMES
+from repro.core import kmeans, kmeanspp, quality
+from repro.data.synthetic import blobs
+
+ROOT = Path(__file__).parents[1]
+
+
+def _run(args, timeout=900):
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, timeout=timeout, env=env, cwd=ROOT)
+
+
+def test_paper_workload_end_to_end():
+    """The paper's experiment in miniature: cluster blobs, serial == parallel
+    seeds, clustering quality preserved (the paper's central claim)."""
+    pts, labels = blobs(8192, 2, 50, seed=0)     # paper: d=2, k up to 100
+    pts = jnp.asarray(pts)
+    key = jax.random.PRNGKey(0)
+    res_serial = kmeanspp(key, pts, 50, variant="serial", sampler="cdf")
+    res_fused = kmeanspp(key, pts, 50, variant="fused", sampler="cdf")
+    np.testing.assert_array_equal(np.asarray(res_serial.indices),
+                                  np.asarray(res_fused.indices))
+    out = kmeans(key, pts, 50, variant="fused", max_iters=30)
+    # recovered clustering must explain the blob structure
+    assert float(out.inertia) / 8192 < 3 * 2 * 0.05 ** 2
+
+
+def test_train_driver_loss_decreases(tmp_path):
+    """CLI end-to-end: 30 steps on the smoke model, loss must fall (the
+    full few-hundred-step run lives in examples/train_lm.py)."""
+    proc = _run(["-m", "repro.launch.train", "--arch", "deepseek-7b",
+                 "--smoke", "--steps", "30", "--batch", "4", "--seq", "64",
+                 "--lr", "3e-3", "--ckpt-dir", str(tmp_path / "ck")])
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if "loss first" in l][0]
+    parts = line.split()
+    first = float(parts[parts.index("first-3-mean") + 1])
+    last = float(parts[parts.index("last-3-mean") + 1])
+    assert last < first, line
+
+
+def test_serve_driver_runs():
+    proc = _run(["-m", "repro.launch.serve", "--arch", "gemma2-2b",
+                 "--smoke", "--requests", "5", "--prompt-len", "16",
+                 "--max-new", "4", "--batch", "4"])
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "tok/s" in proc.stdout
+
+
+def test_registry_covers_assignment():
+    assert len(ARCH_NAMES) == 10

@@ -1,0 +1,132 @@
+"""Fault-tolerance tests for the training loop (pure-python harness around
+fake train_steps + a real end-to-end resume test on a smoke arch)."""
+import os
+import signal
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import TokenStream
+from repro.launch.step import init_train_state, make_train_step
+from repro.optim import AdamWConfig
+from repro.train.loop import LoopConfig, StepStats, train
+
+
+def _fake_pipeline():
+    return DataPipeline(lambda s: {"x": np.full((2,), s, np.float32)},
+                        prefetch=1)
+
+
+def test_loop_runs_and_counts():
+    def step(state, batch):
+        return state + 1, {"loss": jnp.asarray(1.0), "lr": 0.1}
+
+    state, summary = train(jnp.asarray(0), step, _fake_pipeline(),
+                           LoopConfig(total_steps=7, log_every=100),
+                           log_fn=lambda s: None)
+    assert int(state) == 7 and summary["final_step"] == 7
+
+
+def test_nan_steps_skipped_then_abort():
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        return state + 1, {"loss": jnp.asarray(float("nan"))}
+
+    import pytest
+    with pytest.raises(FloatingPointError):
+        train(jnp.asarray(0), step, _fake_pipeline(),
+              LoopConfig(total_steps=50, max_nan_steps=3),
+              log_fn=lambda s: None)
+    assert calls["n"] == 3
+
+
+def test_nan_update_skipped_state_preserved():
+    def step(state, batch):
+        # nan keyed on the BATCH (step index), so it happens exactly once
+        loss = jnp.where(batch["x"][0] == 2, jnp.nan, 1.0)
+        return state + 1, {"loss": loss}
+
+    state, summary = train(jnp.asarray(0), step, _fake_pipeline(),
+                           LoopConfig(total_steps=5, max_nan_steps=3),
+                           log_fn=lambda s: None)
+    # one update skipped -> state advanced only 4 times
+    assert int(state) == 4
+    assert summary["final_step"] == 5
+
+
+def test_checkpoint_resume_continues_data(tmp_path):
+    seen = []
+
+    def step(state, batch):
+        seen.append(int(batch["x"][0]))
+        return state + 1, {"loss": jnp.asarray(0.5)}
+
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+    st, _ = train(jnp.asarray(0), step, _fake_pipeline(),
+                  LoopConfig(total_steps=4, save_every=2),
+                  ckpt=ckpt, log_fn=lambda s: None)
+    assert ckpt.latest_step() == 4
+    # "crash", restart: resumes at step 4, data continues at 4 (no replay)
+    st2, summary = train(jnp.asarray(0), step, _fake_pipeline(),
+                         LoopConfig(total_steps=7, save_every=100),
+                         ckpt=ckpt, log_fn=lambda s: None)
+    assert seen == [0, 1, 2, 3, 4, 5, 6]
+    assert int(st2) == 7
+
+
+def test_preemption_signal_saves_and_exits(tmp_path):
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+
+    def step(state, batch):
+        if int(state) == 2:
+            os.kill(os.getpid(), signal.SIGTERM)     # simulated preemption
+        return state + 1, {"loss": jnp.asarray(1.0)}
+
+    state, summary = train(jnp.asarray(0), step, _fake_pipeline(),
+                           LoopConfig(total_steps=100, save_every=1000),
+                           ckpt=ckpt, log_fn=lambda s: None)
+    assert summary["preempted"]
+    assert summary["final_step"] < 100
+    assert ckpt.latest_step() == summary["final_step"]
+
+
+def test_straggler_detection():
+    stats = StepStats()
+    flags = [stats.update(0.01, k=3.0) for _ in range(30)]
+    assert not any(flags)
+    assert stats.update(1.0, k=3.0)      # 100x slower step flagged
+    assert stats.stragglers == 1
+
+
+def test_end_to_end_smoke_train_resumes(tmp_path):
+    """Real arch + real checkpoints: train 4 steps, restart, reach 8."""
+    cfg = get_config("gemma2-2b", smoke=True)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, decay_steps=8)
+    stream = TokenStream(cfg.vocab, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+    ckpt = CheckpointManager(tmp_path, async_save=False)
+
+    def pipe():
+        return DataPipeline(lambda s: stream.read(s, 2, 16), prefetch=1)
+
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    state, s1 = train(state, step_fn, pipe(),
+                      LoopConfig(total_steps=4, save_every=4, log_every=100),
+                      ckpt=ckpt, log_fn=lambda s: None)
+    assert ckpt.latest_step() == 4
+
+    fresh = init_train_state(cfg, jax.random.PRNGKey(0))
+    state2, s2 = train(fresh, step_fn, pipe(),
+                       LoopConfig(total_steps=8, save_every=100,
+                                  log_every=100),
+                       ckpt=ckpt, log_fn=lambda s: None)
+    assert s2["final_step"] == 8
+    assert len(s2["losses"]) == 4        # only steps 4..7 ran after resume
+    assert int(state2["opt"].step) == 8
