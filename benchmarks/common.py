@@ -1,10 +1,23 @@
-"""Shared benchmark utilities: wall-clock timing of jitted fns + CSV output."""
+"""Shared benchmark utilities: wall-clock timing of jitted fns + CSV output.
+
+Set REPRO_BENCH_SMOKE=1 to shrink every sweep to its smallest point (the CI
+smoke mode — each module finishes in seconds while still exercising the full
+code path)."""
 from __future__ import annotations
 
+import os
 import time
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def sweep(values: Sequence, smoke_take: int = 1) -> list:
+    """A benchmark sweep, cut to its first `smoke_take` points in smoke mode."""
+    vals = list(values)
+    return vals[:smoke_take] if SMOKE else vals
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -14,12 +14,12 @@ from repro.data.synthetic import blobs
 def run(rows: list):
     n_dev = jax.device_count()
     if n_dev >= 4:
-        from repro.core import dist_kmeanspp
+        from repro.core.distributed import mesh_engine
         mesh = jax.make_mesh((n_dev,), ("data",))
+        eng = mesh_engine(mesh, "data")
         for n in (2 ** 14, 2 ** 16):
             pts = jnp.asarray(blobs(n, 2, 50, seed=0)[0])
-            t = time_fn(lambda: dist_kmeanspp(jax.random.PRNGKey(0), pts, 50,
-                                              mesh=mesh, axes="data"),
+            t = time_fn(lambda: eng.seed(jax.random.PRNGKey(0), pts, 50),
                         warmup=1, iters=3)
             rows.append({"bench": "dist_seeding", "n": n, "devices": n_dev,
                          "seconds": f"{t:.4f}"})

@@ -4,18 +4,19 @@ Two sweeps, exactly as in the paper:
   (a) k fixed at 50, N sweeps (paper: 1M..10M on GPU; host-scaled here),
   (b) N fixed, k sweeps 10..100.
 
-'serial' is the paper's CPU baseline (fori_loop, one point at a time);
-'global' is the parallel update materialized to memory with a separate
-reduction pass (the paper's global-memory variant). d=2 as in the paper.
-Speedup shape — growing with N and with k — is the reproduction target.
+'serial' is the paper's CPU baseline (ClusterEngine reference backend in
+serial mode: fori_loop, one point at a time); 'global' is the parallel update
+materialized to memory with a separate reduction pass (reference backend in
+global mode). d=2 as in the paper. Speedup shape — growing with N and with
+k — is the reproduction target.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
-from repro.core.kmeanspp import kmeanspp
+from benchmarks.common import emit, sweep, time_fn
+from repro.core.engine import ClusterEngine
 from repro.data.synthetic import blobs
 
 # host-scaled N sweep (the paper's 1M..10M needs a GPU-sized host; the
@@ -25,23 +26,28 @@ K_SWEEP = [10, 25, 50, 75, 100]
 N_FIX = 2 ** 15
 K_FIX = 50
 
+SERIAL = ClusterEngine("serial")
+GLOBAL = ClusterEngine("global")
+
 
 def run(rows: list):
+    from benchmarks.common import SMOKE
     key = jax.random.PRNGKey(0)
-    for n in N_SWEEP:
-        pts = jnp.asarray(blobs(n, 2, K_FIX, seed=0)[0])
-        t_ser = time_fn(lambda: kmeanspp(key, pts, K_FIX, variant="serial"),
+    k_fix = 10 if SMOKE else K_FIX  # smoke shrinks k as well as the sweeps
+    for n in sweep(N_SWEEP):
+        pts = jnp.asarray(blobs(n, 2, k_fix, seed=0)[0])
+        t_ser = time_fn(lambda: SERIAL.seed(key, pts, k_fix),
                         warmup=1, iters=3)
-        t_par = time_fn(lambda: kmeanspp(key, pts, K_FIX, variant="global"),
+        t_par = time_fn(lambda: GLOBAL.seed(key, pts, k_fix),
                         warmup=1, iters=3)
-        rows.append({"bench": "fig1a_points_sweep", "n": n, "k": K_FIX,
+        rows.append({"bench": "fig1a_points_sweep", "n": n, "k": k_fix,
                      "serial_s": f"{t_ser:.4f}", "parallel_s": f"{t_par:.4f}",
                      "speedup": f"{t_ser / t_par:.2f}"})
-    for k in K_SWEEP:
+    for k in sweep(K_SWEEP):
         pts = jnp.asarray(blobs(N_FIX, 2, k, seed=0)[0])
-        t_ser = time_fn(lambda: kmeanspp(key, pts, k, variant="serial"),
+        t_ser = time_fn(lambda: SERIAL.seed(key, pts, k),
                         warmup=1, iters=3)
-        t_par = time_fn(lambda: kmeanspp(key, pts, k, variant="global"),
+        t_par = time_fn(lambda: GLOBAL.seed(key, pts, k),
                         warmup=1, iters=3)
         rows.append({"bench": "fig1b_clusters_sweep", "n": N_FIX, "k": k,
                      "serial_s": f"{t_ser:.4f}", "parallel_s": f"{t_par:.4f}",

@@ -6,30 +6,31 @@ VMEM across grid steps (`resident=True`) vs re-fetched per step
 gains growing with k (Fig. 2c); we measure the same comparison structurally —
 on this CPU host the kernels run in interpret mode, so we *additionally*
 report the XLA-fused variant timing ratio (fused vs global), which captures
-the same data-movement saving at the HLO level.
+the same data-movement saving at the HLO level. Both sides go through the
+ClusterEngine backends ('global' reference vs 'fused').
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
-from repro.core.kmeanspp import kmeanspp
+from benchmarks.common import emit, sweep, time_fn
+from repro.core.engine import ClusterEngine
 from repro.data.synthetic import blobs
-from repro.kernels.kmeans_distance import distance_min_update_pallas
 
 K_SWEEP = [10, 30, 50, 100]
 N = 2 ** 15
 
+GLOBAL = ClusterEngine("global")
+FUSED = ClusterEngine("fused")
+
 
 def run(rows: list):
     key = jax.random.PRNGKey(0)
-    for k in K_SWEEP:
+    for k in sweep(K_SWEEP):
         pts = jnp.asarray(blobs(N, 2, k, seed=0)[0])
-        t_glob = time_fn(lambda: kmeanspp(key, pts, k, variant="global"),
-                         warmup=1, iters=3)
-        t_res = time_fn(lambda: kmeanspp(key, pts, k, variant="fused"),
-                        warmup=1, iters=3)
+        t_glob = time_fn(lambda: GLOBAL.seed(key, pts, k), warmup=1, iters=3)
+        t_res = time_fn(lambda: FUSED.seed(key, pts, k), warmup=1, iters=3)
         gain = 100.0 * (t_glob - t_res) / t_glob
         rows.append({"bench": "fig2_constant_vs_global", "n": N, "k": k,
                      "global_s": f"{t_glob:.4f}", "resident_s": f"{t_res:.4f}",
@@ -37,7 +38,7 @@ def run(rows: list):
 
     # kernel-level VMEM residency: count HBM<->VMEM traffic structurally
     # (bytes the BlockSpec pipeline must move per seeding round)
-    for k in (8, 64, 512):
+    for k in sweep((8, 64, 512)):
         d = 64
         n = 2 ** 14
         block_n = 1024

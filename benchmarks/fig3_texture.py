@@ -5,28 +5,30 @@ read exactly once by a fused min-update+partial-sum pass, vs the two-pass
 global variant that writes min_d2 to HBM and re-reads it for the reduction.
 The paper reports 10-14% over global memory; the fused single-pass removes
 one full (n,) read + the separate kernel dispatch — same order of saving.
+Measured through the ClusterEngine 'global' vs 'fused' backends.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
-from repro.core.kmeanspp import kmeanspp
+from benchmarks.common import emit, sweep, time_fn
+from repro.core.engine import ClusterEngine
 from repro.data.synthetic import blobs
 
 N_SWEEP = [2 ** 14, 2 ** 15, 2 ** 16, 2 ** 17]
 K = 50
 
+GLOBAL = ClusterEngine("global")
+FUSED = ClusterEngine("fused")
+
 
 def run(rows: list):
     key = jax.random.PRNGKey(0)
-    for n in N_SWEEP:
+    for n in sweep(N_SWEEP):
         pts = jnp.asarray(blobs(n, 2, K, seed=0)[0])
-        t_glob = time_fn(lambda: kmeanspp(key, pts, K, variant="global"),
-                         warmup=1, iters=3)
-        t_fused = time_fn(lambda: kmeanspp(key, pts, K, variant="fused"),
-                          warmup=1, iters=3)
+        t_glob = time_fn(lambda: GLOBAL.seed(key, pts, K), warmup=1, iters=3)
+        t_fused = time_fn(lambda: FUSED.seed(key, pts, K), warmup=1, iters=3)
         gain = 100.0 * (t_glob - t_fused) / t_glob
         rows.append({"bench": "fig3_streamed_vs_global", "n": n, "k": K,
                      "global_s": f"{t_glob:.4f}", "streamed_s": f"{t_fused:.4f}",

@@ -7,40 +7,45 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
-from repro.core import (kmeans_parallel_init, kmeanspp, lloyd, quality,
-                        random_init)
+from benchmarks.common import SMOKE, emit
+from repro.core import kmeans_parallel_init, quality, random_init
+from repro.core.engine import ClusterEngine
 from repro.data.synthetic import blobs
 
-N, D, K = 2 ** 15, 2, 50
+N, D, K = (2 ** 12, 2, 16) if SMOKE else (2 ** 15, 2, 50)
+REPEATS = 1 if SMOKE else 3
+
+ENGINE = ClusterEngine("fused")
+SERIAL = ClusterEngine("serial")
 
 
 def run(rows: list):
     pts = jnp.asarray(blobs(N, D, K, seed=0)[0])
     seeds = {}
-    for s in range(3):
+    for s in range(REPEATS):
         key = jax.random.PRNGKey(s)
-        seeds[("serial", s)] = kmeanspp(key, pts, K, variant="serial",
-                                        sampler="cdf").centroids
-        seeds[("fused", s)] = kmeanspp(key, pts, K, variant="fused",
-                                       sampler="cdf").centroids
-        seeds[("gumbel", s)] = kmeanspp(key, pts, K, variant="fused",
-                                        sampler="gumbel").centroids
+        seeds[("serial", s)] = SERIAL.seed(key, pts, K).centroids
+        seeds[("fused", s)] = ENGINE.seed(key, pts, K).centroids
+        seeds[("gumbel", s)] = ENGINE.seed(key, pts, K,
+                                           sampler="gumbel").centroids
         seeds[("kmeans||", s)] = kmeans_parallel_init(key, pts, K).centroids
         seeds[("random", s)] = random_init(key, pts, K).centroids
 
     for method in ("serial", "fused", "gumbel", "kmeans||", "random"):
         phi_seed, phi_final = [], []
-        for s in range(3):
+        for s in range(REPEATS):
             c = seeds[(method, s)]
             phi_seed.append(float(quality.inertia(pts, c)))
-            phi_final.append(float(lloyd(pts, c, max_iters=30).inertia))
+            phi_final.append(float(
+                ENGINE.fit(pts, c, max_iters=30).inertia))
         rows.append({"bench": "quality_parity", "method": method,
-                     "phi_seed": f"{sum(phi_seed)/3:.1f}",
-                     "phi_after_lloyd": f"{sum(phi_final)/3:.1f}"})
+                     "phi_seed": f"{sum(phi_seed)/REPEATS:.1f}",
+                     "phi_after_lloyd": f"{sum(phi_final)/REPEATS:.1f}"})
 
 
 def run_integrations(rows: list):
+    if SMOKE:  # the PQ/router integrations are minutes-scale; skip in smoke
+        return
     # KV-PQ reconstruction error (paper integration #1)
     from repro.serve import kvquant
     key = jax.random.PRNGKey(0)
@@ -58,7 +63,7 @@ def run_integrations(rows: list):
     from repro.core.quality import balance
     emb = jnp.asarray(blobs(4096, 64, 16, seed=1, spread=0.3)[0])
     rand_router = jax.random.normal(key, (64, 16)) * 0.02
-    km = kmeanspp(jax.random.PRNGKey(2), emb, 16).centroids
+    km = ENGINE.seed(jax.random.PRNGKey(2), emb, 16).centroids
     km_router = (km / (jnp.linalg.norm(km, axis=1, keepdims=True) + 1e-6)).T
     for name, router in (("random", rand_router), ("kmeans++", km_router)):
         a = jnp.argmax(emb @ router, axis=-1)

@@ -9,7 +9,7 @@ import sys
 import time
 
 from benchmarks import (dist_scaling, fig1_global, fig2_constant,
-                        fig3_texture, quality_parity, roofline)
+                        fig3_texture, minibatch, quality_parity, roofline)
 
 MODULES = {
     "fig1": fig1_global,
@@ -17,6 +17,7 @@ MODULES = {
     "fig3": fig3_texture,
     "quality": quality_parity,
     "dist": dist_scaling,
+    "minibatch": minibatch,
     "roofline": roofline,
 }
 

@@ -1,0 +1,48 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The repo targets current jax (``jax.shard_map``, ``jax.lax.pcast``) but must
+also run on the 0.4.x line where ``shard_map`` still lives in
+``jax.experimental`` and varying-manual-axes tracking does not exist yet.
+Everything that touches these APIs goes through this module.
+"""
+from __future__ import annotations
+
+import jax
+
+_PCAST = getattr(jax.lax, "pcast", None)
+_PVARY = getattr(jax.lax, "pvary", None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``.
+
+    The experimental version gets ``check_rep=False``: its value-based
+    replication checker predates loop-carried collective patterns (psum inside
+    ``fori_loop``/``while_loop`` bodies) and rejects valid programs that the
+    modern varying-manual-axes tracker accepts.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pvary(x, axes):
+    """Mark an array device-varying over `axes`. Tries the pcast and pvary
+    spellings (the primitive moved between jax versions); identity before
+    varying-manual-axes tracking existed at all."""
+    if _PCAST is not None:
+        return _PCAST(x, axes, to="varying")
+    if _PVARY is not None:
+        return _PVARY(x, axes)
+    return x
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict (jax<=0.4.x wraps it in a list)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

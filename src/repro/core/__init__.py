@@ -1,16 +1,23 @@
 """repro.core — the paper's contribution: parallel k-means++ seeding (+ Lloyd
-clustering, k-means|| baseline, distributed shard_map versions)."""
-from repro.core.kmeanspp import (KmeansppResult, kmeanspp, pairwise_d2,
-                                 point_d2, random_init)
-from repro.core.lloyd import LloydResult, assign, kmeans, lloyd, update
+clustering, k-means|| baseline, distributed shard_map versions), all routed
+through the backend-dispatched ClusterEngine in ``repro.core.engine``."""
+from repro.core.engine import (Backend, ClusterEngine, FusedBackend,
+                               KmeansppResult, LloydResult, MeshBackend,
+                               PallasBackend, ReferenceBackend, make_backend,
+                               pairwise_d2, point_d2)
+from repro.core.kmeanspp import kmeanspp, random_init
+from repro.core.lloyd import assign, kmeans, lloyd, update
 from repro.core.kmeans_parallel import kmeans_parallel_init
 from repro.core.distributed import (dist_kmeans, dist_kmeanspp, dist_lloyd,
-                                    dist_gumbel_choice, ring_psum, take_global)
+                                    dist_gumbel_choice, mesh_engine, ring_psum,
+                                    take_global)
 from repro.core import quality, sampling
 
 __all__ = [
-    "KmeansppResult", "LloydResult", "kmeanspp", "kmeans", "lloyd", "assign",
-    "update", "pairwise_d2", "point_d2", "random_init", "kmeans_parallel_init",
+    "Backend", "ClusterEngine", "FusedBackend", "KmeansppResult",
+    "LloydResult", "MeshBackend", "PallasBackend", "ReferenceBackend",
+    "make_backend", "kmeanspp", "kmeans", "lloyd", "assign", "update",
+    "pairwise_d2", "point_d2", "random_init", "kmeans_parallel_init",
     "dist_kmeans", "dist_kmeanspp", "dist_lloyd", "dist_gumbel_choice",
-    "ring_psum", "take_global", "quality", "sampling",
+    "mesh_engine", "ring_psum", "take_global", "quality", "sampling",
 ]

@@ -1,0 +1,79 @@
+"""Mesh collective primitives shared by the distributed clustering paths.
+
+These are the building blocks the ``mesh`` ClusterEngine backend (see
+``repro.core.engine``) composes into pod-scale seeding/Lloyd rounds: points are
+sharded over the data axes, centroids replicated, and every round costs
+O(devices) scalars + O(d) for the winner broadcast — independent of N.
+
+Extracted from ``repro.core.distributed`` so the engine can depend on them
+without a circular import; ``distributed`` re-exports for back-compat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import pvary, shard_map  # noqa: F401  (re-exported)
+from repro.core import sampling
+
+
+def axis_size(axes):
+    return jax.lax.psum(1, axes)
+
+
+def axis_index(axes) -> jax.Array:
+    """Linearized index over (possibly multiple) mesh axes."""
+    if isinstance(axes, str):
+        return jax.lax.axis_index(axes)
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
+
+
+def dist_gumbel_choice(key: jax.Array, log_w: jax.Array, axes) -> jax.Array:
+    """Exact distributed categorical sample via Gumbel-max.
+
+    Each shard computes its local (best_score, best_local_idx); a pmax over the
+    scores plus a pmin tie-break over indices picks the global winner with two
+    O(1)-byte collectives (no gather of D^2 to any single device). Returns the
+    GLOBAL index (shard_offset + local idx), replicated on every shard.
+    """
+    me = axis_index(axes)
+    n_local = log_w.shape[0]
+    shard_key = jax.random.fold_in(key, me)
+    score, local_idx = sampling.gumbel_max_local(shard_key, log_w)
+    global_idx = me * n_local + local_idx
+    best = jax.lax.pmax(score, axes)
+    cand = jnp.where(score == best, global_idx, jnp.iinfo(jnp.int32).max)
+    return jax.lax.pmin(cand, axes)
+
+
+def take_global(points_local: jax.Array, global_idx: jax.Array, axes) -> jax.Array:
+    """Fetch the row `global_idx` of the sharded (axis-0) array: the owning shard
+    contributes the row, everyone else zeros, and one psum broadcasts it."""
+    me = axis_index(axes)
+    n_local = points_local.shape[0]
+    owner = global_idx // n_local
+    local = jnp.clip(global_idx - me * n_local, 0, n_local - 1)
+    row = jnp.where(me == owner, points_local[local],
+                    jnp.zeros_like(points_local[0]))
+    return jax.lax.psum(row, axes)
+
+
+def ring_psum(x: jax.Array, axis: str) -> jax.Array:
+    """Ring all-reduce built from ppermute — demonstrates the collective the
+    compiler emits for psum and lets the k-means|| round overlap its candidate
+    broadcast with local compute (each hop's add overlaps the next permute)."""
+    n = jax.lax.psum(1, axis)
+    if isinstance(n, jax.Array):  # abstract axis size — fall back
+        return jax.lax.psum(x, axis)
+
+    def body(i, acc_cur):
+        acc, cur = acc_cur
+        nxt = jax.lax.ppermute(
+            cur, axis, [(j, (j + 1) % n) for j in range(n)])
+        return acc + nxt, nxt
+
+    acc, _ = jax.lax.fori_loop(0, n - 1, body, (x, x))
+    return acc

@@ -9,218 +9,55 @@ constant-memory idea applied at mesh level), and each seeding round is
 
 Per-round collective traffic is O(devices) scalars + O(d) for the winner
 broadcast — independent of N, which is what makes this the 1000-node design.
+
+The round logic itself now lives in ``repro.core.engine`` (MeshBackend wraps a
+local compute backend with the psum collectives); this module keeps the
+historical ``dist_*`` entry points and re-exports the collective helpers that
+moved to ``repro.core.collectives``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Sequence
+from typing import Sequence, Union
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import sampling
-from repro.core.kmeanspp import KmeansppResult, pairwise_d2, point_d2
-from repro.core.lloyd import LloydResult
+from repro.core.collectives import (axis_index, axis_size,  # noqa: F401
+                                    dist_gumbel_choice, pvary, ring_psum,
+                                    take_global)
+from repro.core.engine import (ClusterEngine, KmeansppResult, LloydResult,
+                               MeshBackend, make_backend)
+from jax.sharding import Mesh
 
-
-# ---------------------------------------------------------------------------
-# collective helpers
-# ---------------------------------------------------------------------------
-
-def _axis_size(axes):
-    return jax.lax.psum(1, axes)
+__all__ = ["dist_kmeanspp", "dist_lloyd", "dist_kmeans", "dist_gumbel_choice",
+           "take_global", "ring_psum", "mesh_engine"]
 
 
-def _pvary(x, axes):
-    """Mark an array as device-varying over `axes` (JAX>=0.7 VMA tracking)."""
-    return jax.lax.pcast(x, axes, to="varying")
-
-
-def _axis_index(axes) -> jax.Array:
-    """Linearized index over (possibly multiple) mesh axes."""
-    if isinstance(axes, str):
-        return jax.lax.axis_index(axes)
-    idx = jnp.zeros((), jnp.int32)
-    for a in axes:
-        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
-    return idx
-
-
-def dist_gumbel_choice(key: jax.Array, log_w: jax.Array, axes) -> jax.Array:
-    """Exact distributed categorical sample via Gumbel-max.
-
-    Each shard computes its local (best_score, best_local_idx); a pmax over the
-    scores plus a pmin tie-break over indices picks the global winner with two
-    O(1)-byte collectives (no gather of D^2 to any single device). Returns the
-    GLOBAL index (shard_offset + local idx), replicated on every shard.
-    """
-    me = _axis_index(axes)
-    n_local = log_w.shape[0]
-    shard_key = jax.random.fold_in(key, me)
-    score, local_idx = sampling.gumbel_max_local(shard_key, log_w)
-    global_idx = me * n_local + local_idx
-    best = jax.lax.pmax(score, axes)
-    cand = jnp.where(score == best, global_idx, jnp.iinfo(jnp.int32).max)
-    return jax.lax.pmin(cand, axes)
-
-
-def take_global(points_local: jax.Array, global_idx: jax.Array, axes) -> jax.Array:
-    """Fetch the row `global_idx` of the sharded (axis-0) array: the owning shard
-    contributes the row, everyone else zeros, and one psum broadcasts it."""
-    me = _axis_index(axes)
-    n_local = points_local.shape[0]
-    owner = global_idx // n_local
-    local = jnp.clip(global_idx - me * n_local, 0, n_local - 1)
-    row = jnp.where(me == owner, points_local[local],
-                    jnp.zeros_like(points_local[0]))
-    return jax.lax.psum(row, axes)
-
-
-def ring_psum(x: jax.Array, axis: str) -> jax.Array:
-    """Ring all-reduce built from ppermute — demonstrates the collective the
-    compiler emits for psum and lets the k-means|| round overlap its candidate
-    broadcast with local compute (each hop's add overlaps the next permute)."""
-    n = jax.lax.psum(1, axis)
-    if isinstance(n, jax.Array):  # abstract axis size — fall back
-        return jax.lax.psum(x, axis)
-
-    def body(i, acc_cur):
-        acc, cur = acc_cur
-        nxt = jax.lax.ppermute(
-            cur, axis, [(j, (j + 1) % n) for j in range(n)])
-        return acc + nxt, nxt
-
-    acc, _ = jax.lax.fori_loop(0, n - 1, body, (x, x))
-    return acc
-
-
-# ---------------------------------------------------------------------------
-# distributed seeding
-# ---------------------------------------------------------------------------
-
-def _dist_kmeanspp_local(key, pts_local, k, axes, variant):
-    """Body run inside shard_map. pts_local: (n_local, d)."""
-    n_local, d = pts_local.shape
-    pts = pts_local.astype(jnp.float32)
-
-    # first seed: uniform over the GLOBAL point set
-    key, k0 = jax.random.split(key)
-    first = dist_gumbel_choice(k0, jnp.zeros((n_local,), jnp.float32), axes)
-    c0 = take_global(pts, first, axes)
-
-    centroids = jnp.zeros((k, d), jnp.float32).at[0].set(c0)
-    indices = jnp.zeros((k,), jnp.int32).at[0].set(first)
-    min_d2 = _pvary(jnp.full((n_local,), jnp.inf, jnp.float32), axes)
-
-    use_pallas = variant.startswith("pallas")
-
-    def round_update(md, c_new):
-        if use_pallas:
-            from repro.kernels import ops as kops
-            md, parts = kops.distance_min_update(
-                pts, c_new[None, :], md,
-                resident_centroids=(variant == "pallas_constant"))
-            local_total = jnp.sum(parts)
-        else:
-            md = jnp.minimum(md, point_d2(pts, c_new))
-            local_total = jnp.sum(md)
-        return md, local_total
-
-    def body(m, carry):
-        key, centroids, indices, min_d2 = carry
-        min_d2, _local_total = round_update(min_d2, centroids[m - 1])
-        # the paper's thrust::reduce -> psum of local partial sums. The Gumbel
-        # sampler doesn't need the normalizer, but production logging does (the
-        # potential phi), so we keep the collective - it is O(1) bytes.
-        _phi = jax.lax.psum(_local_total, axes)
-        key, ks = jax.random.split(key)
-        nxt = dist_gumbel_choice(ks, sampling.safe_log(min_d2), axes)
-        c_new = take_global(pts, nxt, axes)
-        centroids = jax.lax.dynamic_update_index_in_dim(centroids, c_new, m, 0)
-        indices = indices.at[m].set(nxt)
-        return key, centroids, indices, min_d2
-
-    key, centroids, indices, min_d2 = jax.lax.fori_loop(
-        1, k, body, (key, centroids, indices, min_d2))
-    min_d2, _ = round_update(min_d2, centroids[k - 1])
-    return centroids, indices, min_d2
+def mesh_engine(mesh: Mesh, axes: Union[str, Sequence[str]] = "data",
+                variant: str = "fused") -> ClusterEngine:
+    """ClusterEngine over a MeshBackend; `variant` picks the per-shard compute
+    ('fused', 'pallas_constant', 'pallas_fused', ...)."""
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    return ClusterEngine(MeshBackend(mesh=mesh, axes=axes_t,
+                                     local=make_backend(variant)))
 
 
 def dist_kmeanspp(key: jax.Array, points: jax.Array, k: int, *, mesh: Mesh,
-                  axes: str | Sequence[str] = "data",
+                  axes: Union[str, Sequence[str]] = "data",
                   variant: str = "fused") -> KmeansppResult:
     """Distributed k-means++ seeding. `points` sharded on axis 0 over `axes`."""
-    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
-    fn = functools.partial(_dist_kmeanspp_local, k=k, axes=axes_t,
-                           variant=variant)
-    mapped = jax.shard_map(
-        lambda kk, pp: fn(kk, pp),
-        mesh=mesh,
-        in_specs=(P(), P(axes_t)),
-        out_specs=(P(), P(), P(axes_t)),
-    )
-    centroids, indices, min_d2 = jax.jit(mapped)(key, points)
-    return KmeansppResult(centroids.astype(points.dtype), indices, min_d2)
-
-
-# ---------------------------------------------------------------------------
-# distributed Lloyd
-# ---------------------------------------------------------------------------
-
-def _dist_lloyd_local(pts_local, init_centroids, axes, max_iters, tol):
-    pts = pts_local.astype(jnp.float32)
-    k = init_centroids.shape[0]
-
-    def assign_local(cents):
-        d2 = pairwise_d2(pts, cents)
-        a = jnp.argmin(d2, axis=1).astype(jnp.int32)
-        return a, jnp.min(d2, axis=1)
-
-    def body(state):
-        i, cents, _, inertia, _ = state
-        a, m = assign_local(cents)
-        local_inertia = jnp.sum(m)
-        new_inertia = jax.lax.psum(local_inertia, axes)
-        sums = jax.ops.segment_sum(pts, a, num_segments=k)
-        counts = jax.ops.segment_sum(jnp.ones_like(m), a, num_segments=k)
-        sums = jax.lax.psum(sums, axes)      # O(k*d) per iteration
-        counts = jax.lax.psum(counts, axes)  # O(k)
-        new_cents = jnp.where((counts > 0)[:, None],
-                              sums / jnp.maximum(counts, 1e-12)[:, None], cents)
-        return i + 1, new_cents, inertia, new_inertia, a
-
-    def cond(state):
-        i, _, prev, cur, _ = state
-        rel = (prev - cur) / jnp.maximum(prev, 1e-30)
-        return jnp.logical_and(i < max_iters, jnp.logical_or(i < 2, rel > tol))
-
-    n_local = pts.shape[0]
-    init = (jnp.zeros((), jnp.int32), init_centroids.astype(jnp.float32),
-            jnp.inf, jnp.inf,
-            _pvary(jnp.zeros((n_local,), jnp.int32), axes))
-    i, cents, _, inertia, a = jax.lax.while_loop(cond, body, init)
-    return cents, a, inertia, i
+    return mesh_engine(mesh, axes, variant).seed(key, points, k)
 
 
 def dist_lloyd(points: jax.Array, init_centroids: jax.Array, *, mesh: Mesh,
-               axes: str | Sequence[str] = "data", max_iters: int = 50,
+               axes: Union[str, Sequence[str]] = "data", max_iters: int = 50,
                tol: float = 1e-6) -> LloydResult:
-    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
-    fn = functools.partial(_dist_lloyd_local, axes=axes_t,
-                           max_iters=max_iters, tol=tol)
-    mapped = jax.shard_map(
-        fn, mesh=mesh,
-        in_specs=(P(axes_t), P()),
-        out_specs=(P(), P(axes_t), P(), P()),
-    )
-    cents, a, inertia, i = jax.jit(mapped)(points, init_centroids)
-    return LloydResult(cents.astype(points.dtype), a, inertia, i)
+    return mesh_engine(mesh, axes).fit(points, init_centroids,
+                                       max_iters=max_iters, tol=tol)
 
 
 def dist_kmeans(key: jax.Array, points: jax.Array, k: int, *, mesh: Mesh,
-                axes: str | Sequence[str] = "data", variant: str = "fused",
+                axes: Union[str, Sequence[str]] = "data", variant: str = "fused",
                 max_iters: int = 50) -> LloydResult:
-    seeds = dist_kmeanspp(key, points, k, mesh=mesh, axes=axes, variant=variant)
-    return dist_lloyd(points, seeds.centroids, mesh=mesh, axes=axes,
-                      max_iters=max_iters)
+    eng = mesh_engine(mesh, axes, variant)
+    seeds = eng.seed(key, points, k)
+    return eng.fit(points, seeds.centroids, max_iters=max_iters)

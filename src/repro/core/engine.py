@@ -1,0 +1,729 @@
+"""ClusterEngine — one backend-dispatched engine for every clustering path.
+
+The paper's contribution is a single primitive: a parallel D^2 min-update +
+reduction round. This module makes that primitive the ONLY seam between the
+algorithms (k-means++ seeding, Lloyd, mini-batch Lloyd, k-means||, batched
+multi-problem clustering) and the hardware mappings (serial reference, XLA
+fusion, Pallas kernels, shard_map meshes).
+
+A ``Backend`` provides exactly two round primitives:
+
+  seed_round(points, c_new, min_d2, weights) -> (min_d2', total)
+      One seeding round: fold the distances to the new centroid block
+      ``c_new`` (m, d) into ``min_d2`` and return the (weighted) sum of the
+      result — the paper's min-update kernel + thrust::reduce.
+
+  assign_update(points, centroids, weights) -> (assignment, min_d2, sums, counts)
+      One Lloyd half-step: nearest-centroid assignment plus per-cluster
+      (weighted) partial sums and counts — everything the centroid update
+      needs, in one pass.
+
+plus two trivial hooks (``allreduce``, ``pvary``) that are identity on a
+single device and psum/pcast on a mesh. Every algorithm above is written once
+against this protocol; picking ``reference``/``fused``/``pallas``/``mesh``
+swaps the hardware mapping without touching the algorithm.
+
+Public shims (``repro.core.kmeanspp.kmeanspp``, ``lloyd``, ``kmeans``,
+``kmeans_parallel_init``, ``dist_*``) route here and keep their historical
+signatures; the seed-parity tests pin the routing to be bitwise-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, ClassVar, Iterable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import collectives, sampling
+
+# ---------------------------------------------------------------------------
+# result contracts + distance helpers
+# ---------------------------------------------------------------------------
+
+
+class KmeansppResult(NamedTuple):
+    centroids: jax.Array   # (k, d) — (B, k, d) for batched problems
+    indices: jax.Array     # (k,) int32 — which data points were chosen
+    min_d2: jax.Array      # (n,) final D^2 to nearest seed (useful for k-means||)
+
+
+class LloydResult(NamedTuple):
+    centroids: jax.Array      # (k, d) — (B, k, d) for batched problems
+    assignment: jax.Array     # (n,) int32
+    inertia: jax.Array        # () sum of squared distances to assigned centroid
+    n_iters: jax.Array        # () int32
+
+
+def pairwise_d2(x: jax.Array, c: jax.Array) -> jax.Array:
+    """Squared euclidean distances (n, d) x (k, d) -> (n, k); MXU-friendly form."""
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)
+    cn = jnp.sum(c * c, axis=-1)
+    d2 = xn - 2.0 * (x @ c.T) + cn[None, :]
+    return jnp.maximum(d2, 0.0)
+
+
+def point_d2(x: jax.Array, c: jax.Array) -> jax.Array:
+    """Squared euclidean distance of every point in x (n, d) to one centroid (d,)."""
+    diff = x - c[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def _min_d2_to(points: jax.Array, c_new: jax.Array) -> jax.Array:
+    """D^2 of every point to its nearest centroid among c_new (m, d).
+
+    m == 1 keeps the diff-square-sum form: the seeding loop feeds one centroid
+    per round and the serial/fused bitwise-parity claim is pinned to it.
+    """
+    if c_new.shape[0] == 1:
+        return point_d2(points, c_new[0])
+    return jnp.min(pairwise_d2(points, c_new), axis=1)
+
+
+def assign_blocked(points: jax.Array, centroids: jax.Array,
+                   *, block: int = 4096) -> tuple[jax.Array, jax.Array]:
+    """Nearest centroid per point, blocked so the (n, k) distance matrix never
+    materializes whole. Returns (assignment, min_d2)."""
+    n, d = points.shape
+    pad = (-n) % block
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+
+    def blk(x):
+        d2 = pairwise_d2(x.astype(jnp.float32), centroids.astype(jnp.float32))
+        a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+        return a, jnp.min(d2, axis=1)
+
+    a, m = jax.lax.map(blk, pts.reshape(-1, block, d))
+    return a.reshape(-1)[:n], m.reshape(-1)[:n]
+
+
+def segment_update(points: jax.Array, assignment: jax.Array, k: int,
+                   weights: Optional[jax.Array]) -> tuple[jax.Array, jax.Array]:
+    """Per-cluster (weighted) sums and counts via segment-sum."""
+    pts = points.astype(jnp.float32)
+    w = (jnp.ones((points.shape[0],), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    sums = jax.ops.segment_sum(pts * w[:, None], assignment, num_segments=k)
+    counts = jax.ops.segment_sum(w, assignment, num_segments=k)
+    return sums, counts
+
+
+def centroid_means(sums: jax.Array, counts: jax.Array,
+                   prev_centroids: Optional[jax.Array]) -> jax.Array:
+    """Means from per-cluster sums/counts; empty clusters keep their previous
+    centroid (the standard production fallback)."""
+    means = sums / jnp.maximum(counts, 1e-12)[:, None]
+    if prev_centroids is not None:
+        means = jnp.where((counts > 0)[:, None], means,
+                          prev_centroids.astype(jnp.float32))
+    return means
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Round-primitive provider. Frozen/hashable: instances are jit-static."""
+
+    name: ClassVar[str] = "base"
+    distributed: ClassVar[bool] = False
+
+    def seed_round(self, points, c_new, min_d2, weights):
+        raise NotImplementedError
+
+    def assign_update(self, points, centroids, weights):
+        raise NotImplementedError
+
+    # mesh hooks — identity on a single device
+    def allreduce(self, x):
+        return x
+
+    def pvary(self, x):
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend(Backend):
+    """Serial (paper's CPU baseline) or global-memory (two-pass) semantics.
+
+    ``mode='serial'`` loops one point at a time with a second serial reduction
+    pass; ``mode='global'`` vectorizes the min-update but materializes it and
+    re-reads it for the reduction (the paper's global-memory variant).
+    """
+
+    name: ClassVar[str] = "reference"
+    mode: str = "global"
+
+    def seed_round(self, points, c_new, min_d2, weights):
+        if self.mode == "serial":
+            n = points.shape[0]
+
+            def body(i, md):
+                d2 = jnp.min(jnp.sum((points[i] - c_new) ** 2, axis=1))
+                return md.at[i].set(jnp.minimum(md[i], d2))
+
+            min_d2 = jax.lax.fori_loop(0, n, body, min_d2)
+
+            def sum_body(i, acc):
+                w = min_d2[i] if weights is None else min_d2[i] * weights[i]
+                return acc + w
+
+            total = jax.lax.fori_loop(0, n, sum_body,
+                                      jnp.zeros((), min_d2.dtype))
+            return min_d2, total
+
+        min_d2 = jnp.minimum(min_d2, _min_d2_to(points, c_new))
+        # optimization_barrier forces the reduction to be a second pass over
+        # the materialized array instead of fusing — mirrors the two-kernel
+        # CUDA structure.
+        min_d2 = jax.lax.optimization_barrier(min_d2)
+        w = min_d2 if weights is None else min_d2 * weights
+        return min_d2, jnp.sum(w)
+
+    def assign_update(self, points, centroids, weights):
+        d2 = pairwise_d2(points.astype(jnp.float32),
+                         centroids.astype(jnp.float32))
+        a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+        md = jnp.min(d2, axis=1)
+        sums, counts = segment_update(points, a, centroids.shape[0], weights)
+        return a, md, sums, counts
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedBackend(Backend):
+    """Single fused pass (constant/texture analogue): XLA fuses update+reduce."""
+
+    name: ClassVar[str] = "fused"
+    block: int = 4096
+
+    def seed_round(self, points, c_new, min_d2, weights):
+        min_d2 = jnp.minimum(min_d2, _min_d2_to(points, c_new))
+        w = min_d2 if weights is None else min_d2 * weights
+        return min_d2, jnp.sum(w)
+
+    def assign_update(self, points, centroids, weights):
+        a, md = assign_blocked(points, centroids, block=self.block)
+        sums, counts = segment_update(points, a, centroids.shape[0], weights)
+        return a, md, sums, counts
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend(Backend):
+    """Pallas kernels: VMEM-resident centroids + fused min-update/partials
+    (``resident=False`` models the global-memory refetch for Fig. 2)."""
+
+    name: ClassVar[str] = "pallas"
+    resident: bool = True
+
+    def seed_round(self, points, c_new, min_d2, weights):
+        from repro.kernels import ops as kops
+        min_d2, partials = kops.distance_min_update(
+            points, c_new, min_d2, resident_centroids=self.resident)
+        total = jnp.sum(partials)
+        if weights is not None:
+            # weighted total needs the weighted sum; recompute cheaply (the
+            # weights case is only used by the small k-means|| reduce).
+            total = jnp.sum(min_d2 * weights)
+        return min_d2, total
+
+    def assign_update(self, points, centroids, weights):
+        from repro.kernels import ops as kops
+        a, md, sums, counts = kops.lloyd_assign(points, centroids)
+        if weights is not None:
+            sums, counts = segment_update(points, a, centroids.shape[0],
+                                          weights)
+        return a, md, sums, counts
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshBackend(Backend):
+    """shard_map mesh backend: points sharded on axis 0 over `axes`, centroids
+    replicated (constant memory at mesh level). Wraps a local compute backend
+    and adds the O(devices)-scalar collectives."""
+
+    name: ClassVar[str] = "mesh"
+    distributed: ClassVar[bool] = True
+    mesh: Optional[Mesh] = None
+    axes: tuple[str, ...] = ("data",)
+    local: Backend = FusedBackend()
+
+    def seed_round(self, points, c_new, min_d2, weights):
+        min_d2, local_total = self.local.seed_round(points, c_new, min_d2,
+                                                    weights)
+        # the paper's thrust::reduce -> psum of local partial sums. The Gumbel
+        # sampler doesn't need the normalizer, but production logging does (the
+        # potential phi), so we keep the collective — it is O(1) bytes.
+        return min_d2, jax.lax.psum(local_total, self.axes)
+
+    def assign_update(self, points, centroids, weights):
+        a, md, sums, counts = self.local.assign_update(points, centroids,
+                                                       weights)
+        sums = jax.lax.psum(sums, self.axes)      # O(k*d) per iteration
+        counts = jax.lax.psum(counts, self.axes)  # O(k)
+        return a, md, sums, counts
+
+    def allreduce(self, x):
+        return jax.lax.psum(x, self.axes)
+
+    def pvary(self, x):
+        return collectives.pvary(x, self.axes)
+
+
+_LOCAL_BACKENDS: dict[str, Callable[..., Backend]] = {
+    "reference": ReferenceBackend,
+    "serial": functools.partial(ReferenceBackend, mode="serial"),
+    "global": functools.partial(ReferenceBackend, mode="global"),
+    "fused": FusedBackend,
+    "pallas": PallasBackend,
+    "pallas_constant": functools.partial(PallasBackend, resident=True),
+    "pallas_fused": functools.partial(PallasBackend, resident=False),
+}
+
+
+def make_backend(name: Union[str, Backend], **opts) -> Backend:
+    """Backend registry: 'reference' | 'fused' | 'pallas' | 'mesh' (plus the
+    historical fine-grained aliases 'serial'/'global'/'pallas_constant'/
+    'pallas_fused'). 'mesh' needs mesh=..., and accepts axes=... and
+    local=<name or Backend> for the per-shard compute."""
+    if isinstance(name, Backend):
+        if opts:
+            raise ValueError("cannot pass options with a Backend instance")
+        return name
+    if name == "mesh":
+        mesh = opts.pop("mesh", None)
+        if mesh is None:
+            raise ValueError("mesh backend needs mesh=jax.make_mesh(...)")
+        axes = opts.pop("axes", ("data",))
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        local = make_backend(opts.pop("local", "fused"))
+        if opts:
+            raise ValueError(f"unknown mesh backend options {sorted(opts)}")
+        return MeshBackend(mesh=mesh, axes=axes, local=local)
+    try:
+        ctor = _LOCAL_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of "
+            f"{sorted(_LOCAL_BACKENDS) + ['mesh']}") from None
+    return ctor(**opts)
+
+
+# ---------------------------------------------------------------------------
+# the seeding loop (shared verbatim by local and mesh paths)
+# ---------------------------------------------------------------------------
+
+
+def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
+               init_min_d2):
+    """Generic k-means++ loop. The four hooks are the only difference between
+    the single-device and the shard_map execution; the loop structure (and its
+    PRNG key schedule) is shared so all backends pick identical seeds."""
+    d = pts.shape[1]
+    key, k0 = jax.random.split(key)
+    first = first_fn(k0)
+    centroids = jnp.zeros((k, d), pts.dtype).at[0].set(take_fn(first))
+    indices = jnp.zeros((k,), jnp.int32).at[0].set(first)
+
+    def body(m, carry):
+        key, centroids, indices, min_d2 = carry
+        min_d2, total = round_fn(centroids[m - 1], min_d2)
+        del total  # the paper's thrust::reduce term — kept for phi logging;
+        # the cdf sampler normalizes by its OWN cumsum's last entry instead:
+        # serial and parallel reductions sum in different orders, and a 1-ulp
+        # difference in the scale flips boundary samples. With cdf[-1] every
+        # backend picks bitwise-identical seeds (the paper's quality claim,
+        # verified exactly in tests/test_engine.py).
+        key, ks = jax.random.split(key)
+        weight = min_d2 if w is None else min_d2 * w
+        nxt = sample_fn(ks, weight)
+        centroids = jax.lax.dynamic_update_index_in_dim(
+            centroids, take_fn(nxt), m, 0)
+        indices = indices.at[m].set(nxt)
+        return key, centroids, indices, min_d2
+
+    key, centroids, indices, min_d2 = jax.lax.fori_loop(
+        1, k, body, (key, centroids, indices, init_min_d2))
+    # final D^2 update against the last chosen centroid (callers like
+    # k-means|| want the potential phi over *all* k centroids).
+    min_d2, _ = round_fn(centroids[k - 1], min_d2)
+    return centroids, indices, min_d2
+
+
+def seed_points(key: jax.Array, points: jax.Array, k: int,
+                weights: Optional[jax.Array], backend: Backend,
+                sampler: str = "cdf") -> KmeansppResult:
+    """Full k-means++ seeding through `backend` (untraced core; see
+    ClusterEngine.seed for the jitted entry)."""
+    if backend.distributed:
+        return _seed_mesh(key, points, k, weights, backend)
+    n, _ = points.shape
+    compute_dtype = jnp.promote_types(points.dtype, jnp.float32)
+    pts = points.astype(compute_dtype)
+    w = None if weights is None else weights.astype(compute_dtype)
+
+    if w is None:
+        def first_fn(k0):
+            return jax.random.randint(k0, (), 0, n, dtype=jnp.int32)
+    else:  # first seed weighted by point weights (k-means|| reduce step)
+        def first_fn(k0):
+            return sampling.categorical(k0, w, method="cdf").astype(jnp.int32)
+
+    centroids, indices, min_d2 = _seed_loop(
+        key, pts, k, w,
+        round_fn=lambda c, md: backend.seed_round(pts, c[None, :], md, w),
+        first_fn=first_fn,
+        sample_fn=lambda ks, weight: sampling.categorical(
+            ks, weight, method=sampler).astype(jnp.int32),
+        take_fn=lambda i: pts[i],
+        init_min_d2=jnp.full((n,), jnp.inf, compute_dtype),
+    )
+    return KmeansppResult(centroids.astype(points.dtype), indices, min_d2)
+
+
+def _seed_mesh(key, points, k, weights, backend: MeshBackend) -> KmeansppResult:
+    """Distributed seeding: the same loop inside shard_map, with the sampler
+    swapped for the exact distributed Gumbel-max and point lookup for the
+    psum broadcast. Collective traffic per round is independent of N."""
+    if weights is not None:
+        raise NotImplementedError("mesh seeding does not take weights")
+    axes = backend.axes
+
+    def local_fn(kk, pp):
+        pts = pp.astype(jnp.float32)
+        n_local = pts.shape[0]
+        return _seed_loop(
+            kk, pts, k, None,
+            round_fn=lambda c, md: backend.seed_round(pts, c[None, :], md,
+                                                      None),
+            first_fn=lambda k0: collectives.dist_gumbel_choice(
+                k0, jnp.zeros((n_local,), jnp.float32), axes),
+            sample_fn=lambda ks, weight: collectives.dist_gumbel_choice(
+                ks, sampling.safe_log(weight), axes),
+            take_fn=lambda i: collectives.take_global(pts, i, axes),
+            init_min_d2=collectives.pvary(
+                jnp.full((n_local,), jnp.inf, jnp.float32), axes),
+        )
+
+    mapped = collectives.shard_map(
+        local_fn, mesh=backend.mesh,
+        in_specs=(P(), P(axes)),
+        out_specs=(P(), P(), P(axes)))
+    centroids, indices, min_d2 = mapped(key, points)
+    return KmeansppResult(centroids.astype(points.dtype), indices, min_d2)
+
+
+# ---------------------------------------------------------------------------
+# the Lloyd loop
+# ---------------------------------------------------------------------------
+
+
+def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol):
+    """Lloyd iterations until the relative inertia improvement falls below
+    `tol` or `max_iters` is hit. The k-means potential is monotonically
+    non-increasing — a property test asserts this."""
+    k = init_centroids.shape[0]
+
+    def cond(state):
+        i, _, prev_inertia, inertia, _ = state
+        rel = (prev_inertia - inertia) / jnp.maximum(prev_inertia, 1e-30)
+        return jnp.logical_and(i < max_iters,
+                               jnp.logical_or(i < 2, rel > tol))
+
+    def body(state):
+        i, cents, _, inertia, _ = state
+        a, m, sums, counts = backend.assign_update(pts, cents, w)
+        mw = m if w is None else m * w
+        new_inertia = backend.allreduce(jnp.sum(mw))
+        new_cents = centroid_means(sums, counts, cents)
+        return i + 1, new_cents, inertia, new_inertia, a
+
+    n = pts.shape[0]
+    init = (jnp.zeros((), jnp.int32), init_centroids.astype(jnp.float32),
+            jnp.inf, jnp.inf, backend.pvary(jnp.zeros((n,), jnp.int32)))
+    i, cents, _, inertia, a = jax.lax.while_loop(cond, body, init)
+    return cents, a, inertia, i
+
+
+def fit_points(points: jax.Array, init_centroids: jax.Array,
+               weights: Optional[jax.Array], backend: Backend,
+               max_iters: int, tol: float) -> LloydResult:
+    """Lloyd clustering through `backend` (untraced core)."""
+    if backend.distributed:
+        return _fit_mesh(points, init_centroids, weights, backend,
+                         max_iters, tol)
+    cents, a, inertia, i = _fit_loop(points, init_centroids, weights,
+                                     backend, max_iters, tol)
+    return LloydResult(cents.astype(points.dtype), a, inertia, i)
+
+
+def _fit_mesh(points, init_centroids, weights, backend: MeshBackend,
+              max_iters, tol) -> LloydResult:
+    axes = backend.axes
+
+    if weights is None:
+        def local_fn(pp, cc):
+            return _fit_loop(pp.astype(jnp.float32), cc, None, backend,
+                             max_iters, tol)
+        in_specs = (P(axes), P())
+        args = (points, init_centroids)
+    else:
+        def local_fn(pp, cc, ww):
+            return _fit_loop(pp.astype(jnp.float32), cc, ww, backend,
+                             max_iters, tol)
+        in_specs = (P(axes), P(), P(axes))
+        args = (points, init_centroids, weights)
+
+    mapped = collectives.shard_map(
+        local_fn, mesh=backend.mesh,
+        in_specs=in_specs,
+        out_specs=(P(), P(axes), P(), P()))
+    cents, a, inertia, i = mapped(*args)
+    return LloydResult(cents.astype(points.dtype), a, inertia, i)
+
+
+# ---------------------------------------------------------------------------
+# mini-batch Lloyd (streaming)
+# ---------------------------------------------------------------------------
+
+
+def minibatch_step(cents, counts, batch, backend: Backend):
+    """One mini-batch Lloyd step (Sculley 2010, batch form): per-center counts
+    give each center a 1/t-decaying learning rate, so centers converge to the
+    running mean of every point ever assigned to them.
+
+        c_j <- c_j + eta_j * (batch_mean_j - c_j),  eta_j = m_j / (N_j + m_j)
+    """
+    a, md, sums, bcounts = backend.assign_update(batch, cents, None)
+    new_counts = counts + bcounts
+    eta = jnp.where(new_counts > 0,
+                    bcounts / jnp.maximum(new_counts, 1.0), 0.0)
+    bmeans = sums / jnp.maximum(bcounts, 1e-12)[:, None]
+    new_cents = jnp.where((bcounts > 0)[:, None],
+                          cents + eta[:, None] * (bmeans - cents), cents)
+    return new_cents, new_counts, jnp.sum(md), a
+
+
+BatchSource = Union[Iterable, Callable[[int], "jax.typing.ArrayLike"]]
+
+
+def _iter_batches(batches: BatchSource, n_batches: Optional[int]):
+    """Normalize a batch source into an iterator of arrays.
+
+    Accepts a callable ``read_fn(step) -> array`` (wrapped in a prefetching
+    ``repro.data.pipeline.DataPipeline``), a DataPipeline instance (yields
+    ``(step, batch)`` pairs), or any iterable of arrays / (step, array) pairs.
+    """
+    from repro.data.pipeline import DataPipeline
+
+    pipe = None
+    if callable(batches) and not hasattr(batches, "__iter__"):
+        if n_batches is None:
+            raise ValueError("n_batches is required with a read_fn source")
+        pipe = DataPipeline(batches)
+        batches = iter(pipe)
+    elif isinstance(batches, DataPipeline) and n_batches is None:
+        # a pipeline streams forever; without a count the loop never ends
+        raise ValueError("n_batches is required with a DataPipeline source")
+    try:
+        for i, item in enumerate(batches):
+            if n_batches is not None and i >= n_batches:
+                return
+            if isinstance(item, tuple) and len(item) == 2:
+                item = item[1]
+            if isinstance(item, dict):
+                item = item["points"]
+            yield jnp.asarray(item)
+    finally:
+        if pipe is not None:
+            pipe.stop()
+
+
+# ---------------------------------------------------------------------------
+# ClusterEngine
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend", "sampler"))
+def _seed_jit(key, points, weights, k, backend, sampler):
+    return seed_points(key, points, k, weights, backend, sampler)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "max_iters", "tol"))
+def _fit_jit(points, init_centroids, weights, backend, max_iters, tol):
+    return fit_points(points, init_centroids, weights, backend,
+                      max_iters, tol)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _minibatch_jit(cents, counts, batch, backend):
+    return minibatch_step(cents, counts, batch, backend)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend", "sampler"))
+def _seed_batched_jit(keys, points, k, backend, sampler):
+    return jax.vmap(
+        lambda kk, pp: seed_points(kk, pp, k, None, backend, sampler)
+    )(keys, points)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "max_iters", "tol"))
+def _fit_batched_jit(points, init_centroids, backend, max_iters, tol):
+    return jax.vmap(
+        lambda pp, cc: fit_points(pp, cc, None, backend, max_iters, tol)
+    )(points, init_centroids)
+
+
+class ClusterEngine:
+    """One engine for seeding + clustering over a pluggable Backend.
+
+    >>> eng = ClusterEngine("pallas")
+    >>> seeds = eng.seed(key, points, k=50)
+    >>> out = eng.fit(points, seeds.centroids)
+
+    Backends: 'reference' (serial/global semantics), 'fused' (XLA),
+    'pallas' (TPU kernels), 'mesh' (shard_map; pass mesh=..., axes=...,
+    local=...). All of them pick bitwise-identical seeds under the same key
+    (mesh uses the distributed Gumbel-max sampler instead, which preserves the
+    distribution rather than the bits).
+    """
+
+    def __init__(self, backend: Union[str, Backend] = "fused", **backend_opts):
+        self.backend = make_backend(backend, **backend_opts)
+
+    # -- seeding ----------------------------------------------------------
+    def seed(self, key: jax.Array, points: jax.Array, k: int, *,
+             weights: Optional[jax.Array] = None,
+             sampler: str = "cdf") -> KmeansppResult:
+        """K-means++ seeding: k centroids chosen from `points` ∝ D^2."""
+        n = points.shape[0]
+        if not 0 < k <= n:
+            raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
+        return _seed_jit(key, points, weights, k, self.backend, sampler)
+
+    # -- full-batch Lloyd -------------------------------------------------
+    def fit(self, points: jax.Array, init_centroids: jax.Array, *,
+            max_iters: int = 50, tol: float = 1e-6,
+            weights: Optional[jax.Array] = None) -> LloydResult:
+        """Lloyd iterations from `init_centroids` until convergence."""
+        return _fit_jit(points, init_centroids, weights, self.backend,
+                        max_iters, float(tol))
+
+    def kmeans(self, key: jax.Array, points: jax.Array, k: int, *,
+               init: str = "kmeans++", max_iters: int = 50, tol: float = 1e-6,
+               sampler: str = "cdf",
+               weights: Optional[jax.Array] = None) -> LloydResult:
+        """End-to-end: seeding (the paper's phase) + Lloyd clustering."""
+        if init == "kmeans++":
+            seeds = self.seed(key, points, k, weights=weights,
+                              sampler=sampler).centroids
+        elif init == "kmeans||":
+            if self.backend.distributed:
+                raise NotImplementedError("k-means|| init runs on a local "
+                                          "backend; seed locally, fit on mesh")
+            from repro.core.kmeans_parallel import kmeans_parallel_init
+            seeds = kmeans_parallel_init(key, points, k,
+                                         backend=self.backend).centroids
+        elif init == "random":
+            from repro.core.kmeanspp import random_init
+            seeds = random_init(key, points, k).centroids
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        return self.fit(points, seeds, max_iters=max_iters, tol=tol,
+                        weights=weights)
+
+    # -- streaming mini-batch Lloyd ---------------------------------------
+    def fit_minibatch(self, init_centroids: jax.Array, batches: BatchSource,
+                      *, n_batches: Optional[int] = None,
+                      tol: float = 0.0, patience: int = 5) -> LloydResult:
+        """Streaming mini-batch k-means over fixed-size batches.
+
+        `batches` can be a ``read_fn(step) -> (b, d) array`` (driven through a
+        prefetching ``repro.data.pipeline.DataPipeline``), a DataPipeline, or
+        any iterable of batches. Per-center counts give each center a
+        1/t-decaying learning rate (Sculley 2010), so the result converges to
+        the same fixed points as full-batch Lloyd without ever holding the
+        dataset in device memory.
+
+        Early stop: if `tol` > 0, stops after `patience` consecutive batches
+        whose smoothed per-point inertia improves by less than `tol`
+        (relative). Returns a LloydResult whose assignment/inertia refer to
+        the LAST batch seen (there is no global pass in streaming mode);
+        n_iters is the number of batches consumed.
+        """
+        if self.backend.distributed:
+            raise NotImplementedError(
+                "mini-batch runs on a local backend; shard the batch source "
+                "instead (each host streams its slice)")
+        cents = jnp.asarray(init_centroids, jnp.float32)
+        counts = jnp.zeros((cents.shape[0],), jnp.float32)
+        a = jnp.zeros((0,), jnp.int32)
+        seen = 0
+        ema = None
+        stale = 0
+        last_inertia = jnp.asarray(jnp.inf, jnp.float32)
+        for batch in _iter_batches(batches, n_batches):
+            cents, counts, last_inertia, a = _minibatch_jit(
+                cents, counts, batch, self.backend)
+            seen += 1
+            if tol > 0.0:
+                per_point = float(last_inertia) / max(batch.shape[0], 1)
+                prev = ema
+                ema = (per_point if ema is None
+                       else 0.7 * ema + 0.3 * per_point)
+                if prev is not None and prev - ema <= tol * max(prev, 1e-30):
+                    stale += 1
+                    if stale >= patience:
+                        break
+                else:
+                    stale = 0
+        if seen == 0:
+            raise ValueError("empty batch source")
+        init_dtype = jnp.asarray(init_centroids).dtype
+        return LloydResult(cents.astype(init_dtype), a, last_inertia,
+                           jnp.asarray(seen, jnp.int32))
+
+    # -- batched multi-problem clustering ---------------------------------
+    def seed_batched(self, key: jax.Array, points: jax.Array, k: int, *,
+                     sampler: str = "cdf") -> KmeansppResult:
+        """Seed B independent (n, d) problems in one compiled call.
+
+        `points` is (B, n, d); `key` is either one key (split per problem) or
+        (B,)-batched keys. Each problem gets its own PRNG stream, so problem b
+        picks exactly the seeds the single-problem path would pick under
+        keys[b] — the many-tenant serve/semdedup scenario.
+        """
+        if self.backend.distributed:
+            raise NotImplementedError("use a local backend for batched "
+                                      "problems (vmap inside each shard)")
+        B, n, _ = points.shape
+        if not 0 < k <= n:
+            raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
+        # a single key has ndim 0 (typed) or 1 (raw uint32); anything higher
+        # is already a (B,)-batch of keys
+        single_ndim = 0 if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) else 1
+        keys = key if key.ndim > single_ndim else jax.random.split(key, B)
+        return _seed_batched_jit(keys, points, k, self.backend, sampler)
+
+    def fit_batched(self, points: jax.Array, init_centroids: jax.Array, *,
+                    max_iters: int = 50, tol: float = 1e-6) -> LloydResult:
+        """Lloyd over B independent problems: points (B, n, d), inits
+        (B, k, d) -> LloydResult of (B, ...) leaves. One compiled vmap call;
+        iteration stops when EVERY problem has converged (n_iters is shared)."""
+        if self.backend.distributed:
+            raise NotImplementedError("use a local backend for batched "
+                                      "problems (vmap inside each shard)")
+        return _fit_batched_jit(points, init_centroids, self.backend,
+                                max_iters, float(tol))
+
+    def kmeans_batched(self, key: jax.Array, points: jax.Array, k: int, *,
+                       max_iters: int = 50, tol: float = 1e-6,
+                       sampler: str = "cdf") -> LloydResult:
+        """seed_batched + fit_batched in sequence (both single compiled calls)."""
+        seeds = self.seed_batched(key, points, k, sampler=sampler)
+        return self.fit_batched(points, seeds.centroids, max_iters=max_iters,
+                                tol=tol)

@@ -8,31 +8,35 @@ Binomial(n, l*d2/phi) number of candidates per round; we draw exactly `l` per
 round with Gumbel top-l (weighted, without replacement). Shapes stay static for
 jit/pjit, the expected distribution matches, and the (1+eps) potential bound
 argument is unaffected in practice (verified empirically by the quality bench).
+
+Both the per-round D^2 fold (against all l new candidates at once — the
+multi-centroid form of the paper's round) and the final weighted reduce now go
+through the engine's Backend protocol, so k-means|| gets Pallas/XLA dispatch
+from the same seam as everything else.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sampling
-from repro.core.kmeanspp import KmeansppResult, kmeanspp, pairwise_d2, point_d2
+from repro.core import engine, sampling
+from repro.core.engine import (Backend, KmeansppResult, make_backend,
+                               pairwise_d2, point_d2)
 
 
-class KmeansParallelState(NamedTuple):
-    candidates: jax.Array  # (rounds*l + 1, d)
-    cand_idx: jax.Array    # (rounds*l + 1,) indices into points
-    min_d2: jax.Array      # (n,)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "rounds", "oversample"))
+@functools.partial(jax.jit, static_argnames=("k", "rounds", "oversample",
+                                             "backend"))
 def kmeans_parallel_init(key: jax.Array, points: jax.Array, k: int, *,
-                         rounds: int = 5, oversample: int = 0) -> KmeansppResult:
+                         rounds: int = 5, oversample: int = 0,
+                         backend: Union[str, Backend] = "fused"
+                         ) -> KmeansppResult:
     """Returns k seeds. `oversample` (l) defaults to 2*k per round."""
     n, d = points.shape
     l = oversample or 2 * k
+    be = make_backend(backend)
     pts = points.astype(jnp.float32)
 
     key, k0 = jax.random.split(key)
@@ -50,9 +54,9 @@ def kmeans_parallel_init(key: jax.Array, points: jax.Array, k: int, *,
         new_pts = pts[idx]
         cands = jax.lax.dynamic_update_slice(cands, new_pts, (1 + r * l, 0))
         cand_idx = jax.lax.dynamic_update_slice(cand_idx, idx, (1 + r * l,))
-        # update D² against all l new candidates in one matmul pass
-        d2_new = jnp.min(pairwise_d2(pts, new_pts), axis=1)
-        return key, cands, cand_idx, jnp.minimum(min_d2, d2_new)
+        # fold D² against all l new candidates in one multi-centroid round
+        min_d2, _phi = be.seed_round(pts, new_pts, min_d2, None)
+        return key, cands, cand_idx, min_d2
 
     key, cands, cand_idx, min_d2 = jax.lax.fori_loop(
         0, rounds, body, (key, cands, cand_idx, min_d2))
@@ -62,7 +66,7 @@ def kmeans_parallel_init(key: jax.Array, points: jax.Array, k: int, *,
     a = jnp.argmin(pairwise_d2(pts, cands), axis=1)
     w = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), a, num_segments=n_cand)
     key, kr = jax.random.split(key)
-    red = kmeanspp(kr, cands, k, weights=w, variant="fused", sampler="cdf")
+    red = engine.seed_points(kr, cands, k, w, be, "cdf")
     final_idx = cand_idx[red.indices]
     final_min_d2 = jnp.min(pairwise_d2(pts, red.centroids), axis=1)
     return KmeansppResult(red.centroids.astype(points.dtype), final_idx,

@@ -11,115 +11,34 @@ over point tiles; the paper's *constant memory* (centroids) becomes a VMEM-resid
 centroid block; *texture memory* (points) becomes the pipelined HBM->VMEM stream with
 a fused single-pass min-update + partial-sum kernel.
 
-Variants (``variant=``):
-  ``serial``          — fori_loop over points *and* a separate reduction pass: the
-                        paper's CPU baseline, one point at a time.
-  ``global``          — vectorized distance update materialized to HBM, then a
-                        *separate* reduction pass re-reading min_d2 (global-memory
-                        semantics: two passes over the array).
-  ``fused``           — single fused pass: min-update and partial sum in one program
-                        (constant/texture-memory semantics; XLA fuses on CPU/TPU).
-  ``pallas_constant`` — Pallas kernel, centroid block VMEM-resident across the grid.
-  ``pallas_fused``    — Pallas kernel, fused min-update + per-tile partial sums
-                        (points read exactly once — the texture-memory analogue).
+This module is now a thin compatibility shim over ``repro.core.engine``: the
+round update lives in the engine's Backend protocol and the historical
+``variant=`` strings map onto backends:
+
+  ``serial``          -> ReferenceBackend(mode='serial')   (paper CPU baseline)
+  ``global``          -> ReferenceBackend(mode='global')   (two-pass update)
+  ``fused``           -> FusedBackend                      (XLA single pass)
+  ``pallas_constant`` -> PallasBackend(resident=True)      (VMEM-resident centroids)
+  ``pallas_fused``    -> PallasBackend(resident=False)     (streamed, fused pass)
+
+All variants pick bitwise-identical seeds under the same key; the engine's
+seed-parity tests pin this.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sampling
+from repro.core import engine
+from repro.core.engine import (KmeansppResult, make_backend, pairwise_d2,
+                               point_d2)
 
+__all__ = ["KmeansppResult", "kmeanspp", "random_init", "pairwise_d2",
+           "point_d2"]
 
-class KmeansppResult(NamedTuple):
-    centroids: jax.Array   # (k, d)
-    indices: jax.Array     # (k,) int32 — which data points were chosen
-    min_d2: jax.Array      # (n,) final D^2 to nearest seed (useful for k-means||)
-
-
-def pairwise_d2(x: jax.Array, c: jax.Array) -> jax.Array:
-    """Squared euclidean distances (n, d) x (k, d) -> (n, k); MXU-friendly form."""
-    xn = jnp.sum(x * x, axis=-1, keepdims=True)
-    cn = jnp.sum(c * c, axis=-1)
-    d2 = xn - 2.0 * (x @ c.T) + cn[None, :]
-    return jnp.maximum(d2, 0.0)
-
-
-def point_d2(x: jax.Array, c: jax.Array) -> jax.Array:
-    """Squared euclidean distance of every point in x (n, d) to one centroid (d,)."""
-    diff = x - c[None, :]
-    return jnp.sum(diff * diff, axis=-1)
-
-
-# ---------------------------------------------------------------------------
-# Round updates: (points, new_centroid, min_d2) -> (min_d2', total)
-# ---------------------------------------------------------------------------
-
-def _round_serial(points, c_new, min_d2, weights):
-    """Paper CPU baseline: one point at a time, then a second serial pass to sum."""
-    n = points.shape[0]
-
-    def body(i, md):
-        diff = points[i] - c_new
-        d2 = jnp.sum(diff * diff)
-        return md.at[i].set(jnp.minimum(md[i], d2))
-
-    min_d2 = jax.lax.fori_loop(0, n, body, min_d2)
-
-    def sum_body(i, acc):
-        w = min_d2[i] if weights is None else min_d2[i] * weights[i]
-        return acc + w
-
-    total = jax.lax.fori_loop(0, n, sum_body, jnp.zeros((), min_d2.dtype))
-    return min_d2, total
-
-
-def _round_global(points, c_new, min_d2, weights):
-    """Parallel update materialized, separate reduction pass (global-memory analogue)."""
-    d2 = point_d2(points, c_new)
-    min_d2 = jnp.minimum(min_d2, d2)
-    # `optimization_barrier` forces the reduction to be a second pass over the
-    # materialized array instead of fusing — mirrors the two-kernel CUDA structure.
-    min_d2 = jax.lax.optimization_barrier(min_d2)
-    w = min_d2 if weights is None else min_d2 * weights
-    return min_d2, jnp.sum(w)
-
-
-def _round_fused(points, c_new, min_d2, weights):
-    """Fused single pass (constant/texture analogue): XLA fuses update + reduce."""
-    d2 = point_d2(points, c_new)
-    min_d2 = jnp.minimum(min_d2, d2)
-    w = min_d2 if weights is None else min_d2 * weights
-    return min_d2, jnp.sum(w)
-
-
-def _round_pallas(points, c_new, min_d2, weights, *, resident: bool):
-    from repro.kernels import ops as kops
-    min_d2, partials = kops.distance_min_update(
-        points, c_new[None, :], min_d2, resident_centroids=resident)
-    total = jnp.sum(partials)
-    if weights is not None:
-        # weighted total needs the weighted sum; recompute cheaply (weights case is
-        # only used by the small candidate reduce in k-means||).
-        total = jnp.sum(min_d2 * weights)
-    return min_d2, total
-
-
-_ROUND_IMPLS = {
-    "serial": _round_serial,
-    "global": _round_global,
-    "fused": _round_fused,
-    "pallas_constant": functools.partial(_round_pallas, resident=True),
-    "pallas_fused": functools.partial(_round_pallas, resident=False),
-}
-
-
-# ---------------------------------------------------------------------------
-# Full seeding
-# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("k", "variant", "sampler"))
 def kmeanspp(
@@ -140,45 +59,8 @@ def kmeanspp(
     n, d = points.shape
     if not 0 < k <= n:
         raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
-    round_fn = _ROUND_IMPLS[variant]
-    compute_dtype = jnp.promote_types(points.dtype, jnp.float32)
-    pts = points.astype(compute_dtype)
-    w = None if weights is None else weights.astype(compute_dtype)
-
-    key, k0 = jax.random.split(key)
-    if w is None:
-        first = jax.random.randint(k0, (), 0, n, dtype=jnp.int32)
-    else:  # first seed weighted by point weights (k-means|| reduce step)
-        first = sampling.categorical(k0, w, method="cdf").astype(jnp.int32)
-
-    centroids = jnp.zeros((k, d), compute_dtype).at[0].set(pts[first])
-    indices = jnp.zeros((k,), jnp.int32).at[0].set(first)
-    min_d2 = jnp.full((n,), jnp.inf, compute_dtype)
-
-    def body(m, carry):
-        key, centroids, indices, min_d2 = carry
-        c_prev = centroids[m - 1]
-        min_d2, total = round_fn(pts, c_prev, min_d2, w)
-        del total  # the paper's thrust::reduce term — kept for phi logging;
-        # the cdf sampler normalizes by its OWN cumsum's last entry instead:
-        # serial and parallel reductions sum in different orders, and a 1-ulp
-        # difference in the scale flips boundary samples. With cdf[-1] every
-        # variant picks bitwise-identical seeds (the paper's quality claim,
-        # verified exactly in tests/test_kmeanspp.py).
-        key, ks = jax.random.split(key)
-        weight = min_d2 if w is None else min_d2 * w
-        nxt = sampling.categorical(ks, weight, method=sampler)
-        nxt = nxt.astype(jnp.int32)
-        centroids = jax.lax.dynamic_update_index_in_dim(centroids, pts[nxt], m, 0)
-        indices = indices.at[m].set(nxt)
-        return key, centroids, indices, min_d2
-
-    key, centroids, indices, min_d2 = jax.lax.fori_loop(
-        1, k, body, (key, centroids, indices, min_d2))
-    # final D^2 update against the last chosen centroid (callers like k-means||
-    # want the potential phi = sum min_d2 over *all* k centroids).
-    min_d2, _ = round_fn(pts, centroids[k - 1], min_d2, w)
-    return KmeansppResult(centroids.astype(points.dtype), indices, min_d2)
+    return engine.seed_points(key, points, k, weights, make_backend(variant),
+                              sampler)
 
 
 def random_init(key: jax.Array, points: jax.Array, k: int) -> KmeansppResult:

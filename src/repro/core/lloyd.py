@@ -1,22 +1,20 @@
 """Lloyd iterations (the clustering phase). The paper keeps this identical to
-standard k-means; we provide a blocked, weighted implementation plus the fused
-Pallas assignment kernel for the hot path."""
+standard k-means; the loop itself lives in ``repro.core.engine`` behind the
+Backend protocol — this module keeps the historical ``assign``/``update``/
+``lloyd``/``kmeans`` entry points as thin shims over it."""
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kmeanspp import pairwise_d2
+from repro.core import engine
+from repro.core.engine import (FusedBackend, LloydResult, PallasBackend,
+                               centroid_means, make_backend, segment_update)
 
-
-class LloydResult(NamedTuple):
-    centroids: jax.Array      # (k, d)
-    assignment: jax.Array     # (n,) int32
-    inertia: jax.Array        # () sum of squared distances to assigned centroid
-    n_iters: jax.Array        # () int32
+__all__ = ["LloydResult", "assign", "update", "lloyd", "kmeans"]
 
 
 def assign(points: jax.Array, centroids: jax.Array, *, block: int = 4096,
@@ -28,19 +26,9 @@ def assign(points: jax.Array, centroids: jax.Array, *, block: int = 4096,
     """
     if use_pallas:
         from repro.kernels import ops as kops
-        return kops.lloyd_assign(points, centroids)
-
-    n, d = points.shape
-    pad = (-n) % block
-    pts = jnp.pad(points, ((0, pad), (0, 0)))
-
-    def blk(x):
-        d2 = pairwise_d2(x.astype(jnp.float32), centroids.astype(jnp.float32))
-        a = jnp.argmin(d2, axis=1).astype(jnp.int32)
-        return a, jnp.min(d2, axis=1)
-
-    a, m = jax.lax.map(blk, pts.reshape(-1, block, d))
-    return a.reshape(-1)[:n], m.reshape(-1)[:n]
+        a, md, _, _ = kops.lloyd_assign(points, centroids)
+        return a, md
+    return engine.assign_blocked(points, centroids, block=block)
 
 
 def update(points: jax.Array, assignment: jax.Array, k: int,
@@ -48,15 +36,8 @@ def update(points: jax.Array, assignment: jax.Array, k: int,
            prev_centroids: Optional[jax.Array] = None) -> jax.Array:
     """Update step: per-cluster (weighted) means via segment-sum. Empty clusters
     keep their previous centroid (the standard production fallback)."""
-    pts = points.astype(jnp.float32)
-    w = jnp.ones((points.shape[0],), jnp.float32) if weights is None else weights
-    sums = jax.ops.segment_sum(pts * w[:, None], assignment, num_segments=k)
-    counts = jax.ops.segment_sum(w, assignment, num_segments=k)
-    means = sums / jnp.maximum(counts, 1e-12)[:, None]
-    if prev_centroids is not None:
-        means = jnp.where((counts > 0)[:, None], means,
-                          prev_centroids.astype(jnp.float32))
-    return means
+    sums, counts = segment_update(points, assignment, k, weights)
+    return centroid_means(sums, counts, prev_centroids)
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "block", "use_pallas"))
@@ -66,40 +47,24 @@ def lloyd(points: jax.Array, init_centroids: jax.Array, *, max_iters: int = 50,
     """Run Lloyd iterations until the inertia improvement falls below `tol`
     (relative) or `max_iters` is hit. The k-means potential is monotonically
     non-increasing — a property test asserts this."""
-    k = init_centroids.shape[0]
-
-    def cond(state):
-        i, _, prev_inertia, inertia, _ = state
-        rel = (prev_inertia - inertia) / jnp.maximum(prev_inertia, 1e-30)
-        return jnp.logical_and(i < max_iters,
-                               jnp.logical_or(i < 2, rel > tol))
-
-    def body(state):
-        i, cents, _, inertia, _ = state
-        a, m = assign(points, cents, block=block, use_pallas=use_pallas)
-        w = m if weights is None else m * weights
-        new_inertia = jnp.sum(w)
-        new_cents = update(points, a, k, weights=weights, prev_centroids=cents)
-        return i + 1, new_cents, inertia, new_inertia, a
-
-    n = points.shape[0]
-    init = (jnp.zeros((), jnp.int32), init_centroids.astype(jnp.float32),
-            jnp.inf, jnp.inf, jnp.zeros((n,), jnp.int32))
-    i, cents, _, inertia, a = jax.lax.while_loop(cond, body, init)
-    return LloydResult(cents.astype(points.dtype), a, inertia, i)
+    backend = PallasBackend() if use_pallas else FusedBackend(block=block)
+    return engine.fit_points(points, init_centroids, weights, backend,
+                             max_iters, tol)
 
 
 def kmeans(key: jax.Array, points: jax.Array, k: int, *, init: str = "kmeans++",
            variant: str = "fused", max_iters: int = 50,
            use_pallas: bool = False) -> LloydResult:
     """End-to-end k-means: seeding (paper's phase) + Lloyd clustering."""
-    from repro.core.kmeanspp import kmeanspp as _kmeanspp, random_init
     if init == "kmeans++":
-        seeds = _kmeanspp(key, points, k, variant=variant).centroids
+        from repro.core.kmeanspp import kmeanspp
+        seeds = kmeanspp(key, points, k, variant=variant).centroids
     elif init == "kmeans||":
         from repro.core.kmeans_parallel import kmeans_parallel_init
-        seeds = kmeans_parallel_init(key, points, k).centroids
+        seeds = kmeans_parallel_init(key, points, k,
+                                     backend=make_backend(variant)).centroids
     elif init == "random":
+        from repro.core.kmeanspp import random_init
         seeds = random_init(key, points, k).centroids
     else:
         raise ValueError(f"unknown init {init!r}")

@@ -21,6 +21,8 @@ from typing import Callable, Iterator, Optional
 import jax
 import numpy as np
 
+_WORKER_FAILED = object()  # queue sentinel: prefetch thread died on exception
+
 
 class DataPipeline:
     def __init__(self, read_fn: Callable[[int], dict], *, start_step: int = 0,
@@ -35,6 +37,7 @@ class DataPipeline:
         self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     # -- lifecycle ---------------------------------------------------------
     def start(self):
@@ -63,20 +66,33 @@ class DataPipeline:
     def _worker(self):
         s = self.step
         while not self._stop.is_set():
-            batch = self.read_fn(s)
-            if self.sharding is not None:
-                batch = jax.device_put(batch, self.sharding)
+            try:
+                batch = self.read_fn(s)
+                if self.sharding is not None:
+                    batch = jax.device_put(batch, self.sharding)
+            except BaseException as e:  # propagate to the consumer: a dead
+                self._error = e         # prefetch thread must not deadlock
+                self._q.put((s, _WORKER_FAILED))  # the blocking q.get()
+                return
             self._q.put((s, batch))
             s += 1
+
+    def _get(self):
+        item = self._q.get()
+        if item[1] is _WORKER_FAILED:
+            raise RuntimeError(
+                f"DataPipeline read_fn failed at step {item[0]}"
+            ) from self._error
+        return item
 
     def __iter__(self) -> Iterator[tuple[int, dict]]:
         self.start()
         while True:
-            yield self._q.get()
+            yield self._get()
 
     def __next__(self):
         self.start()
-        return self._q.get()
+        return self._get()
 
 
 def host_slice(global_batch: int, host_index: int = 0,

@@ -8,12 +8,12 @@ fewer cross-cluster duplicate escapes at the same k.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import kmeans
+from repro.core.engine import Backend, ClusterEngine
 
 
 class DedupResult(NamedTuple):
@@ -24,14 +24,18 @@ class DedupResult(NamedTuple):
 
 def semdedup(key: jax.Array, embeds: jax.Array, *, k: int,
              threshold: float = 0.95, init: str = "kmeans++",
-             max_iters: int = 25) -> DedupResult:
+             max_iters: int = 25,
+             backend: Union[str, Backend] = "fused") -> DedupResult:
     """Drop docs whose cosine similarity to an earlier doc in the SAME cluster
-    exceeds `threshold`. embeds (n, d)."""
+    exceeds `threshold`. embeds (n, d). `backend` picks the engine dispatch
+    ('fused' | 'pallas' | ...), so the dedup pipeline gets kernel acceleration
+    through the same seam as every other consumer."""
     n, d = embeds.shape
     x = embeds.astype(jnp.float32)
     x = x / (jnp.linalg.norm(x, axis=1, keepdims=True) + 1e-8)
 
-    res = kmeans(key, x, k, init=init, max_iters=max_iters)
+    res = ClusterEngine(backend).kmeans(key, x, k, init=init,
+                                        max_iters=max_iters)
     a = res.assignment
 
     # pairwise cos-sim masked to same-cluster, earlier-index pairs.

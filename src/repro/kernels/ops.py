@@ -36,6 +36,18 @@ def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
     return 128
 
 
+def choose_block_n(n: int, d: int, k: int) -> int:
+    """Point-tile height for an (n, d) x (k, d) launch: the VMEM-fitted block,
+    clamped DOWN to the largest power of two <= n (never past the point count;
+    the old round-up overshot n and launched oversized tiles), floored at the
+    128-lane minimum. Non-multiple-of-block n is handled by padding + masking
+    in the kernel wrappers, so any returned size is legal."""
+    cap = pick_block_n(d, k)
+    if n >= cap:
+        return cap
+    return max(128, 1 << (max(n, 1).bit_length() - 1))
+
+
 def distance_min_update(points: jax.Array, centroids: jax.Array,
                         min_d2: jax.Array, *, resident_centroids: bool = True,
                         block_n: int | None = None,
@@ -44,7 +56,7 @@ def distance_min_update(points: jax.Array, centroids: jax.Array,
     n, d = points.shape
     k = centroids.shape[0]
     if block_n is None:
-        block_n = min(pick_block_n(d, k), max(128, 1 << (n - 1).bit_length()))
+        block_n = choose_block_n(n, d, k)
     if interpret is None:
         interpret = not _on_tpu()
     return distance_min_update_pallas(points, centroids, min_d2,
@@ -59,7 +71,7 @@ def lloyd_assign(points: jax.Array, centroids: jax.Array, *,
     n, d = points.shape
     k = centroids.shape[0]
     if block_n is None:
-        block_n = min(pick_block_n(d, k), max(128, 1 << (n - 1).bit_length()))
+        block_n = choose_block_n(n, d, k)
     if interpret is None:
         interpret = not _on_tpu()
     a, md, sums, counts = lloyd_assign_pallas(points, centroids,

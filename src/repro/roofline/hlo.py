@@ -55,6 +55,12 @@ _OP_RE = re.compile(
     r"((?:\([^=]*?\)|[\w\[\]\{\},\s]+?))\s+"           # result type (+layout)
     r"([\w\-]+)\(")                                    # op kind
 
+# one operand in an operand list: older HLO dumps print the operand TYPE
+# inline (`dot(f32[64,64]{1,0} %p, ...)`), newer ones just the name — skip
+# the optional type token so the captured group is always the value name.
+_OPERAND_RE = re.compile(
+    r"[(,]\s*(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?\s+)?%?([\w\.\-]+)")
+
 
 def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
     out = []
@@ -203,7 +209,7 @@ def _fusion_bytes(callee_lines: list, table: Dict[str, str],
         if kind == "parameter":
             params[name] = rtype
             continue
-        opnames = re.findall(r"[(,]\s*%?([\w\.\-]+)", line[line.index("("):])
+        opnames = _OPERAND_RE.findall(line[m.end() - 1:])
         defs[name] = (kind, opnames, rtype)
         for i, on in enumerate(opnames):
             uses.setdefault(on, []).append((kind, i, rtype))
@@ -317,7 +323,7 @@ def analyze(hlo: str, *, n_devices: int = 0) -> dict:
                 for _, dims in rdims:
                     for d in dims:
                         rsize *= d
-                lhs = re.search(r"\(%?([\w\.\-]+)", line[line.index(kind):])
+                lhs = _OPERAND_RE.search(line[m.end() - 1:])
                 csz = 1
                 mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
                 if lhs and mc and lhs.group(1) in table:
@@ -334,8 +340,7 @@ def analyze(hlo: str, *, n_devices: int = 0) -> dict:
             if kind in _SLICE_RESULT:
                 b = 2 * _shape_bytes(rtype)
             elif kind in _SLICE_UPDATE:
-                opnames = re.findall(r"[(,]\s*%?([\w\.\-]+)",
-                                     line[line.index("("):])
+                opnames = _OPERAND_RE.findall(line[m.end() - 1:])
                 upd = table.get(opnames[1], "") if len(opnames) > 1 else ""
                 b = 2 * _shape_bytes(upd)
             elif kind == "fusion":
@@ -344,8 +349,7 @@ def analyze(hlo: str, *, n_devices: int = 0) -> dict:
                 b = _fusion_bytes(callee, table, rtype)
             else:
                 b = _shape_bytes(rtype)
-                for om in re.finditer(r"[(,]\s*%?([\w\.\-]+)",
-                                      line[line.index("("):]):
+                for om in _OPERAND_RE.finditer(line[m.end() - 1:]):
                     b += _shape_bytes(table.get(om.group(1), ""))
             bytes_accessed += b * cmult
             if kind == "fusion":

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import (dist_kmeans, dist_kmeanspp, dist_lloyd, kmeanspp,
                         lloyd, quality, ring_psum, take_global)
 from repro.data.synthetic import blobs
@@ -66,7 +67,7 @@ x = jnp.arange(64, dtype=jnp.float32).reshape(16, 4)
 
 
 def tg(idx):
-    f = jax.shard_map(
+    f = shard_map(
         lambda p: take_global(p, jnp.asarray(idx, jnp.int32),
                               ("data", "model")),
         mesh=mesh, in_specs=P(("data", "model")), out_specs=P())
@@ -80,7 +81,7 @@ out["take_global_ok"] = all(
 def rp(v):
     # out_specs keeps the data axis: VMA can't statically prove a ppermute
     # ring is replicated, so each shard returns its copy and we check parity
-    f = jax.shard_map(
+    f = shard_map(
         lambda p: ring_psum(jnp.sum(p, keepdims=True), "data"),
         mesh=mesh, in_specs=P(("data",)), out_specs=P(("data",)))
     return f(v)

@@ -38,7 +38,8 @@ r = analyze(compiled.as_text())
 out["train_flops_positive"] = r["flops"] > 1e6
 out["train_has_allreduce"] = r["collectives"]["by_kind"].get("all-reduce", 0) > 0
 out["mem_analysis_present"] = compiled.memory_analysis() is not None
-out["cost_analysis_present"] = "flops" in (compiled.cost_analysis() or {})
+from repro.compat import cost_analysis
+out["cost_analysis_present"] = "flops" in cost_analysis(compiled)
 
 # 2. MoE a2a variant compiles and has all-to-all in the schedule
 cfg_moe = dataclasses.replace(get_config("qwen2-moe-a2.7b", smoke=True),

@@ -1,0 +1,274 @@
+"""ClusterEngine seam tests: backend parity (bitwise-identical seeds),
+weighted seeding, empty-cluster fallback, mini-batch convergence, and batched
+multi-problem clustering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quality
+from repro.core.engine import (ClusterEngine, FusedBackend, MeshBackend,
+                               PallasBackend, ReferenceBackend, make_backend)
+from repro.core.lloyd import assign, update
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import blobs
+
+
+def _points(n=512, d=2, k=8, seed=0):
+    pts, _ = blobs(n, d, k, seed=seed)
+    return jnp.asarray(pts)
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+
+def test_make_backend_names():
+    assert isinstance(make_backend("reference"), ReferenceBackend)
+    assert make_backend("serial").mode == "serial"
+    assert make_backend("global").mode == "global"
+    assert isinstance(make_backend("fused"), FusedBackend)
+    assert make_backend("pallas").resident
+    assert not make_backend("pallas_fused").resident
+    b = make_backend("fused")
+    assert make_backend(b) is b
+    with pytest.raises(ValueError):
+        make_backend("cuda")
+    with pytest.raises(ValueError):
+        make_backend("mesh")  # needs mesh=
+
+
+# ---------------------------------------------------------------------------
+# acceptance: same key => bitwise-identical seeds across backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "fused", "pallas"])
+def test_seed_parity_across_backends(backend):
+    pts = _points(n=512, k=8)
+    key = jax.random.PRNGKey(42)
+    ref = ClusterEngine("reference", mode="serial").seed(key, pts, 10)
+    got = ClusterEngine(backend).seed(key, pts, 10)
+    np.testing.assert_array_equal(np.asarray(ref.indices),
+                                  np.asarray(got.indices))
+    np.testing.assert_array_equal(np.asarray(ref.centroids),
+                                  np.asarray(got.centroids))
+
+
+def test_shims_route_through_engine():
+    """The historical kmeanspp(variant=...) entry picks the same seeds as the
+    engine with the mapped backend."""
+    from repro.core import kmeanspp
+    pts = _points(n=300, d=3)
+    key = jax.random.PRNGKey(7)
+    for variant, backend in (("serial", ReferenceBackend(mode="serial")),
+                             ("fused", FusedBackend()),
+                             ("pallas_constant", PallasBackend(resident=True))):
+        a = kmeanspp(key, pts, 6, variant=variant)
+        b = ClusterEngine(backend).seed(key, pts, 6)
+        np.testing.assert_array_equal(np.asarray(a.indices),
+                                      np.asarray(b.indices))
+
+
+# ---------------------------------------------------------------------------
+# weighted seeding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "fused", "pallas"])
+def test_weighted_seeding_respects_zero_weights(backend):
+    pts = _points(n=256, d=2, k=4, seed=2)
+    w = jnp.where(jnp.arange(256) < 128, 1.0, 0.0)
+    res = ClusterEngine(backend).seed(jax.random.PRNGKey(0), pts, 6, weights=w)
+    idx = np.asarray(res.indices)
+    assert (idx < 128).all(), f"zero-weight point chosen as seed: {idx}"
+
+
+def test_weighted_seeding_parity_across_backends():
+    pts = _points(n=256, d=2, k=4, seed=3)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(9), (256,))) + 0.1
+    key = jax.random.PRNGKey(1)
+    ref = ClusterEngine("reference").seed(key, pts, 5, weights=w)
+    for backend in ("fused", "pallas"):
+        got = ClusterEngine(backend).seed(key, pts, 5, weights=w)
+        np.testing.assert_array_equal(np.asarray(ref.indices),
+                                      np.asarray(got.indices))
+
+
+# ---------------------------------------------------------------------------
+# Lloyd through the engine + empty-cluster fallback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "fused", "pallas"])
+def test_fit_matches_reference_inertia(backend):
+    pts = _points(n=600, d=3, k=6)
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(0), pts, 6).centroids
+    ref = ClusterEngine("reference").fit(pts, seeds, max_iters=10)
+    got = ClusterEngine(backend).fit(pts, seeds, max_iters=10)
+    np.testing.assert_allclose(float(got.inertia), float(ref.inertia),
+                               rtol=1e-5)
+
+
+def test_empty_cluster_keeps_prev_centroid_in_update():
+    pts = jnp.asarray([[0.0, 0.0], [1.0, 1.0], [1.1, 1.0]])
+    cents = jnp.asarray([[0.0, 0.0], [1.0, 1.0], [99.0, 99.0]])
+    a, _ = assign(pts, cents)
+    new = update(pts, a, 3, prev_centroids=cents)
+    np.testing.assert_allclose(np.asarray(new)[2], [99.0, 99.0])
+
+
+@pytest.mark.parametrize("backend", ["fused", "pallas"])
+def test_empty_cluster_fallback_in_engine_fit(backend):
+    pts = jnp.asarray([[0.0, 0.0], [0.1, 0.0], [1.0, 1.0], [1.1, 1.0]])
+    cents = jnp.asarray([[0.0, 0.0], [1.0, 1.0], [99.0, 99.0]])
+    res = ClusterEngine(backend).fit(pts, cents, max_iters=3)
+    # the far centroid owns no points and must survive every iteration
+    np.testing.assert_allclose(np.asarray(res.centroids)[2], [99.0, 99.0])
+
+
+def test_weighted_fit_pulls_centroid_to_heavy_points():
+    pts = jnp.asarray([[0.0, 0.0], [1.0, 0.0]])
+    w = jnp.asarray([3.0, 1.0])
+    res = ClusterEngine("fused").fit(pts, jnp.asarray([[0.4, 0.0]]),
+                                     max_iters=2, weights=w)
+    np.testing.assert_allclose(np.asarray(res.centroids)[0, 0], 0.25,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mini-batch Lloyd
+# ---------------------------------------------------------------------------
+
+def _mb_setup(n=8192, d=2, k=8, batch=512, seed=1):
+    full = jnp.asarray(blobs(n, d, k, seed=seed)[0])
+    np_pts = np.asarray(full)
+
+    def read_fn(step):
+        lo = (step * batch) % n
+        return np_pts[lo:lo + batch]
+
+    return full, read_fn
+
+
+def test_minibatch_converges_to_full_batch_quality():
+    full, read_fn = _mb_setup()
+    eng = ClusterEngine("fused")
+    seeds = eng.seed(jax.random.PRNGKey(1), full[:512], 8).centroids
+    mb = eng.fit_minibatch(seeds, read_fn, n_batches=32)
+    assert int(mb.n_iters) == 32
+    phi_mb = float(quality.inertia(full, mb.centroids))
+    phi_full = float(eng.fit(full, seeds, max_iters=30).inertia)
+    assert phi_mb < 1.5 * phi_full, (phi_mb, phi_full)
+
+
+def test_minibatch_accepts_pipeline_and_early_stops():
+    full, read_fn = _mb_setup()
+    eng = ClusterEngine("fused")
+    seeds = eng.seed(jax.random.PRNGKey(1), full[:512], 8).centroids
+    pipe = DataPipeline(read_fn)
+    mb = eng.fit_minibatch(seeds, pipe, n_batches=64, tol=1e-3, patience=3)
+    assert 0 < int(mb.n_iters) <= 64
+    # a well-separated blob problem plateaus long before 64 batches
+    assert int(mb.n_iters) < 64
+    assert mb.assignment.shape == (512,)
+
+
+def test_minibatch_rejects_empty_source():
+    eng = ClusterEngine("fused")
+    with pytest.raises(ValueError):
+        eng.fit_minibatch(jnp.zeros((2, 2)), [])
+
+
+def test_minibatch_requires_count_for_infinite_sources():
+    """read_fn and DataPipeline sources stream forever — without n_batches
+    the loop would never terminate, so both must raise up front."""
+    eng = ClusterEngine("fused")
+    read_fn = lambda step: np.zeros((4, 2), np.float32)
+    with pytest.raises(ValueError, match="n_batches"):
+        eng.fit_minibatch(jnp.zeros((2, 2)), read_fn)
+    with pytest.raises(ValueError, match="n_batches"):
+        eng.fit_minibatch(jnp.zeros((2, 2)), DataPipeline(read_fn))
+
+
+def test_minibatch_propagates_read_fn_failure():
+    """A dying prefetch thread must raise, not deadlock the consumer."""
+    def bad_read(step):
+        raise IOError(f"shard {step} missing")
+
+    eng = ClusterEngine("fused")
+    with pytest.raises(RuntimeError, match="read_fn failed"):
+        eng.fit_minibatch(jnp.zeros((2, 2)), bad_read, n_batches=4)
+
+
+def test_assign_use_pallas_returns_pair():
+    pts = _points(n=200, d=3)
+    cents = pts[:4]
+    a, md = assign(pts, cents, use_pallas=True)
+    a2, md2 = assign(pts, cents)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(md), np.asarray(md2),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-problem clustering
+# ---------------------------------------------------------------------------
+
+def test_seed_batched_matches_per_problem():
+    B = 3
+    bpts = jnp.stack([_points(n=256, d=2, k=4, seed=s) for s in range(B)])
+    eng = ClusterEngine("fused")
+    keys = jax.random.split(jax.random.PRNGKey(3), B)
+    batched = eng.seed_batched(keys, bpts, 5)
+    assert batched.centroids.shape == (B, 5, 2)
+    for b in range(B):
+        single = eng.seed(keys[b], bpts[b], 5)
+        np.testing.assert_array_equal(np.asarray(batched.indices[b]),
+                                      np.asarray(single.indices))
+
+
+def test_kmeans_batched_end_to_end():
+    B, n, k = 4, 1024, 6
+    bpts = jnp.stack([_points(n=n, d=2, k=k, seed=10 + s) for s in range(B)])
+    out = ClusterEngine("fused").kmeans_batched(jax.random.PRNGKey(2), bpts, k,
+                                                max_iters=25)
+    assert out.centroids.shape == (B, k, 2)
+    assert out.inertia.shape == (B,)
+    for b in range(B):
+        # every problem must reach blob-quality inertia (spread 0.05, d=2)
+        assert float(out.inertia[b]) / n < 3 * 2 * 0.05 ** 2, b
+
+
+def test_batched_rejects_mesh_backend():
+    mesh = jax.make_mesh((1,), ("data",))
+    eng = ClusterEngine(MeshBackend(mesh=mesh, axes=("data",)))
+    with pytest.raises(NotImplementedError):
+        eng.seed_batched(jax.random.PRNGKey(0), jnp.zeros((2, 8, 2)), 2)
+
+
+# ---------------------------------------------------------------------------
+# kernel block-size selection (satellite: pick_block_n call-site clamp)
+# ---------------------------------------------------------------------------
+
+def test_choose_block_n_never_exceeds_point_count():
+    from repro.kernels.ops import choose_block_n, pick_block_n
+    assert pick_block_n(2, 8) == 4096         # unchanged VMEM-budget picker
+    assert choose_block_n(300, 2, 8) == 256   # clamped DOWN below n
+    assert choose_block_n(4096, 2, 8) == 4096
+    assert choose_block_n(50, 2, 8) == 128    # lane-minimum floor
+    for n in (50, 100, 129, 300, 900, 5000):
+        bn = choose_block_n(n, 2, 8)
+        assert bn >= 128
+        assert bn <= max(n, 128), (n, bn)
+
+
+def test_kernel_wrappers_handle_ragged_n():
+    """Non-multiple-of-block n goes through the padded/masked path."""
+    from repro.kernels import ops, ref
+    pts = jax.random.normal(jax.random.PRNGKey(0), (337, 5))
+    cents = jax.random.normal(jax.random.PRNGKey(1), (3, 5))
+    md = jnp.full((337,), jnp.inf)
+    got_md, partials = ops.distance_min_update(pts, cents, md)
+    want_md, want_total = ref.distance_min_update_ref(pts, cents, md)
+    np.testing.assert_allclose(np.asarray(got_md), np.asarray(want_md),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(jnp.sum(partials)), float(want_total),
+                               rtol=1e-4)

@@ -1,0 +1,66 @@
+"""Hypothesis property tests for the seeding/Lloyd core. Kept in their own
+module so the rest of the suite runs when hypothesis is not installed (it is a
+dev-only dependency — see requirements-dev.txt / pip install -e .[dev])."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kmeanspp
+from repro.core.lloyd import assign, update
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 128), d=st.integers(1, 8), k=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_valid_result(n, d, k, seed):
+    k = min(k, n)
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+    res = kmeanspp(jax.random.PRNGKey(seed + 1), pts, k)
+    idx = np.asarray(res.indices)
+    assert ((0 <= idx) & (idx < n)).all()
+    assert np.isfinite(np.asarray(res.centroids)).all()
+    md = np.asarray(res.min_d2)
+    assert (md >= 0).all() and np.isfinite(md).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_serial_parallel_equal(seed):
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (64, 3))
+    key = jax.random.PRNGKey(seed ^ 0x5EED)
+    a = kmeanspp(key, pts, 5, variant="serial", sampler="cdf")
+    b = kmeanspp(key, pts, 5, variant="fused", sampler="cdf")
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_duplicate_points_zero_d2(seed):
+    """All-identical points: after the first seed every D^2 is 0 and sampling
+    must still terminate with valid indices."""
+    pts = jnp.ones((32, 4)) * 3.14
+    res = kmeanspp(jax.random.PRNGKey(seed), pts, 4)
+    assert np.asarray(res.min_d2).max() < 1e-6
+    idx = np.asarray(res.indices)
+    assert ((0 <= idx) & (idx < 32)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 64), k=st.integers(2, 6), seed=st.integers(0, 10**6))
+def test_property_lloyd_never_increases(n, k, seed):
+    k = min(k, n)
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (n, 2))
+    seeds = kmeanspp(jax.random.PRNGKey(seed + 1), pts, k).centroids
+    cents = seeds
+    prev = np.inf
+    for _ in range(4):
+        a, m = assign(pts, cents)
+        cur = float(jnp.sum(m))
+        assert cur <= prev * (1 + 1e-5) + 1e-6
+        prev = cur
+        cents = update(pts, a, k, prev_centroids=cents)
