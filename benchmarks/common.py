@@ -2,16 +2,35 @@
 
 Set REPRO_BENCH_SMOKE=1 to shrink every sweep to its smallest point (the CI
 smoke mode — each module finishes in seconds while still exercising the full
-code path)."""
+code path). Set REPRO_BENCH_OUT=<dir> to additionally capture JSON payloads
+from the modules that emit them via `write_json` (currently the `seed`
+module's BENCH_seed.json — the CI workflow uploads that directory as an
+artifact; benchmarks/BENCH_seed.json is the checked-in baseline)."""
 from __future__ import annotations
 
+import json
 import os
+import pathlib
 import time
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def write_json(name: str, payload: dict) -> Optional[pathlib.Path]:
+    """Write a module's benchmark payload to $REPRO_BENCH_OUT/BENCH_<name>.json
+    (no-op when the env var is unset)."""
+    out_dir = os.environ.get("REPRO_BENCH_OUT", "")
+    if not out_dir:
+        return None
+    p = pathlib.Path(out_dir)
+    p.mkdir(parents=True, exist_ok=True)
+    path = p / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"[bench] wrote {path}")
+    return path
 
 
 def sweep(values: Sequence, smoke_take: int = 1) -> list:

@@ -28,10 +28,13 @@ def run(rows: list):
         seeds[("fused", s)] = ENGINE.seed(key, pts, K).centroids
         seeds[("gumbel", s)] = ENGINE.seed(key, pts, K,
                                            sampler="gumbel").centroids
+        seeds[("tiled", s)] = ENGINE.seed(key, pts, K,
+                                          sampler="tiled").centroids
         seeds[("kmeans||", s)] = kmeans_parallel_init(key, pts, K).centroids
         seeds[("random", s)] = random_init(key, pts, K).centroids
 
-    for method in ("serial", "fused", "gumbel", "kmeans||", "random"):
+    for method in ("serial", "fused", "gumbel", "tiled", "kmeans||",
+                   "random"):
         phi_seed, phi_final = [], []
         for s in range(REPEATS):
             c = seeds[(method, s)]

@@ -9,7 +9,8 @@ import sys
 import time
 
 from benchmarks import (dist_scaling, fig1_global, fig2_constant,
-                        fig3_texture, minibatch, quality_parity, roofline)
+                        fig3_texture, minibatch, quality_parity, roofline,
+                        seed_sampling)
 
 MODULES = {
     "fig1": fig1_global,
@@ -19,6 +20,7 @@ MODULES = {
     "dist": dist_scaling,
     "minibatch": minibatch,
     "roofline": roofline,
+    "seed": seed_sampling,
 }
 
 

@@ -1,0 +1,87 @@
+"""Seeding-round sampler trajectory — the two-level tile sampler vs the full
+inverse-CDF re-scan, plus the batched multi-problem kernel path.
+
+Every seeding round already pays the round kernel (min-update + per-tile
+partials). What this module measures is the traffic AFTER the kernel:
+
+  cdf    — O(n) cumsum + searchsorted over the full min_d2 array per round
+  gumbel — O(n) log + noise + argmax per round
+  tiled  — inverse-CDF over the ~n/block_n tile partials, then a scan of
+           only the chosen tile: O(n/bn + bn) reads per round
+
+plus `kmeans_batched` fused-vs-pallas, where the pallas path runs the
+batch-grid kernels (one launch covers every tenant problem).
+
+Emits BENCH_seed.json via REPRO_BENCH_OUT; benchmarks/BENCH_seed.json is the
+checked-in smoke-mode baseline tracking the trajectory across PRs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SMOKE, emit, time_fn, write_json
+from repro.core.engine import ClusterEngine
+from repro.data.synthetic import blobs
+from repro.kernels.ops import choose_block_n
+
+N, D, K = (2 ** 12, 2, 8) if SMOKE else (2 ** 16, 16, 32)
+# pallas kernels interpret on CPU — keep their probe small off-TPU
+N_PALLAS = N if jax.default_backend() == "tpu" else min(N, 2 ** 12)
+BB, BN, BK = (4, 2 ** 10, 4) if SMOKE else (16, 2 ** 13, 16)
+
+
+def _post_round_reads(n: int, sampler: str) -> int:
+    bn = choose_block_n(n, D, 1, batched=True)
+    if sampler == "tiled":
+        return -(-n // bn) + bn
+    return n
+
+
+def run(rows: list):
+    key = jax.random.PRNGKey(0)
+    for backend, n in (("fused", N), ("pallas", N_PALLAS)):
+        pts = jnp.asarray(blobs(n, D, K, seed=0)[0])
+        eng = ClusterEngine(backend)
+        for sampler in ("cdf", "gumbel", "tiled"):
+            t = time_fn(lambda: jax.block_until_ready(
+                eng.seed(key, pts, K, sampler=sampler)))
+            rows.append({
+                "bench": "seed_sampler", "backend": backend,
+                "sampler": sampler, "n": n, "k": K,
+                "post_round_reads": _post_round_reads(n, sampler),
+                "seconds": round(t, 6),
+            })
+
+
+def run_batched(rows: list):
+    keys = jax.random.split(jax.random.PRNGKey(1), BB)
+    bpts = jnp.stack([jnp.asarray(blobs(BN, D, BK, seed=s)[0])
+                      for s in range(BB)])
+    for backend in ("fused", "pallas"):
+        eng = ClusterEngine(backend)
+        t = time_fn(lambda: jax.block_until_ready(
+            eng.kmeans_batched(keys, bpts, BK, max_iters=5)), iters=3)
+        rows.append({
+            "bench": "kmeans_batched", "backend": backend, "sampler": "cdf",
+            "n": BN, "k": BK, "post_round_reads": BB * BN,
+            "seconds": round(t, 6),
+        })
+
+
+def main():
+    rows: list = []
+    run(rows)
+    run_batched(rows)
+    header = ["bench", "backend", "sampler", "n", "k",
+              "post_round_reads", "seconds"]
+    emit(rows, header)
+    write_json("seed", {
+        "meta": {"smoke": SMOKE, "N": N, "D": D, "K": K,
+                 "batched": {"B": BB, "n": BN, "k": BK},
+                 "jax_backend": jax.default_backend()},
+        "rows": rows,
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,14 @@ def axis_index(axes) -> jax.Array:
     return idx
 
 
+def shard_argmax(score: jax.Array, global_idx: jax.Array, axes) -> jax.Array:
+    """Global index whose shard-local score wins the pmax, pmin tie-broken —
+    the two O(1)-byte collectives every distributed sampler combine uses."""
+    best = jax.lax.pmax(score, axes)
+    cand = jnp.where(score == best, global_idx, jnp.iinfo(jnp.int32).max)
+    return jax.lax.pmin(cand, axes)
+
+
 def dist_gumbel_choice(key: jax.Array, log_w: jax.Array, axes) -> jax.Array:
     """Exact distributed categorical sample via Gumbel-max.
 
@@ -43,10 +51,39 @@ def dist_gumbel_choice(key: jax.Array, log_w: jax.Array, axes) -> jax.Array:
     n_local = log_w.shape[0]
     shard_key = jax.random.fold_in(key, me)
     score, local_idx = sampling.gumbel_max_local(shard_key, log_w)
-    global_idx = me * n_local + local_idx
-    best = jax.lax.pmax(score, axes)
-    cand = jnp.where(score == best, global_idx, jnp.iinfo(jnp.int32).max)
-    return jax.lax.pmin(cand, axes)
+    return shard_argmax(score, me * n_local + local_idx, axes)
+
+
+def dist_tiled_choice(key: jax.Array, weights: jax.Array,
+                      partials: jax.Array, block_n: int, axes) -> jax.Array:
+    """Exact distributed categorical sample from per-tile partial sums.
+
+    Three-level hierarchical composition of the seeding kernel's partials
+    with the distributed Gumbel-max:
+
+      1. tile:  each shard draws Gumbel scores over log(partials) — the max
+         over tiles is Gumbel(log local_total) by max-stability, and the
+         argmax picks a tile with prob partials[t]/local_total;
+      2. point: the winning tile's (block_n,) weight slice is sampled by
+         inverse-CDF — prob w_i/partials[t];
+      3. shard: pmax of the per-shard max scores picks a shard with prob
+         local_total/global_total (the same combining rule as
+         `dist_gumbel_choice`), with a pmin tie-break on indices.
+
+    The product telescopes to w_i/global_total — an exact global draw that
+    reads O(n_local/block_n + block_n) elements per shard after the round
+    kernel instead of O(n_local). Returns the GLOBAL index, replicated."""
+    me = axis_index(axes)
+    n_local = weights.shape[0]
+    shard_key = jax.random.fold_in(key, me)
+    kt, kp = jax.random.split(shard_key)
+
+    score, t = sampling.gumbel_max_local(kt, sampling.safe_log(partials))
+
+    within = sampling.categorical_cdf(kp, sampling.tile_window(weights, t,
+                                                               block_n))
+    local_idx = jnp.minimum(t * block_n + within, n_local - 1)
+    return shard_argmax(score, me * n_local + local_idx, axes)
 
 
 def take_global(points_local: jax.Array, global_idx: jax.Array, axes) -> jax.Array:

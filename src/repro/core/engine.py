@@ -8,10 +8,14 @@ fusion, Pallas kernels, shard_map meshes).
 
 A ``Backend`` provides exactly two round primitives:
 
-  seed_round(points, c_new, min_d2, weights) -> (min_d2', total)
+  seed_round(points, c_new, min_d2, weights) -> SeedRound(min_d2', total, partials)
       One seeding round: fold the distances to the new centroid block
       ``c_new`` (m, d) into ``min_d2`` and return the (weighted) sum of the
-      result — the paper's min-update kernel + thrust::reduce.
+      result — the paper's min-update kernel + thrust::reduce — plus the
+      per-tile partial sums the reduction tree already produced
+      (shape (ceil(n / seed_tile),)). The ``tiled`` sampler draws the next
+      seed from those partials in two exact inverse-CDF levels, reading
+      O(n/tile + tile) elements instead of re-scanning all n.
 
   assign_update(points, centroids, weights) -> (assignment, min_d2, sums, counts)
       One Lloyd half-step: nearest-centroid assignment plus per-cluster
@@ -48,6 +52,13 @@ class KmeansppResult(NamedTuple):
     centroids: jax.Array   # (k, d) — (B, k, d) for batched problems
     indices: jax.Array     # (k,) int32 — which data points were chosen
     min_d2: jax.Array      # (n,) final D^2 to nearest seed (useful for k-means||)
+
+
+class SeedRound(NamedTuple):
+    """One seeding round's outputs (the extended seed_round contract)."""
+    min_d2: jax.Array      # (n,) updated D^2 to the nearest centroid
+    total: jax.Array       # () (weighted) sum of min_d2 — the paper's phi
+    partials: jax.Array    # (n_tiles,) per-tile (weighted) partial sums
 
 
 class LloydResult(NamedTuple):
@@ -121,6 +132,23 @@ def centroid_means(sums: jax.Array, counts: jax.Array,
     return means
 
 
+def reseed_split_largest(means: jax.Array, counts: jax.Array, *,
+                         rel: float = 1e-3) -> jax.Array:
+    """Empty-cluster *reseeding*: each empty cluster jumps to a nudged copy of
+    the largest cluster's centroid, so the next assignment splits the donor's
+    points between the donor and the copies (vs the keep-previous fallback,
+    which can leave a dead centroid forever). The nudge is deterministic and
+    rank-scaled — the r-th empty cluster lands at a distinct offset — so the
+    fit stays key-free and mesh-replicable (counts arrive psum'd)."""
+    empty = counts <= 0
+    donor = jnp.argmax(counts)
+    target = means[donor]
+    rank = jnp.cumsum(empty.astype(means.dtype)) * empty.astype(means.dtype)
+    off = rel * rank[:, None]
+    nudged = target[None, :] * (1.0 + off) + off
+    return jnp.where(empty[:, None], nudged, means)
+
+
 # ---------------------------------------------------------------------------
 # backends
 # ---------------------------------------------------------------------------
@@ -138,6 +166,18 @@ class Backend:
 
     def assign_update(self, points, centroids, weights):
         raise NotImplementedError
+
+    def seed_tile(self, n: int, d: int, m: int = 1) -> int:
+        """Static tile height of seed_round's partials: every backend uses the
+        Pallas kernel's VMEM-fitted block (batch-grid accounting — slightly
+        conservative for the single-problem launch) so partial shapes agree
+        across backends and the tiled sampler slices the right window."""
+        from repro.kernels.ops import choose_block_n
+        return choose_block_n(n, d, m, batched=True)
+
+    def _partials(self, min_d2, weights, n: int, d: int, m: int):
+        w_md = min_d2 if weights is None else min_d2 * weights
+        return sampling.tile_partials(w_md, self.seed_tile(n, d, m))
 
     # mesh hooks — identity on a single device
     def allreduce(self, x):
@@ -160,9 +200,9 @@ class ReferenceBackend(Backend):
     mode: str = "global"
 
     def seed_round(self, points, c_new, min_d2, weights):
+        n, d = points.shape
+        m = c_new.shape[0]
         if self.mode == "serial":
-            n = points.shape[0]
-
             def body(i, md):
                 d2 = jnp.min(jnp.sum((points[i] - c_new) ** 2, axis=1))
                 return md.at[i].set(jnp.minimum(md[i], d2))
@@ -175,7 +215,10 @@ class ReferenceBackend(Backend):
 
             total = jax.lax.fori_loop(0, n, sum_body,
                                       jnp.zeros((), min_d2.dtype))
-            return min_d2, total
+            # the partials are contract-only here (the paper's serial baseline
+            # has no tiles); computed vectorized, outside the timed loop shape
+            return SeedRound(min_d2, total,
+                             self._partials(min_d2, weights, n, d, m))
 
         min_d2 = jnp.minimum(min_d2, _min_d2_to(points, c_new))
         # optimization_barrier forces the reduction to be a second pass over
@@ -183,7 +226,8 @@ class ReferenceBackend(Backend):
         # CUDA structure.
         min_d2 = jax.lax.optimization_barrier(min_d2)
         w = min_d2 if weights is None else min_d2 * weights
-        return min_d2, jnp.sum(w)
+        return SeedRound(min_d2, jnp.sum(w),
+                         self._partials(min_d2, weights, n, d, m))
 
     def assign_update(self, points, centroids, weights):
         d2 = pairwise_d2(points.astype(jnp.float32),
@@ -202,9 +246,12 @@ class FusedBackend(Backend):
     block: int = 4096
 
     def seed_round(self, points, c_new, min_d2, weights):
+        n, d = points.shape
         min_d2 = jnp.minimum(min_d2, _min_d2_to(points, c_new))
-        w = min_d2 if weights is None else min_d2 * weights
-        return min_d2, jnp.sum(w)
+        # XLA fuses the tile partials INTO the min-update pass (one read of
+        # min_d2); the scalar total is their sum — same tree as the kernel's.
+        partials = self._partials(min_d2, weights, n, d, c_new.shape[0])
+        return SeedRound(min_d2, jnp.sum(partials), partials)
 
     def assign_update(self, points, centroids, weights):
         a, md = assign_blocked(points, centroids, block=self.block)
@@ -222,14 +269,19 @@ class PallasBackend(Backend):
 
     def seed_round(self, points, c_new, min_d2, weights):
         from repro.kernels import ops as kops
+        n, d = points.shape
+        m = c_new.shape[0]
+        # pin the kernel tile to seed_tile so the partials it emits line up
+        # with the window the tiled sampler slices (single and batch-grid
+        # launches share the block choice)
         min_d2, partials = kops.distance_min_update(
-            points, c_new, min_d2, resident_centroids=self.resident)
-        total = jnp.sum(partials)
+            points, c_new, min_d2, resident_centroids=self.resident,
+            block_n=self.seed_tile(n, d, m))
         if weights is not None:
-            # weighted total needs the weighted sum; recompute cheaply (the
+            # weighted partials need the weighted sum; recompute cheaply (the
             # weights case is only used by the small k-means|| reduce).
-            total = jnp.sum(min_d2 * weights)
-        return min_d2, total
+            partials = self._partials(min_d2, weights, n, d, m)
+        return SeedRound(min_d2, jnp.sum(partials), partials)
 
     def assign_update(self, points, centroids, weights):
         from repro.kernels import ops as kops
@@ -253,12 +305,17 @@ class MeshBackend(Backend):
     local: Backend = FusedBackend()
 
     def seed_round(self, points, c_new, min_d2, weights):
-        min_d2, local_total = self.local.seed_round(points, c_new, min_d2,
-                                                    weights)
+        rnd = self.local.seed_round(points, c_new, min_d2, weights)
         # the paper's thrust::reduce -> psum of local partial sums. The Gumbel
         # sampler doesn't need the normalizer, but production logging does (the
-        # potential phi), so we keep the collective — it is O(1) bytes.
-        return min_d2, jax.lax.psum(local_total, self.axes)
+        # potential phi), so we keep the collective — it is O(1) bytes. The
+        # tile partials stay SHARD-LOCAL: the distributed tiled sampler
+        # combines them with one pmax/pmin pair, never gathering them.
+        return SeedRound(rnd.min_d2, jax.lax.psum(rnd.total, self.axes),
+                         rnd.partials)
+
+    def seed_tile(self, n: int, d: int, m: int = 1) -> int:
+        return self.local.seed_tile(n, d, m)
 
     def assign_update(self, points, centroids, weights):
         a, md, sums, counts = self.local.assign_update(points, centroids,
@@ -331,16 +388,18 @@ def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
 
     def body(m, carry):
         key, centroids, indices, min_d2 = carry
-        min_d2, total = round_fn(centroids[m - 1], min_d2)
-        del total  # the paper's thrust::reduce term — kept for phi logging;
+        rnd = round_fn(centroids[m - 1], min_d2)
+        min_d2 = rnd.min_d2
+        # rnd.total is the paper's thrust::reduce term — kept for phi logging;
         # the cdf sampler normalizes by its OWN cumsum's last entry instead:
         # serial and parallel reductions sum in different orders, and a 1-ulp
         # difference in the scale flips boundary samples. With cdf[-1] every
         # backend picks bitwise-identical seeds (the paper's quality claim,
-        # verified exactly in tests/test_engine.py).
+        # verified exactly in tests/test_engine.py). The tiled sampler draws
+        # from rnd.partials instead, touching O(n/tile + tile) elements.
         key, ks = jax.random.split(key)
         weight = min_d2 if w is None else min_d2 * w
-        nxt = sample_fn(ks, weight)
+        nxt = sample_fn(ks, weight, rnd.partials)
         centroids = jax.lax.dynamic_update_index_in_dim(
             centroids, take_fn(nxt), m, 0)
         indices = indices.at[m].set(nxt)
@@ -350,7 +409,7 @@ def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
         1, k, body, (key, centroids, indices, init_min_d2))
     # final D^2 update against the last chosen centroid (callers like
     # k-means|| want the potential phi over *all* k centroids).
-    min_d2, _ = round_fn(centroids[k - 1], min_d2)
+    min_d2 = round_fn(centroids[k - 1], min_d2).min_d2
     return centroids, indices, min_d2
 
 
@@ -358,10 +417,13 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
                 weights: Optional[jax.Array], backend: Backend,
                 sampler: str = "cdf") -> KmeansppResult:
     """Full k-means++ seeding through `backend` (untraced core; see
-    ClusterEngine.seed for the jitted entry)."""
+    ClusterEngine.seed for the jitted entry). Samplers: 'cdf' (full inverse
+    CDF — the serial algorithm, bitwise-pinned across backends), 'gumbel'
+    (Gumbel-max), 'tiled' (two-level inverse CDF from the round's per-tile
+    partials — O(n/tile + tile) post-kernel reads per round)."""
     if backend.distributed:
-        return _seed_mesh(key, points, k, weights, backend)
-    n, _ = points.shape
+        return _seed_mesh(key, points, k, weights, backend, sampler)
+    n, d = points.shape
     compute_dtype = jnp.promote_types(points.dtype, jnp.float32)
     pts = points.astype(compute_dtype)
     w = None if weights is None else weights.astype(compute_dtype)
@@ -373,37 +435,64 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
         def first_fn(k0):
             return sampling.categorical(k0, w, method="cdf").astype(jnp.int32)
 
+    if sampler == "tiled":
+        tile = backend.seed_tile(n, d)
+
+        def sample_fn(ks, weight, partials):
+            return sampling.categorical_tiled(
+                ks, weight, partials, block_n=tile).astype(jnp.int32)
+    else:
+        def sample_fn(ks, weight, partials):
+            return sampling.categorical(
+                ks, weight, method=sampler).astype(jnp.int32)
+
     centroids, indices, min_d2 = _seed_loop(
         key, pts, k, w,
         round_fn=lambda c, md: backend.seed_round(pts, c[None, :], md, w),
         first_fn=first_fn,
-        sample_fn=lambda ks, weight: sampling.categorical(
-            ks, weight, method=sampler).astype(jnp.int32),
+        sample_fn=sample_fn,
         take_fn=lambda i: pts[i],
         init_min_d2=jnp.full((n,), jnp.inf, compute_dtype),
     )
     return KmeansppResult(centroids.astype(points.dtype), indices, min_d2)
 
 
-def _seed_mesh(key, points, k, weights, backend: MeshBackend) -> KmeansppResult:
+def _seed_mesh(key, points, k, weights, backend: MeshBackend,
+               sampler: str = "cdf") -> KmeansppResult:
     """Distributed seeding: the same loop inside shard_map, with the sampler
     swapped for the exact distributed Gumbel-max and point lookup for the
-    psum broadcast. Collective traffic per round is independent of N."""
+    psum broadcast. Collective traffic per round is independent of N.
+
+    sampler='tiled' composes the two-level draw with the distributed choice:
+    per-shard tile selection via Gumbel over the round's partials, then an
+    inverse-CDF inside only the winning tile, then the usual pmax/pmin shard
+    combine — each shard reads O(n_local/tile + tile) elements post-kernel.
+    Every other sampler name keeps the full-scan distributed Gumbel-max."""
     if weights is not None:
         raise NotImplementedError("mesh seeding does not take weights")
     axes = backend.axes
 
     def local_fn(kk, pp):
         pts = pp.astype(jnp.float32)
-        n_local = pts.shape[0]
+        n_local, d = pts.shape
+        if sampler == "tiled":
+            tile = backend.seed_tile(n_local, d)
+
+            def sample_fn(ks, weight, partials):
+                return collectives.dist_tiled_choice(ks, weight, partials,
+                                                     tile, axes)
+        else:
+            def sample_fn(ks, weight, partials):
+                return collectives.dist_gumbel_choice(
+                    ks, sampling.safe_log(weight), axes)
+
         return _seed_loop(
             kk, pts, k, None,
             round_fn=lambda c, md: backend.seed_round(pts, c[None, :], md,
                                                       None),
             first_fn=lambda k0: collectives.dist_gumbel_choice(
                 k0, jnp.zeros((n_local,), jnp.float32), axes),
-            sample_fn=lambda ks, weight: collectives.dist_gumbel_choice(
-                ks, sampling.safe_log(weight), axes),
+            sample_fn=sample_fn,
             take_fn=lambda i: collectives.take_global(pts, i, axes),
             init_min_d2=collectives.pvary(
                 jnp.full((n_local,), jnp.inf, jnp.float32), axes),
@@ -422,10 +511,13 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend) -> KmeansppResult:
 # ---------------------------------------------------------------------------
 
 
-def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol):
+def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
+              empty: str = "keep"):
     """Lloyd iterations until the relative inertia improvement falls below
     `tol` or `max_iters` is hit. The k-means potential is monotonically
-    non-increasing — a property test asserts this."""
+    non-increasing — a property test asserts this — except under
+    empty='reseed', where a reseeded centroid may transiently raise it before
+    splitting the donor cluster pays off."""
     k = init_centroids.shape[0]
 
     def cond(state):
@@ -440,6 +532,8 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol):
         mw = m if w is None else m * w
         new_inertia = backend.allreduce(jnp.sum(mw))
         new_cents = centroid_means(sums, counts, cents)
+        if empty == "reseed":
+            new_cents = reseed_split_largest(new_cents, counts)
         return i + 1, new_cents, inertia, new_inertia, a
 
     n = pts.shape[0]
@@ -451,30 +545,35 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol):
 
 def fit_points(points: jax.Array, init_centroids: jax.Array,
                weights: Optional[jax.Array], backend: Backend,
-               max_iters: int, tol: float) -> LloydResult:
-    """Lloyd clustering through `backend` (untraced core)."""
+               max_iters: int, tol: float, empty: str = "keep") -> LloydResult:
+    """Lloyd clustering through `backend` (untraced core). `empty` picks the
+    empty-cluster policy: 'keep' (previous centroid survives) or 'reseed'
+    (split the largest cluster — see reseed_split_largest)."""
+    if empty not in ("keep", "reseed"):
+        raise ValueError(f"unknown empty-cluster policy {empty!r}; "
+                         "expected 'keep' or 'reseed'")
     if backend.distributed:
         return _fit_mesh(points, init_centroids, weights, backend,
-                         max_iters, tol)
+                         max_iters, tol, empty)
     cents, a, inertia, i = _fit_loop(points, init_centroids, weights,
-                                     backend, max_iters, tol)
+                                     backend, max_iters, tol, empty)
     return LloydResult(cents.astype(points.dtype), a, inertia, i)
 
 
 def _fit_mesh(points, init_centroids, weights, backend: MeshBackend,
-              max_iters, tol) -> LloydResult:
+              max_iters, tol, empty: str = "keep") -> LloydResult:
     axes = backend.axes
 
     if weights is None:
         def local_fn(pp, cc):
             return _fit_loop(pp.astype(jnp.float32), cc, None, backend,
-                             max_iters, tol)
+                             max_iters, tol, empty)
         in_specs = (P(axes), P())
         args = (points, init_centroids)
     else:
         def local_fn(pp, cc, ww):
             return _fit_loop(pp.astype(jnp.float32), cc, ww, backend,
-                             max_iters, tol)
+                             max_iters, tol, empty)
         in_specs = (P(axes), P(), P(axes))
         args = (points, init_centroids, weights)
 
@@ -553,10 +652,11 @@ def _seed_jit(key, points, weights, k, backend, sampler):
     return seed_points(key, points, k, weights, backend, sampler)
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "max_iters", "tol"))
-def _fit_jit(points, init_centroids, weights, backend, max_iters, tol):
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "max_iters", "tol", "empty"))
+def _fit_jit(points, init_centroids, weights, backend, max_iters, tol, empty):
     return fit_points(points, init_centroids, weights, backend,
-                      max_iters, tol)
+                      max_iters, tol, empty)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -571,10 +671,12 @@ def _seed_batched_jit(keys, points, k, backend, sampler):
     )(keys, points)
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "max_iters", "tol"))
-def _fit_batched_jit(points, init_centroids, backend, max_iters, tol):
+@functools.partial(jax.jit,
+                   static_argnames=("backend", "max_iters", "tol", "empty"))
+def _fit_batched_jit(points, init_centroids, backend, max_iters, tol, empty):
     return jax.vmap(
-        lambda pp, cc: fit_points(pp, cc, None, backend, max_iters, tol)
+        lambda pp, cc: fit_points(pp, cc, None, backend, max_iters, tol,
+                                  empty)
     )(points, init_centroids)
 
 
@@ -599,7 +701,12 @@ class ClusterEngine:
     def seed(self, key: jax.Array, points: jax.Array, k: int, *,
              weights: Optional[jax.Array] = None,
              sampler: str = "cdf") -> KmeansppResult:
-        """K-means++ seeding: k centroids chosen from `points` ∝ D^2."""
+        """K-means++ seeding: k centroids chosen from `points` ∝ D^2.
+
+        sampler: 'cdf' (full inverse-CDF, bitwise-pinned across local
+        backends), 'gumbel' (Gumbel-max), or 'tiled' (two-level draw from the
+        round kernel's per-tile partials — O(n/tile + tile) post-kernel reads
+        per round instead of a full O(n) cumsum; same distribution)."""
         n = points.shape[0]
         if not 0 < k <= n:
             raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
@@ -608,14 +715,20 @@ class ClusterEngine:
     # -- full-batch Lloyd -------------------------------------------------
     def fit(self, points: jax.Array, init_centroids: jax.Array, *,
             max_iters: int = 50, tol: float = 1e-6,
-            weights: Optional[jax.Array] = None) -> LloydResult:
-        """Lloyd iterations from `init_centroids` until convergence."""
+            weights: Optional[jax.Array] = None,
+            empty: str = "keep") -> LloydResult:
+        """Lloyd iterations from `init_centroids` until convergence.
+
+        empty: what happens to clusters that lose all their points — 'keep'
+        (previous centroid survives, the default) or 'reseed' (each empty
+        centroid jumps to a nudged copy of the largest cluster's centroid and
+        splits it on the next iteration)."""
         return _fit_jit(points, init_centroids, weights, self.backend,
-                        max_iters, float(tol))
+                        max_iters, float(tol), empty)
 
     def kmeans(self, key: jax.Array, points: jax.Array, k: int, *,
                init: str = "kmeans++", max_iters: int = 50, tol: float = 1e-6,
-               sampler: str = "cdf",
+               sampler: str = "cdf", empty: str = "keep",
                weights: Optional[jax.Array] = None) -> LloydResult:
         """End-to-end: seeding (the paper's phase) + Lloyd clustering."""
         if init == "kmeans++":
@@ -634,7 +747,7 @@ class ClusterEngine:
         else:
             raise ValueError(f"unknown init {init!r}")
         return self.fit(points, seeds, max_iters=max_iters, tol=tol,
-                        weights=weights)
+                        weights=weights, empty=empty)
 
     # -- streaming mini-batch Lloyd ---------------------------------------
     def fit_minibatch(self, init_centroids: jax.Array, batches: BatchSource,
@@ -695,7 +808,9 @@ class ClusterEngine:
         `points` is (B, n, d); `key` is either one key (split per problem) or
         (B,)-batched keys. Each problem gets its own PRNG stream, so problem b
         picks exactly the seeds the single-problem path would pick under
-        keys[b] — the many-tenant serve/semdedup scenario.
+        keys[b] — the many-tenant serve/semdedup scenario. On the pallas
+        backend the vmap lowers to the batch-grid distance kernel (one launch
+        per round covering every problem), not a per-problem loop.
         """
         if self.backend.distributed:
             raise NotImplementedError("use a local backend for batched "
@@ -710,20 +825,24 @@ class ClusterEngine:
         return _seed_batched_jit(keys, points, k, self.backend, sampler)
 
     def fit_batched(self, points: jax.Array, init_centroids: jax.Array, *,
-                    max_iters: int = 50, tol: float = 1e-6) -> LloydResult:
+                    max_iters: int = 50, tol: float = 1e-6,
+                    empty: str = "keep") -> LloydResult:
         """Lloyd over B independent problems: points (B, n, d), inits
         (B, k, d) -> LloydResult of (B, ...) leaves. One compiled vmap call;
-        iteration stops when EVERY problem has converged (n_iters is shared)."""
+        iteration stops when EVERY problem has converged (n_iters is shared).
+        On the pallas backend the vmap lowers to the batch-grid assign kernel
+        (one launch per iteration, every problem in the grid)."""
         if self.backend.distributed:
             raise NotImplementedError("use a local backend for batched "
                                       "problems (vmap inside each shard)")
         return _fit_batched_jit(points, init_centroids, self.backend,
-                                max_iters, float(tol))
+                                max_iters, float(tol), empty)
 
     def kmeans_batched(self, key: jax.Array, points: jax.Array, k: int, *,
                        max_iters: int = 50, tol: float = 1e-6,
-                       sampler: str = "cdf") -> LloydResult:
+                       sampler: str = "cdf",
+                       empty: str = "keep") -> LloydResult:
         """seed_batched + fit_batched in sequence (both single compiled calls)."""
         seeds = self.seed_batched(key, points, k, sampler=sampler)
         return self.fit_batched(points, seeds.centroids, max_iters=max_iters,
-                                tol=tol)
+                                tol=tol, empty=empty)

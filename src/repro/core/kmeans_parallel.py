@@ -55,7 +55,7 @@ def kmeans_parallel_init(key: jax.Array, points: jax.Array, k: int, *,
         cands = jax.lax.dynamic_update_slice(cands, new_pts, (1 + r * l, 0))
         cand_idx = jax.lax.dynamic_update_slice(cand_idx, idx, (1 + r * l,))
         # fold D² against all l new candidates in one multi-centroid round
-        min_d2, _phi = be.seed_round(pts, new_pts, min_d2, None)
+        min_d2 = be.seed_round(pts, new_pts, min_d2, None).min_d2
         return key, cands, cand_idx, min_d2
 
     key, cands, cand_idx, min_d2 = jax.lax.fori_loop(

@@ -1,11 +1,23 @@
 """Weighted categorical sampling primitives for k-means++ seeding.
 
-Two exact methods:
+Three exact methods:
   * inverse-CDF (`cdf`) — the classic serial method (cumsum + searchsorted).
     Used to prove serial == parallel seed selection under a matched PRNG key.
   * Gumbel-max (`gumbel`) — argmax(log w + Gumbel noise). Embarrassingly
     parallel, no prefix sum, and composes across shards with a tiny all-gather:
     the basis of the distributed seeding in `repro.core.distributed`.
+  * two-level tiled (`tiled`) — inverse-CDF over per-tile partial sums (the
+    seeding kernel's thrust::reduce partials), then inverse-CDF inside only
+    the chosen tile. Reads O(n_tiles + block_n) elements instead of O(n) per
+    draw while sampling the SAME distribution: the level-1 residual
+    r - tile_cdf[t-1] is, conditional on tile t, uniform on [0, partials[t]),
+    so one uniform drives both levels exactly.
+
+Degenerate weights (all-zero — duplicate-point datasets after the first seed —
+or NaN/inf totals) fall back to a uniform draw over all indices instead of
+silently returning a clipped index; the guard is shared by all three methods
+(`safe_log` maps the zero weights the cdf path skips to -inf for the Gumbel
+paths, so the two representations agree on which indices are sampleable).
 """
 from __future__ import annotations
 
@@ -22,23 +34,16 @@ def categorical(key: jax.Array, weights: jax.Array, *,
     if method == "cdf":
         return categorical_cdf(key, weights, total=total)
     if method == "gumbel":
-        return gumbel_max(key, safe_log(weights))
+        idx = gumbel_max(key, safe_log(weights))
+        # all-zero weights make every score -inf (argmax pins to 0); the max
+        # weight is the cheapest positive-mass witness for the shared guard
+        return _guarded(key, idx, jnp.max(weights), weights.shape[0])
     raise ValueError(f"unknown sampler {method!r}")
 
 
 def safe_log(w: jax.Array) -> jax.Array:
     """log(w) with log(0) -> -inf (zero-weight entries can never be sampled)."""
     return jnp.where(w > 0, jnp.log(jnp.where(w > 0, w, 1.0)), _NEG_INF)
-
-
-def categorical_cdf(key: jax.Array, weights: jax.Array, *,
-                    total: Optional[jax.Array] = None) -> jax.Array:
-    """Inverse-CDF sampling: idx such that cumsum[idx-1] <= r < cumsum[idx]."""
-    cdf = jnp.cumsum(weights)
-    tot = cdf[-1] if total is None else total
-    r = jax.random.uniform(key, (), weights.dtype) * tot
-    idx = jnp.searchsorted(cdf, r, side="right")
-    return jnp.clip(idx, 0, weights.shape[0] - 1).astype(jnp.int32)
 
 
 def gumbel_max(key: jax.Array, log_weights: jax.Array) -> jax.Array:
@@ -48,6 +53,9 @@ def gumbel_max(key: jax.Array, log_weights: jax.Array) -> jax.Array:
 
 def gumbel_topk(key: jax.Array, log_weights: jax.Array, k: int):
     """Exact weighted sampling *without replacement* of k indices (Gumbel top-k)."""
+    n = log_weights.shape[0]
+    if k > n:
+        raise ValueError(f"gumbel_topk needs k <= n, got k={k}, n={n}")
     g = jax.random.gumbel(key, log_weights.shape, log_weights.dtype)
     scores = log_weights + g
     _, idx = jax.lax.top_k(scores, k)
@@ -65,3 +73,91 @@ def gumbel_max_local(key: jax.Array, log_weights: jax.Array):
     scores = log_weights + g
     best = jnp.argmax(scores).astype(jnp.int32)
     return scores[best], best
+
+
+# ---------------------------------------------------------------------------
+# inverse-CDF: global and two-level tiled
+# ---------------------------------------------------------------------------
+
+
+def index_from_uniform(u: jax.Array, weights: jax.Array, *,
+                       total: Optional[jax.Array] = None) -> jax.Array:
+    """Deterministic half of inverse-CDF sampling: map u in [0, 1) to the idx
+    with cumsum[idx-1] <= u * total < cumsum[idx]. Exposed separately so the
+    tiled sampler's distribution-exactness can be tested on a dense u-grid."""
+    cdf = jnp.cumsum(weights)
+    tot = cdf[-1] if total is None else total
+    r = u * tot
+    idx = jnp.searchsorted(cdf, r, side="right")
+    return jnp.clip(idx, 0, weights.shape[0] - 1).astype(jnp.int32)
+
+
+def tile_window(weights: jax.Array, t: jax.Array, block_n: int) -> jax.Array:
+    """The (block_n,) weight slice of tile t (zero-padded tail tile) — the
+    only O(block_n) read a two-level draw performs. Shared by the local tiled
+    sampler and the distributed `collectives.dist_tiled_choice`."""
+    n = weights.shape[0]
+    pad = (-n) % block_n
+    wpad = weights if pad == 0 else jnp.pad(weights, (0, pad))
+    return jax.lax.dynamic_slice(wpad, (t * block_n,), (block_n,))
+
+
+def tiled_index_from_uniform(u: jax.Array, weights: jax.Array,
+                             partials: jax.Array, *, block_n: int) -> jax.Array:
+    """Two-level inverse-CDF: tile t via the n_tiles partial sums, then the
+    offset inside tile t via a (block_n,)-slice of `weights` — O(n/bn + bn)
+    reads. `partials[t]` must equal sum(weights[t*bn:(t+1)*bn]) (up to fp
+    association order); the level-2 residual reuses the SAME uniform, which
+    conditional on tile t is uniform on the tile's mass, so the composite is
+    an exact draw from weights/sum(weights)."""
+    n = weights.shape[0]
+    n_tiles = partials.shape[0]
+    tcdf = jnp.cumsum(partials)
+    r = u.astype(tcdf.dtype) * tcdf[-1]
+    t = jnp.clip(jnp.searchsorted(tcdf, r, side="right"), 0, n_tiles - 1)
+    r_local = r - jnp.where(t > 0, tcdf[jnp.maximum(t - 1, 0)], 0.0)
+
+    tile = tile_window(weights, t, block_n)
+    lcdf = jnp.cumsum(tile)
+    li = jnp.clip(jnp.searchsorted(lcdf, r_local, side="right"),
+                  0, block_n - 1)
+    return jnp.minimum(t * block_n + li, n - 1).astype(jnp.int32)
+
+
+def categorical_cdf(key: jax.Array, weights: jax.Array, *,
+                    total: Optional[jax.Array] = None) -> jax.Array:
+    """Inverse-CDF sampling: idx such that cumsum[idx-1] <= r < cumsum[idx].
+    All-zero / non-finite weight mass falls back to a uniform index."""
+    cdf = jnp.cumsum(weights)
+    tot = cdf[-1] if total is None else total
+    u = jax.random.uniform(key, (), weights.dtype)
+    idx = jnp.clip(jnp.searchsorted(cdf, u * tot, side="right"),
+                   0, weights.shape[0] - 1)
+    return _guarded(key, idx, tot, weights.shape[0])
+
+
+def categorical_tiled(key: jax.Array, weights: jax.Array,
+                      partials: jax.Array, *, block_n: int) -> jax.Array:
+    """Two-level tiled draw (see `tiled_index_from_uniform`). The degenerate
+    guard reads only the n_tiles partials, keeping the whole draw sub-O(n)."""
+    u = jax.random.uniform(key, (), weights.dtype)
+    idx = tiled_index_from_uniform(u, weights, partials, block_n=block_n)
+    return _guarded(key, idx, jnp.sum(partials), weights.shape[0])
+
+
+def _guarded(key: jax.Array, idx: jax.Array, total: jax.Array,
+             n: int) -> jax.Array:
+    ok = jnp.isfinite(total) & (total > 0)
+    rand = jax.random.randint(jax.random.fold_in(key, 0x0DD), (),
+                              0, n, dtype=jnp.int32)
+    return jnp.where(ok, idx.astype(jnp.int32), rand)
+
+
+def tile_partials(x: jax.Array, block_n: int) -> jax.Array:
+    """Per-tile sums of a (n,) array with tile height block_n (zero-padded
+    tail) — the reference/fused backends' analogue of the Pallas kernel's
+    on-chip per-tile partial accumulator."""
+    n = x.shape[0]
+    pad = (-n) % block_n
+    xp = x if pad == 0 else jnp.pad(x, (0, pad))
+    return xp.reshape(-1, block_n).sum(axis=1)

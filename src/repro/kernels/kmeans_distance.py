@@ -98,3 +98,77 @@ def distance_min_update_pallas(points: jax.Array, centroids: jax.Array,
         interpret=interpret,
     )(n_valid, pts, centroids, md)
     return out_md[:n], partials
+
+
+# ---------------------------------------------------------------------------
+# batch-grid variant (multi-tenant clustering: B independent problems)
+# ---------------------------------------------------------------------------
+
+
+def _round_kernel_batched(n_valid_ref, pts_ref, cents_ref, md_ref, out_md_ref,
+                          partial_ref, *, block_n: int):
+    """Grid step (b, i) processes rows [i*block_n, (i+1)*block_n) of problem b.
+
+    Same math as `_round_kernel`; the leading singleton axis is problem b's
+    block. The centroid block is re-fetched per problem (it differs per b) but
+    stays resident across the inner i steps."""
+    i = pl.program_id(1)
+    x = pts_ref[0].astype(jnp.float32)             # (block_n, d)
+    c = cents_ref[0].astype(jnp.float32)           # (k_new, d)
+    md = md_ref[0].astype(jnp.float32)             # (block_n,)
+
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1)
+    dots = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(xn - 2.0 * dots + cn[None, :], 0.0)
+    new_md = jnp.minimum(md, jnp.min(d2, axis=1))
+
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = row < n_valid_ref[0]
+    new_md = jnp.where(valid, new_md, 0.0)
+
+    out_md_ref[0] = new_md.astype(out_md_ref.dtype)
+    partial_ref[0, 0] = jnp.sum(new_md)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def distance_min_update_batched_pallas(points: jax.Array, centroids: jax.Array,
+                                       min_d2: jax.Array, *,
+                                       block_n: int = 1024,
+                                       interpret: bool = True):
+    """Batched seeding round over B independent problems in ONE launch.
+
+    points (B, n, d), centroids (B, k_new, d), min_d2 (B, n) ->
+    (new_min_d2 (B, n), partials (B, n_tiles)). Row b of the outputs is
+    bitwise what `distance_min_update_pallas` computes for problem b — the
+    grid just gains a leading batch dimension, so the many-tenant path pays
+    one kernel launch instead of B."""
+    B, n, d = points.shape
+    k_new = centroids.shape[1]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, 0), (0, pad), (0, 0)))
+    md = jnp.pad(min_d2, ((0, 0), (0, pad)), constant_values=jnp.inf)
+    n_valid = jnp.array([n], jnp.int32)
+
+    out_md, partials = pl.pallas_call(
+        functools.partial(_round_kernel_batched, block_n=block_n),
+        grid=(B, grid),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, i: (0,)),
+            pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, k_new, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n + pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_valid, pts, centroids, md)
+    return out_md[:, :n], partials

@@ -91,3 +91,94 @@ def lloyd_assign_pallas(points: jax.Array, centroids: jax.Array, *,
         interpret=interpret,
     )(n_valid, pts, centroids)
     return a[:n], md[:n], sums, counts
+
+
+# ---------------------------------------------------------------------------
+# batch-grid variant (multi-tenant clustering: B independent problems)
+# ---------------------------------------------------------------------------
+
+
+def _assign_kernel_batched(n_valid_ref, pts_ref, cents_ref, assign_ref,
+                           md_ref, sums_ref, counts_ref, *, block_n: int):
+    """Grid step (b, i): same math as `_assign_kernel` for problem b's tile i.
+
+    The (1, k, d)/(1, k) accumulators map to problem b's slot; the grid
+    iterates i fastest, so `i == 0` re-initializes them exactly once per
+    problem."""
+    i = pl.program_id(1)
+    x = pts_ref[0].astype(jnp.float32)          # (block_n, d)
+    c = cents_ref[0].astype(jnp.float32)        # (k, d)
+
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1)
+    dots = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(xn - 2.0 * dots + cn[None, :], 0.0)
+
+    a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    m = jnp.min(d2, axis=1)
+
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = row < n_valid_ref[0]
+    m = jnp.where(valid, m, 0.0)
+
+    assign_ref[0] = a
+    md_ref[0] = m
+
+    k = c.shape[0]
+    onehot = (a[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1))
+    onehot = jnp.where(valid[:, None], onehot.astype(jnp.float32), 0.0)
+    tile_sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    tile_counts = jnp.sum(onehot, axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[0] = tile_sums
+        counts_ref[0] = tile_counts
+
+    @pl.when(i > 0)
+    def _accum():
+        sums_ref[0] += tile_sums
+        counts_ref[0] += tile_counts
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lloyd_assign_batched_pallas(points: jax.Array, centroids: jax.Array, *,
+                                block_n: int = 1024, interpret: bool = True):
+    """Batched Lloyd half-step over B independent problems in ONE launch.
+
+    points (B, n, d), centroids (B, k, d) -> (assignment (B, n) int32,
+    min_d2 (B, n), sums (B, k, d), counts (B, k)). Row b matches
+    `lloyd_assign_pallas` on problem b; the grid gains a leading batch
+    dimension and the per-cluster accumulators gain a per-problem slot."""
+    B, n, d = points.shape
+    k = centroids.shape[1]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, 0), (0, pad), (0, 0)))
+    n_valid = jnp.array([n], jnp.int32)
+
+    a, md, sums, counts = pl.pallas_call(
+        functools.partial(_assign_kernel_batched, block_n=block_n),
+        grid=(B, grid),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, i: (0,)),
+            pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, k, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+            pl.BlockSpec((1, k, d), lambda b, i: (b, 0, 0)),   # accumulator
+            pl.BlockSpec((1, k), lambda b, i: (b, 0)),         # accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n + pad), jnp.int32),
+            jax.ShapeDtypeStruct((B, n + pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_valid, pts, centroids)
+    return a[:, :n], md[:, :n], sums, counts

@@ -3,8 +3,14 @@
 On a TPU backend the kernels compile to Mosaic; everywhere else they run in
 interpret mode (Python evaluation of the kernel body — bit-correct, slow),
 which is how this CPU container validates them. Block sizes are chosen so the
-working set (points tile + resident centroids + accumulators) fits a v5e
-VMEM budget of ~64 MB with double buffering.
+working set (points tile + resident centroids + accumulators + per-tile
+partials) fits a v5e VMEM budget of ~64 MB with double buffering.
+
+The wrappers carry a `custom_vmap` rule: `jax.vmap` over them dispatches to
+the batch-grid kernel variants (one launch with a leading batch grid
+dimension) instead of relying on the generic pallas batching rule — this is
+what lets the engine's `seed_batched`/`fit_batched` vmap hit real batched
+kernels with the VMEM budget accounted for.
 """
 from __future__ import annotations
 
@@ -12,9 +18,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
 
-from repro.kernels.kmeans_distance import distance_min_update_pallas
-from repro.kernels.lloyd_assign import lloyd_assign_pallas
+from repro.kernels.kmeans_distance import (distance_min_update_batched_pallas,
+                                           distance_min_update_pallas)
+from repro.kernels.lloyd_assign import (lloyd_assign_batched_pallas,
+                                        lloyd_assign_pallas)
 
 _VMEM_BUDGET = 48 * 1024 * 1024  # leave headroom out of ~64-128MB
 
@@ -24,57 +33,140 @@ def _on_tpu() -> bool:
 
 
 def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
-                 max_block: int = 4096) -> int:
+                 max_block: int = 4096, batched: bool = False) -> int:
     """Largest power-of-two point-tile height whose double-buffered working set
-    (2 x points tile + resident centroids + (block_n, k) distance tile) fits."""
+    fits the VMEM budget. Accounted per grid step:
+
+      2 x (bn, d) point tile           (double-buffered HBM->VMEM stream)
+      (k, d) resident centroid block
+      (bn, k) distance tile + ~4 per-point vectors
+      fp32 accumulators: (k, d) sums + (k,) counts + the per-tile partial
+        (the seeding kernel's thrust::reduce analogue)
+
+    `batched=True` budgets the batch-grid kernels, whose centroid block is
+    re-fetched per problem and therefore double-buffered like the point
+    stream (one extra (k, d) operand block in flight)."""
     bn = max_block
     while bn > 128:
         working = dtype_bytes * (2 * bn * d + k * d + bn * k + 4 * bn)
+        working += 4 * (k * d + k + 8)      # fp32 accumulators + partial
+        if batched:
+            working += dtype_bytes * k * d  # second centroid buffer
         if working <= _VMEM_BUDGET:
             return bn
         bn //= 2
     return 128
 
 
-def choose_block_n(n: int, d: int, k: int) -> int:
+def choose_block_n(n: int, d: int, k: int, *, batched: bool = False) -> int:
     """Point-tile height for an (n, d) x (k, d) launch: the VMEM-fitted block,
     clamped DOWN to the largest power of two <= n (never past the point count;
     the old round-up overshot n and launched oversized tiles), floored at the
     128-lane minimum. Non-multiple-of-block n is handled by padding + masking
     in the kernel wrappers, so any returned size is legal."""
-    cap = pick_block_n(d, k)
+    cap = pick_block_n(d, k, batched=batched)
     if n >= cap:
         return cap
     return max(128, 1 << (max(n, 1).bit_length() - 1))
+
+
+def _ensure_batched(x, is_batched: bool, axis_size: int):
+    return x if is_batched else jnp.broadcast_to(x[None], (axis_size,) + x.shape)
 
 
 def distance_min_update(points: jax.Array, centroids: jax.Array,
                         min_d2: jax.Array, *, resident_centroids: bool = True,
                         block_n: int | None = None,
                         interpret: bool | None = None):
-    """One k-means++ seeding round: fused D^2 min-update + per-tile partials."""
+    """One k-means++ seeding round: fused D^2 min-update + per-tile partials.
+
+    Returns (new_min_d2 (n,), partials (n_tiles,)) with the tile height
+    `choose_block_n(n, d, k)` — the same tile the two-level `tiled` sampler
+    draws from. Under `jax.vmap` this dispatches to the batch-grid kernel
+    (`distance_min_update_batched`), not a per-problem loop."""
     n, d = points.shape
     k = centroids.shape[0]
+    user_block = block_n
     if block_n is None:
         block_n = choose_block_n(n, d, k)
     if interpret is None:
         interpret = not _on_tpu()
-    return distance_min_update_pallas(points, centroids, min_d2,
-                                      block_n=block_n,
-                                      resident=resident_centroids,
-                                      interpret=interpret)
+
+    @custom_vmap
+    def call(pts, cents, md):
+        return distance_min_update_pallas(pts, cents, md, block_n=block_n,
+                                          resident=resident_centroids,
+                                          interpret=interpret)
+
+    @call.def_vmap
+    def _rule(axis_size, in_batched, pts, cents, md):
+        pts = _ensure_batched(pts, in_batched[0], axis_size)
+        cents = _ensure_batched(cents, in_batched[1], axis_size)
+        md = _ensure_batched(md, in_batched[2], axis_size)
+        # block_n=None re-picks the tile with the batch-grid VMEM accounting
+        out = distance_min_update_batched(pts, cents, md, block_n=user_block,
+                                          interpret=interpret)
+        return out, (True, True)
+
+    return call(points, centroids, min_d2)
+
+
+def distance_min_update_batched(points: jax.Array, centroids: jax.Array,
+                                min_d2: jax.Array, *,
+                                block_n: int | None = None,
+                                interpret: bool | None = None):
+    """Batched seeding round: (B, n, d) x (B, k, d) -> ((B, n), (B, n_tiles))
+    in one batch-grid kernel launch."""
+    _, n, d = points.shape
+    k = centroids.shape[1]
+    if block_n is None:
+        block_n = choose_block_n(n, d, k, batched=True)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return distance_min_update_batched_pallas(points, centroids, min_d2,
+                                              block_n=block_n,
+                                              interpret=interpret)
 
 
 def lloyd_assign(points: jax.Array, centroids: jax.Array, *,
                  block_n: int | None = None, interpret: bool | None = None):
-    """Fused assignment + per-cluster partial sums/counts."""
+    """Fused assignment + per-cluster partial sums/counts. Under `jax.vmap`
+    this dispatches to the batch-grid kernel (`lloyd_assign_batched`)."""
     n, d = points.shape
     k = centroids.shape[0]
+    user_block = block_n
     if block_n is None:
         block_n = choose_block_n(n, d, k)
     if interpret is None:
         interpret = not _on_tpu()
-    a, md, sums, counts = lloyd_assign_pallas(points, centroids,
-                                              block_n=block_n,
-                                              interpret=interpret)
-    return a, md, sums, counts
+
+    @custom_vmap
+    def call(pts, cents):
+        return lloyd_assign_pallas(pts, cents, block_n=block_n,
+                                   interpret=interpret)
+
+    @call.def_vmap
+    def _rule(axis_size, in_batched, pts, cents):
+        pts = _ensure_batched(pts, in_batched[0], axis_size)
+        cents = _ensure_batched(cents, in_batched[1], axis_size)
+        # block_n=None re-picks the tile with the batch-grid VMEM accounting
+        out = lloyd_assign_batched(pts, cents, block_n=user_block,
+                                   interpret=interpret)
+        return out, (True, True, True, True)
+
+    return call(points, centroids)
+
+
+def lloyd_assign_batched(points: jax.Array, centroids: jax.Array, *,
+                         block_n: int | None = None,
+                         interpret: bool | None = None):
+    """Batched Lloyd half-step: (B, n, d) x (B, k, d) -> per-problem
+    (assignment, min_d2, sums, counts) in one batch-grid kernel launch."""
+    _, n, d = points.shape
+    k = centroids.shape[1]
+    if block_n is None:
+        block_n = choose_block_n(n, d, k, batched=True)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return lloyd_assign_batched_pallas(points, centroids, block_n=block_n,
+                                       interpret=interpret)

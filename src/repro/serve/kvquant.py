@@ -17,13 +17,13 @@ production path sketched in kernels/ (lookup = one-hot matmul on the MXU).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kmeanspp import kmeanspp, pairwise_d2
-from repro.core.lloyd import lloyd
+from repro.core.engine import ClusterEngine
+from repro.core.kmeanspp import pairwise_d2
 
 
 class PQCodebook(NamedTuple):
@@ -35,29 +35,46 @@ class PQCache(NamedTuple):
     codebook: PQCodebook
 
 
+_DEFAULT_ENGINE = ClusterEngine("fused")
+
+
+def _fit_codebooks(key: jax.Array, problems: jax.Array, *, n_codes: int,
+                   lloyd_iters: int, engine: Optional[ClusterEngine]
+                   ) -> jax.Array:
+    """problems (B, take, dsub) -> (B, n_codes, dsub) centroids.
+
+    ONE `ClusterEngine.kmeans_batched` call clusters every sub-space problem
+    in the batch — a single compiled seeding sweep + a single batched Lloyd,
+    instead of the old per-sub-space Python loop of kmeanspp+lloyd calls. On
+    the pallas backend this runs the batch-grid kernels."""
+    eng = _DEFAULT_ENGINE if engine is None else engine
+    B, take, _ = problems.shape
+    k_eff = min(n_codes, take)
+    keys = jax.random.split(key, B)
+    res = eng.kmeans_batched(keys, problems, k_eff, max_iters=lloyd_iters)
+    cents = res.centroids
+    if k_eff < n_codes:         # pad (tiny caches in tests)
+        cents = jnp.pad(cents, ((0, 0), (0, n_codes - k_eff), (0, 0)))
+    return cents.astype(jnp.float32)
+
+
 def build_codebook(key: jax.Array, vectors: jax.Array, *, n_sub: int,
                    n_codes: int = 256, lloyd_iters: int = 10,
-                   sample: int = 16384) -> PQCodebook:
-    """vectors (N, d) -> PQ codebook. d % n_sub == 0."""
+                   sample: int = 16384,
+                   engine: Optional[ClusterEngine] = None) -> PQCodebook:
+    """vectors (N, d) -> PQ codebook. d % n_sub == 0. The n_sub sub-space
+    clusterings run as one batched multi-problem sweep through `engine`
+    (default: the fused ClusterEngine; pass ClusterEngine('pallas') for the
+    batch-grid kernels)."""
     N, d = vectors.shape
     assert d % n_sub == 0, (d, n_sub)
     dsub = d // n_sub
     take = min(sample, N)
     stride = max(N // take, 1)
     sub = vectors[::stride][:take].reshape(take, n_sub, dsub)
-
-    def fit(ks, xs):
-        k_eff = min(n_codes, xs.shape[0])
-        seeds = kmeanspp(ks, xs, k_eff, variant="fused").centroids
-        res = lloyd(xs, seeds, max_iters=lloyd_iters)
-        cents = res.centroids
-        if k_eff < n_codes:     # pad (tiny caches in tests)
-            cents = jnp.pad(cents, ((0, n_codes - k_eff), (0, 0)))
-        return cents
-
-    keys = jax.random.split(key, n_sub)
-    cents = jnp.stack([fit(keys[s], sub[:, s]) for s in range(n_sub)])
-    return PQCodebook(cents.astype(jnp.float32))
+    cents = _fit_codebooks(key, jnp.moveaxis(sub, 1, 0), n_codes=n_codes,
+                           lloyd_iters=lloyd_iters, engine=engine)
+    return PQCodebook(cents)
 
 
 def encode(vectors: jax.Array, cb: PQCodebook) -> jax.Array:
@@ -84,11 +101,13 @@ def decode(codes: jax.Array, cb: PQCodebook) -> jax.Array:
 
 
 def compress_kv(key: jax.Array, kv: jax.Array, *, n_sub: int = 8,
-                lloyd_iters: int = 10) -> PQCache:
+                lloyd_iters: int = 10,
+                engine: Optional[ClusterEngine] = None) -> PQCache:
     """kv (..., d) -> PQ cache (codes + codebook). Compression vs bf16 is
     (d * 2) / n_sub, e.g. head_dim 128, n_sub 8 -> 32x."""
     flat = kv.reshape(-1, kv.shape[-1])
-    cb = build_codebook(key, flat, n_sub=n_sub, lloyd_iters=lloyd_iters)
+    cb = build_codebook(key, flat, n_sub=n_sub, lloyd_iters=lloyd_iters,
+                        engine=engine)
     return PQCache(encode(kv, cb), cb)
 
 
@@ -110,7 +129,9 @@ def compression_ratio(kv: jax.Array, pq: PQCache) -> float:
 # ---------------------------------------------------------------------------
 
 def compress_transformer_cache(key: jax.Array, cache: dict, *,
-                               n_sub: int = 16, lloyd_iters: int = 6) -> dict:
+                               n_sub: int = 16, lloyd_iters: int = 6,
+                               sample: int = 16384,
+                               engine: Optional[ClusterEngine] = None) -> dict:
     """Convert a dense transformer KV cache {"k","v": (L,B,S,KH,hd), "pos"}
     into the PQ layout the flash-decode-over-codes kernel reads:
 
@@ -119,26 +140,35 @@ def compress_transformer_cache(key: jax.Array, cache: dict, *,
 
     Codebooks are fit per (layer, kv-head) with k-means++ seeding — the
     paper's phase; a production server re-fits them every ~1k decode steps
-    from a cache sample (amortized to noise)."""
+    from a cache sample (amortized to noise). ALL L*KH*n_sub sub-space
+    clusterings for a tensor run as ONE `ClusterEngine.kmeans_batched` sweep
+    (the multi-tenant batch-grid path), not an L*KH Python loop."""
     out = {"pos": cache["pos"]}
-    for name in ("k", "v"):
+    for i, name in enumerate(("k", "v")):
         kv = cache[name]
         L, B, S, KH, hd = kv.shape
-        cbs = []
-        codes = []
-        for l in range(L):
-            cb_h, code_h = [], []
-            for h in range(KH):
-                flat = kv[l, :, :, h].reshape(-1, hd)
-                cb = build_codebook(jax.random.fold_in(key, l * 64 + h),
-                                    flat, n_sub=n_sub,
-                                    lloyd_iters=lloyd_iters)
-                cb_h.append(cb.centroids)
-                code_h.append(encode(kv[l, :, :, h], cb))
-            cbs.append(jnp.stack(cb_h))
-            codes.append(jnp.stack(code_h, axis=2))
-        out[f"{name}_codes"] = jnp.stack(codes).astype(jnp.uint8)
-        out[f"{name}_cb"] = jnp.stack(cbs)
+        assert hd % n_sub == 0, (hd, n_sub)
+        dsub = hd // n_sub
+        # (L,B,S,KH,hd) -> (L*KH, B*S, hd): one row of problems per
+        # (layer, kv-head), sub-sampled like build_codebook
+        groups = jnp.moveaxis(kv, 3, 1).reshape(L * KH, B * S, hd)
+        take = min(sample, B * S)
+        stride = max((B * S) // take, 1)
+        sub = groups[:, ::stride][:, :take]
+        # (L*KH, take, hd) -> (L*KH*n_sub, take, dsub)
+        problems = jnp.moveaxis(
+            sub.reshape(L * KH, take, n_sub, dsub), 2, 1
+        ).reshape(L * KH * n_sub, take, dsub)
+        cents = _fit_codebooks(jax.random.fold_in(key, i), problems,
+                               n_codes=256, lloyd_iters=lloyd_iters,
+                               engine=engine)
+        cbs = cents.reshape(L, KH, n_sub, 256, dsub)
+        codes = jnp.stack([
+            jnp.stack([encode(kv[l, :, :, h], PQCodebook(cbs[l, h]))
+                       for h in range(KH)], axis=2)
+            for l in range(L)])
+        out[f"{name}_codes"] = codes.astype(jnp.uint8)
+        out[f"{name}_cb"] = cbs
     return out
 
 

@@ -237,11 +237,173 @@ def test_kmeans_batched_end_to_end():
         assert float(out.inertia[b]) / n < 3 * 2 * 0.05 ** 2, b
 
 
+def test_seed_batched_pallas_matches_fused_and_single():
+    """The batch-grid pallas kernel path picks the same seeds as the fused
+    vmap path AND as B single-problem pallas calls (no fallback, no drift)."""
+    B = 3
+    bpts = jnp.stack([_points(n=300, d=3, k=4, seed=20 + s) for s in range(B)])
+    keys = jax.random.split(jax.random.PRNGKey(9), B)
+    pal = ClusterEngine("pallas").seed_batched(keys, bpts, 5)
+    fus = ClusterEngine("fused").seed_batched(keys, bpts, 5)
+    np.testing.assert_array_equal(np.asarray(pal.indices),
+                                  np.asarray(fus.indices))
+    for b in range(B):
+        single = ClusterEngine("pallas").seed(keys[b], bpts[b], 5)
+        np.testing.assert_array_equal(np.asarray(pal.indices[b]),
+                                      np.asarray(single.indices))
+
+
+def test_seed_batched_pallas_tiled_sampler():
+    B = 2
+    bpts = jnp.stack([_points(n=256, d=2, k=4, seed=30 + s) for s in range(B)])
+    keys = jax.random.split(jax.random.PRNGKey(12), B)
+    out = ClusterEngine("pallas").seed_batched(keys, bpts, 4, sampler="tiled")
+    idx = np.asarray(out.indices)
+    assert ((0 <= idx) & (idx < 256)).all()
+    for b in range(B):
+        assert len(set(idx[b].tolist())) == 4, idx[b]
+
+
+def test_kmeans_batched_pallas_end_to_end():
+    """Acceptance: kmeans_batched on the pallas backend (batch-grid kernels)
+    reaches the same inertia as the fused path on every problem."""
+    B, n, k = 3, 512, 4
+    bpts = jnp.stack([_points(n=n, d=2, k=k, seed=40 + s) for s in range(B)])
+    key = jax.random.PRNGKey(5)
+    pal = ClusterEngine("pallas").kmeans_batched(key, bpts, k, max_iters=15)
+    fus = ClusterEngine("fused").kmeans_batched(key, bpts, k, max_iters=15)
+    assert pal.centroids.shape == (B, k, 2)
+    np.testing.assert_allclose(np.asarray(pal.inertia),
+                               np.asarray(fus.inertia), rtol=1e-4)
+
+
 def test_batched_rejects_mesh_backend():
     mesh = jax.make_mesh((1,), ("data",))
     eng = ClusterEngine(MeshBackend(mesh=mesh, axes=("data",)))
     with pytest.raises(NotImplementedError):
         eng.seed_batched(jax.random.PRNGKey(0), jnp.zeros((2, 8, 2)), 2)
+
+
+# ---------------------------------------------------------------------------
+# two-level tiled sampling (ISSUE 2 tentpole)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "fused", "pallas"])
+def test_tiled_sampler_seeds_are_valid_and_distinct(backend):
+    pts = _points(n=512, k=8)
+    res = ClusterEngine(backend).seed(jax.random.PRNGKey(4), pts, 10,
+                                      sampler="tiled")
+    idx = np.asarray(res.indices)
+    assert ((0 <= idx) & (idx < 512)).all()
+    assert len(set(idx.tolist())) == 10, idx
+    assert np.isfinite(np.asarray(res.centroids)).all()
+
+
+def test_tiled_sampler_parity_fused_vs_pallas():
+    """Fused and pallas backends produce per-tile partials with the same tile
+    height and the same per-tile sums, so the two-level draw picks the same
+    seeds under one key."""
+    pts = _points(n=700, d=3, k=6, seed=5)
+    key = jax.random.PRNGKey(11)
+    a = ClusterEngine("fused").seed(key, pts, 7, sampler="tiled")
+    b = ClusterEngine("pallas").seed(key, pts, 7, sampler="tiled")
+    np.testing.assert_array_equal(np.asarray(a.indices),
+                                  np.asarray(b.indices))
+
+
+def test_tiled_sampler_quality_matches_cdf():
+    """Same-distribution claim at the phi level: tiled seeding's potential is
+    within the usual k-means++ run-to-run band of cdf seeding."""
+    pts = _points(n=4096, d=2, k=16, seed=6)
+    eng = ClusterEngine("fused")
+    phis = {}
+    for sampler in ("cdf", "tiled"):
+        phi = [float(quality.inertia(
+            pts, eng.seed(jax.random.PRNGKey(s), pts, 16,
+                          sampler=sampler).centroids)) for s in range(3)]
+        phis[sampler] = sum(phi) / len(phi)
+    assert phis["tiled"] < 2.5 * phis["cdf"], phis
+    assert phis["cdf"] < 2.5 * phis["tiled"], phis
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in jax.tree_util.tree_leaves(
+                    v, is_leaf=lambda x: isinstance(
+                        x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    yield from _iter_eqns(sub.jaxpr)
+                elif isinstance(sub, jax.core.Jaxpr):
+                    yield from _iter_eqns(sub)
+
+
+def _cumsum_operand_sizes(fn, *args):
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    sizes = set()
+    for eqn in _iter_eqns(jaxpr.jaxpr):
+        if "cumsum" in eqn.primitive.name:
+            sizes.add(eqn.invars[0].aval.shape)
+    return sizes
+
+def test_tiled_sampler_has_no_full_n_cumsum_in_jaxpr():
+    """Acceptance: with sampler='tiled' the post-kernel sampling reads
+    O(n/bn + bn) elements — the traced program must contain no cumsum over
+    the full (n,) array, only the (n_tiles,) and (block_n,) scans. The cdf
+    sampler is the control: it must show the full-n cumsum."""
+    from repro.core import engine as eng_mod
+    n = 16384
+    pts = jnp.zeros((n, 2), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    backend = FusedBackend()
+    tile = backend.seed_tile(n, 2)
+    assert tile < n, "probe must span multiple tiles"
+
+    def seed_with(sampler):
+        return lambda k, p: eng_mod.seed_points(k, p, 4, None, backend,
+                                                sampler)
+
+    tiled_sizes = _cumsum_operand_sizes(seed_with("tiled"), key, pts)
+    assert (n,) not in tiled_sizes, tiled_sizes
+    assert tiled_sizes <= {(n // tile,), (tile,)}, tiled_sizes
+
+    cdf_sizes = _cumsum_operand_sizes(seed_with("cdf"), key, pts)
+    assert (n,) in cdf_sizes, cdf_sizes
+
+
+# ---------------------------------------------------------------------------
+# empty-cluster reseeding (split the largest cluster)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["fused", "pallas"])
+def test_empty_reseed_revives_dead_centroid(backend):
+    pts = jnp.asarray([[0.0, 0.0], [0.1, 0.0], [1.0, 1.0], [1.1, 1.0]])
+    cents = jnp.asarray([[0.0, 0.0], [1.0, 1.0], [99.0, 99.0]])
+    keep = ClusterEngine(backend).fit(pts, cents, max_iters=5)
+    res = ClusterEngine(backend).fit(pts, cents, max_iters=5, empty="reseed")
+    # keep-policy leaves the far centroid dead; reseed must pull it back in
+    np.testing.assert_allclose(np.asarray(keep.centroids)[2], [99.0, 99.0])
+    assert np.abs(np.asarray(res.centroids)[2]).max() < 50.0
+    assert float(res.inertia) < float(keep.inertia)
+    # every cluster owns at least one point after reseeding
+    assert len(set(np.asarray(res.assignment).tolist())) == 3
+
+
+def test_empty_reseed_noop_when_no_empty_clusters():
+    pts = _points(n=400, d=2, k=4, seed=8)
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(0), pts,
+                                        4).centroids
+    a = ClusterEngine("fused").fit(pts, seeds, max_iters=10)
+    b = ClusterEngine("fused").fit(pts, seeds, max_iters=10, empty="reseed")
+    np.testing.assert_allclose(np.asarray(a.centroids),
+                               np.asarray(b.centroids), rtol=1e-6)
+
+
+def test_fit_rejects_unknown_empty_policy():
+    with pytest.raises(ValueError, match="empty-cluster"):
+        ClusterEngine("fused").fit(jnp.zeros((4, 2)), jnp.zeros((2, 2)),
+                                   empty="explode")
 
 
 # ---------------------------------------------------------------------------

@@ -94,6 +94,92 @@ def test_ops_dispatch_and_block_pick():
     assert ops.pick_block_n(2, 8) == 4096
 
 
+# ---------------------------------------------------------------------------
+# batch-grid kernels (multi-tenant clustering)
+# ---------------------------------------------------------------------------
+
+BATCHED_SHAPES = [  # (B, n, d, k, block_n)
+    (2, 128, 2, 1, 128),
+    (3, 300, 4, 2, 128),       # ragged n
+    (2, 1024, 16, 4, 256),
+]
+
+
+@pytest.mark.parametrize("B,n,d,k,block_n", BATCHED_SHAPES)
+def test_distance_min_update_batched_matches_per_problem(B, n, d, k, block_n):
+    from repro.kernels.kmeans_distance import (
+        distance_min_update_batched_pallas)
+    pts = jax.random.normal(jax.random.PRNGKey(0), (B, n, d))
+    cents = jax.random.normal(jax.random.PRNGKey(1), (B, k, d))
+    md = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (B, n))) * 4
+    got_md, got_p = distance_min_update_batched_pallas(
+        pts, cents, md, block_n=block_n, interpret=True)
+    assert got_p.shape == (B, -(-n // block_n))
+    for b in range(B):
+        want_md, want_p = distance_min_update_pallas(
+            pts[b], cents[b], md[b], block_n=block_n, interpret=True)
+        # row b of the batch-grid launch is bitwise the single-problem kernel
+        np.testing.assert_array_equal(np.asarray(got_md[b]),
+                                      np.asarray(want_md))
+        np.testing.assert_array_equal(np.asarray(got_p[b]),
+                                      np.asarray(want_p))
+
+
+@pytest.mark.parametrize("B,n,d,k,block_n", BATCHED_SHAPES)
+def test_lloyd_assign_batched_matches_per_problem(B, n, d, k, block_n):
+    from repro.kernels.lloyd_assign import lloyd_assign_batched_pallas
+    k = max(k, 2)
+    pts = jax.random.normal(jax.random.PRNGKey(3), (B, n, d))
+    cents = jax.random.normal(jax.random.PRNGKey(4), (B, k, d))
+    a, md, sums, counts = lloyd_assign_batched_pallas(
+        pts, cents, block_n=block_n, interpret=True)
+    for b in range(B):
+        a1, md1, s1, c1 = lloyd_assign_pallas(pts[b], cents[b],
+                                              block_n=block_n, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a[b]), np.asarray(a1))
+        np.testing.assert_array_equal(np.asarray(md[b]), np.asarray(md1))
+        np.testing.assert_array_equal(np.asarray(sums[b]), np.asarray(s1))
+        np.testing.assert_array_equal(np.asarray(counts[b]), np.asarray(c1))
+
+
+def test_ops_vmap_dispatches_to_batch_grid_kernel():
+    """jax.vmap over the ops wrappers must lower to ONE batch-grid pallas
+    call, not B per-problem calls (the custom_vmap rule)."""
+    B, n, d, k = 3, 256, 4, 2
+    pts = jax.random.normal(jax.random.PRNGKey(5), (B, n, d))
+    cents = jax.random.normal(jax.random.PRNGKey(6), (B, k, d))
+    md = jnp.full((B, n), jnp.inf)
+
+    out_md, partials = jax.vmap(
+        lambda p, c, m: ops.distance_min_update(p, c, m))(pts, cents, md)
+    for b in range(B):
+        want_md, want_total = ref.distance_min_update_ref(pts[b], cents[b],
+                                                          md[b])
+        np.testing.assert_allclose(np.asarray(out_md[b]), np.asarray(want_md),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(jnp.sum(partials[b])),
+                                   float(want_total), rtol=1e-4)
+
+    a, md2, sums, counts = jax.vmap(
+        lambda p, c: ops.lloyd_assign(p, c))(pts, cents)
+    for b in range(B):
+        a_ref, md_ref, s_ref, c_ref = ref.lloyd_assign_ref(pts[b], cents[b])
+        np.testing.assert_array_equal(np.asarray(a[b]), np.asarray(a_ref))
+        np.testing.assert_allclose(np.asarray(s_ref), np.asarray(sums[b]),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_pick_block_n_batched_accounting():
+    """The batch-grid accounting (extra in-flight centroid block) can only
+    shrink the tile, and the partials/accumulator terms keep the historical
+    picks for small shapes."""
+    assert ops.pick_block_n(2, 8) == 4096
+    assert ops.pick_block_n(2, 8, batched=True) == 4096
+    for d, k in ((2, 8), (64, 256), (512, 1024), (4096, 256)):
+        assert ops.pick_block_n(d, k, batched=True) <= ops.pick_block_n(d, k)
+        assert ops.pick_block_n(d, k, batched=True) >= 128
+
+
 def test_kernel_inside_seeding_loop():
     """Pallas round used end-to-end inside kmeanspp gives identical seeds."""
     from repro.core import kmeanspp

@@ -10,8 +10,51 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core import kmeanspp
+from repro.core import kmeanspp, sampling
 from repro.core.lloyd import assign, update
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 48), block_n=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_tiled_two_level_is_distribution_exact(n, block_n, seed):
+    """Acceptance (ISSUE 2): the tiled sampler's u -> index map induces the
+    same index probabilities as the global inverse-CDF. Enumerated on a dense
+    deterministic u-grid, so the u-measure of each index is the sampling
+    probability up to grid resolution."""
+    rng = np.random.default_rng(seed)
+    w = np.abs(rng.normal(size=n)).astype(np.float32)
+    w[rng.random(size=n) < 0.2] = 0.0
+    if w.sum() == 0:
+        w[0] = 1.0
+    w = jnp.asarray(w)
+    partials = sampling.tile_partials(w, block_n)
+    M = 2048
+    us = jnp.asarray((np.arange(M) + 0.5) / M, jnp.float32)
+    glob = np.asarray(jax.vmap(
+        lambda u: sampling.index_from_uniform(u, w))(us))
+    tile = np.asarray(jax.vmap(
+        lambda u: sampling.tiled_index_from_uniform(
+            u, w, partials, block_n=block_n))(us))
+    # equal except within fp-ulp of distribution breakpoints
+    n_tiles = partials.shape[0]
+    assert (glob == tile).mean() >= 1.0 - (n + n_tiles + 2) / M
+    probs = np.bincount(tile, minlength=n) / M
+    want = np.asarray(w) / float(jnp.sum(w))
+    np.testing.assert_allclose(probs, want, atol=3.0 / M * n_tiles + 1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_tiled_seeding_valid(seed):
+    """Full k-means++ with sampler='tiled': valid distinct indices, finite
+    centroids (mirrors test_property_valid_result for the new sampler)."""
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (96, 3))
+    res = kmeanspp(jax.random.PRNGKey(seed + 1), pts, 6, sampler="tiled")
+    idx = np.asarray(res.indices)
+    assert ((0 <= idx) & (idx < 96)).all()
+    assert len(set(idx.tolist())) == 6
+    assert np.isfinite(np.asarray(res.centroids)).all()
 
 
 @settings(max_examples=20, deadline=None)

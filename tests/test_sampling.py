@@ -1,0 +1,115 @@
+"""Sampler unit tests: two-level tiled exactness (deterministic u-grid
+enumeration — the hypothesis variant lives in test_kmeanspp_properties.py),
+degenerate-weight guards, and gumbel_topk validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampling
+
+
+# ---------------------------------------------------------------------------
+# two-level tiled sampler: distribution exactness
+# ---------------------------------------------------------------------------
+
+def _weights(n, seed, with_zeros=True):
+    w = np.abs(np.random.default_rng(seed).normal(size=n)).astype(np.float32)
+    if with_zeros:
+        w[:: max(n // 5, 1)] = 0.0
+    return jnp.asarray(w)
+
+
+@pytest.mark.parametrize("n,block_n", [(37, 8), (64, 16), (100, 128),
+                                       (256, 32), (13, 4)])
+def test_tiled_index_matches_global_cdf_on_u_grid(n, block_n):
+    """The two-level map u -> index agrees with the global inverse-CDF map
+    everywhere except fp boundary cells, so the induced distributions match.
+    (block_n > n exercises the degenerate single-tile case.)"""
+    w = _weights(n, seed=n)
+    partials = sampling.tile_partials(w, block_n)
+    M = 4096
+    us = jnp.asarray((np.arange(M) + 0.5) / M, jnp.float32)
+    glob = jax.vmap(lambda u: sampling.index_from_uniform(u, w))(us)
+    tile = jax.vmap(lambda u: sampling.tiled_index_from_uniform(
+        u, w, partials, block_n=block_n))(us)
+    glob, tile = np.asarray(glob), np.asarray(tile)
+    # identical outside fp-boundary cells: allow one cell per breakpoint
+    n_tiles = partials.shape[0]
+    assert (glob == tile).mean() >= 1.0 - (n + n_tiles + 2) / M
+    # induced probabilities (u-measure per index) match the true weights
+    probs = np.bincount(tile, minlength=n) / M
+    want = np.asarray(w) / float(jnp.sum(w))
+    np.testing.assert_allclose(probs, want, atol=2.5 / M * block_n ** 0.5 + 1e-3)
+
+
+def test_tiled_never_picks_zero_weight_index():
+    w = jnp.asarray([0.0, 2.0, 0.0, 1.0, 0.0, 0.0, 3.0, 0.0], jnp.float32)
+    partials = sampling.tile_partials(w, 4)
+    for s in range(200):
+        idx = int(sampling.categorical_tiled(jax.random.PRNGKey(s), w,
+                                             partials, block_n=4))
+        assert w[idx] > 0, idx
+
+
+# ---------------------------------------------------------------------------
+# degenerate-weight guards (all-zero / NaN mass)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["cdf", "gumbel"])
+def test_all_zero_weights_fall_back_to_uniform(method):
+    w = jnp.zeros((16,), jnp.float32)
+    idx = [int(sampling.categorical(jax.random.PRNGKey(s), w, method=method))
+           for s in range(40)]
+    assert all(0 <= i < 16 for i in idx)
+    # the old behaviour silently pinned to one clipped index; the guard must
+    # actually spread the mass
+    assert len(set(idx)) > 4, idx
+
+
+def test_all_zero_weights_tiled_falls_back_to_uniform():
+    w = jnp.zeros((32,), jnp.float32)
+    partials = sampling.tile_partials(w, 8)
+    idx = [int(sampling.categorical_tiled(jax.random.PRNGKey(s), w, partials,
+                                          block_n=8)) for s in range(40)]
+    assert all(0 <= i < 32 for i in idx)
+    assert len(set(idx)) > 4, idx
+
+
+@pytest.mark.parametrize("method", ["cdf", "gumbel"])
+def test_nan_weights_fall_back_to_valid_index(method):
+    w = jnp.asarray([1.0, jnp.nan, 2.0, 3.0], jnp.float32)
+    idx = int(sampling.categorical(jax.random.PRNGKey(0), w, method=method))
+    assert 0 <= idx < 4
+
+
+def test_nondegenerate_cdf_unchanged_by_guard():
+    """The guard must not perturb the healthy path (bitwise parity pin)."""
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    key = jax.random.PRNGKey(7)
+    u = jax.random.uniform(key, (), w.dtype)
+    want = sampling.index_from_uniform(u, w)
+    got = sampling.categorical_cdf(key, w)
+    assert int(want) == int(got)
+
+
+# ---------------------------------------------------------------------------
+# gumbel_topk validation
+# ---------------------------------------------------------------------------
+
+def test_gumbel_topk_rejects_k_greater_than_n():
+    lw = sampling.safe_log(jnp.ones((4,), jnp.float32))
+    with pytest.raises(ValueError, match="k <= n"):
+        sampling.gumbel_topk(jax.random.PRNGKey(0), lw, 5)
+    idx = sampling.gumbel_topk(jax.random.PRNGKey(0), lw, 4)
+    assert sorted(np.asarray(idx).tolist()) == [0, 1, 2, 3]
+
+
+def test_tile_partials_sums_match():
+    w = _weights(100, seed=3, with_zeros=False)
+    p = sampling.tile_partials(w, 32)
+    assert p.shape == (4,)
+    np.testing.assert_allclose(float(jnp.sum(p)), float(jnp.sum(w)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p)[0],
+                               float(jnp.sum(w[:32])), rtol=1e-6)
