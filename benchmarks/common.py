@@ -3,9 +3,10 @@
 Set REPRO_BENCH_SMOKE=1 to shrink every sweep to its smallest point (the CI
 smoke mode — each module finishes in seconds while still exercising the full
 code path). Set REPRO_BENCH_OUT=<dir> to additionally capture JSON payloads
-from the modules that emit them via `write_json` (currently the `seed`
-module's BENCH_seed.json — the CI workflow uploads that directory as an
-artifact; benchmarks/BENCH_seed.json is the checked-in baseline)."""
+from the modules that emit them via `write_json` (the `seed` module's
+BENCH_seed.json and the `round` module's BENCH_round.json — the CI workflow
+uploads that directory as an artifact; benchmarks/BENCH_seed.json and
+benchmarks/BENCH_round.json are the checked-in baselines)."""
 from __future__ import annotations
 
 import json

@@ -17,6 +17,7 @@ REPEATS = 1 if SMOKE else 3
 
 ENGINE = ClusterEngine("fused")
 SERIAL = ClusterEngine("serial")
+BF16 = ClusterEngine("fused", precision="bf16")
 
 
 def run(rows: list):
@@ -30,17 +31,22 @@ def run(rows: list):
                                            sampler="gumbel").centroids
         seeds[("tiled", s)] = ENGINE.seed(key, pts, K,
                                           sampler="tiled").centroids
+        seeds[("bf16", s)] = BF16.seed(key, pts, K).centroids
         seeds[("kmeans||", s)] = kmeans_parallel_init(key, pts, K).centroids
         seeds[("random", s)] = random_init(key, pts, K).centroids
 
-    for method in ("serial", "fused", "gumbel", "tiled", "kmeans||",
+    # bf16 rows: seeding AND Lloyd stream bf16 — the paper-config inertia
+    # must land within rtol of the fp32 rows (the quality-safety claim for
+    # bf16 streaming; the tier-1 test pins the same bound)
+    for method in ("serial", "fused", "gumbel", "tiled", "bf16", "kmeans||",
                    "random"):
+        eng = BF16 if method == "bf16" else ENGINE
         phi_seed, phi_final = [], []
         for s in range(REPEATS):
             c = seeds[(method, s)]
             phi_seed.append(float(quality.inertia(pts, c)))
             phi_final.append(float(
-                ENGINE.fit(pts, c, max_iters=30).inertia))
+                eng.fit(pts, c, max_iters=30).inertia))
         rows.append({"bench": "quality_parity", "method": method,
                      "phi_seed": f"{sum(phi_seed)/REPEATS:.1f}",
                      "phi_after_lloyd": f"{sum(phi_final)/REPEATS:.1f}"})

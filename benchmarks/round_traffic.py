@@ -1,0 +1,120 @@
+"""Round-kernel traffic trajectory — what the bound-gated, mixed-precision
+round kernels actually save (ISSUE 3 tentpole).
+
+Three columns per seeding run:
+
+  skip_rate     — fraction of point tiles the triangle-inequality bound
+                  skipped, per round (exact: fp32 results are bitwise
+                  identical to the ungated kernels). Reported vs round
+                  number: early rounds touch everything, later rounds prune.
+  bytes/round   — modelled HBM traffic of one round at the engine's tile
+                  height: active tiles stream (points + cached norms +
+                  min_d2 in/out + partial/tile-max scalars); skipped tiles
+                  stream NOTHING. bf16 streams the point tile at half width
+                  (norms/min_d2 stay fp32).
+  seconds       — wall time of the full seed call, fp32 vs bf16 (the bf16
+                  win is a bandwidth effect, so expect parity on this CPU
+                  host and ~2x on the round-kernel fraction on TPU).
+
+Data is label-sorted blobs: tile-level pruning needs spatially coherent
+tiles (Capó et al.) — the unsorted control row shows skip_rate ~= 0.
+
+Emits BENCH_round.json via REPRO_BENCH_OUT; benchmarks/BENCH_round.json is
+the checked-in smoke-mode baseline tracking the trajectory across PRs."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import SMOKE, emit, time_fn, write_json
+from repro.core.engine import ClusterEngine
+from repro.data.synthetic import blobs
+from repro.kernels.ops import choose_block_n
+
+N, D, K = (2 ** 14, 2, 4) if SMOKE else (2 ** 17, 8, 16)
+SEEDS = 8 if SMOKE else 32
+# pallas kernels interpret on CPU — keep their probe small off-TPU
+N_PALLAS = N if jax.default_backend() == "tpu" else min(N, 2 ** 14)
+
+
+def coherent_blobs(n: int, seed: int = 0) -> jax.Array:
+    pts, labels = blobs(n, D, K, seed=seed)
+    return jnp.asarray(pts[np.argsort(labels, kind="stable")])
+
+
+def round_bytes(n: int, skip_rate: float, dtype_bytes: int) -> int:
+    """Modelled HBM bytes of ONE gated round at the engine tile height:
+    per active tile, the kernel streams the point block (stream dtype), the
+    fp32 cached-norms block, reads+writes the fp32 min_d2 block and writes
+    the two fp32 bound-state scalars. Skipped tiles move nothing."""
+    bn = choose_block_n(n, D, 1, batched=True)
+    n_tiles = -(-n // bn)
+    active = round(n_tiles * (1.0 - skip_rate))
+    per_tile = bn * (D * dtype_bytes + 4 + 2 * 4) + 2 * 4
+    return active * per_tile
+
+
+def run(rows: list):
+    key = jax.random.PRNGKey(0)
+    for backend, n in (("fused", N), ("pallas", N_PALLAS)):
+        for layout, pts in (("coherent", coherent_blobs(n)),
+                            ("shuffled", jnp.asarray(blobs(n, D, K,
+                                                           seed=0)[0]))):
+            n_tiles = -(-n // ClusterEngine(backend).backend.seed_tile(n, D))
+            for precision in ("fp32", "bf16"):
+                peng = ClusterEngine(backend, precision=precision)
+                # measure skips from THIS precision's own run: the bf16 gate
+                # carries bf16-derived tile_max, so its trajectory can differ
+                res = peng.seed(key, pts, SEEDS)
+                skips = np.asarray(res.skipped, np.float64) / n_tiles
+                t = time_fn(lambda: jax.block_until_ready(
+                    peng.seed(key, pts, SEEDS)), iters=3)
+                rows.append({
+                    "bench": "round_traffic", "backend": backend,
+                    "layout": layout, "precision": precision, "n": n,
+                    "rounds": SEEDS,
+                    "skip_rate_mean": round(float(skips.mean()), 4),
+                    "skip_rate_last": round(float(skips[-4:].mean()), 4),
+                    "bytes_per_round": round_bytes(
+                        n, float(skips.mean()),
+                        2 if precision == "bf16" else 4),
+                    "seconds": round(t, 6),
+                })
+
+
+def run_skip_vs_round(rows: list):
+    """The per-round trajectory on coherent data (the acceptance column)."""
+    eng = ClusterEngine("fused")
+    pts = coherent_blobs(N)
+    res = eng.seed(jax.random.PRNGKey(1), pts, SEEDS)
+    n_tiles = -(-N // eng.backend.seed_tile(N, D))
+    for r, s in enumerate(np.asarray(res.skipped)):
+        rows.append({
+            "bench": "skip_vs_round", "backend": "fused",
+            "layout": "coherent", "precision": "fp32", "n": N, "rounds": r,
+            "skip_rate_mean": round(float(s) / n_tiles, 4),
+            "skip_rate_last": "",
+            "bytes_per_round": round_bytes(N, float(s) / n_tiles, 4),
+            "seconds": "",
+        })
+
+
+def main():
+    rows: list = []
+    run(rows)
+    run_skip_vs_round(rows)
+    header = ["bench", "backend", "layout", "precision", "n", "rounds",
+              "skip_rate_mean", "skip_rate_last", "bytes_per_round",
+              "seconds"]
+    emit(rows, header)
+    write_json("round", {
+        "meta": {"smoke": SMOKE, "N": N, "D": D, "K": K, "seeds": SEEDS,
+                 "jax_backend": jax.default_backend()},
+        "rows": rows,
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ import time
 
 from benchmarks import (dist_scaling, fig1_global, fig2_constant,
                         fig3_texture, minibatch, quality_parity, roofline,
-                        seed_sampling)
+                        round_traffic, seed_sampling)
 
 MODULES = {
     "fig1": fig1_global,
@@ -21,6 +21,7 @@ MODULES = {
     "minibatch": minibatch,
     "roofline": roofline,
     "seed": seed_sampling,
+    "round": round_traffic,
 }
 
 

@@ -37,18 +37,29 @@ def _post_round_reads(n: int, sampler: str) -> int:
     return n
 
 
+def _skip_rate(eng: ClusterEngine, res, n: int) -> float:
+    """Mean fraction of tiles the bound gate skipped per round (comparable
+    to the round_traffic module's skip_rate column)."""
+    if res.skipped is None:
+        return 0.0
+    n_tiles = -(-n // eng.backend.seed_tile(n, D))
+    return float(jnp.mean(res.skipped / n_tiles))
+
+
 def run(rows: list):
     key = jax.random.PRNGKey(0)
     for backend, n in (("fused", N), ("pallas", N_PALLAS)):
         pts = jnp.asarray(blobs(n, D, K, seed=0)[0])
         eng = ClusterEngine(backend)
         for sampler in ("cdf", "gumbel", "tiled"):
+            res = eng.seed(key, pts, K, sampler=sampler)  # warms the jit too
             t = time_fn(lambda: jax.block_until_ready(
                 eng.seed(key, pts, K, sampler=sampler)))
             rows.append({
                 "bench": "seed_sampler", "backend": backend,
                 "sampler": sampler, "n": n, "k": K,
                 "post_round_reads": _post_round_reads(n, sampler),
+                "skip_rate": round(_skip_rate(eng, res, n), 4),
                 "seconds": round(t, 6),
             })
 
@@ -59,11 +70,13 @@ def run_batched(rows: list):
                       for s in range(BB)])
     for backend in ("fused", "pallas"):
         eng = ClusterEngine(backend)
+        seeds = eng.seed_batched(keys, bpts, BK)
         t = time_fn(lambda: jax.block_until_ready(
             eng.kmeans_batched(keys, bpts, BK, max_iters=5)), iters=3)
         rows.append({
             "bench": "kmeans_batched", "backend": backend, "sampler": "cdf",
             "n": BN, "k": BK, "post_round_reads": BB * BN,
+            "skip_rate": round(_skip_rate(eng, seeds, BN), 4),
             "seconds": round(t, 6),
         })
 
@@ -73,7 +86,7 @@ def main():
     run(rows)
     run_batched(rows)
     header = ["bench", "backend", "sampler", "n", "k",
-              "post_round_reads", "seconds"]
+              "post_round_reads", "skip_rate", "seconds"]
     emit(rows, header)
     write_json("seed", {
         "meta": {"smoke": SMOKE, "N": N, "D": D, "K": K,

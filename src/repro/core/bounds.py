@@ -1,0 +1,178 @@
+"""Exact per-tile bound state for the seeding round (Raff 2021 / Capó 2018).
+
+A seeding round folds the new centroid(s) ``c_new`` into every point's D².
+A point x can only improve when ``d(x, c) < d(x, nearest-so-far)``, so by the
+triangle inequality a whole *tile* of points provably cannot change when
+
+    d(center_t, c) - r_t  >=  sqrt(max_{x in tile} min_d2[x])
+
+where ``center_t`` is the tile's ball center and ``r_t`` its radius
+(``d(x, c) >= d(center_t, c) - d(x, center_t) >= d(center_t, c) - r_t``).
+Skipping such a tile is *exact*: its ``min_d2`` entries, and therefore its
+per-tile partial sum, are bitwise what a full recompute would produce
+(``min(md, d2)`` returns ``md`` whenever ``d2 >= md``), so the tiled sampler
+composes unchanged. Capó et al. motivate this granularity: block-level — not
+per-point — pruning is what pays at massive n, and the tile is exactly the
+unit the ``SeedRound`` partials machinery already tracks.
+
+The bound is evaluated in fp32, so a small conservative ``_SLACK`` keeps
+rounding from ever skipping a tile the exact-arithmetic bound would keep
+(erring toward "compute it" never changes results, only saves less).
+
+This module is pure jnp: the reference/fused backends use it directly (the
+skip logic is therefore covered by the distribution/parity tests), and the
+Pallas backend uses :func:`active_tiles` to build the compacted active-tile
+index map its gated kernel prefetches.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Head-room on the skip threshold. The kernels (and the bound itself)
+# evaluate D^2 in the matmul form ||x||^2 - 2x.c + ||c||^2, whose fp32
+# cancellation error is ABSOLUTE in the magnitude of the operands: about
+# eps_f32 * (||x|| + ||c||)^2, NOT eps * d^2. A purely relative slack would
+# therefore under-protect data far from the origin. _REL covers the relative
+# rounding of the comparison chain; _ABS scales a per-tile magnitude term
+# (||center|| + r + max||c||)^2 with ~80x head-room over eps_f32 = 1.2e-7,
+# so a tile is only ever skipped when the kernel's OWN fp32 d2 provably
+# cannot dip below the carried min_d2 (skipping stays bitwise exact; far
+# from the origin the gate just prunes less — center your data for the best
+# skip rate).
+_REL = 1e-6
+_ABS = 1e-5
+
+
+class RoundCache(NamedTuple):
+    """Per-dataset state computed ONCE per seed/fit call (the prologue).
+
+    ``norms`` feeds the matmul-form distance (``||x||² - 2x·c + ||c||²``) so
+    the round kernels stop recomputing ``||x||²`` every round; it is always
+    fp32 even when the points stream as bf16. ``centers``/``radii`` are the
+    tile centroid-balls the skip bound needs; they are ``None`` when bound
+    gating is disabled (norm caching alone does not need them).
+    """
+
+    norms: jax.Array                       # (n,) fp32 ||x||²
+    centers: Optional[jax.Array] = None    # (n_tiles, d) fp32 tile means
+    radii: Optional[jax.Array] = None      # (n_tiles,) fp32 ball radii
+
+
+class RoundState(NamedTuple):
+    """Loop-carried bound state: the previous round's per-tile partial sums
+    (reused verbatim for skipped tiles) and per-tile max of ``min_d2``."""
+
+    partials: jax.Array                    # (n_tiles,) fp32
+    tile_max: jax.Array                    # (n_tiles,) fp32
+
+
+def point_norms(points: jax.Array) -> jax.Array:
+    """fp32 ``||x||²`` per row — THE quantity the prologue caches."""
+    x = points.astype(jnp.float32)
+    return jnp.sum(x * x, axis=-1)
+
+
+def tile_counts(n: int, block_n: int) -> jax.Array:
+    """Valid-row count of each tile of a zero-padded (n,) -> (n_tiles, bn)."""
+    n_tiles = -(-n // block_n)
+    start = jnp.arange(n_tiles, dtype=jnp.int32) * block_n
+    return jnp.clip(n - start, 0, block_n).astype(jnp.float32)
+
+
+def prologue(points: jax.Array, block_n: int, *,
+             with_bounds: bool = True) -> RoundCache:
+    """Pure-jnp prologue: cached norms (+ tile centers/radii for the bound).
+
+    Padded tail rows are excluded from center/radius (a zero pad row could
+    otherwise inflate the tail tile's ball). The Pallas backend computes the
+    same three arrays in one fused kernel pass (`seed_prologue_pallas`);
+    cross-backend users only need the *norms* to agree bitwise — the bound
+    geometry may differ in ulps without affecting results (the bound is a
+    sufficient condition, never a value).
+    """
+    pts = points.astype(jnp.float32)
+    n, d = pts.shape
+    norms = jnp.sum(pts * pts, axis=1)
+    if not with_bounds:
+        return RoundCache(norms)
+    pad = (-n) % block_n
+    xp = jnp.pad(pts, ((0, pad), (0, 0))).reshape(-1, block_n, d)
+    cnt = tile_counts(n, block_n)                       # (n_tiles,)
+    centers = xp.sum(axis=1) / jnp.maximum(cnt, 1.0)[:, None]
+    d2c = jnp.sum((xp - centers[:, None, :]) ** 2, axis=-1)  # (n_tiles, bn)
+    row = jnp.arange(block_n)[None, :] < cnt[:, None]
+    radii = jnp.sqrt(jnp.max(jnp.where(row, d2c, 0.0), axis=1))
+    return RoundCache(norms, centers, radii)
+
+
+def active_tiles(c_new: jax.Array, cache: RoundCache,
+                 tile_max: jax.Array) -> jax.Array:
+    """(n_tiles,) bool — True where the tile MIGHT change this round.
+
+    ``c_new`` is the round's (m, d) new-centroid block; a tile is skipped
+    only when ``(d(center_t, c) - r_t)^2 >= tile_max_t`` against its
+    *nearest* new centroid with the conservative fp32 margin described at
+    ``_REL``/``_ABS`` (rounding can only keep a tile active, never skip a
+    changeable one)."""
+    c = c_new.astype(jnp.float32)
+    cn = jnp.sum(c * c, axis=-1)
+    ctr = cache.centers
+    ctr_n2 = jnp.sum(ctr * ctr, axis=1)
+    dot = jax.lax.dot_general(ctr, c, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(ctr_n2[:, None] - 2.0 * dot + cn[None, :], 0.0)
+    dc = jnp.sqrt(jnp.min(d2, axis=1))                  # nearest new centroid
+    lo = jnp.maximum(dc - cache.radii, 0.0)             # min dist to tile
+    # magnitude of the operands feeding the kernels' matmul-form d2 for this
+    # tile: every ||x|| is within ||center|| + r, every ||c|| within cmax
+    cmax = jnp.sqrt(jnp.max(cn))
+    scale = (jnp.sqrt(ctr_n2) + cache.radii + cmax) ** 2
+    skip = lo * lo >= tile_max * (1.0 + _REL) + _ABS * scale
+    return jnp.logical_not(skip)
+
+
+def expand_mask(active: jax.Array, block_n: int, n: int) -> jax.Array:
+    """Per-tile mask -> per-point mask (first n entries). Broadcast+reshape,
+    NOT jnp.repeat: repeat lowers to a full-n cumsum, which would put an O(n)
+    scan back into the jaxpr the tiled sampler is pinned to avoid."""
+    n_tiles = active.shape[0]
+    return jnp.broadcast_to(active[:, None],
+                            (n_tiles, block_n)).reshape(-1)[:n]
+
+
+def tile_reduce_max(x: jax.Array, block_n: int) -> jax.Array:
+    """Per-tile max of a non-negative (n,) array (zero-padded tail) — the
+    bound-state twin of ``sampling.tile_partials``."""
+    n = x.shape[0]
+    pad = (-n) % block_n
+    xp = x if pad == 0 else jnp.pad(x, (0, pad))
+    return xp.reshape(-1, block_n).max(axis=1)
+
+
+def compact_ids(active: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Compaction for the scalar-prefetched index map: returns
+    ``(ids_clamped (n_tiles,) int32, n_active () int32)``.
+
+    ``ids_clamped[i]`` is the i-th active tile id for ``i < n_active`` and the
+    LAST active tile id after that, so the trailing grid steps of the gated
+    kernel revisit an already-resident block (no extra HBM fetch) and are
+    compute-gated off by ``i < n_active``. Stable argsort keeps active tiles
+    in ascending order, preserving the pipeline's sequential-stream access
+    pattern over the survivors.
+
+    ``n_active`` is floored at 1 even when every tile clears the bound:
+    grid step 0 then recomputes one skippable tile, which is a value-noop
+    (skipping is exact) but guarantees every VISITED output block gets
+    written — a compiled-Mosaic output block is write-only VMEM, so a
+    visited-but-never-written block would flush garbage over the aliased
+    buffer. Unvisited blocks are safe: the alias means their HBM contents
+    are the donated inputs, untouched.
+    """
+    n_tiles = active.shape[0]
+    order = jnp.argsort(jnp.logical_not(active), stable=True).astype(jnp.int32)
+    n_active = jnp.maximum(jnp.sum(active), 1).astype(jnp.int32)
+    clamp = jnp.minimum(jnp.arange(n_tiles, dtype=jnp.int32), n_active - 1)
+    return order[clamp], n_active

@@ -8,7 +8,8 @@ fusion, Pallas kernels, shard_map meshes).
 
 A ``Backend`` provides exactly two round primitives:
 
-  seed_round(points, c_new, min_d2, weights) -> SeedRound(min_d2', total, partials)
+  seed_round(points, c_new, min_d2, weights, cache=, state=)
+      -> SeedRound(min_d2', total, partials, tile_max, skipped)
       One seeding round: fold the distances to the new centroid block
       ``c_new`` (m, d) into ``min_d2`` and return the (weighted) sum of the
       result — the paper's min-update kernel + thrust::reduce — plus the
@@ -16,11 +17,26 @@ A ``Backend`` provides exactly two round primitives:
       (shape (ceil(n / seed_tile),)). The ``tiled`` sampler draws the next
       seed from those partials in two exact inverse-CDF levels, reading
       O(n/tile + tile) elements instead of re-scanning all n.
+      ``cache`` is the per-call prologue (`core.bounds.RoundCache`: fp32
+      ``||x||^2`` norms so no round recomputes them, plus tile
+      centroid-balls); ``state`` is the loop-carried bound state
+      (`RoundState(partials, tile_max)`). With both present the round SKIPS
+      every tile the triangle-inequality bound proves unchanged — exactly
+      (fp32 results are bitwise identical, skipped tiles reuse their prior
+      partials) — and reports the skipped-tile count.
 
-  assign_update(points, centroids, weights) -> (assignment, min_d2, sums, counts)
+  assign_update(points, centroids, weights, norms=)
+      -> (assignment, min_d2, sums, counts)
       One Lloyd half-step: nearest-centroid assignment plus per-cluster
       (weighted) partial sums and counts — everything the centroid update
-      needs, in one pass.
+      needs, in one pass. ``norms`` is the cached fp32 ``||x||^2`` (computed
+      once per fit, not once per iteration).
+
+plus ``prologue(points, m=, with_bounds=)`` — the once-per-call pass that
+builds the RoundCache (the Pallas backend fuses it into one streaming
+kernel). Mixed precision: the engine streams points/centroids as bf16 when
+``precision='bf16'`` while norms, accumulators, min_d2 and the bound state
+stay fp32.
 
 plus two trivial hooks (``allreduce``, ``pvary``) that are identity on a
 single device and psum/pcast on a mesh. Every algorithm above is written once
@@ -41,7 +57,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import collectives, sampling
+from repro.core import bounds, collectives, sampling
+from repro.core.bounds import RoundCache, RoundState
 
 # ---------------------------------------------------------------------------
 # result contracts + distance helpers
@@ -52,6 +69,8 @@ class KmeansppResult(NamedTuple):
     centroids: jax.Array   # (k, d) — (B, k, d) for batched problems
     indices: jax.Array     # (k,) int32 — which data points were chosen
     min_d2: jax.Array      # (n,) final D^2 to nearest seed (useful for k-means||)
+    skipped: Optional[jax.Array] = None  # (k,) int32 tiles skipped per round
+                                         # (None when bound gating is off)
 
 
 class SeedRound(NamedTuple):
@@ -59,6 +78,9 @@ class SeedRound(NamedTuple):
     min_d2: jax.Array      # (n,) updated D^2 to the nearest centroid
     total: jax.Array       # () (weighted) sum of min_d2 — the paper's phi
     partials: jax.Array    # (n_tiles,) per-tile (weighted) partial sums
+    tile_max: Optional[jax.Array] = None  # (n_tiles,) per-tile max of min_d2
+                                          # (bound state; None when gating off)
+    skipped: Union[jax.Array, int] = 0    # () tiles skipped this round
 
 
 class LloydResult(NamedTuple):
@@ -86,27 +108,59 @@ def _min_d2_to(points: jax.Array, c_new: jax.Array) -> jax.Array:
     """D^2 of every point to its nearest centroid among c_new (m, d).
 
     m == 1 keeps the diff-square-sum form: the seeding loop feeds one centroid
-    per round and the serial/fused bitwise-parity claim is pinned to it.
+    per round and the serial/reference bitwise-parity claim is pinned to it.
     """
     if c_new.shape[0] == 1:
         return point_d2(points, c_new[0])
     return jnp.min(pairwise_d2(points, c_new), axis=1)
 
 
+def _matmul_min_d2(points: jax.Array, c_new: jax.Array,
+                   norms: Optional[jax.Array]) -> jax.Array:
+    """min over c_new of the matmul-form D^2 with cached fp32 norms — the
+    fused/Pallas round math (points/centroids keep their stream dtype into
+    the dot, accumulation is fp32; bitwise what the Pallas kernels compute
+    per tile)."""
+    c = c_new.astype(points.dtype)
+    if norms is None:
+        norms = bounds.point_norms(points)
+    cf = c.astype(jnp.float32)
+    cn = jnp.sum(cf * cf, axis=-1)
+    dots = jax.lax.dot_general(points, c, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(norms.astype(jnp.float32)[:, None] - 2.0 * dots
+                     + cn[None, :], 0.0)
+    return jnp.min(d2, axis=1)
+
+
 def assign_blocked(points: jax.Array, centroids: jax.Array,
-                   *, block: int = 4096) -> tuple[jax.Array, jax.Array]:
+                   *, block: int = 4096,
+                   norms: Optional[jax.Array] = None
+                   ) -> tuple[jax.Array, jax.Array]:
     """Nearest centroid per point, blocked so the (n, k) distance matrix never
-    materializes whole. Returns (assignment, min_d2)."""
+    materializes whole. Returns (assignment, min_d2). ``norms`` is the cached
+    fp32 ``||x||^2`` — computed on the fly when absent, hoisted out of the
+    Lloyd loop by the engine."""
     n, d = points.shape
     pad = (-n) % block
     pts = jnp.pad(points, ((0, pad), (0, 0)))
+    if norms is None:
+        norms = bounds.point_norms(points)
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
+    cents = centroids.astype(points.dtype)
+    cf = cents.astype(jnp.float32)
+    cn = jnp.sum(cf * cf, axis=-1)
 
-    def blk(x):
-        d2 = pairwise_d2(x.astype(jnp.float32), centroids.astype(jnp.float32))
+    def blk(args):
+        x, xn = args
+        dots = jax.lax.dot_general(x, cents, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(xn[:, None] - 2.0 * dots + cn[None, :], 0.0)
         a = jnp.argmin(d2, axis=1).astype(jnp.int32)
         return a, jnp.min(d2, axis=1)
 
-    a, m = jax.lax.map(blk, pts.reshape(-1, block, d))
+    a, m = jax.lax.map(blk, (pts.reshape(-1, block, d),
+                             nrm.reshape(-1, block)))
     return a.reshape(-1)[:n], m.reshape(-1)[:n]
 
 
@@ -154,6 +208,33 @@ def reseed_split_largest(means: jax.Array, counts: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 
+def _gate_model(new_md_full, min_d2, weights, c_new, cache: RoundCache,
+                state: RoundState, tile: int) -> SeedRound:
+    """Pure-JAX model of the gated kernel, shared by the reference and fused
+    backends: tiles the bound proves unchanged take their ``min_d2`` slice
+    and partial/tile-max entries from the CARRIED state instead of the fresh
+    compute — exactly what the Pallas kernel's aliased outputs do, so the
+    distribution/parity tests cover the skip logic itself. (Skipping is
+    exact, so in fp32 the selects are value-noops unless the bound were
+    wrong; under bf16 streams they additionally suppress bf16-noise updates
+    the bound proves spurious — see docs/engine.md "Precision & bounds".)"""
+    n = min_d2.shape[0]
+    active = bounds.active_tiles(c_new, cache, state.tile_max)
+    act_pt = bounds.expand_mask(active, tile, n)
+    md = jnp.where(act_pt, new_md_full, min_d2)
+    wmd = md if weights is None else md * weights
+    partials = jnp.where(active, sampling.tile_partials(wmd, tile),
+                         state.partials)
+    tile_max = jnp.where(active, bounds.tile_reduce_max(md, tile),
+                         state.tile_max)
+    # floor at one computed tile, mirroring compact_ids' write-back guard in
+    # the gated kernel, so fused/pallas skip counters agree (up to ulp-level
+    # differences in the two prologues' tile geometry at bound boundaries)
+    skipped = jnp.minimum(jnp.sum(jnp.logical_not(active)),
+                          active.shape[0] - 1).astype(jnp.int32)
+    return SeedRound(md, jnp.sum(partials), partials, tile_max, skipped)
+
+
 @dataclasses.dataclass(frozen=True)
 class Backend:
     """Round-primitive provider. Frozen/hashable: instances are jit-static."""
@@ -161,11 +242,22 @@ class Backend:
     name: ClassVar[str] = "base"
     distributed: ClassVar[bool] = False
 
-    def seed_round(self, points, c_new, min_d2, weights):
+    def seed_round(self, points, c_new, min_d2, weights, *,
+                   cache: Optional[RoundCache] = None,
+                   state: Optional[RoundState] = None) -> "SeedRound":
         raise NotImplementedError
 
-    def assign_update(self, points, centroids, weights):
+    def assign_update(self, points, centroids, weights, norms=None):
         raise NotImplementedError
+
+    def prologue(self, points, m: int = 1,
+                 with_bounds: bool = True) -> RoundCache:
+        """Once-per-call pass: cached fp32 norms (+ tile centroid-balls when
+        bound gating is on). The Pallas backend overrides this with its
+        single-kernel streaming prologue."""
+        n, d = points.shape
+        return bounds.prologue(points, self.seed_tile(n, d, m),
+                               with_bounds=with_bounds)
 
     def seed_tile(self, n: int, d: int, m: int = 1) -> int:
         """Static tile height of seed_round's partials: every backend uses the
@@ -199,9 +291,11 @@ class ReferenceBackend(Backend):
     name: ClassVar[str] = "reference"
     mode: str = "global"
 
-    def seed_round(self, points, c_new, min_d2, weights):
+    def seed_round(self, points, c_new, min_d2, weights, *, cache=None,
+                   state=None):
         n, d = points.shape
         m = c_new.shape[0]
+        tile = self.seed_tile(n, d, m)
         if self.mode == "serial":
             def body(i, md):
                 d2 = jnp.min(jnp.sum((points[i] - c_new) ** 2, axis=1))
@@ -215,21 +309,31 @@ class ReferenceBackend(Backend):
 
             total = jax.lax.fori_loop(0, n, sum_body,
                                       jnp.zeros((), min_d2.dtype))
-            # the partials are contract-only here (the paper's serial baseline
-            # has no tiles); computed vectorized, outside the timed loop shape
+            # the partials/bound state are contract-only here (the paper's
+            # serial baseline has no tiles and never skips); computed
+            # vectorized, outside the timed loop shape
+            tmax = (None if state is None
+                    else bounds.tile_reduce_max(min_d2, tile))
             return SeedRound(min_d2, total,
-                             self._partials(min_d2, weights, n, d, m))
+                             self._partials(min_d2, weights, n, d, m), tmax)
 
-        min_d2 = jnp.minimum(min_d2, _min_d2_to(points, c_new))
+        new_md = jnp.minimum(min_d2, _min_d2_to(points, c_new))
         # optimization_barrier forces the reduction to be a second pass over
         # the materialized array instead of fusing — mirrors the two-kernel
         # CUDA structure.
-        min_d2 = jax.lax.optimization_barrier(min_d2)
-        w = min_d2 if weights is None else min_d2 * weights
-        return SeedRound(min_d2, jnp.sum(w),
-                         self._partials(min_d2, weights, n, d, m))
+        new_md = jax.lax.optimization_barrier(new_md)
+        if state is not None and cache is not None and cache.centers is not None:
+            rnd = _gate_model(new_md, min_d2, weights, c_new, cache, state,
+                              tile)
+            # keep the two-pass total semantics: sum over the materialized
+            # array, not over the partial tree
+            w = rnd.min_d2 if weights is None else rnd.min_d2 * weights
+            return rnd._replace(total=jnp.sum(w))
+        w = new_md if weights is None else new_md * weights
+        return SeedRound(new_md, jnp.sum(w),
+                         self._partials(new_md, weights, n, d, m))
 
-    def assign_update(self, points, centroids, weights):
+    def assign_update(self, points, centroids, weights, norms=None):
         d2 = pairwise_d2(points.astype(jnp.float32),
                          centroids.astype(jnp.float32))
         a = jnp.argmin(d2, axis=1).astype(jnp.int32)
@@ -245,16 +349,23 @@ class FusedBackend(Backend):
     name: ClassVar[str] = "fused"
     block: int = 4096
 
-    def seed_round(self, points, c_new, min_d2, weights):
+    def seed_round(self, points, c_new, min_d2, weights, *, cache=None,
+                   state=None):
         n, d = points.shape
-        min_d2 = jnp.minimum(min_d2, _min_d2_to(points, c_new))
+        m = c_new.shape[0]
+        norms = None if cache is None else cache.norms
+        new_md = jnp.minimum(min_d2, _matmul_min_d2(points, c_new, norms))
+        if state is not None and cache is not None and cache.centers is not None:
+            return _gate_model(new_md, min_d2, weights, c_new, cache, state,
+                               self.seed_tile(n, d, m))
         # XLA fuses the tile partials INTO the min-update pass (one read of
         # min_d2); the scalar total is their sum — same tree as the kernel's.
-        partials = self._partials(min_d2, weights, n, d, c_new.shape[0])
-        return SeedRound(min_d2, jnp.sum(partials), partials)
+        partials = self._partials(new_md, weights, n, d, m)
+        return SeedRound(new_md, jnp.sum(partials), partials)
 
-    def assign_update(self, points, centroids, weights):
-        a, md = assign_blocked(points, centroids, block=self.block)
+    def assign_update(self, points, centroids, weights, norms=None):
+        a, md = assign_blocked(points, centroids, block=self.block,
+                               norms=norms)
         sums, counts = segment_update(points, a, centroids.shape[0], weights)
         return a, md, sums, counts
 
@@ -267,25 +378,53 @@ class PallasBackend(Backend):
     name: ClassVar[str] = "pallas"
     resident: bool = True
 
-    def seed_round(self, points, c_new, min_d2, weights):
+    def prologue(self, points, m: int = 1,
+                 with_bounds: bool = True) -> RoundCache:
+        from repro.kernels import ops as kops
+        n, d = points.shape
+        if not with_bounds:
+            return RoundCache(kops.point_norms(points))
+        norms, centers, radii = kops.seed_prologue(
+            points, block_n=self.seed_tile(n, d, m))
+        return RoundCache(norms, centers, radii)
+
+    def seed_round(self, points, c_new, min_d2, weights, *, cache=None,
+                   state=None):
         from repro.kernels import ops as kops
         n, d = points.shape
         m = c_new.shape[0]
         # pin the kernel tile to seed_tile so the partials it emits line up
         # with the window the tiled sampler slices (single and batch-grid
         # launches share the block choice)
+        tile = self.seed_tile(n, d, m)
+        norms = None if cache is None else cache.norms
+        if (state is not None and weights is None and cache is not None
+                and cache.centers is not None):
+            # cache.norms is always populated (and always fp32 — never derive
+            # norms from `points` here: under bf16 streaming that would feed
+            # bf16-noise into the bound, exceeding active_tiles' fp32 slack)
+            active = bounds.active_tiles(c_new, cache, state.tile_max)
+            md, partials, tmax, skipped = kops.distance_min_update_gated(
+                points, c_new, min_d2, norms, state.partials, state.tile_max,
+                active, block_n=tile, resident_centroids=self.resident)
+            return SeedRound(md, jnp.sum(partials), partials, tmax, skipped)
         min_d2, partials = kops.distance_min_update(
-            points, c_new, min_d2, resident_centroids=self.resident,
-            block_n=self.seed_tile(n, d, m))
+            points, c_new, min_d2, norms=norms,
+            resident_centroids=self.resident, block_n=tile)
         if weights is not None:
             # weighted partials need the weighted sum; recompute cheaply (the
             # weights case is only used by the small k-means|| reduce).
             partials = self._partials(min_d2, weights, n, d, m)
+        if state is not None:
+            # weighted + gated caller: keep the carry shapes, skip nothing
+            return SeedRound(min_d2, jnp.sum(partials), partials,
+                             bounds.tile_reduce_max(min_d2, tile))
         return SeedRound(min_d2, jnp.sum(partials), partials)
 
-    def assign_update(self, points, centroids, weights):
+    def assign_update(self, points, centroids, weights, norms=None):
         from repro.kernels import ops as kops
-        a, md, sums, counts = kops.lloyd_assign(points, centroids)
+        a, md, sums, counts = kops.lloyd_assign(points, centroids,
+                                                norms=norms)
         if weights is not None:
             sums, counts = segment_update(points, a, centroids.shape[0],
                                           weights)
@@ -304,22 +443,31 @@ class MeshBackend(Backend):
     axes: tuple[str, ...] = ("data",)
     local: Backend = FusedBackend()
 
-    def seed_round(self, points, c_new, min_d2, weights):
-        rnd = self.local.seed_round(points, c_new, min_d2, weights)
+    def seed_round(self, points, c_new, min_d2, weights, *, cache=None,
+                   state=None):
+        rnd = self.local.seed_round(points, c_new, min_d2, weights,
+                                    cache=cache, state=state)
         # the paper's thrust::reduce -> psum of local partial sums. The Gumbel
         # sampler doesn't need the normalizer, but production logging does (the
         # potential phi), so we keep the collective — it is O(1) bytes. The
-        # tile partials stay SHARD-LOCAL: the distributed tiled sampler
-        # combines them with one pmax/pmin pair, never gathering them.
+        # tile partials/bound state stay SHARD-LOCAL: the distributed tiled
+        # sampler combines them with one pmax/pmin pair, never gathering
+        # them. The per-shard skip counters compose through one more O(1)
+        # psum, so `skipped` reports the POD-WIDE skipped-tile count.
         return SeedRound(rnd.min_d2, jax.lax.psum(rnd.total, self.axes),
-                         rnd.partials)
+                         rnd.partials, rnd.tile_max,
+                         jax.lax.psum(rnd.skipped, self.axes))
 
     def seed_tile(self, n: int, d: int, m: int = 1) -> int:
         return self.local.seed_tile(n, d, m)
 
-    def assign_update(self, points, centroids, weights):
+    def prologue(self, points, m: int = 1,
+                 with_bounds: bool = True) -> RoundCache:
+        return self.local.prologue(points, m, with_bounds)
+
+    def assign_update(self, points, centroids, weights, norms=None):
         a, md, sums, counts = self.local.assign_update(points, centroids,
-                                                       weights)
+                                                       weights, norms)
         sums = jax.lax.psum(sums, self.axes)      # O(k*d) per iteration
         counts = jax.lax.psum(counts, self.axes)  # O(k)
         return a, md, sums, counts
@@ -376,20 +524,28 @@ def make_backend(name: Union[str, Backend], **opts) -> Backend:
 
 
 def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
-               init_min_d2):
+               init_min_d2, init_state: Optional[RoundState] = None):
     """Generic k-means++ loop. The four hooks are the only difference between
     the single-device and the shard_map execution; the loop structure (and its
-    PRNG key schedule) is shared so all backends pick identical seeds."""
+    PRNG key schedule) is shared so all backends pick identical seeds.
+
+    ``init_state`` enables bound gating: the loop carries the previous
+    round's (partials, tile_max) into each ``round_fn`` call, so rounds skip
+    every tile the triangle-inequality bound proves unchanged. Round 1
+    starts from tile_max = +inf (nothing skippable), which also fills the
+    state. The per-round skipped-tile counts come back as a (k,) array."""
     d = pts.shape[1]
     key, k0 = jax.random.split(key)
     first = first_fn(k0)
     centroids = jnp.zeros((k, d), pts.dtype).at[0].set(take_fn(first))
     indices = jnp.zeros((k,), jnp.int32).at[0].set(first)
+    skips = jnp.zeros((k,), jnp.int32)
 
     def body(m, carry):
-        key, centroids, indices, min_d2 = carry
-        rnd = round_fn(centroids[m - 1], min_d2)
+        key, centroids, indices, min_d2, state, skips = carry
+        rnd = round_fn(centroids[m - 1], min_d2, state)
         min_d2 = rnd.min_d2
+        skips = skips.at[m - 1].set(rnd.skipped)
         # rnd.total is the paper's thrust::reduce term — kept for phi logging;
         # the cdf sampler normalizes by its OWN cumsum's last entry instead:
         # serial and parallel reductions sum in different orders, and a 1-ulp
@@ -403,30 +559,66 @@ def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
         centroids = jax.lax.dynamic_update_index_in_dim(
             centroids, take_fn(nxt), m, 0)
         indices = indices.at[m].set(nxt)
-        return key, centroids, indices, min_d2
+        state = (None if state is None
+                 else RoundState(rnd.partials, rnd.tile_max))
+        return key, centroids, indices, min_d2, state, skips
 
-    key, centroids, indices, min_d2 = jax.lax.fori_loop(
-        1, k, body, (key, centroids, indices, init_min_d2))
+    key, centroids, indices, min_d2, state, skips = jax.lax.fori_loop(
+        1, k, body,
+        (key, centroids, indices, init_min_d2, init_state, skips))
     # final D^2 update against the last chosen centroid (callers like
     # k-means|| want the potential phi over *all* k centroids).
-    min_d2 = round_fn(centroids[k - 1], min_d2).min_d2
-    return centroids, indices, min_d2
+    rnd = round_fn(centroids[k - 1], min_d2, state)
+    skips = skips.at[k - 1].set(rnd.skipped)
+    return centroids, indices, rnd.min_d2, skips
+
+
+def _stream_of(pts: jax.Array, precision: str) -> jax.Array:
+    """The array the ROUND primitives stream: a bf16 copy at half the HBM
+    bytes under precision='bf16' (norms/accumulators/min_d2 stay fp32), the
+    full-precision points otherwise."""
+    if precision == "bf16":
+        return pts.astype(jnp.bfloat16)
+    if precision != "fp32":
+        raise ValueError(f"unknown precision {precision!r}; "
+                         "expected 'fp32' or 'bf16'")
+    return pts
 
 
 def seed_points(key: jax.Array, points: jax.Array, k: int,
                 weights: Optional[jax.Array], backend: Backend,
-                sampler: str = "cdf") -> KmeansppResult:
+                sampler: str = "cdf", *, precision: str = "fp32",
+                bound_gate: bool = True) -> KmeansppResult:
     """Full k-means++ seeding through `backend` (untraced core; see
     ClusterEngine.seed for the jitted entry). Samplers: 'cdf' (full inverse
-    CDF — the serial algorithm, bitwise-pinned across backends), 'gumbel'
-    (Gumbel-max), 'tiled' (two-level inverse CDF from the round's per-tile
-    partials — O(n/tile + tile) post-kernel reads per round)."""
+    CDF — the serial algorithm; fused and pallas pick bitwise-identical
+    seeds everywhere, and serial/reference match them on origin-scale data —
+    see docs/engine.md "Precision & bounds" for the parity domains),
+    'gumbel' (Gumbel-max), 'tiled' (two-level inverse CDF from the round's
+    per-tile partials — O(n/tile + tile) post-kernel reads per round).
+
+    The prologue (cached fp32 norms + tile centroid-balls) runs ONCE here —
+    no round recomputes ||x||^2. With ``bound_gate`` the loop carries the
+    per-tile bound state so each round skips every provably-unchanged tile
+    (exact: fp32 results are bitwise identical to the ungated path); with
+    ``precision='bf16'`` the rounds stream a bf16 copy of the points (seeds
+    are still *taken* from the full-precision array)."""
     if backend.distributed:
-        return _seed_mesh(key, points, k, weights, backend, sampler)
+        return _seed_mesh(key, points, k, weights, backend, sampler,
+                          precision=precision, bound_gate=bound_gate)
     n, d = points.shape
     compute_dtype = jnp.promote_types(points.dtype, jnp.float32)
     pts = points.astype(compute_dtype)
     w = None if weights is None else weights.astype(compute_dtype)
+    stream = _stream_of(pts, precision)
+    cache = backend.prologue(pts, with_bounds=bound_gate)
+    tile = backend.seed_tile(n, d)
+    if bound_gate:
+        n_tiles = -(-n // tile)
+        init_state = RoundState(jnp.zeros((n_tiles,), jnp.float32),
+                                jnp.full((n_tiles,), jnp.inf, jnp.float32))
+    else:
+        init_state = None
 
     if w is None:
         def first_fn(k0):
@@ -436,8 +628,6 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
             return sampling.categorical(k0, w, method="cdf").astype(jnp.int32)
 
     if sampler == "tiled":
-        tile = backend.seed_tile(n, d)
-
         def sample_fn(ks, weight, partials):
             return sampling.categorical_tiled(
                 ks, weight, partials, block_n=tile).astype(jnp.int32)
@@ -446,19 +636,24 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
             return sampling.categorical(
                 ks, weight, method=sampler).astype(jnp.int32)
 
-    centroids, indices, min_d2 = _seed_loop(
+    centroids, indices, min_d2, skips = _seed_loop(
         key, pts, k, w,
-        round_fn=lambda c, md: backend.seed_round(pts, c[None, :], md, w),
+        round_fn=lambda c, md, st: backend.seed_round(
+            stream, c.astype(stream.dtype)[None, :], md, w, cache=cache,
+            state=st),
         first_fn=first_fn,
         sample_fn=sample_fn,
         take_fn=lambda i: pts[i],
         init_min_d2=jnp.full((n,), jnp.inf, compute_dtype),
+        init_state=init_state,
     )
-    return KmeansppResult(centroids.astype(points.dtype), indices, min_d2)
+    return KmeansppResult(centroids.astype(points.dtype), indices, min_d2,
+                          skips if bound_gate else None)
 
 
 def _seed_mesh(key, points, k, weights, backend: MeshBackend,
-               sampler: str = "cdf") -> KmeansppResult:
+               sampler: str = "cdf", *, precision: str = "fp32",
+               bound_gate: bool = True) -> KmeansppResult:
     """Distributed seeding: the same loop inside shard_map, with the sampler
     swapped for the exact distributed Gumbel-max and point lookup for the
     psum broadcast. Collective traffic per round is independent of N.
@@ -475,9 +670,18 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
     def local_fn(kk, pp):
         pts = pp.astype(jnp.float32)
         n_local, d = pts.shape
+        stream = _stream_of(pts, precision)
+        cache = backend.prologue(pts, with_bounds=bound_gate)
+        tile = backend.seed_tile(n_local, d)
+        if bound_gate:
+            n_tiles = -(-n_local // tile)
+            init_state = RoundState(
+                collectives.pvary(jnp.zeros((n_tiles,), jnp.float32), axes),
+                collectives.pvary(jnp.full((n_tiles,), jnp.inf, jnp.float32),
+                                  axes))
+        else:
+            init_state = None
         if sampler == "tiled":
-            tile = backend.seed_tile(n_local, d)
-
             def sample_fn(ks, weight, partials):
                 return collectives.dist_tiled_choice(ks, weight, partials,
                                                      tile, axes)
@@ -488,22 +692,25 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
 
         return _seed_loop(
             kk, pts, k, None,
-            round_fn=lambda c, md: backend.seed_round(pts, c[None, :], md,
-                                                      None),
+            round_fn=lambda c, md, st: backend.seed_round(
+                stream, c.astype(stream.dtype)[None, :], md, None,
+                cache=cache, state=st),
             first_fn=lambda k0: collectives.dist_gumbel_choice(
                 k0, jnp.zeros((n_local,), jnp.float32), axes),
             sample_fn=sample_fn,
             take_fn=lambda i: collectives.take_global(pts, i, axes),
             init_min_d2=collectives.pvary(
                 jnp.full((n_local,), jnp.inf, jnp.float32), axes),
+            init_state=init_state,
         )
 
     mapped = collectives.shard_map(
         local_fn, mesh=backend.mesh,
         in_specs=(P(), P(axes)),
-        out_specs=(P(), P(), P(axes)))
-    centroids, indices, min_d2 = mapped(key, points)
-    return KmeansppResult(centroids.astype(points.dtype), indices, min_d2)
+        out_specs=(P(), P(), P(axes), P()))
+    centroids, indices, min_d2, skips = mapped(key, points)
+    return KmeansppResult(centroids.astype(points.dtype), indices, min_d2,
+                          skips if bound_gate else None)
 
 
 # ---------------------------------------------------------------------------
@@ -512,13 +719,20 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
 
 
 def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
-              empty: str = "keep"):
+              empty: str = "keep", precision: str = "fp32"):
     """Lloyd iterations until the relative inertia improvement falls below
     `tol` or `max_iters` is hit. The k-means potential is monotonically
     non-increasing — a property test asserts this — except under
     empty='reseed', where a reseeded centroid may transiently raise it before
-    splitting the donor cluster pays off."""
+    splitting the donor cluster pays off.
+
+    ``||x||^2`` is computed ONCE here (norm caching) and streamed into every
+    iteration's assign_update; with precision='bf16' the iterations stream
+    bf16 points/centroids while the norms, per-cluster accumulators and the
+    centroid carry stay fp32."""
     k = init_centroids.shape[0]
+    stream = _stream_of(pts, precision)
+    norms = bounds.point_norms(pts)     # once per fit, NOT once per iteration
 
     def cond(state):
         i, _, prev_inertia, inertia, _ = state
@@ -528,7 +742,8 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
 
     def body(state):
         i, cents, _, inertia, _ = state
-        a, m, sums, counts = backend.assign_update(pts, cents, w)
+        a, m, sums, counts = backend.assign_update(
+            stream, cents.astype(stream.dtype), w, norms)
         mw = m if w is None else m * w
         new_inertia = backend.allreduce(jnp.sum(mw))
         new_cents = centroid_means(sums, counts, cents)
@@ -545,7 +760,8 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
 
 def fit_points(points: jax.Array, init_centroids: jax.Array,
                weights: Optional[jax.Array], backend: Backend,
-               max_iters: int, tol: float, empty: str = "keep") -> LloydResult:
+               max_iters: int, tol: float, empty: str = "keep",
+               precision: str = "fp32") -> LloydResult:
     """Lloyd clustering through `backend` (untraced core). `empty` picks the
     empty-cluster policy: 'keep' (previous centroid survives) or 'reseed'
     (split the largest cluster — see reseed_split_largest)."""
@@ -554,26 +770,28 @@ def fit_points(points: jax.Array, init_centroids: jax.Array,
                          "expected 'keep' or 'reseed'")
     if backend.distributed:
         return _fit_mesh(points, init_centroids, weights, backend,
-                         max_iters, tol, empty)
+                         max_iters, tol, empty, precision)
     cents, a, inertia, i = _fit_loop(points, init_centroids, weights,
-                                     backend, max_iters, tol, empty)
+                                     backend, max_iters, tol, empty,
+                                     precision)
     return LloydResult(cents.astype(points.dtype), a, inertia, i)
 
 
 def _fit_mesh(points, init_centroids, weights, backend: MeshBackend,
-              max_iters, tol, empty: str = "keep") -> LloydResult:
+              max_iters, tol, empty: str = "keep",
+              precision: str = "fp32") -> LloydResult:
     axes = backend.axes
 
     if weights is None:
         def local_fn(pp, cc):
             return _fit_loop(pp.astype(jnp.float32), cc, None, backend,
-                             max_iters, tol, empty)
+                             max_iters, tol, empty, precision)
         in_specs = (P(axes), P())
         args = (points, init_centroids)
     else:
         def local_fn(pp, cc, ww):
             return _fit_loop(pp.astype(jnp.float32), cc, ww, backend,
-                             max_iters, tol, empty)
+                             max_iters, tol, empty, precision)
         in_specs = (P(axes), P(), P(axes))
         args = (points, init_centroids, weights)
 
@@ -647,16 +865,21 @@ def _iter_batches(batches: BatchSource, n_batches: Optional[int]):
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("k", "backend", "sampler"))
-def _seed_jit(key, points, weights, k, backend, sampler):
-    return seed_points(key, points, k, weights, backend, sampler)
+@functools.partial(jax.jit, static_argnames=("k", "backend", "sampler",
+                                             "precision", "bound_gate"))
+def _seed_jit(key, points, weights, k, backend, sampler, precision,
+              bound_gate):
+    return seed_points(key, points, k, weights, backend, sampler,
+                       precision=precision, bound_gate=bound_gate)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("backend", "max_iters", "tol", "empty"))
-def _fit_jit(points, init_centroids, weights, backend, max_iters, tol, empty):
+                   static_argnames=("backend", "max_iters", "tol", "empty",
+                                    "precision"))
+def _fit_jit(points, init_centroids, weights, backend, max_iters, tol, empty,
+             precision):
     return fit_points(points, init_centroids, weights, backend,
-                      max_iters, tol, empty)
+                      max_iters, tol, empty, precision)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -664,19 +887,25 @@ def _minibatch_jit(cents, counts, batch, backend):
     return minibatch_step(cents, counts, batch, backend)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "backend", "sampler"))
-def _seed_batched_jit(keys, points, k, backend, sampler):
+@functools.partial(jax.jit, static_argnames=("k", "backend", "sampler",
+                                             "precision", "bound_gate"))
+def _seed_batched_jit(keys, points, k, backend, sampler, precision,
+                      bound_gate):
     return jax.vmap(
-        lambda kk, pp: seed_points(kk, pp, k, None, backend, sampler)
+        lambda kk, pp: seed_points(kk, pp, k, None, backend, sampler,
+                                   precision=precision,
+                                   bound_gate=bound_gate)
     )(keys, points)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("backend", "max_iters", "tol", "empty"))
-def _fit_batched_jit(points, init_centroids, backend, max_iters, tol, empty):
+                   static_argnames=("backend", "max_iters", "tol", "empty",
+                                    "precision"))
+def _fit_batched_jit(points, init_centroids, backend, max_iters, tol, empty,
+                     precision):
     return jax.vmap(
         lambda pp, cc: fit_points(pp, cc, None, backend, max_iters, tol,
-                                  empty)
+                                  empty, precision)
     )(points, init_centroids)
 
 
@@ -689,13 +918,35 @@ class ClusterEngine:
 
     Backends: 'reference' (serial/global semantics), 'fused' (XLA),
     'pallas' (TPU kernels), 'mesh' (shard_map; pass mesh=..., axes=...,
-    local=...). All of them pick bitwise-identical seeds under the same key
-    (mesh uses the distributed Gumbel-max sampler instead, which preserves the
-    distribution rather than the bits).
+    local=...). fused and pallas pick bitwise-identical seeds under the same
+    key everywhere; serial/reference match them on origin-scale data (the
+    matmul-form D^2 the cached-norm backends share has absolute fp32 error
+    in ‖x‖², the reference diff-square form relative — see docs/engine.md);
+    mesh uses the distributed Gumbel-max sampler instead, which preserves
+    the distribution rather than the bits.
+
+    Two engine-wide knobs (see docs/engine.md "Precision & bounds"):
+
+    * ``precision`` — 'fp32' (default) or 'bf16': stream the round kernels'
+      point/centroid tiles as bf16 (half the HBM bytes on the memory-bound
+      rounds) with fp32 cached norms, fp32 accumulation and fp32 carried
+      state. Seeds are still taken from the full-precision points.
+    * ``bounds`` — True (default) carries per-tile bound state through the
+      seeding loop so each round SKIPS every tile the triangle-inequality
+      bound proves unchanged. Skipping is exact: the fp32 results are
+      bitwise identical to bounds=False; per-round skipped-tile counts come
+      back in ``KmeansppResult.skipped``.
     """
 
-    def __init__(self, backend: Union[str, Backend] = "fused", **backend_opts):
+    def __init__(self, backend: Union[str, Backend] = "fused", *,
+                 precision: str = "fp32", bounds: bool = True,
+                 **backend_opts):
+        if precision not in ("fp32", "bf16"):
+            raise ValueError(f"unknown precision {precision!r}; "
+                             "expected 'fp32' or 'bf16'")
         self.backend = make_backend(backend, **backend_opts)
+        self.precision = precision
+        self.bounds = bool(bounds)
 
     # -- seeding ----------------------------------------------------------
     def seed(self, key: jax.Array, points: jax.Array, k: int, *,
@@ -710,7 +961,8 @@ class ClusterEngine:
         n = points.shape[0]
         if not 0 < k <= n:
             raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
-        return _seed_jit(key, points, weights, k, self.backend, sampler)
+        return _seed_jit(key, points, weights, k, self.backend, sampler,
+                         self.precision, self.bounds)
 
     # -- full-batch Lloyd -------------------------------------------------
     def fit(self, points: jax.Array, init_centroids: jax.Array, *,
@@ -724,7 +976,7 @@ class ClusterEngine:
         centroid jumps to a nudged copy of the largest cluster's centroid and
         splits it on the next iteration)."""
         return _fit_jit(points, init_centroids, weights, self.backend,
-                        max_iters, float(tol), empty)
+                        max_iters, float(tol), empty, self.precision)
 
     def kmeans(self, key: jax.Array, points: jax.Array, k: int, *,
                init: str = "kmeans++", max_iters: int = 50, tol: float = 1e-6,
@@ -822,7 +1074,8 @@ class ClusterEngine:
         # is already a (B,)-batch of keys
         single_ndim = 0 if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) else 1
         keys = key if key.ndim > single_ndim else jax.random.split(key, B)
-        return _seed_batched_jit(keys, points, k, self.backend, sampler)
+        return _seed_batched_jit(keys, points, k, self.backend, sampler,
+                                 self.precision, self.bounds)
 
     def fit_batched(self, points: jax.Array, init_centroids: jax.Array, *,
                     max_iters: int = 50, tol: float = 1e-6,
@@ -836,7 +1089,7 @@ class ClusterEngine:
             raise NotImplementedError("use a local backend for batched "
                                       "problems (vmap inside each shard)")
         return _fit_batched_jit(points, init_centroids, self.backend,
-                                max_iters, float(tol), empty)
+                                max_iters, float(tol), empty, self.precision)
 
     def kmeans_batched(self, key: jax.Array, points: jax.Array, k: int, *,
                        max_iters: int = 50, tol: float = 1e-6,

@@ -22,7 +22,7 @@ from typing import Union
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine, sampling
+from repro.core import bounds, engine, sampling
 from repro.core.engine import (Backend, KmeansppResult, make_backend,
                                pairwise_d2, point_d2)
 
@@ -38,6 +38,11 @@ def kmeans_parallel_init(key: jax.Array, points: jax.Array, k: int, *,
     l = oversample or 2 * k
     be = make_backend(backend)
     pts = points.astype(jnp.float32)
+    # once-per-call prologue (cached norms + tile balls) at the l-candidate
+    # round's tile height; each round carries the bound state so tiles the
+    # triangle inequality proves unchanged are skipped exactly.
+    cache = be.prologue(pts, m=l)
+    tile = be.seed_tile(n, d, l)
 
     key, k0 = jax.random.split(key)
     first = jax.random.randint(k0, (), 0, n, dtype=jnp.int32)
@@ -45,9 +50,11 @@ def kmeans_parallel_init(key: jax.Array, points: jax.Array, k: int, *,
     cands = jnp.zeros((n_cand, d), jnp.float32).at[0].set(pts[first])
     cand_idx = jnp.zeros((n_cand,), jnp.int32).at[0].set(first)
     min_d2 = point_d2(pts, pts[first])
+    state = bounds.RoundState(sampling.tile_partials(min_d2, tile),
+                              bounds.tile_reduce_max(min_d2, tile))
 
     def body(r, carry):
-        key, cands, cand_idx, min_d2 = carry
+        key, cands, cand_idx, min_d2, state = carry
         key, ks = jax.random.split(key)
         # sample l candidates with prob ∝ D² (Gumbel top-l, no replacement)
         idx = sampling.gumbel_topk(ks, sampling.safe_log(min_d2), l)
@@ -55,11 +62,13 @@ def kmeans_parallel_init(key: jax.Array, points: jax.Array, k: int, *,
         cands = jax.lax.dynamic_update_slice(cands, new_pts, (1 + r * l, 0))
         cand_idx = jax.lax.dynamic_update_slice(cand_idx, idx, (1 + r * l,))
         # fold D² against all l new candidates in one multi-centroid round
-        min_d2 = be.seed_round(pts, new_pts, min_d2, None).min_d2
-        return key, cands, cand_idx, min_d2
+        rnd = be.seed_round(pts, new_pts, min_d2, None, cache=cache,
+                            state=state)
+        state = bounds.RoundState(rnd.partials, rnd.tile_max)
+        return key, cands, cand_idx, rnd.min_d2, state
 
-    key, cands, cand_idx, min_d2 = jax.lax.fori_loop(
-        0, rounds, body, (key, cands, cand_idx, min_d2))
+    key, cands, cand_idx, min_d2, _ = jax.lax.fori_loop(
+        0, rounds, body, (key, cands, cand_idx, min_d2, state))
 
     # weight each candidate by how many points it is closest to, then reduce the
     # small weighted candidate set to k seeds with weighted k-means++.

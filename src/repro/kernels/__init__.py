@@ -3,9 +3,14 @@ on CPU; compiled by Mosaic on a TPU backend — ops.py dispatches):
 
   kmeans_distance.py  — THE PAPER: fused D^2 min-update + partial sums;
                         centroid block VMEM-resident (constant-memory
-                        analogue) or streamed (global-memory analogue)
+                        analogue) or streamed (global-memory analogue);
+                        cached-norm inputs, bf16 streaming, and bound-gated
+                        variants that SKIP provably-unchanged tiles via a
+                        scalar-prefetched index map + aliased outputs, plus
+                        the one-pass prologue kernel (norms + tile balls)
   lloyd_assign.py     — fused assignment + per-cluster sums/counts
-                        (one-hot MXU matmul instead of atomics)
+                        (one-hot MXU matmul instead of atomics; cached-norm
+                        input, bf16 streaming)
   flash_attention.py  — online-softmax attention, scores never leave VMEM
                         (EXPERIMENTS.md §Perf B memory-term kernel)
   pq_decode.py        — decode attention over k-means++ product-quantized

@@ -87,13 +87,20 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0, cap: float = 0.0,
                     block_q: int = 512, block_k: int = 512,
-                    q_offset: int = 0, interpret: bool = True) -> jax.Array:
+                    q_offset: int = 0,
+                    interpret: bool | None = None) -> jax.Array:
     """q (B, Sq, H, hd); k/v (B, Skv, KH, hd), H = KH * G. Returns like q.
+
+    interpret=None defers to `kernels.ops.default_interpret` (compiled on
+    TPU, interpreted elsewhere) — the single place that default lives.
 
     VMEM working set per grid step: q/k/v/out tiles + the (block_q, hd) f32
     accumulator — block 512, hd 128: ~1.8 MB, far under the ~64 MB budget,
     leaving the Pallas pipeline room to double-buffer the k/v streams.
     """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     B, Sq, H, hd = q.shape
     Skv, KH = k.shape[1], k.shape[2]
     G = max(H // KH, 1)

@@ -1,4 +1,4 @@
-"""Fused k-means++ seeding-round kernel (the paper's hot spot, TPU-native).
+"""Fused k-means++ seeding-round kernels (the paper's hot spot, TPU-native).
 
 One seeding round updates every point's D^2 against the newest centroid(s) and
 produces the normalization term sum(D^2).
@@ -15,8 +15,31 @@ points in TEXTURE memory             ->  points streamed HBM->VMEM by the
 thrust::reduce for sum(D^2)          ->  per-tile partial sums accumulated
                                          on-chip; final tiny jnp.sum outside
 
-The matmul form  ||x||^2 - 2 x.c + ||c||^2  puts the inner product on the MXU
-(d up to 4096 in our integrations vs d=2 in the paper's figures).
+Three bandwidth/FLOP optimizations compose on top of that mapping:
+
+* **norm caching** — ``||x||^2`` is computed ONCE per dataset by the tiny
+  prologue kernel (`seed_prologue_pallas`) and streamed as an extra fp32
+  ``(n,)`` input, dropping d FLOPs/point/round from every round kernel.
+* **mixed-precision streaming** — the point tiles and centroid block keep
+  their input dtype all the way into the MXU (`dot_general` with
+  ``preferred_element_type=f32``), so bf16 inputs stream at half the HBM
+  bytes with fp32 accumulation and fp32 cached norms. fp32 inputs take
+  bitwise the same path as before (the products of bf16 values are exact in
+  fp32, so this refactor changes no fp32 results).
+* **exact tile skipping** — the gated variants take a scalar-prefetched
+  compacted active-tile index map (`core.bounds.compact_ids`): grid step i
+  streams tile ``ids[i]``; steps past ``n_active`` revisit the last active
+  tile (already VMEM-resident, no HBM fetch) and are compute-gated off by
+  ``pl.when``. Skipped tiles are neither computed nor fetched — their
+  ``min_d2`` / partial / tile-max outputs keep the previous round's values
+  via ``input_output_aliases``, which is exact (see ``core.bounds``).
+
+The matmul form ``||x||^2 - 2 x.c + ||c||^2`` puts the inner product on the
+MXU (d up to 4096 in our integrations vs d=2 in the paper's figures).
+
+Raw kernels take ``interpret`` EXPLICITLY: ``kernels.ops`` is the single
+place the on-TPU/off-TPU default is chosen — calling a raw kernel without it
+is a TypeError, not a silent interpreted run on real hardware.
 """
 from __future__ import annotations
 
@@ -25,23 +48,37 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _round_kernel(n_valid_ref, pts_ref, cents_ref, md_ref, out_md_ref,
-                  partial_ref, *, block_n: int):
+def tile_d2(x_raw, c_raw, xn):
+    """(block_n, k) matmul-form D^2 for one point tile — THE shared round
+    math (lloyd_assign imports it too, so the bitwise fused==pallas parity
+    has a single source of truth).
+
+    ``x_raw``/``c_raw`` keep their input dtype into the MXU (bf16 streams at
+    half width; fp32 is bitwise the historical path) with fp32 accumulation;
+    ``xn`` is the cached fp32 ``||x||^2`` block.
+    """
+    cf = c_raw.astype(jnp.float32)
+    cn = jnp.sum(cf * cf, axis=1)                  # (k_new,)
+    dots = jax.lax.dot_general(x_raw, c_raw, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    return jnp.maximum(xn[:, None] - 2.0 * dots + cn[None, :], 0.0)
+
+
+def _tile_d2_min(x_raw, c_raw, xn):
+    """min over the centroid block of `tile_d2` (the seeding-round fold)."""
+    return jnp.min(tile_d2(x_raw, c_raw, xn), axis=1)
+
+
+def _round_kernel(n_valid_ref, pts_ref, norms_ref, cents_ref, md_ref,
+                  out_md_ref, partial_ref, *, block_n: int):
     """Grid step i processes point rows [i*block_n, (i+1)*block_n)."""
     i = pl.program_id(0)
-    x = pts_ref[...].astype(jnp.float32)           # (block_n, d)
-    c = cents_ref[...].astype(jnp.float32)         # (k_new, d) resident
     md = md_ref[...].astype(jnp.float32)           # (block_n,)
-
-    xn = jnp.sum(x * x, axis=1, keepdims=True)     # (block_n, 1)
-    cn = jnp.sum(c * c, axis=1)                    # (k_new,)
-    # MXU matmul: (block_n, d) @ (d, k_new)
-    dots = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)
-    d2 = jnp.maximum(xn - 2.0 * dots + cn[None, :], 0.0)  # (block_n, k_new)
-    new_md = jnp.minimum(md, jnp.min(d2, axis=1))
+    xn = norms_ref[...].astype(jnp.float32)        # (block_n,) cached
+    new_md = jnp.minimum(md, _tile_d2_min(pts_ref[...], cents_ref[...], xn))
 
     # mask padded tail rows (they must not contribute to the reduction)
     row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
@@ -54,11 +91,12 @@ def _round_kernel(n_valid_ref, pts_ref, cents_ref, md_ref, out_md_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("block_n", "resident", "interpret"))
-def distance_min_update_pallas(points: jax.Array, centroids: jax.Array,
-                               min_d2: jax.Array, *, block_n: int = 1024,
-                               resident: bool = True, interpret: bool = True):
+def distance_min_update_pallas(points: jax.Array, norms: jax.Array,
+                               centroids: jax.Array, min_d2: jax.Array, *,
+                               block_n: int, resident: bool, interpret: bool):
     """Returns (new_min_d2 (n,), partials (grid,)). sum(partials) == sum(D^2).
 
+    ``norms`` is the cached fp32 ``||x||^2`` (n,) from the prologue.
     resident=True keeps the centroid block pinned in VMEM across grid steps
     (constant-memory analogue). resident=False re-indexes the centroid block
     every step, modelling the global-memory variant's repeated fetch.
@@ -68,6 +106,7 @@ def distance_min_update_pallas(points: jax.Array, centroids: jax.Array,
     pad = (-n) % block_n
     grid = (n + pad) // block_n
     pts = jnp.pad(points, ((0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
     md = jnp.pad(min_d2, (0, pad), constant_values=jnp.inf)
     n_valid = jnp.array([n], jnp.int32)
 
@@ -84,6 +123,7 @@ def distance_min_update_pallas(points: jax.Array, centroids: jax.Array,
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),            # n_valid (scalar-ish)
             pl.BlockSpec((block_n, d), lambda i: (i, 0)),  # streamed points
+            pl.BlockSpec((block_n,), lambda i: (i,)),      # cached ||x||^2
             cent_spec,                                      # centroids
             pl.BlockSpec((block_n,), lambda i: (i,)),      # min_d2 in
         ],
@@ -96,33 +136,179 @@ def distance_min_update_pallas(points: jax.Array, centroids: jax.Array,
             jax.ShapeDtypeStruct((grid,), jnp.float32),
         ],
         interpret=interpret,
-    )(n_valid, pts, centroids, md)
+    )(n_valid, pts, nrm, centroids, md)
     return out_md[:n], partials
 
 
 # ---------------------------------------------------------------------------
-# batch-grid variant (multi-tenant clustering: B independent problems)
+# bound-gated variant (exact tile skipping via scalar-prefetched index map)
 # ---------------------------------------------------------------------------
 
 
-def _round_kernel_batched(n_valid_ref, pts_ref, cents_ref, md_ref, out_md_ref,
-                          partial_ref, *, block_n: int):
+def _round_kernel_gated(ids_ref, meta_ref, pts_ref, norms_ref, cents_ref,
+                        md_ref, pp_ref, ptm_ref, out_md_ref, partial_ref,
+                        tmax_ref, *, block_n: int):
+    """Grid step i streams tile ``ids[i]``; steps >= n_active are no-ops.
+
+    ``meta`` = [n_valid, n_active]. ``pp_ref``/``ptm_ref`` (previous partials
+    / tile-max) are never read — they exist to carry the aliased buffers the
+    skipped tiles' outputs fall back to.
+    """
+    del pp_ref, ptm_ref
+    i = pl.program_id(0)
+
+    @pl.when(i < meta_ref[1])
+    def _compute():
+        t = ids_ref[i]                             # the REAL tile id
+        md = md_ref[...].astype(jnp.float32)
+        xn = norms_ref[...].astype(jnp.float32)
+        new_md = jnp.minimum(md, _tile_d2_min(pts_ref[...], cents_ref[...],
+                                              xn))
+        row = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+        valid = row < meta_ref[0]
+        new_md = jnp.where(valid, new_md, 0.0)
+
+        out_md_ref[...] = new_md.astype(out_md_ref.dtype)
+        partial_ref[0] = jnp.sum(new_md)
+        tmax_ref[0] = jnp.max(new_md)              # bound state for next round
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "resident", "interpret"))
+def distance_min_update_gated_pallas(points: jax.Array, norms: jax.Array,
+                                     centroids: jax.Array, min_d2: jax.Array,
+                                     prev_partials: jax.Array,
+                                     prev_tile_max: jax.Array,
+                                     ids: jax.Array, meta: jax.Array, *,
+                                     block_n: int, resident: bool,
+                                     interpret: bool):
+    """Bound-gated seeding round. Returns (new_min_d2 (n,), partials (grid,),
+    tile_max (grid,)).
+
+    ``ids``/``meta=[n_valid, n_active]`` come from `core.bounds.compact_ids`:
+    only the first n_active grid steps fetch + compute (each visiting active
+    tile ids[i]); every output block of a skipped tile keeps the aliased
+    previous-round value, which the bound proves is bitwise what a full
+    recompute would write.
+    """
+    n, d = points.shape
+    k_new = centroids.shape[0]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
+    md = jnp.pad(min_d2.astype(jnp.float32), (0, pad),
+                 constant_values=jnp.inf)
+
+    if resident:
+        cent_spec = pl.BlockSpec((k_new, d), lambda i, ids, meta: (0, 0))
+    else:
+        cent_spec = pl.BlockSpec((k_new, d), lambda i, ids, meta: (0, i * 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                      # ids, meta
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, ids, meta: (ids[i], 0)),
+            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
+            cent_spec,
+            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),   # prev part
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),   # prev tmax
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),
+        ],
+    )
+    out_md, partials, tile_max = pl.pallas_call(
+        functools.partial(_round_kernel_gated, block_n=block_n),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        # skipped tiles reuse their prior min_d2 / partials / tile-max
+        input_output_aliases={5: 0, 6: 1, 7: 2},
+        interpret=interpret,
+    )(ids, meta, pts, nrm, centroids, md,
+      prev_partials.astype(jnp.float32), prev_tile_max.astype(jnp.float32))
+    return out_md[:n], partials, tile_max
+
+
+# ---------------------------------------------------------------------------
+# prologue kernel: cached norms + tile centroid-balls, ONE pass over the data
+# ---------------------------------------------------------------------------
+
+
+def _prologue_kernel(n_valid_ref, pts_ref, norms_ref, center_ref, radius_ref,
+                     *, block_n: int):
+    i = pl.program_id(0)
+    x = pts_ref[...].astype(jnp.float32)           # (block_n, d)
+    xn = jnp.sum(x * x, axis=1)
+
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = row < n_valid_ref[0]
+    norms_ref[...] = jnp.where(valid, xn, 0.0)
+
+    cnt = jnp.sum(valid.astype(jnp.float32))
+    xm = jnp.where(valid[:, None], x, 0.0)
+    ctr = jnp.sum(xm, axis=0) / jnp.maximum(cnt, 1.0)
+    center_ref[0, :] = ctr
+    d2c = jnp.sum((x - ctr[None, :]) ** 2, axis=1)
+    radius_ref[0] = jnp.sqrt(jnp.max(jnp.where(valid, d2c, 0.0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def seed_prologue_pallas(points: jax.Array, *, block_n: int, interpret: bool):
+    """ONE streaming pass computing everything the round kernels cache:
+    (norms (n,) fp32, tile centers (grid, d) fp32, tile radii (grid,) fp32)."""
+    n, d = points.shape
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    n_valid = jnp.array([n], jnp.int32)
+
+    norms, centers, radii = pl.pallas_call(
+        functools.partial(_prologue_kernel, block_n=block_n),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((grid, d), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_valid, pts)
+    return norms[:n], centers, radii
+
+
+# ---------------------------------------------------------------------------
+# batch-grid variants (multi-tenant clustering: B independent problems)
+# ---------------------------------------------------------------------------
+
+
+def _round_kernel_batched(n_valid_ref, pts_ref, norms_ref, cents_ref, md_ref,
+                          out_md_ref, partial_ref, *, block_n: int):
     """Grid step (b, i) processes rows [i*block_n, (i+1)*block_n) of problem b.
 
     Same math as `_round_kernel`; the leading singleton axis is problem b's
     block. The centroid block is re-fetched per problem (it differs per b) but
     stays resident across the inner i steps."""
     i = pl.program_id(1)
-    x = pts_ref[0].astype(jnp.float32)             # (block_n, d)
-    c = cents_ref[0].astype(jnp.float32)           # (k_new, d)
     md = md_ref[0].astype(jnp.float32)             # (block_n,)
-
-    xn = jnp.sum(x * x, axis=1, keepdims=True)
-    cn = jnp.sum(c * c, axis=1)
-    dots = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)
-    d2 = jnp.maximum(xn - 2.0 * dots + cn[None, :], 0.0)
-    new_md = jnp.minimum(md, jnp.min(d2, axis=1))
+    xn = norms_ref[0].astype(jnp.float32)
+    new_md = jnp.minimum(md, _tile_d2_min(pts_ref[0], cents_ref[0], xn))
 
     row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
     valid = row < n_valid_ref[0]
@@ -133,13 +319,13 @@ def _round_kernel_batched(n_valid_ref, pts_ref, cents_ref, md_ref, out_md_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def distance_min_update_batched_pallas(points: jax.Array, centroids: jax.Array,
+def distance_min_update_batched_pallas(points: jax.Array, norms: jax.Array,
+                                       centroids: jax.Array,
                                        min_d2: jax.Array, *,
-                                       block_n: int = 1024,
-                                       interpret: bool = True):
+                                       block_n: int, interpret: bool):
     """Batched seeding round over B independent problems in ONE launch.
 
-    points (B, n, d), centroids (B, k_new, d), min_d2 (B, n) ->
+    points (B, n, d), norms (B, n), centroids (B, k_new, d), min_d2 (B, n) ->
     (new_min_d2 (B, n), partials (B, n_tiles)). Row b of the outputs is
     bitwise what `distance_min_update_pallas` computes for problem b — the
     grid just gains a leading batch dimension, so the many-tenant path pays
@@ -149,6 +335,7 @@ def distance_min_update_batched_pallas(points: jax.Array, centroids: jax.Array,
     pad = (-n) % block_n
     grid = (n + pad) // block_n
     pts = jnp.pad(points, ((0, 0), (0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pad)))
     md = jnp.pad(min_d2, ((0, 0), (0, pad)), constant_values=jnp.inf)
     n_valid = jnp.array([n], jnp.int32)
 
@@ -158,6 +345,7 @@ def distance_min_update_batched_pallas(points: jax.Array, centroids: jax.Array,
         in_specs=[
             pl.BlockSpec((1,), lambda b, i: (0,)),
             pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
             pl.BlockSpec((1, k_new, d), lambda b, i: (b, 0, 0)),
             pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
         ],
@@ -170,5 +358,86 @@ def distance_min_update_batched_pallas(points: jax.Array, centroids: jax.Array,
             jax.ShapeDtypeStruct((B, grid), jnp.float32),
         ],
         interpret=interpret,
-    )(n_valid, pts, centroids, md)
+    )(n_valid, pts, nrm, centroids, md)
     return out_md[:, :n], partials
+
+
+def _round_kernel_gated_batched(ids_ref, nact_ref, nv_ref, pts_ref, norms_ref,
+                                cents_ref, md_ref, pp_ref, ptm_ref,
+                                out_md_ref, partial_ref, tmax_ref, *,
+                                block_n: int):
+    """Grid step (b, i) streams tile ids[b, i] of problem b; steps past
+    problem b's n_active are no-ops (per-problem compaction)."""
+    del pp_ref, ptm_ref
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i < nact_ref[b])
+    def _compute():
+        t = ids_ref[b, i]
+        md = md_ref[0].astype(jnp.float32)
+        xn = norms_ref[0].astype(jnp.float32)
+        new_md = jnp.minimum(md, _tile_d2_min(pts_ref[0], cents_ref[0], xn))
+        row = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+        valid = row < nv_ref[0]
+        new_md = jnp.where(valid, new_md, 0.0)
+
+        out_md_ref[0] = new_md.astype(out_md_ref.dtype)
+        partial_ref[0, 0] = jnp.sum(new_md)
+        tmax_ref[0, 0] = jnp.max(new_md)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def distance_min_update_gated_batched_pallas(
+        points: jax.Array, norms: jax.Array, centroids: jax.Array,
+        min_d2: jax.Array, prev_partials: jax.Array,
+        prev_tile_max: jax.Array, ids: jax.Array, n_active: jax.Array, *,
+        block_n: int, interpret: bool):
+    """Batch-grid bound-gated round: (B, n, d) problems, per-problem compacted
+    active-tile maps ids (B, n_tiles) / n_active (B,). Row b is bitwise
+    `distance_min_update_gated_pallas` on problem b."""
+    B, n, d = points.shape
+    k_new = centroids.shape[1]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, 0), (0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pad)))
+    md = jnp.pad(min_d2.astype(jnp.float32), ((0, 0), (0, pad)),
+                 constant_values=jnp.inf)
+    nv = jnp.array([n], jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                      # ids, n_active, n_valid
+        grid=(B, grid),
+        in_specs=[
+            pl.BlockSpec((1, block_n, d),
+                         lambda b, i, ids, na, nv: (b, ids[b, i], 0)),
+            pl.BlockSpec((1, block_n),
+                         lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, k_new, d), lambda b, i, ids, na, nv: (b, 0, 0)),
+            pl.BlockSpec((1, block_n),
+                         lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n),
+                         lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+        ],
+    )
+    out_md, partials, tile_max = pl.pallas_call(
+        functools.partial(_round_kernel_gated_batched, block_n=block_n),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n + pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid), jnp.float32),
+        ],
+        input_output_aliases={6: 0, 7: 1, 8: 2},
+        interpret=interpret,
+    )(ids.astype(jnp.int32), n_active.astype(jnp.int32), nv, pts, nrm,
+      centroids, md, prev_partials.astype(jnp.float32),
+      prev_tile_max.astype(jnp.float32))
+    return out_md[:, :n], partials, tile_max

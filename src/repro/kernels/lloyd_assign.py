@@ -6,6 +6,12 @@ accumulators (k, d) and (k,) live in VMEM for the whole grid (output blocks
 with a constant index_map), initialized at grid step 0 — the TPU version of a
 privatized-then-reduced histogram, with the one-hot matmul on the MXU instead
 of atomics (TPU has no global atomics; this is the idiomatic replacement).
+
+Like the seeding-round kernels, the assignment kernel streams a cached fp32
+``||x||^2`` input (norm caching: computed once per fit, not once per
+iteration) and keeps the point/centroid tiles in their input dtype into the
+MXU (bf16 streams at half the HBM bytes; accumulators stay fp32). Raw
+kernels take ``interpret`` explicitly — ``kernels.ops`` owns the default.
 """
 from __future__ import annotations
 
@@ -15,18 +21,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# the one shared definition of the cached-norm matmul-form D^2 — the
+# fused==pallas bitwise-parity claims hang off every kernel using it
+from repro.kernels.kmeans_distance import tile_d2 as _tile_d2
 
-def _assign_kernel(n_valid_ref, pts_ref, cents_ref, assign_ref, md_ref,
-                   sums_ref, counts_ref, *, block_n: int):
+
+def _assign_kernel(n_valid_ref, pts_ref, norms_ref, cents_ref, assign_ref,
+                   md_ref, sums_ref, counts_ref, *, block_n: int):
     i = pl.program_id(0)
-    x = pts_ref[...].astype(jnp.float32)        # (block_n, d)
-    c = cents_ref[...].astype(jnp.float32)      # (k, d) resident
-
-    xn = jnp.sum(x * x, axis=1, keepdims=True)
-    cn = jnp.sum(c * c, axis=1)
-    dots = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)
-    d2 = jnp.maximum(xn - 2.0 * dots + cn[None, :], 0.0)   # (block_n, k)
+    x = pts_ref[...].astype(jnp.float32)        # (block_n, d) for accumulation
+    xn = norms_ref[...].astype(jnp.float32)
+    d2 = _tile_d2(pts_ref[...], cents_ref[...], xn)     # (block_n, k)
 
     a = jnp.argmin(d2, axis=1).astype(jnp.int32)
     m = jnp.min(d2, axis=1)
@@ -39,7 +44,7 @@ def _assign_kernel(n_valid_ref, pts_ref, cents_ref, assign_ref, md_ref,
     md_ref[...] = m
 
     # one-hot matmul instead of atomics: (k, block_n) @ (block_n, d) on the MXU
-    k = c.shape[0]
+    k = cents_ref.shape[0]
     onehot = (a[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1))
     onehot = jnp.where(valid[:, None], onehot.astype(jnp.float32), 0.0)
     tile_sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
@@ -58,14 +63,17 @@ def _assign_kernel(n_valid_ref, pts_ref, cents_ref, assign_ref, md_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def lloyd_assign_pallas(points: jax.Array, centroids: jax.Array, *,
-                        block_n: int = 1024, interpret: bool = True):
-    """Returns (assignment (n,) int32, min_d2 (n,), sums (k, d), counts (k,))."""
+def lloyd_assign_pallas(points: jax.Array, norms: jax.Array,
+                        centroids: jax.Array, *, block_n: int,
+                        interpret: bool):
+    """Returns (assignment (n,) int32, min_d2 (n,), sums (k, d), counts (k,)).
+    ``norms`` is the cached fp32 ``||x||^2`` (n,)."""
     n, d = points.shape
     k = centroids.shape[0]
     pad = (-n) % block_n
     grid = (n + pad) // block_n
     pts = jnp.pad(points, ((0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
     n_valid = jnp.array([n], jnp.int32)
 
     a, md, sums, counts = pl.pallas_call(
@@ -74,6 +82,7 @@ def lloyd_assign_pallas(points: jax.Array, centroids: jax.Array, *,
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),      # cached ||x||^2
             pl.BlockSpec((k, d), lambda i: (0, 0)),        # resident
         ],
         out_specs=[
@@ -89,7 +98,7 @@ def lloyd_assign_pallas(points: jax.Array, centroids: jax.Array, *,
             jax.ShapeDtypeStruct((k,), jnp.float32),
         ],
         interpret=interpret,
-    )(n_valid, pts, centroids)
+    )(n_valid, pts, nrm, centroids)
     return a[:n], md[:n], sums, counts
 
 
@@ -98,8 +107,9 @@ def lloyd_assign_pallas(points: jax.Array, centroids: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 
-def _assign_kernel_batched(n_valid_ref, pts_ref, cents_ref, assign_ref,
-                           md_ref, sums_ref, counts_ref, *, block_n: int):
+def _assign_kernel_batched(n_valid_ref, pts_ref, norms_ref, cents_ref,
+                           assign_ref, md_ref, sums_ref, counts_ref, *,
+                           block_n: int):
     """Grid step (b, i): same math as `_assign_kernel` for problem b's tile i.
 
     The (1, k, d)/(1, k) accumulators map to problem b's slot; the grid
@@ -107,13 +117,8 @@ def _assign_kernel_batched(n_valid_ref, pts_ref, cents_ref, assign_ref,
     problem."""
     i = pl.program_id(1)
     x = pts_ref[0].astype(jnp.float32)          # (block_n, d)
-    c = cents_ref[0].astype(jnp.float32)        # (k, d)
-
-    xn = jnp.sum(x * x, axis=1, keepdims=True)
-    cn = jnp.sum(c * c, axis=1)
-    dots = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)
-    d2 = jnp.maximum(xn - 2.0 * dots + cn[None, :], 0.0)
+    xn = norms_ref[0].astype(jnp.float32)
+    d2 = _tile_d2(pts_ref[0], cents_ref[0], xn)
 
     a = jnp.argmin(d2, axis=1).astype(jnp.int32)
     m = jnp.min(d2, axis=1)
@@ -125,7 +130,7 @@ def _assign_kernel_batched(n_valid_ref, pts_ref, cents_ref, assign_ref,
     assign_ref[0] = a
     md_ref[0] = m
 
-    k = c.shape[0]
+    k = cents_ref.shape[1]
     onehot = (a[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1))
     onehot = jnp.where(valid[:, None], onehot.astype(jnp.float32), 0.0)
     tile_sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
@@ -144,12 +149,13 @@ def _assign_kernel_batched(n_valid_ref, pts_ref, cents_ref, assign_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def lloyd_assign_batched_pallas(points: jax.Array, centroids: jax.Array, *,
-                                block_n: int = 1024, interpret: bool = True):
+def lloyd_assign_batched_pallas(points: jax.Array, norms: jax.Array,
+                                centroids: jax.Array, *, block_n: int,
+                                interpret: bool):
     """Batched Lloyd half-step over B independent problems in ONE launch.
 
-    points (B, n, d), centroids (B, k, d) -> (assignment (B, n) int32,
-    min_d2 (B, n), sums (B, k, d), counts (B, k)). Row b matches
+    points (B, n, d), norms (B, n), centroids (B, k, d) -> (assignment (B, n)
+    int32, min_d2 (B, n), sums (B, k, d), counts (B, k)). Row b matches
     `lloyd_assign_pallas` on problem b; the grid gains a leading batch
     dimension and the per-cluster accumulators gain a per-problem slot."""
     B, n, d = points.shape
@@ -157,6 +163,7 @@ def lloyd_assign_batched_pallas(points: jax.Array, centroids: jax.Array, *,
     pad = (-n) % block_n
     grid = (n + pad) // block_n
     pts = jnp.pad(points, ((0, 0), (0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pad)))
     n_valid = jnp.array([n], jnp.int32)
 
     a, md, sums, counts = pl.pallas_call(
@@ -165,6 +172,7 @@ def lloyd_assign_batched_pallas(points: jax.Array, centroids: jax.Array, *,
         in_specs=[
             pl.BlockSpec((1,), lambda b, i: (0,)),
             pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
             pl.BlockSpec((1, k, d), lambda b, i: (b, 0, 0)),
         ],
         out_specs=[
@@ -180,5 +188,5 @@ def lloyd_assign_batched_pallas(points: jax.Array, centroids: jax.Array, *,
             jax.ShapeDtypeStruct((B, k), jnp.float32),
         ],
         interpret=interpret,
-    )(n_valid, pts, centroids)
+    )(n_valid, pts, nrm, centroids)
     return a[:, :n], md[:, :n], sums, counts

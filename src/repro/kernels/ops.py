@@ -2,15 +2,21 @@
 
 On a TPU backend the kernels compile to Mosaic; everywhere else they run in
 interpret mode (Python evaluation of the kernel body — bit-correct, slow),
-which is how this CPU container validates them. Block sizes are chosen so the
-working set (points tile + resident centroids + accumulators + per-tile
-partials) fits a v5e VMEM budget of ~64 MB with double buffering.
+which is how this CPU container validates them. THIS module is the single
+place that default is chosen (`default_interpret`): the raw kernels in
+``kmeans_distance`` / ``lloyd_assign`` require ``interpret`` explicitly, so
+bypassing these wrappers can never silently run interpreted on real TPU.
+
+Block sizes are chosen so the working set (points tile + resident centroids
++ cached-norms block + accumulators + per-tile partials + bound-state
+blocks) fits a v5e VMEM budget of ~64 MB with double buffering.
 
 The wrappers carry a `custom_vmap` rule: `jax.vmap` over them dispatches to
 the batch-grid kernel variants (one launch with a leading batch grid
 dimension) instead of relying on the generic pallas batching rule — this is
 what lets the engine's `seed_batched`/`fit_batched` vmap hit real batched
-kernels with the VMEM budget accounted for.
+kernels with the VMEM budget accounted for. The bound-gated wrapper does the
+same for the gated batch-grid kernel (per-problem compacted tile maps).
 """
 from __future__ import annotations
 
@@ -20,8 +26,13 @@ import jax
 import jax.numpy as jnp
 from jax.custom_batching import custom_vmap
 
-from repro.kernels.kmeans_distance import (distance_min_update_batched_pallas,
-                                           distance_min_update_pallas)
+from repro.kernels.kmeans_distance import (
+    distance_min_update_batched_pallas, distance_min_update_gated_pallas,
+    distance_min_update_gated_batched_pallas, distance_min_update_pallas,
+    seed_prologue_pallas)
+from repro.core.bounds import point_norms  # noqa: F401  (re-exported: the
+#   cached-norm input the kernels stream; wrappers compute it on the fly
+#   when the caller has no prologue cache)
 from repro.kernels.lloyd_assign import (lloyd_assign_batched_pallas,
                                         lloyd_assign_pallas)
 
@@ -32,16 +43,27 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def default_interpret() -> bool:
+    """THE kernel-execution default: compiled on TPU, interpreted elsewhere.
+    Every entry point whose ``interpret`` is None resolves it here."""
+    return not _on_tpu()
+
+
 def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
                  max_block: int = 4096, batched: bool = False) -> int:
     """Largest power-of-two point-tile height whose double-buffered working set
     fits the VMEM budget. Accounted per grid step:
 
-      2 x (bn, d) point tile           (double-buffered HBM->VMEM stream)
+      2 x (bn, d) point tile           (double-buffered HBM->VMEM stream;
+                                        dtype_bytes=2 budgets the half-width
+                                        bf16 streaming blocks)
+      2 x (bn,) fp32 cached-norms block (double-buffered alongside the points)
       (k, d) resident centroid block
       (bn, k) distance tile + ~4 per-point vectors
       fp32 accumulators: (k, d) sums + (k,) counts + the per-tile partial
         (the seeding kernel's thrust::reduce analogue)
+      bound-state blocks: previous-partial/tile-max in + partial/tile-max out
+        scalars per step, double-buffered (the gated kernel's skip state)
 
     `batched=True` budgets the batch-grid kernels, whose centroid block is
     re-fetched per problem and therefore double-buffered like the point
@@ -49,7 +71,9 @@ def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
     bn = max_block
     while bn > 128:
         working = dtype_bytes * (2 * bn * d + k * d + bn * k + 4 * bn)
+        working += 4 * 2 * bn               # cached ||x||^2 (fp32, 2 buffers)
         working += 4 * (k * d + k + 8)      # fp32 accumulators + partial
+        working += 4 * 2 * 4                # bound-state scalar blocks
         if batched:
             working += dtype_bytes * k * d  # second centroid buffer
         if working <= _VMEM_BUDGET:
@@ -63,7 +87,9 @@ def choose_block_n(n: int, d: int, k: int, *, batched: bool = False) -> int:
     clamped DOWN to the largest power of two <= n (never past the point count;
     the old round-up overshot n and launched oversized tiles), floored at the
     128-lane minimum. Non-multiple-of-block n is handled by padding + masking
-    in the kernel wrappers, so any returned size is legal."""
+    in the kernel wrappers, so any returned size is legal. The pick always
+    uses the fp32 accounting even for bf16 streams, so a run's tile height —
+    and with it the partials/bound-state shapes — is precision-independent."""
     cap = pick_block_n(d, k, batched=batched)
     if n >= cap:
         return cap
@@ -74,8 +100,30 @@ def _ensure_batched(x, is_batched: bool, axis_size: int):
     return x if is_batched else jnp.broadcast_to(x[None], (axis_size,) + x.shape)
 
 
+def _align(points: jax.Array, centroids: jax.Array, norms):
+    """Centroids follow the point stream dtype (bf16 streaming streams both);
+    norms default to an on-the-fly fp32 computation."""
+    cents = centroids.astype(points.dtype)
+    if norms is None:
+        norms = point_norms(points)
+    return cents, norms.astype(jnp.float32)
+
+
+def seed_prologue(points: jax.Array, *, block_n: int | None = None,
+                  interpret: bool | None = None):
+    """One streaming pass over the dataset: (norms, tile centers, tile radii)
+    at the seed-tile height — everything the gated round kernels cache."""
+    n, d = points.shape
+    if block_n is None:
+        block_n = choose_block_n(n, d, 1, batched=True)
+    if interpret is None:
+        interpret = default_interpret()
+    return seed_prologue_pallas(points, block_n=block_n, interpret=interpret)
+
+
 def distance_min_update(points: jax.Array, centroids: jax.Array,
-                        min_d2: jax.Array, *, resident_centroids: bool = True,
+                        min_d2: jax.Array, *, norms: jax.Array | None = None,
+                        resident_centroids: bool = True,
                         block_n: int | None = None,
                         interpret: bool | None = None):
     """One k-means++ seeding round: fused D^2 min-update + per-tile partials.
@@ -90,29 +138,34 @@ def distance_min_update(points: jax.Array, centroids: jax.Array,
     if block_n is None:
         block_n = choose_block_n(n, d, k)
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
+    centroids, norms = _align(points, centroids, norms)
 
     @custom_vmap
-    def call(pts, cents, md):
-        return distance_min_update_pallas(pts, cents, md, block_n=block_n,
+    def call(pts, cents, md, nrm):
+        return distance_min_update_pallas(pts, nrm, cents, md,
+                                          block_n=block_n,
                                           resident=resident_centroids,
                                           interpret=interpret)
 
     @call.def_vmap
-    def _rule(axis_size, in_batched, pts, cents, md):
+    def _rule(axis_size, in_batched, pts, cents, md, nrm):
         pts = _ensure_batched(pts, in_batched[0], axis_size)
         cents = _ensure_batched(cents, in_batched[1], axis_size)
         md = _ensure_batched(md, in_batched[2], axis_size)
+        nrm = _ensure_batched(nrm, in_batched[3], axis_size)
         # block_n=None re-picks the tile with the batch-grid VMEM accounting
-        out = distance_min_update_batched(pts, cents, md, block_n=user_block,
+        out = distance_min_update_batched(pts, cents, md, norms=nrm,
+                                          block_n=user_block,
                                           interpret=interpret)
         return out, (True, True)
 
-    return call(points, centroids, min_d2)
+    return call(points, centroids, min_d2, norms)
 
 
 def distance_min_update_batched(points: jax.Array, centroids: jax.Array,
                                 min_d2: jax.Array, *,
+                                norms: jax.Array | None = None,
                                 block_n: int | None = None,
                                 interpret: bool | None = None):
     """Batched seeding round: (B, n, d) x (B, k, d) -> ((B, n), (B, n_tiles))
@@ -122,14 +175,73 @@ def distance_min_update_batched(points: jax.Array, centroids: jax.Array,
     if block_n is None:
         block_n = choose_block_n(n, d, k, batched=True)
     if interpret is None:
-        interpret = not _on_tpu()
-    return distance_min_update_batched_pallas(points, centroids, min_d2,
-                                              block_n=block_n,
+        interpret = default_interpret()
+    centroids, norms = _align(points, centroids, norms)
+    return distance_min_update_batched_pallas(points, norms, centroids,
+                                              min_d2, block_n=block_n,
                                               interpret=interpret)
 
 
+def distance_min_update_gated(points: jax.Array, centroids: jax.Array,
+                              min_d2: jax.Array, norms: jax.Array,
+                              prev_partials: jax.Array,
+                              prev_tile_max: jax.Array, active: jax.Array, *,
+                              block_n: int,
+                              resident_centroids: bool = True,
+                              interpret: bool | None = None):
+    """Bound-gated seeding round (exact tile skipping).
+
+    ``active`` is the (n_tiles,) bool mask from `core.bounds.active_tiles`;
+    it is compacted here into the scalar-prefetched index map the gated
+    kernel consumes, so inactive tiles are neither fetched nor computed and
+    their outputs keep the previous round's (bitwise-identical) values.
+    Returns (new_min_d2, partials, tile_max, skipped). ``block_n`` is
+    required: it must match the tile height of the carried bound state.
+    Under `jax.vmap` this dispatches to the gated batch-grid kernel with
+    per-problem compaction."""
+    from repro.core import bounds as bnd
+
+    n, d = points.shape
+    if interpret is None:
+        interpret = default_interpret()
+    centroids = centroids.astype(points.dtype)
+    norms = norms.astype(jnp.float32)
+    grid = -(-n // block_n)
+    ids, n_active = bnd.compact_ids(active)
+    skipped = (grid - n_active).astype(jnp.int32)
+
+    @custom_vmap
+    def call(pts, cents, md, nrm, pp, ptm, ids_, nact):
+        meta = jnp.stack([jnp.full((), n, jnp.int32), nact.astype(jnp.int32)])
+        return distance_min_update_gated_pallas(
+            pts, nrm, cents, md, pp, ptm, ids_, meta, block_n=block_n,
+            resident=resident_centroids, interpret=interpret)
+
+    @call.def_vmap
+    def _rule(axis_size, in_batched, pts, cents, md, nrm, pp, ptm, ids_,
+              nact):
+        pts = _ensure_batched(pts, in_batched[0], axis_size)
+        cents = _ensure_batched(cents, in_batched[1], axis_size)
+        md = _ensure_batched(md, in_batched[2], axis_size)
+        nrm = _ensure_batched(nrm, in_batched[3], axis_size)
+        pp = _ensure_batched(pp, in_batched[4], axis_size)
+        ptm = _ensure_batched(ptm, in_batched[5], axis_size)
+        ids_ = _ensure_batched(ids_, in_batched[6], axis_size)
+        nact = _ensure_batched(nact, in_batched[7], axis_size)
+        out = distance_min_update_gated_batched_pallas(
+            pts, nrm, cents, md, pp, ptm, ids_, nact, block_n=block_n,
+            interpret=interpret)
+        return out, (True, True, True)
+
+    new_md, partials, tile_max = call(points, centroids, min_d2, norms,
+                                      prev_partials, prev_tile_max, ids,
+                                      n_active)
+    return new_md, partials, tile_max, skipped
+
+
 def lloyd_assign(points: jax.Array, centroids: jax.Array, *,
-                 block_n: int | None = None, interpret: bool | None = None):
+                 norms: jax.Array | None = None, block_n: int | None = None,
+                 interpret: bool | None = None):
     """Fused assignment + per-cluster partial sums/counts. Under `jax.vmap`
     this dispatches to the batch-grid kernel (`lloyd_assign_batched`)."""
     n, d = points.shape
@@ -138,26 +250,29 @@ def lloyd_assign(points: jax.Array, centroids: jax.Array, *,
     if block_n is None:
         block_n = choose_block_n(n, d, k)
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
+    centroids, norms = _align(points, centroids, norms)
 
     @custom_vmap
-    def call(pts, cents):
-        return lloyd_assign_pallas(pts, cents, block_n=block_n,
+    def call(pts, cents, nrm):
+        return lloyd_assign_pallas(pts, nrm, cents, block_n=block_n,
                                    interpret=interpret)
 
     @call.def_vmap
-    def _rule(axis_size, in_batched, pts, cents):
+    def _rule(axis_size, in_batched, pts, cents, nrm):
         pts = _ensure_batched(pts, in_batched[0], axis_size)
         cents = _ensure_batched(cents, in_batched[1], axis_size)
+        nrm = _ensure_batched(nrm, in_batched[2], axis_size)
         # block_n=None re-picks the tile with the batch-grid VMEM accounting
-        out = lloyd_assign_batched(pts, cents, block_n=user_block,
+        out = lloyd_assign_batched(pts, cents, norms=nrm, block_n=user_block,
                                    interpret=interpret)
         return out, (True, True, True, True)
 
-    return call(points, centroids)
+    return call(points, centroids, norms)
 
 
 def lloyd_assign_batched(points: jax.Array, centroids: jax.Array, *,
+                         norms: jax.Array | None = None,
                          block_n: int | None = None,
                          interpret: bool | None = None):
     """Batched Lloyd half-step: (B, n, d) x (B, k, d) -> per-problem
@@ -167,6 +282,7 @@ def lloyd_assign_batched(points: jax.Array, centroids: jax.Array, *,
     if block_n is None:
         block_n = choose_block_n(n, d, k, batched=True)
     if interpret is None:
-        interpret = not _on_tpu()
-    return lloyd_assign_batched_pallas(points, centroids, block_n=block_n,
-                                       interpret=interpret)
+        interpret = default_interpret()
+    centroids, norms = _align(points, centroids, norms)
+    return lloyd_assign_batched_pallas(points, norms, centroids,
+                                       block_n=block_n, interpret=interpret)

@@ -89,7 +89,7 @@ def _kernel(len_ref, q_ref, kc_ref, vc_ref, kcb_ref, vcb_ref, o_ref,
 def pq_decode_attention(q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
                         k_cb: jax.Array, v_cb: jax.Array,
                         cache_len: jax.Array, *, block_k: int = 512,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     """Single-token decode attention over PQ codes.
 
     q        (B, 1, H, hd)       — current query
@@ -98,6 +98,9 @@ def pq_decode_attention(q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
     cache_len () int32           — valid positions
     Returns (B, 1, H, hd).
     """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     B, _, H, hd = q.shape
     S, KH = k_codes.shape[1], k_codes.shape[2]
     n_sub = k_codes.shape[3]

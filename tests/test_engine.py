@@ -407,6 +407,223 @@ def test_fit_rejects_unknown_empty_policy():
 
 
 # ---------------------------------------------------------------------------
+# precision & bounds (ISSUE 3 tentpole): norm caching, bf16 streaming,
+# exact tile skipping
+# ---------------------------------------------------------------------------
+
+def _coherent_points(n=16384, d=2, k=4, seed=0):
+    """Blob data sorted by label: tiles become spatially coherent (roughly
+    one blob per 4096-point tile at the defaults), which is what makes
+    block-level pruning fire (Capó et al.)."""
+    pts, labels = blobs(n, d, k, seed=seed)
+    return jnp.asarray(pts[np.argsort(labels, kind="stable")])
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused", "pallas"])
+def test_bound_gating_is_bitwise_exact(backend):
+    """Acceptance: the fp32 + bounds path is bitwise identical to the ungated
+    path — same seeds, same min_d2 — while actually skipping tiles."""
+    pts = _coherent_points()
+    key = jax.random.PRNGKey(3)
+    on = ClusterEngine(backend).seed(key, pts, 12)
+    off = ClusterEngine(backend, bounds=False).seed(key, pts, 12)
+    np.testing.assert_array_equal(np.asarray(on.indices),
+                                  np.asarray(off.indices))
+    np.testing.assert_array_equal(np.asarray(on.min_d2),
+                                  np.asarray(off.min_d2))
+    np.testing.assert_array_equal(np.asarray(on.centroids),
+                                  np.asarray(off.centroids))
+    assert off.skipped is None
+    assert on.skipped is not None and on.skipped.shape == (12,)
+    # reference here is mode='global', which gates via the pure-JAX model —
+    # it must actually skip, like fused/pallas
+    assert int(jnp.sum(on.skipped)) > 0, np.asarray(on.skipped)
+
+
+def test_serial_reference_never_skips():
+    """mode='serial' is the paper's CPU baseline: it carries the bound-state
+    contract but never gates (skipped stays 0 every round)."""
+    pts = _coherent_points()
+    res = ClusterEngine("reference", mode="serial").seed(jax.random.PRNGKey(3),
+                                                         pts, 6)
+    assert res.skipped is not None
+    np.testing.assert_array_equal(np.asarray(res.skipped), np.zeros(6))
+
+
+@pytest.mark.parametrize("offset", [100.0, -3000.0])
+def test_bound_gating_exact_far_from_origin(offset):
+    """The skip margin must be ABSOLUTE in the operand magnitude: the matmul
+    form's fp32 cancellation error grows with ||x||^2, so off-origin data is
+    where a relative-only slack would silently break bitwise exactness."""
+    pts = _coherent_points(seed=13) + offset
+    key = jax.random.PRNGKey(14)
+    for backend in ("fused", "pallas"):
+        on = ClusterEngine(backend).seed(key, pts, 10)
+        off = ClusterEngine(backend, bounds=False).seed(key, pts, 10)
+        np.testing.assert_array_equal(np.asarray(on.indices),
+                                      np.asarray(off.indices))
+        np.testing.assert_array_equal(np.asarray(on.min_d2),
+                                      np.asarray(off.min_d2))
+
+
+def test_bound_gating_skip_counts_agree_fused_vs_pallas():
+    """Both gated implementations (pure-JAX model vs compacted kernel) see
+    the same bound decisions on the same data."""
+    pts = _coherent_points(seed=4)
+    key = jax.random.PRNGKey(5)
+    f = ClusterEngine("fused").seed(key, pts, 10)
+    p = ClusterEngine("pallas").seed(key, pts, 10)
+    np.testing.assert_array_equal(np.asarray(f.indices),
+                                  np.asarray(p.indices))
+    # the two prologues' tile geometry is only ulp-equal, so a bound sitting
+    # exactly on the threshold may flip one tile's decision: counts must
+    # agree to +-1 tile per round (results stay bitwise identical either
+    # way — skipping is exact)
+    np.testing.assert_allclose(np.asarray(f.skipped),
+                               np.asarray(p.skipped), atol=1)
+    assert int(jnp.sum(f.skipped)) > 0
+
+
+def test_bound_gating_with_tiled_sampler_and_batched():
+    """Tile skipping composes with the tiled sampler (skipped tiles reuse
+    their prior partials) and with the batch-grid path."""
+    pts = _coherent_points(seed=6)
+    key = jax.random.PRNGKey(7)
+    for backend in ("fused", "pallas"):
+        on = ClusterEngine(backend).seed(key, pts, 8, sampler="tiled")
+        off = ClusterEngine(backend, bounds=False).seed(key, pts, 8,
+                                                        sampler="tiled")
+        np.testing.assert_array_equal(np.asarray(on.indices),
+                                      np.asarray(off.indices))
+    bpts = jnp.stack([_coherent_points(n=4096, seed=s) for s in (8, 9)])
+    keys = jax.random.split(jax.random.PRNGKey(10), 2)
+    bat_p = ClusterEngine("pallas").seed_batched(keys, bpts, 6)
+    bat_f = ClusterEngine("fused").seed_batched(keys, bpts, 6)
+    np.testing.assert_array_equal(np.asarray(bat_p.indices),
+                                  np.asarray(bat_f.indices))
+    assert bat_p.skipped.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(bat_p.skipped),
+                                  np.asarray(bat_f.skipped))
+
+
+def test_mesh_backend_composes_skip_counters():
+    """The mesh path psums the per-shard skipped-tile counts (pod-wide
+    counter) and stays gated end to end."""
+    mesh = jax.make_mesh((1,), ("data",))
+    pts = _coherent_points(n=4096, seed=11)
+    eng = ClusterEngine(MeshBackend(mesh=mesh, axes=("data",)))
+    res = eng.seed(jax.random.PRNGKey(1), pts, 8)
+    assert res.skipped is not None and res.skipped.shape == (8,)
+    local = ClusterEngine("fused", bounds=False).seed(jax.random.PRNGKey(1),
+                                                      pts, 8)
+    assert np.isfinite(np.asarray(res.centroids)).all()
+    # same data, same tile geometry: the mesh run's total potential matches
+    # the ungated local run's at the same quality level (different sampler)
+    assert float(quality.inertia(pts, res.centroids)) < \
+        5 * float(quality.inertia(pts, local.centroids))
+
+
+@pytest.mark.parametrize("backend", ["fused", "pallas"])
+def test_bf16_streaming_quality_parity(backend):
+    """precision='bf16' halves the streamed bytes; seeds stay valid (taken
+    from the full-precision points) and the Lloyd inertia lands within a
+    few percent of fp32 on the paper's blob config."""
+    pts = _points(n=4096, d=2, k=16, seed=12)
+    key = jax.random.PRNGKey(2)
+    f32 = ClusterEngine(backend)
+    b16 = ClusterEngine(backend, precision="bf16")
+    s32 = f32.seed(key, pts, 16)
+    s16 = b16.seed(key, pts, 16)
+    idx = np.asarray(s16.indices)
+    assert ((0 <= idx) & (idx < 4096)).all()
+    # seed centroids are gathered from the fp32 array even when streaming bf16
+    np.testing.assert_array_equal(
+        np.asarray(s16.centroids),
+        np.asarray(pts[jnp.asarray(idx)]))
+    phi32 = float(f32.fit(pts, s32.centroids, max_iters=25).inertia)
+    phi16 = float(b16.fit(pts, s32.centroids, max_iters=25).inertia)
+    assert abs(phi16 - phi32) / phi32 < 0.15, (phi16, phi32)
+
+
+def test_bf16_fit_streams_bf16_points():
+    """The bf16 fit must actually stream bf16 tiles: its jaxpr carries a
+    bf16 (n, d) operand into the while-loop body."""
+    from repro.core import engine as eng_mod
+    pts = jnp.zeros((512, 4), jnp.float32)
+    cents = jnp.zeros((4, 4), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda p, c: eng_mod.fit_points(p, c, None, FusedBackend(), 5, 1e-6,
+                                        "keep", "bf16"))(pts, cents)
+    assert "bf16" in str(jaxpr.jaxpr)
+
+
+# ---------------------------------------------------------------------------
+# norms computed once per call, not once per round (jaxpr pin)
+# ---------------------------------------------------------------------------
+
+def _point_norm_reductions(jaxpr, n, d):
+    """reduce_sum eqns that look like a ||x||^2 row-norm over point rows:
+    2-D operand with trailing dim d and a leading dim much larger than k /
+    n_tiles — catches both the full (n, d) jnp form and the Pallas kernels'
+    per-tile (block_n, d) form."""
+    out = []
+    for eqn in _iter_eqns(jaxpr):
+        if eqn.primitive.name != "reduce_sum":
+            continue
+        shape = eqn.invars[0].aval.shape
+        if len(shape) == 2 and shape[1] == d and shape[0] >= 1024:
+            out.append(shape)
+    return out
+
+
+def _loop_bodies(jaxpr):
+    for eqn in _iter_eqns(jaxpr):
+        if eqn.primitive.name in ("while", "scan"):
+            for v in eqn.params.values():
+                for sub in jax.tree_util.tree_leaves(
+                        v, is_leaf=lambda x: isinstance(
+                            x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                    if isinstance(sub, jax.core.ClosedJaxpr):
+                        yield sub.jaxpr
+                    elif isinstance(sub, jax.core.Jaxpr):
+                        yield sub
+
+
+@pytest.mark.parametrize("backend", [FusedBackend(), PallasBackend()])
+def test_seed_computes_point_norms_once_per_call(backend):
+    """Acceptance: ||x||^2 appears in the seed jaxpr OUTSIDE the round loop
+    (the prologue) and never inside the loop body — norm caching drops d
+    FLOPs/point/round."""
+    from repro.core import engine as eng_mod
+    n, d = 16384, 2
+    pts = jnp.zeros((n, d), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    jaxpr = jax.make_jaxpr(
+        lambda kk, pp: eng_mod.seed_points(kk, pp, 4, None, backend))(key,
+                                                                     pts)
+    assert _point_norm_reductions(jaxpr.jaxpr, n, d), \
+        "prologue must compute the row norms"
+    for body in _loop_bodies(jaxpr.jaxpr):
+        assert not _point_norm_reductions(body, n, d), \
+            "round loop must NOT recompute ||x||^2"
+
+
+@pytest.mark.parametrize("backend", [FusedBackend(), PallasBackend()])
+def test_fit_computes_point_norms_once_per_call(backend):
+    from repro.core import engine as eng_mod
+    n, d = 16384, 2
+    pts = jnp.zeros((n, d), jnp.float32)
+    cents = jnp.zeros((8, d), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda pp, cc: eng_mod.fit_points(pp, cc, None, backend, 5, 1e-6))(
+        pts, cents)
+    assert _point_norm_reductions(jaxpr.jaxpr, n, d)
+    for body in _loop_bodies(jaxpr.jaxpr):
+        assert not _point_norm_reductions(body, n, d), \
+            "Lloyd loop must NOT recompute ||x||^2"
+
+
+# ---------------------------------------------------------------------------
 # kernel block-size selection (satellite: pick_block_n call-site clamp)
 # ---------------------------------------------------------------------------
 

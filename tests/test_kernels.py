@@ -1,12 +1,17 @@
 """Pallas kernel tests: interpret-mode execution swept over shapes/dtypes,
-assert_allclose against the pure-jnp oracles in kernels/ref.py."""
+assert_allclose against the pure-jnp oracles in kernels/ref.py, plus
+BITWISE pins between the plain and bound-gated kernel paths (tile skipping
+is exact) and between single and batch-grid launches."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import bounds
 from repro.kernels import ops, ref
-from repro.kernels.kmeans_distance import distance_min_update_pallas
+from repro.kernels.kmeans_distance import (distance_min_update_gated_pallas,
+                                           distance_min_update_pallas,
+                                           seed_prologue_pallas)
 from repro.kernels.lloyd_assign import lloyd_assign_pallas
 
 
@@ -34,7 +39,8 @@ SHAPES = [  # (n, d, k_new, block_n) — ragged edges, tiny dims, big tiles
 def test_distance_min_update_matches_ref(n, d, k, block_n, dtype):
     pts, cents, md = _mk(n, d, k, dtype)
     got_md, partials = distance_min_update_pallas(
-        pts, cents, md, block_n=block_n, interpret=True)
+        pts, ops.point_norms(pts), cents, md, block_n=block_n,
+        resident=True, interpret=True)
     want_md, want_total = ref.distance_min_update_ref(pts, cents, md)
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(got_md), np.asarray(want_md),
@@ -47,11 +53,27 @@ def test_distance_min_update_matches_ref(n, d, k, block_n, dtype):
 def test_distance_kernel_resident_vs_streamed(resident):
     """Constant-memory analogue (resident) and global analogue agree exactly."""
     pts, cents, md = _mk(777, 16, 1, jnp.float32)
-    got_md, _ = distance_min_update_pallas(pts, cents, md, block_n=128,
+    got_md, _ = distance_min_update_pallas(pts, ops.point_norms(pts), cents,
+                                           md, block_n=128,
                                            resident=resident, interpret=True)
     want_md, _ = ref.distance_min_update_ref(pts, cents, md)
     np.testing.assert_allclose(np.asarray(got_md), np.asarray(want_md),
                                rtol=1e-5, atol=1e-6)
+
+
+def test_raw_kernels_require_explicit_interpret():
+    """`ops` is the single place the interpret default lives: the raw kernel
+    entry points must refuse to run without an explicit choice (silently
+    interpreting on a real TPU was the failure mode)."""
+    pts, cents, md = _mk(128, 2, 1, jnp.float32)
+    nrm = ops.point_norms(pts)
+    with pytest.raises(TypeError):
+        distance_min_update_pallas(pts, nrm, cents, md, block_n=128,
+                                   resident=True)
+    with pytest.raises(TypeError):
+        lloyd_assign_pallas(pts, nrm, cents, block_n=128)
+    with pytest.raises(TypeError):
+        seed_prologue_pallas(pts, block_n=128)
 
 
 ASSIGN_SHAPES = [
@@ -66,7 +88,8 @@ ASSIGN_SHAPES = [
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_lloyd_assign_matches_ref(n, d, k, block_n, dtype):
     pts, cents, _ = _mk(n, d, k, dtype, seed=3)
-    a, md, sums, counts = lloyd_assign_pallas(pts, cents, block_n=block_n,
+    a, md, sums, counts = lloyd_assign_pallas(pts, ops.point_norms(pts),
+                                              cents, block_n=block_n,
                                               interpret=True)
     a_ref, md_ref, sums_ref, counts_ref = ref.lloyd_assign_ref(pts, cents)
     tol = 1e-5 if dtype == jnp.float32 else 5e-2
@@ -112,12 +135,14 @@ def test_distance_min_update_batched_matches_per_problem(B, n, d, k, block_n):
     pts = jax.random.normal(jax.random.PRNGKey(0), (B, n, d))
     cents = jax.random.normal(jax.random.PRNGKey(1), (B, k, d))
     md = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (B, n))) * 4
+    nrm = jax.vmap(ops.point_norms)(pts)
     got_md, got_p = distance_min_update_batched_pallas(
-        pts, cents, md, block_n=block_n, interpret=True)
+        pts, nrm, cents, md, block_n=block_n, interpret=True)
     assert got_p.shape == (B, -(-n // block_n))
     for b in range(B):
         want_md, want_p = distance_min_update_pallas(
-            pts[b], cents[b], md[b], block_n=block_n, interpret=True)
+            pts[b], nrm[b], cents[b], md[b], block_n=block_n,
+            resident=True, interpret=True)
         # row b of the batch-grid launch is bitwise the single-problem kernel
         np.testing.assert_array_equal(np.asarray(got_md[b]),
                                       np.asarray(want_md))
@@ -131,10 +156,11 @@ def test_lloyd_assign_batched_matches_per_problem(B, n, d, k, block_n):
     k = max(k, 2)
     pts = jax.random.normal(jax.random.PRNGKey(3), (B, n, d))
     cents = jax.random.normal(jax.random.PRNGKey(4), (B, k, d))
+    nrm = jax.vmap(ops.point_norms)(pts)
     a, md, sums, counts = lloyd_assign_batched_pallas(
-        pts, cents, block_n=block_n, interpret=True)
+        pts, nrm, cents, block_n=block_n, interpret=True)
     for b in range(B):
-        a1, md1, s1, c1 = lloyd_assign_pallas(pts[b], cents[b],
+        a1, md1, s1, c1 = lloyd_assign_pallas(pts[b], nrm[b], cents[b],
                                               block_n=block_n, interpret=True)
         np.testing.assert_array_equal(np.asarray(a[b]), np.asarray(a1))
         np.testing.assert_array_equal(np.asarray(md[b]), np.asarray(md1))
@@ -178,6 +204,176 @@ def test_pick_block_n_batched_accounting():
     for d, k in ((2, 8), (64, 256), (512, 1024), (4096, 256)):
         assert ops.pick_block_n(d, k, batched=True) <= ops.pick_block_n(d, k)
         assert ops.pick_block_n(d, k, batched=True) >= 128
+
+
+def test_pick_block_n_accounts_norms_and_bound_state():
+    """The VMEM accounting must include the cached-norms input block and the
+    bound-state buffers: for a given budget the pick with those terms can
+    never exceed a hand-computed pick WITHOUT them, and at large d the
+    norms term visibly matters (it scales with bn)."""
+    budget = ops._VMEM_BUDGET
+    for d, k in ((2, 8), (64, 256), (512, 1024), (4096, 256)):
+        bn = ops.pick_block_n(d, k)
+        # re-derive the working set at the returned pick: it must fit, and
+        # doubling the tile must NOT fit (maximality) unless capped
+        def working(b, dtype_bytes=4):
+            w = dtype_bytes * (2 * b * d + k * d + b * k + 4 * b)
+            w += 4 * 2 * b              # cached-norms block (fp32, 2 buffers)
+            w += 4 * (k * d + k + 8)    # accumulators + partial
+            w += 4 * 2 * 4              # bound-state scalar blocks
+            return w
+        assert working(bn) <= budget or bn == 128
+        if bn < 4096:
+            assert working(2 * bn) > budget
+
+
+def test_pick_block_n_bf16_half_width_stream():
+    """dtype_bytes=2 budgets the bf16 streaming blocks: the half-width point
+    tile can only grow the pick, never shrink it (the fp32 norms block and
+    accumulators are precision-independent)."""
+    assert ops.pick_block_n(2, 8, dtype_bytes=2) == 4096
+    for d, k in ((64, 256), (512, 1024), (4096, 256), (8192, 512)):
+        bf16 = ops.pick_block_n(d, k, dtype_bytes=2)
+        fp32 = ops.pick_block_n(d, k)
+        assert bf16 >= fp32, (d, k, bf16, fp32)
+    # at least one big-d shape must actually benefit from the half width
+    assert any(ops.pick_block_n(d, 256, dtype_bytes=2)
+               > ops.pick_block_n(d, 256) for d in (2048, 4096, 8192))
+
+
+# ---------------------------------------------------------------------------
+# prologue kernel + bound-gated kernels (exact tile skipping)
+# ---------------------------------------------------------------------------
+
+
+def test_prologue_kernel_matches_jnp():
+    """The fused prologue kernel's norms are BITWISE the jnp row norms (the
+    reference/fused backends' cache), and the tile geometry matches the pure
+    model tightly."""
+    pts, _, _ = _mk(1000, 5, 1, jnp.float32, seed=7)
+    norms, centers, radii = seed_prologue_pallas(pts, block_n=256,
+                                                 interpret=True)
+    cache = bounds.prologue(pts, 256)
+    np.testing.assert_array_equal(np.asarray(norms), np.asarray(cache.norms))
+    np.testing.assert_allclose(np.asarray(centers), np.asarray(cache.centers),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(radii), np.asarray(cache.radii),
+                               rtol=1e-6, atol=1e-7)
+
+
+def _gated_setup(n=1000, d=3, block_n=128, seed=0):
+    pts, _, md = _mk(n, d, 1, jnp.float32, seed=seed)
+    nrm = ops.point_norms(pts)
+    grid = -(-n // block_n)
+    pp0 = jnp.zeros((grid,), jnp.float32)
+    tm0 = jnp.full((grid,), jnp.inf, jnp.float32)
+    return pts, md, nrm, grid, pp0, tm0
+
+
+@pytest.mark.parametrize("n,block_n", [(1000, 128), (512, 128), (100, 128)])
+def test_gated_all_active_bitwise_equals_plain(n, block_n):
+    """With every tile active the gated kernel IS the plain kernel, bitwise
+    (same md, same partials), plus the per-tile max bound state."""
+    pts, md, nrm, grid, pp0, tm0 = _gated_setup(n=n, block_n=block_n)
+    cents = jax.random.normal(jax.random.PRNGKey(5), (1, pts.shape[1]))
+    active = jnp.ones((grid,), bool)
+    g_md, g_p, g_tm, skipped = ops.distance_min_update_gated(
+        pts, cents, md, nrm, pp0, tm0, active, block_n=block_n)
+    p_md, p_p = ops.distance_min_update(pts, cents, md, norms=nrm,
+                                        block_n=block_n)
+    np.testing.assert_array_equal(np.asarray(g_md), np.asarray(p_md))
+    np.testing.assert_array_equal(np.asarray(g_p), np.asarray(p_p))
+    np.testing.assert_array_equal(
+        np.asarray(g_tm), np.asarray(bounds.tile_reduce_max(p_md, block_n)))
+    assert int(skipped) == 0
+
+
+def test_gated_skipping_is_bitwise_exact():
+    """Acceptance pin: a round that skips tiles produces BITWISE the plain
+    kernel's outputs — min_d2, partials AND tile_max — because the bound is
+    a sufficient condition and skipped tiles alias their prior state."""
+    pts, md0, nrm, grid, pp0, tm0 = _gated_setup(n=1024, d=2, block_n=128)
+    cache = bounds.RoundCache(nrm, *seed_prologue_pallas(
+        pts, block_n=128, interpret=True)[1:])
+    # round 1: everything active, fills the bound state
+    c1 = pts[3:4]
+    a1 = bounds.active_tiles(c1, cache, tm0)
+    md1, p1, tm1, _ = ops.distance_min_update_gated(
+        pts, c1, md0, nrm, pp0, tm0, a1, block_n=128)
+    # round 2: a far-away centroid — most tiles provably cannot change
+    c2 = jnp.full((1, 2), 50.0)
+    a2 = bounds.active_tiles(c2, cache, tm1)
+    assert int(jnp.sum(a2)) < grid, "probe must actually skip tiles"
+    md2, p2, tm2, skipped = ops.distance_min_update_gated(
+        pts, c2, md1, nrm, p1, tm1, a2, block_n=128)
+    # one tile is always computed (compact_ids' write-back guard)
+    assert int(skipped) == grid - max(int(jnp.sum(a2)), 1) > 0
+    want_md, want_p = ops.distance_min_update(pts, c2, md1, norms=nrm,
+                                              block_n=128)
+    np.testing.assert_array_equal(np.asarray(md2), np.asarray(want_md))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(want_p))
+    np.testing.assert_array_equal(
+        np.asarray(tm2), np.asarray(bounds.tile_reduce_max(want_md, 128)))
+
+
+def test_gated_batched_matches_single():
+    """vmap over the gated wrapper lowers to the batch-grid gated kernel and
+    row b is bitwise the single-problem gated kernel on problem b (including
+    per-problem skip counts)."""
+    B, n, d, bn = 3, 512, 2, 128
+    keys = jax.random.split(jax.random.PRNGKey(8), 3)
+    pts = jax.random.normal(keys[0], (B, n, d))
+    cents = jnp.stack([jnp.full((1, d), 30.0 * b) for b in range(B)])
+    md = jnp.abs(jax.random.normal(keys[1], (B, n))) * 2
+    nrm = jax.vmap(ops.point_norms)(pts)
+    grid = -(-n // bn)
+    pp = jnp.abs(jax.random.normal(keys[2], (B, grid)))
+    tm = jnp.abs(jax.random.normal(jax.random.fold_in(keys[2], 1), (B, grid)))
+    # a mix of active/inactive tiles per problem
+    active = jnp.arange(grid)[None, :] % (jnp.arange(B)[:, None] + 2) == 0
+    out = jax.vmap(lambda p, c, m, nr, a, b_pp, b_tm:
+                   ops.distance_min_update_gated(p, c, m, nr, b_pp, b_tm, a,
+                                                 block_n=bn))(
+        pts, cents, md, nrm, active, pp, tm)
+    for b in range(B):
+        s = ops.distance_min_update_gated(pts[b], cents[b], md[b], nrm[b],
+                                          pp[b], tm[b], active[b],
+                                          block_n=bn)
+        np.testing.assert_array_equal(np.asarray(out[0][b]), np.asarray(s[0]))
+        np.testing.assert_array_equal(np.asarray(out[1][b]), np.asarray(s[1]))
+        np.testing.assert_array_equal(np.asarray(out[2][b]), np.asarray(s[2]))
+        assert int(out[3][b]) == int(s[3])
+
+
+# ---------------------------------------------------------------------------
+# argmin tie-breaking parity (duplicate centroids, e.g. after empty='reseed')
+# ---------------------------------------------------------------------------
+
+
+def test_argmin_tie_break_parity_across_paths():
+    """Duplicate centroids produce exact distance ties; every assignment path
+    (oracle, pallas single, pallas batch-grid, blocked-XLA) must resolve them
+    to the SAME (lowest) index — tile skipping and reseeding both rely on
+    deterministic ties."""
+    from repro.core.engine import (FusedBackend, PallasBackend,
+                                   ReferenceBackend, assign_blocked)
+    pts, _, _ = _mk(600, 4, 1, jnp.float32, seed=13)
+    base = jax.random.normal(jax.random.PRNGKey(14), (3, 4))
+    cents = jnp.concatenate([base, base[1:2], base[0:1]])  # dup rows 1 and 0
+    a_ref, _, _, _ = ref.lloyd_assign_ref(pts, cents)
+    assert int(jnp.max(a_ref)) <= 2, "ties must resolve to the first copy"
+    a_pal, _, _, _ = ops.lloyd_assign(pts, cents)
+    np.testing.assert_array_equal(np.asarray(a_pal), np.asarray(a_ref))
+    a_blk, _ = assign_blocked(pts, cents)
+    np.testing.assert_array_equal(np.asarray(a_blk), np.asarray(a_ref))
+    bpts = jnp.stack([pts, pts[::-1]])
+    bc = jnp.stack([cents, cents])
+    a_b, _, _, _ = jax.vmap(lambda p, c: ops.lloyd_assign(p, c))(bpts, bc)
+    np.testing.assert_array_equal(np.asarray(a_b[0]), np.asarray(a_ref))
+    for be in (ReferenceBackend(), FusedBackend(), PallasBackend()):
+        a_e, _, _, _ = be.assign_update(pts, cents, None)
+        np.testing.assert_array_equal(np.asarray(a_e), np.asarray(a_ref),
+                                      err_msg=be.name)
 
 
 def test_kernel_inside_seeding_loop():
