@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import SMOKE, emit
-from repro.core import kmeans_parallel_init, quality, random_init
+from repro.core import kmeans_parallel_init, quality, random_init  # noqa: F401
 from repro.core.engine import ClusterEngine
 from repro.data.synthetic import blobs
 
@@ -52,6 +52,29 @@ def run(rows: list):
                      "phi_after_lloyd": f"{sum(phi_final)/REPEATS:.1f}"})
 
 
+def run_minibatch(rows: list):
+    """Streaming mini-batch rows: bf16 streaming now covers the mini-batch
+    path too — its inertia drift vs the fp32 stream is the pinned quality
+    claim (the tier-1 test bounds the same drift at 15%)."""
+    import numpy as np
+    pts = jnp.asarray(blobs(N, D, K, seed=1)[0])
+    np_pts = np.asarray(pts)
+    batch = 512
+
+    def read_fn(step):
+        lo = (step * batch) % N
+        return np_pts[lo:lo + batch]
+
+    seeds = ENGINE.seed(jax.random.PRNGKey(3), pts[:batch], K).centroids
+    n_batches = 16 if SMOKE else 64
+    for method, eng in (("minibatch-fp32", ENGINE), ("minibatch-bf16", BF16)):
+        mb = eng.fit_minibatch(seeds, read_fn, n_batches=n_batches)
+        rows.append({"bench": "quality_parity", "method": method,
+                     "phi_seed": f"{float(quality.inertia(pts, seeds)):.1f}",
+                     "phi_after_lloyd":
+                         f"{float(quality.inertia(pts, mb.centroids)):.1f}"})
+
+
 def run_integrations(rows: list):
     if SMOKE:  # the PQ/router integrations are minutes-scale; skip in smoke
         return
@@ -84,6 +107,7 @@ def run_integrations(rows: list):
 def main():
     rows = []
     run(rows)
+    run_minibatch(rows)
     run_integrations(rows)
     emit(rows, ["bench", "method", "phi_seed", "phi_after_lloyd"])
 

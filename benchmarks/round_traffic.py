@@ -1,5 +1,6 @@
 """Round-kernel traffic trajectory — what the bound-gated, mixed-precision
-round kernels actually save (ISSUE 3 tentpole).
+round kernels actually save (ISSUE 3 tentpole; ISSUE 4 adds the ``fit``
+section for the bounded Lloyd assignment round).
 
 Three columns per seeding run:
 
@@ -16,8 +17,15 @@ Three columns per seeding run:
                   win is a bandwidth effect, so expect parity on this CPU
                   host and ~2x on the round-kernel fraction on TPU).
 
+The ``fit_traffic`` / ``fit_skip_vs_iter`` rows track the ASSIGNMENT round
+(the Lloyd hot path): per-iteration skip rate of the movement-bound gate on
+label-sorted vs shuffled vs Morton-ordered rows, and the modelled bytes per
+iteration of the gated assignment kernel.
+
 Data is label-sorted blobs: tile-level pruning needs spatially coherent
-tiles (Capó et al.) — the unsorted control row shows skip_rate ~= 0.
+tiles (Capó et al.) — the unsorted control row shows skip_rate ~= 0, and
+the `morton` row shows how much `repro.data.ordering` recovers without
+labels.
 
 Emits BENCH_round.json via REPRO_BENCH_OUT; benchmarks/BENCH_round.json is
 the checked-in smoke-mode baseline tracking the trajectory across PRs."""
@@ -101,16 +109,99 @@ def run_skip_vs_round(rows: list):
         })
 
 
+# the fit section uses well-separated high-d blobs (the regime where the
+# movement bound pays) at enough tiles that blob interiors get their own
+# tiles; the seeding section above keeps the paper's d=2
+D_FIT, K_FIT = 8, 16
+N_FIT = 2 ** 16 if SMOKE else 2 ** 17
+N_FIT_PALLAS = N_FIT if jax.default_backend() == "tpu" else min(N_FIT, 2 ** 14)
+FIT_ITERS = 6 if SMOKE else 10
+
+
+def fit_bytes(n: int, skip_rate: float, dtype_bytes: int) -> int:
+    """Modelled HBM bytes of ONE gated assignment iteration at the engine
+    tile height: per ACTIVE tile the kernel streams the point block (stream
+    dtype) + the fp32 cached-norms block in and writes the assignment/min_d2
+    blocks, the per-tile cluster sums/counts block and the partial/gap
+    scalars out. The aliased prev_* carries live in ANY memory space — no
+    per-step DMA — and skipped tiles move nothing."""
+    bn = choose_block_n(n, D_FIT, K_FIT, batched=True)
+    n_tiles = -(-n // bn)
+    active = round(n_tiles * (1.0 - skip_rate))
+    per_tile = (bn * (D_FIT * dtype_bytes + 4)      # points + norms in
+                + bn * (4 + 4)                      # assign/md out
+                + 4 * (K_FIT * D_FIT + K_FIT)       # tile sums/counts out
+                + 2 * 4)                            # partial/gap scalars
+    return active * per_tile
+
+
+def _fit_layouts(n: int):
+    pts, labels = blobs(n, D_FIT, K_FIT, seed=0)
+    coherent = jnp.asarray(pts[np.argsort(labels, kind="stable")])
+    shuffled = jnp.asarray(pts)
+    return (("coherent", coherent, None), ("shuffled", shuffled, None),
+            ("morton", shuffled, "morton"))
+
+
+def run_fit(rows: list):
+    """Assignment-round trajectory: the movement-bound gate's skip rate and
+    modelled bytes/iteration, ordered vs shuffled vs Morton-ordered."""
+    key = jax.random.PRNGKey(2)
+    for backend, n in (("fused", N_FIT), ("pallas", N_FIT_PALLAS)):
+        eng = ClusterEngine(backend)
+        n_tiles = -(-n // eng.backend.seed_tile(n, D_FIT, K_FIT))
+        for layout, pts, order in _fit_layouts(n):
+            seeds = eng.seed(key, pts, K_FIT).centroids
+            res = eng.fit(pts, seeds, max_iters=FIT_ITERS, tol=-1.0,
+                          order=order)
+            skips = np.asarray(res.skipped, np.float64) / n_tiles
+            t = time_fn(lambda: jax.block_until_ready(
+                eng.fit(pts, seeds, max_iters=FIT_ITERS, tol=-1.0,
+                        order=order).centroids), iters=3)
+            rows.append({
+                "bench": "fit_traffic", "backend": backend,
+                "layout": layout, "precision": "fp32", "n": n,
+                "rounds": FIT_ITERS,
+                "skip_rate_mean": round(float(skips.mean()), 4),
+                "skip_rate_last": round(float(skips[-3:].mean()), 4),
+                "bytes_per_round": fit_bytes(n, float(skips.mean()), 4),
+                "seconds": round(t, 6),
+            })
+
+
+def run_fit_skip_vs_iter(rows: list):
+    """The per-iteration trajectory on label-sorted blobs (the acceptance
+    column: >= 50% of assignment tiles skipped by iteration 3)."""
+    eng = ClusterEngine("fused")
+    layout, pts, _ = _fit_layouts(N_FIT)[0]
+    seeds = eng.seed(jax.random.PRNGKey(3), pts, K_FIT).centroids
+    res = eng.fit(pts, seeds, max_iters=FIT_ITERS, tol=-1.0)
+    n_tiles = -(-N_FIT // eng.backend.seed_tile(N_FIT, D_FIT, K_FIT))
+    for it, s in enumerate(np.asarray(res.skipped)):
+        rows.append({
+            "bench": "fit_skip_vs_iter", "backend": "fused",
+            "layout": layout, "precision": "fp32", "n": N_FIT, "rounds": it,
+            "skip_rate_mean": round(float(s) / n_tiles, 4),
+            "skip_rate_last": "",
+            "bytes_per_round": fit_bytes(N_FIT, float(s) / n_tiles, 4),
+            "seconds": "",
+        })
+
+
 def main():
     rows: list = []
     run(rows)
     run_skip_vs_round(rows)
+    run_fit(rows)
+    run_fit_skip_vs_iter(rows)
     header = ["bench", "backend", "layout", "precision", "n", "rounds",
               "skip_rate_mean", "skip_rate_last", "bytes_per_round",
               "seconds"]
     emit(rows, header)
     write_json("round", {
         "meta": {"smoke": SMOKE, "N": N, "D": D, "K": K, "seeds": SEEDS,
+                 "n_fit": N_FIT, "d_fit": D_FIT, "k_fit": K_FIT,
+                 "fit_iters": FIT_ITERS,
                  "jax_backend": jax.default_backend()},
         "rows": rows,
     })

@@ -1,8 +1,10 @@
-"""Exact per-tile bound state for the seeding round (Raff 2021 / Capó 2018).
+"""Exact per-tile bound state shared by the SEEDING and ASSIGNMENT rounds
+(Raff 2021 / Capó 2018).
 
-A seeding round folds the new centroid(s) ``c_new`` into every point's D².
-A point x can only improve when ``d(x, c) < d(x, nearest-so-far)``, so by the
-triangle inequality a whole *tile* of points provably cannot change when
+Seeding bound. A seeding round folds the new centroid(s) ``c_new`` into every
+point's D². A point x can only improve when ``d(x, c) < d(x,
+nearest-so-far)``, so by the triangle inequality a whole *tile* of points
+provably cannot change when
 
     d(center_t, c) - r_t  >=  sqrt(max_{x in tile} min_d2[x])
 
@@ -15,14 +17,29 @@ composes unchanged. Capó et al. motivate this granularity: block-level — not
 per-point — pruning is what pays at massive n, and the tile is exactly the
 unit the ``SeedRound`` partials machinery already tracks.
 
-The bound is evaluated in fp32, so a small conservative ``_SLACK`` keeps
-rounding from ever skipping a tile the exact-arithmetic bound would keep
-(erring toward "compute it" never changes results, only saves less).
+Assignment (Lloyd) bound. Between iterations every centroid moves by
+``delta_j = ‖c_j^{t+1} − c_j^t‖``. For a point x assigned to j0 with
+second-best margin ``gap(x) = d(x, c_2nd) − d(x, c_j0)``, no label can change
+as long as ``gap(x) >= delta_j0 + max_j delta_j`` (its own centroid ran away
+by at most delta_j0, the best challenger closed by at most max delta). The
+tile-level state carries ``tile_gap = min_x gap(x)``. Skipping a tile keeps
+the carried assignment AND the carried ``min_d2``/per-cluster sums bitwise
+exact only when the centroids the tile is assigned to did not move at all —
+so the gate additionally requires ``delta_j == 0`` for every cluster the
+tile's carried counts mark as occupied (near convergence most clusters stop
+moving bitwise, which is exactly when the assignment round becomes pure
+re-verification). A skipped tile's carried gap is decayed by that
+iteration's ``max_j delta_j`` (:func:`decay_gap`), which keeps it a valid
+lower bound across consecutive skips.
+
+The bounds are evaluated in fp32, so small conservative slacks keep rounding
+from ever skipping a tile the exact-arithmetic bound would keep (erring
+toward "compute it" never changes results, only saves less).
 
 This module is pure jnp: the reference/fused backends use it directly (the
 skip logic is therefore covered by the distribution/parity tests), and the
-Pallas backend uses :func:`active_tiles` to build the compacted active-tile
-index map its gated kernel prefetches.
+Pallas backend uses :func:`active_tiles` / :func:`assign_active_tiles` to
+build the compacted active-tile index maps its gated kernels prefetch.
 """
 from __future__ import annotations
 
@@ -44,6 +61,12 @@ import jax.numpy as jnp
 # skip rate).
 _REL = 1e-6
 _ABS = 1e-5
+# Distance-unit analogue of _ABS for the ASSIGNMENT gate: the per-point gap
+# is a difference of square roots of matmul-form d2 values, and near-zero
+# distances turn the absolute d2 error into ~sqrt(_ABS) of distance error —
+# so the gap margin scales sqrt(_ABS)-sized head-room by the tile's
+# distance-unit operand magnitude.
+_ABS_GAP = 4e-3
 
 
 class RoundCache(NamedTuple):
@@ -61,12 +84,36 @@ class RoundCache(NamedTuple):
     radii: Optional[jax.Array] = None      # (n_tiles,) fp32 ball radii
 
 
-class RoundState(NamedTuple):
-    """Loop-carried bound state: the previous round's per-tile partial sums
-    (reused verbatim for skipped tiles) and per-tile max of ``min_d2``."""
+class BoundState(NamedTuple):
+    """Loop-carried bound state, unified across the two round primitives.
 
-    partials: jax.Array                    # (n_tiles,) fp32
-    tile_max: jax.Array                    # (n_tiles,) fp32
+    The SEEDING loop carries ``(partials, tile_max)``: the previous round's
+    per-tile partial sums (reused verbatim for skipped tiles) and per-tile
+    max of ``min_d2`` (the skip bound's RHS).
+
+    The ASSIGNMENT (Lloyd) loop carries ``(partials, tile_gap, tile_sums,
+    tile_counts, assignment, min_d2)``: per-tile inertia partials, the
+    per-tile second-best margin (in DISTANCE units — the movement bound's
+    LHS), the per-tile per-cluster sums/counts whose tile-axis reduction is
+    the centroid update, and the per-point labels/D² that skipped tiles
+    carry verbatim (the gated kernel's aliased buffers). The per-tile ball
+    geometry both gates compare against lives in the once-per-call
+    :class:`RoundCache`; the movement ``delta_j`` is derived each iteration
+    from the loop's own consecutive centroids. Fields a loop does not use
+    stay ``None`` (they are pytree-static).
+    """
+
+    partials: jax.Array                        # (n_tiles,) fp32
+    tile_max: Optional[jax.Array] = None       # (n_tiles,) fp32 (seeding)
+    tile_gap: Optional[jax.Array] = None       # (n_tiles,) fp32 (assignment)
+    tile_sums: Optional[jax.Array] = None      # (n_tiles, k, d) fp32
+    tile_counts: Optional[jax.Array] = None    # (n_tiles, k) fp32
+    assignment: Optional[jax.Array] = None     # (n,) int32 (assignment)
+    min_d2: Optional[jax.Array] = None         # (n,) fp32 (assignment)
+
+
+# historical name (PR 3's seeding-only state) — same type, seed-field layout
+RoundState = BoundState
 
 
 def point_norms(points: jax.Array) -> jax.Array:
@@ -150,6 +197,58 @@ def tile_reduce_max(x: jax.Array, block_n: int) -> jax.Array:
     pad = (-n) % block_n
     xp = x if pad == 0 else jnp.pad(x, (0, pad))
     return xp.reshape(-1, block_n).max(axis=1)
+
+
+def centroid_movement(new_c: jax.Array, old_c: jax.Array) -> jax.Array:
+    """(k,) fp32 ``delta_j = ‖c_j^{t+1} − c_j^t‖`` — the assignment bound's
+    per-centroid movement. Exactly zero iff the centroid did not move (a
+    bitwise fixed point), which is the extra condition that makes skipping
+    an assignment tile carry its ``min_d2`` exactly."""
+    diff = new_c.astype(jnp.float32) - old_c.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+
+def assign_active_tiles(delta: jax.Array, centroids: jax.Array,
+                        state: BoundState, cache: RoundCache) -> jax.Array:
+    """(n_tiles,) bool — True where an ASSIGNMENT tile might change labels.
+
+    Tile t is skipped only when BOTH hold:
+
+    * ``tile_gap_t >= delta_max`` (with the conservative fp32 margin): by
+      the movement bound no point's runner-up can overtake its assigned
+      centroid, so no label in the tile can change; and
+    * every cluster the tile's carried counts mark occupied has
+      ``delta_j == 0``: the assigned centroids are bitwise where they were
+      when the tile last computed, so the carried ``min_d2``/partial/sums
+      are bitwise what a recompute against the new centroids would produce
+      (the matmul-form d2 of row j is elementwise in c_j).
+
+    The fp32 slack mirrors :func:`active_tiles`: the gap was computed from
+    matmul-form d2 whose cancellation error is ABSOLUTE in the operand
+    magnitude, and the sqrt step can turn that into ~sqrt(eps)·magnitude of
+    distance error near zero, so the margin scales ``_ABS_GAP`` by the
+    tile's distance-unit magnitude (never skips a tile exact arithmetic
+    would keep — rounding only prunes less)."""
+    dmax = jnp.max(delta)
+    occupied = state.tile_counts > 0.0                      # (n_tiles, k)
+    moved = jnp.any(occupied & (delta[None, :] > 0.0), axis=1)
+    c = centroids.astype(jnp.float32)
+    cmax = jnp.sqrt(jnp.max(jnp.sum(c * c, axis=-1)))
+    scale = jnp.sqrt(jnp.sum(cache.centers * cache.centers, axis=1)) \
+        + cache.radii + cmax                                # distance units
+    skip = jnp.logical_and(
+        state.tile_gap >= dmax * (1.0 + _REL) + _ABS_GAP * scale,
+        jnp.logical_not(moved))
+    return jnp.logical_not(skip)
+
+
+def decay_gap(gap: jax.Array, active: jax.Array, fresh_gap: jax.Array,
+              delta_max: jax.Array) -> jax.Array:
+    """Next iteration's carried gap: fresh for computed tiles, carried-minus-
+    movement for skipped ones (each step's ``max_j delta_j`` shrinks every
+    stale margin, so a gap refreshed at iteration r stays a valid lower
+    bound after any number of consecutive skips)."""
+    return jnp.where(active, fresh_gap, gap - delta_max)
 
 
 def compact_ids(active: jax.Array) -> tuple[jax.Array, jax.Array]:

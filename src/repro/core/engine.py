@@ -20,17 +20,26 @@ A ``Backend`` provides exactly two round primitives:
       ``cache`` is the per-call prologue (`core.bounds.RoundCache`: fp32
       ``||x||^2`` norms so no round recomputes them, plus tile
       centroid-balls); ``state`` is the loop-carried bound state
-      (`RoundState(partials, tile_max)`). With both present the round SKIPS
+      (`BoundState(partials, tile_max)`). With both present the round SKIPS
       every tile the triangle-inequality bound proves unchanged — exactly
       (fp32 results are bitwise identical, skipped tiles reuse their prior
       partials) — and reports the skipped-tile count.
 
-  assign_update(points, centroids, weights, norms=)
-      -> (assignment, min_d2, sums, counts)
+  assign_update(points, centroids, weights, norms=, cache=, state=, delta=)
+      -> AssignRound(assignment, min_d2, sums, counts, state, skipped)
       One Lloyd half-step: nearest-centroid assignment plus per-cluster
       (weighted) partial sums and counts — everything the centroid update
       needs, in one pass. ``norms`` is the cached fp32 ``||x||^2`` (computed
-      once per fit, not once per iteration).
+      once per fit, not once per iteration). The fit loop threads ``cache``
+      and ``state`` exactly like ``seed_round`` does: with ``cache`` the
+      round runs the TILED form (per-tile inertia partials, second-best
+      gaps, per-cluster sums/counts — one shared reduction tree across the
+      gated and ungated paths), and with ``state`` + ``delta`` (the
+      per-centroid movement ``‖c_j^{t+1} − c_j^t‖``) it additionally SKIPS
+      every tile the movement bound proves cannot change — exactly (fp32
+      results are bitwise identical to the ungated path; see
+      ``core.bounds``). ``AssignRound.state`` is the fully-updated
+      ``BoundState`` for the next iteration (stale gaps already decayed).
 
 plus ``prologue(points, m=, with_bounds=)`` — the once-per-call pass that
 builds the RoundCache (the Pallas backend fuses it into one streaming
@@ -58,7 +67,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import bounds, collectives, sampling
-from repro.core.bounds import RoundCache, RoundState
+from repro.core.bounds import BoundState, RoundCache
 
 # ---------------------------------------------------------------------------
 # result contracts + distance helpers
@@ -85,9 +94,27 @@ class SeedRound(NamedTuple):
 
 class LloydResult(NamedTuple):
     centroids: jax.Array      # (k, d) — (B, k, d) for batched problems
-    assignment: jax.Array     # (n,) int32
+    assignment: jax.Array     # (n,) int32 — ALWAYS in the caller's row order
+                              # (reordered fits invert the permutation)
     inertia: jax.Array        # () sum of squared distances to assigned centroid
     n_iters: jax.Array        # () int32
+    skipped: Optional[jax.Array] = None  # (max_iters,) int32 assignment tiles
+                                         # skipped per iteration (None when
+                                         # bound gating is off / weighted)
+    reorder: Optional[jax.Array] = None  # (n,) int32 row permutation the
+                                         # kernels saw (None = natural order)
+                                         # — provenance for pruning audits
+
+
+class AssignRound(NamedTuple):
+    """One Lloyd half-step's outputs (the extended assign_update contract)."""
+    assignment: jax.Array     # (n,) int32
+    min_d2: jax.Array         # (n,) D^2 to the assigned centroid
+    sums: jax.Array           # (k, d) per-cluster (weighted) sums
+    counts: jax.Array         # (k,) per-cluster (weighted) counts
+    state: Optional[BoundState] = None   # next iteration's bound state
+                                         # (None on the legacy/weighted path)
+    skipped: Union[jax.Array, int] = 0   # () tiles skipped this iteration
 
 
 def pairwise_d2(x: jax.Array, c: jax.Array) -> jax.Array:
@@ -209,7 +236,7 @@ def reseed_split_largest(means: jax.Array, counts: jax.Array, *,
 
 
 def _gate_model(new_md_full, min_d2, weights, c_new, cache: RoundCache,
-                state: RoundState, tile: int) -> SeedRound:
+                state: BoundState, tile: int) -> SeedRound:
     """Pure-JAX model of the gated kernel, shared by the reference and fused
     backends: tiles the bound proves unchanged take their ``min_d2`` slice
     and partial/tile-max entries from the CARRIED state instead of the fresh
@@ -235,6 +262,32 @@ def _gate_model(new_md_full, min_d2, weights, c_new, cache: RoundCache,
     return SeedRound(md, jnp.sum(partials), partials, tile_max, skipped)
 
 
+def _assign_tiled_model(points, centroids, norms, tile):
+    """Pure-JAX twin of `lloyd_assign_tiled_pallas`, shared by the reference
+    and fused backends: `jax.lax.map` over point tiles of the SAME per-tile
+    assignment math the kernel runs (`kernels.lloyd_assign._tile_assign`),
+    so the per-tile partial/gap/sums/counts trees agree and the gate model's
+    selects are value-noops in fp32. Returns (assignment, min_d2, partials,
+    gaps, tile_sums, tile_counts)."""
+    from repro.kernels.lloyd_assign import _tile_assign
+
+    n, d = points.shape
+    pad = (-n) % tile
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
+    valid = jnp.arange(n + pad) < n
+    cents = centroids.astype(points.dtype)
+
+    def blk(args):
+        x, xn, vld = args
+        return _tile_assign(x, xn, cents, vld)
+
+    a, m, part, gap, tsums, tcounts = jax.lax.map(
+        blk, (pts.reshape(-1, tile, d), nrm.reshape(-1, tile),
+              valid.reshape(-1, tile)))
+    return (a.reshape(-1)[:n], m.reshape(-1)[:n], part, gap, tsums, tcounts)
+
+
 @dataclasses.dataclass(frozen=True)
 class Backend:
     """Round-primitive provider. Frozen/hashable: instances are jit-static."""
@@ -244,11 +297,61 @@ class Backend:
 
     def seed_round(self, points, c_new, min_d2, weights, *,
                    cache: Optional[RoundCache] = None,
-                   state: Optional[RoundState] = None) -> "SeedRound":
+                   state: Optional[BoundState] = None) -> "SeedRound":
         raise NotImplementedError
 
-    def assign_update(self, points, centroids, weights, norms=None):
+    def assign_update(self, points, centroids, weights, norms=None, *,
+                      cache: Optional[RoundCache] = None,
+                      state: Optional[BoundState] = None,
+                      delta: Optional[jax.Array] = None) -> "AssignRound":
+        """One Lloyd half-step. Without ``cache`` this is the legacy path
+        (global accumulators, no bound machinery). With ``cache`` the round
+        runs the TILED form; with ``state`` + ``delta`` it additionally
+        gates on the movement bound (exact tile skipping)."""
+        if cache is None:
+            a, md, sums, counts = self._assign_plain(points, centroids,
+                                                     weights, norms)
+            return AssignRound(a, md, sums, counts)
+        return self._assign_tiled(points, centroids,
+                                  cache.norms if norms is None else norms,
+                                  cache, state, delta)
+
+    def _assign_plain(self, points, centroids, weights, norms=None):
         raise NotImplementedError
+
+    def _assign_tiled(self, points, centroids, norms, cache, state,
+                      delta) -> "AssignRound":
+        """Shared pure-JAX tiled/gated assignment round (Pallas overrides
+        with its kernels). Tiles the movement bound proves unchanged take
+        ALL their outputs from the carried state — exactly what the gated
+        kernel's aliased outputs do — which is a value-noop in fp32 because
+        skipping additionally requires the tile's assigned centroids to be
+        bitwise unmoved (see core.bounds.assign_active_tiles)."""
+        n, d = points.shape
+        tile = self.seed_tile(n, d, centroids.shape[0])
+        a, md, part, gap, tsums, tcounts = _assign_tiled_model(
+            points, centroids, norms, tile)
+        skipped = jnp.zeros((), jnp.int32)
+        if (state is not None and delta is not None
+                and cache.centers is not None):
+            active = bounds.assign_active_tiles(delta, centroids, state,
+                                                cache)
+            act_pt = bounds.expand_mask(active, tile, n)
+            a = jnp.where(act_pt, a, state.assignment)
+            md = jnp.where(act_pt, md, state.min_d2)
+            part = jnp.where(active, part, state.partials)
+            gap = bounds.decay_gap(state.tile_gap, active, gap,
+                                   jnp.max(delta))
+            tsums = jnp.where(active[:, None, None], tsums, state.tile_sums)
+            tcounts = jnp.where(active[:, None], tcounts, state.tile_counts)
+            # floor at one computed tile, mirroring compact_ids' write-back
+            # guard in the gated kernel, so model/kernel counters agree
+            skipped = jnp.minimum(jnp.sum(jnp.logical_not(active)),
+                                  active.shape[0] - 1).astype(jnp.int32)
+        new_state = BoundState(part, tile_gap=gap, tile_sums=tsums,
+                               tile_counts=tcounts, assignment=a, min_d2=md)
+        return AssignRound(a, md, jnp.sum(tsums, axis=0),
+                           jnp.sum(tcounts, axis=0), new_state, skipped)
 
     def prologue(self, points, m: int = 1,
                  with_bounds: bool = True) -> RoundCache:
@@ -333,7 +436,7 @@ class ReferenceBackend(Backend):
         return SeedRound(new_md, jnp.sum(w),
                          self._partials(new_md, weights, n, d, m))
 
-    def assign_update(self, points, centroids, weights, norms=None):
+    def _assign_plain(self, points, centroids, weights, norms=None):
         d2 = pairwise_d2(points.astype(jnp.float32),
                          centroids.astype(jnp.float32))
         a = jnp.argmin(d2, axis=1).astype(jnp.int32)
@@ -363,7 +466,7 @@ class FusedBackend(Backend):
         partials = self._partials(new_md, weights, n, d, m)
         return SeedRound(new_md, jnp.sum(partials), partials)
 
-    def assign_update(self, points, centroids, weights, norms=None):
+    def _assign_plain(self, points, centroids, weights, norms=None):
         a, md = assign_blocked(points, centroids, block=self.block,
                                norms=norms)
         sums, counts = segment_update(points, a, centroids.shape[0], weights)
@@ -421,7 +524,7 @@ class PallasBackend(Backend):
                              bounds.tile_reduce_max(min_d2, tile))
         return SeedRound(min_d2, jnp.sum(partials), partials)
 
-    def assign_update(self, points, centroids, weights, norms=None):
+    def _assign_plain(self, points, centroids, weights, norms=None):
         from repro.kernels import ops as kops
         a, md, sums, counts = kops.lloyd_assign(points, centroids,
                                                 norms=norms)
@@ -429,6 +532,32 @@ class PallasBackend(Backend):
             sums, counts = segment_update(points, a, centroids.shape[0],
                                           weights)
         return a, md, sums, counts
+
+    def _assign_tiled(self, points, centroids, norms, cache, state, delta):
+        from repro.kernels import ops as kops
+        n, d = points.shape
+        tile = self.seed_tile(n, d, centroids.shape[0])
+        if (state is not None and delta is not None
+                and cache.centers is not None):
+            active = bounds.assign_active_tiles(delta, centroids, state,
+                                                cache)
+            a, md, part, gap, tsums, tcounts, skipped = \
+                kops.lloyd_assign_gated(
+                    points, centroids, norms, state.assignment, state.min_d2,
+                    state.partials, state.tile_gap, state.tile_sums,
+                    state.tile_counts, active, block_n=tile)
+            # kernel gap output: fresh for computed tiles, the ALIASED carry
+            # for skipped ones — decay the latter by this step's movement so
+            # it stays a valid lower bound across consecutive skips
+            gap = bounds.decay_gap(gap, active, gap, jnp.max(delta))
+        else:
+            a, md, part, gap, tsums, tcounts = kops.lloyd_assign_tiled(
+                points, centroids, norms=norms, block_n=tile)
+            skipped = jnp.zeros((), jnp.int32)
+        new_state = BoundState(part, tile_gap=gap, tile_sums=tsums,
+                               tile_counts=tcounts, assignment=a, min_d2=md)
+        return AssignRound(a, md, jnp.sum(tsums, axis=0),
+                           jnp.sum(tcounts, axis=0), new_state, skipped)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -465,12 +594,17 @@ class MeshBackend(Backend):
                  with_bounds: bool = True) -> RoundCache:
         return self.local.prologue(points, m, with_bounds)
 
-    def assign_update(self, points, centroids, weights, norms=None):
-        a, md, sums, counts = self.local.assign_update(points, centroids,
-                                                       weights, norms)
-        sums = jax.lax.psum(sums, self.axes)      # O(k*d) per iteration
-        counts = jax.lax.psum(counts, self.axes)  # O(k)
-        return a, md, sums, counts
+    def assign_update(self, points, centroids, weights, norms=None, *,
+                      cache=None, state=None, delta=None):
+        rnd = self.local.assign_update(points, centroids, weights, norms,
+                                       cache=cache, state=state, delta=delta)
+        # the per-tile bound state stays SHARD-LOCAL; only the O(k*d)
+        # accumulators and the O(1) skip counter cross the mesh
+        sums = jax.lax.psum(rnd.sums, self.axes)      # O(k*d) per iteration
+        counts = jax.lax.psum(rnd.counts, self.axes)  # O(k)
+        skipped = (jax.lax.psum(rnd.skipped, self.axes)
+                   if cache is not None else rnd.skipped)
+        return rnd._replace(sums=sums, counts=counts, skipped=skipped)
 
     def allreduce(self, x):
         return jax.lax.psum(x, self.axes)
@@ -524,7 +658,7 @@ def make_backend(name: Union[str, Backend], **opts) -> Backend:
 
 
 def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
-               init_min_d2, init_state: Optional[RoundState] = None):
+               init_min_d2, init_state: Optional[BoundState] = None):
     """Generic k-means++ loop. The four hooks are the only difference between
     the single-device and the shard_map execution; the loop structure (and its
     PRNG key schedule) is shared so all backends pick identical seeds.
@@ -560,7 +694,7 @@ def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
             centroids, take_fn(nxt), m, 0)
         indices = indices.at[m].set(nxt)
         state = (None if state is None
-                 else RoundState(rnd.partials, rnd.tile_max))
+                 else BoundState(rnd.partials, rnd.tile_max))
         return key, centroids, indices, min_d2, state, skips
 
     key, centroids, indices, min_d2, state, skips = jax.lax.fori_loop(
@@ -615,7 +749,7 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     tile = backend.seed_tile(n, d)
     if bound_gate:
         n_tiles = -(-n // tile)
-        init_state = RoundState(jnp.zeros((n_tiles,), jnp.float32),
+        init_state = BoundState(jnp.zeros((n_tiles,), jnp.float32),
                                 jnp.full((n_tiles,), jnp.inf, jnp.float32))
     else:
         init_state = None
@@ -623,6 +757,14 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     if w is None:
         def first_fn(k0):
             return jax.random.randint(k0, (), 0, n, dtype=jnp.int32)
+    elif sampler == "tiled":
+        # first seed weighted by point weights (k-means|| reduce step): keep
+        # the sub-O(n) property — two-level draw over the weights' own tile
+        # partials instead of a full-n cumsum
+        def first_fn(k0):
+            return sampling.categorical_tiled(
+                k0, w, sampling.tile_partials(w, tile),
+                block_n=tile).astype(jnp.int32)
     else:  # first seed weighted by point weights (k-means|| reduce step)
         def first_fn(k0):
             return sampling.categorical(k0, w, method="cdf").astype(jnp.int32)
@@ -675,7 +817,7 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
         tile = backend.seed_tile(n_local, d)
         if bound_gate:
             n_tiles = -(-n_local // tile)
-            init_state = RoundState(
+            init_state = BoundState(
                 collectives.pvary(jnp.zeros((n_tiles,), jnp.float32), axes),
                 collectives.pvary(jnp.full((n_tiles,), jnp.inf, jnp.float32),
                                   axes))
@@ -719,49 +861,106 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
 
 
 def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
-              empty: str = "keep", precision: str = "fp32"):
+              empty: str = "keep", precision: str = "fp32",
+              bound_gate: bool = True):
     """Lloyd iterations until the relative inertia improvement falls below
     `tol` or `max_iters` is hit. The k-means potential is monotonically
     non-increasing — a property test asserts this — except under
     empty='reseed', where a reseeded centroid may transiently raise it before
     splitting the donor cluster pays off.
 
-    ``||x||^2`` is computed ONCE here (norm caching) and streamed into every
-    iteration's assign_update; with precision='bf16' the iterations stream
-    bf16 points/centroids while the norms, per-cluster accumulators and the
-    centroid carry stay fp32."""
+    The prologue runs ONCE here: cached fp32 ``||x||^2`` (norm caching — no
+    iteration recomputes it) plus, under ``bound_gate``, the tile
+    centroid-balls. Unweighted fits run the TILED assignment round (per-tile
+    inertia partials and per-tile cluster sums/counts, reduced over the tile
+    axis — the one reduction tree the gated and ungated paths share), and
+    with ``bound_gate`` the loop threads a `BoundState` through every
+    ``assign_update`` exactly like the seeding loop threads its round state:
+    each iteration derives the per-centroid movement ``delta`` and SKIPS
+    every tile the movement bound proves unchanged — exactly (fp32 results
+    are bitwise identical to bound_gate=False). With precision='bf16' the
+    iterations stream bf16 points/centroids while the norms, per-cluster
+    accumulators, bound state and the centroid carry stay fp32.
+
+    Returns (centroids, assignment, inertia, n_iters, skips) — ``skips`` is
+    the (max_iters,) per-iteration skipped-tile counts, or None when the
+    gate is off or the fit is weighted (the legacy accumulated path)."""
     k = init_centroids.shape[0]
+    n, d = pts.shape
     stream = _stream_of(pts, precision)
-    norms = bounds.point_norms(pts)     # once per fit, NOT once per iteration
+    tiled = w is None
+    if tiled:
+        cache = backend.prologue(pts, m=k, with_bounds=bound_gate)
+        norms = cache.norms             # once per fit, NOT once per iteration
+    else:
+        cache = None
+        norms = bounds.point_norms(pts)
 
     def cond(state):
-        i, _, prev_inertia, inertia, _ = state
+        i, _, prev_inertia, inertia = state[0], state[1], state[2], state[3]
         rel = (prev_inertia - inertia) / jnp.maximum(prev_inertia, 1e-30)
         return jnp.logical_and(i < max_iters,
                                jnp.logical_or(i < 2, rel > tol))
 
-    def body(state):
-        i, cents, _, inertia, _ = state
-        a, m, sums, counts = backend.assign_update(
-            stream, cents.astype(stream.dtype), w, norms)
-        mw = m if w is None else m * w
-        new_inertia = backend.allreduce(jnp.sum(mw))
-        new_cents = centroid_means(sums, counts, cents)
-        if empty == "reseed":
-            new_cents = reseed_split_largest(new_cents, counts)
-        return i + 1, new_cents, inertia, new_inertia, a
+    if tiled and bound_gate:
+        tile = backend.seed_tile(n, d, k)
+        n_tiles = -(-n // tile)
+        pv = backend.pvary
+        init_state = BoundState(
+            pv(jnp.zeros((n_tiles,), jnp.float32)),
+            tile_gap=pv(jnp.full((n_tiles,), -jnp.inf, jnp.float32)),
+            tile_sums=pv(jnp.zeros((n_tiles, k, d), jnp.float32)),
+            tile_counts=pv(jnp.zeros((n_tiles, k), jnp.float32)),
+            assignment=pv(jnp.zeros((n,), jnp.int32)),
+            min_d2=pv(jnp.zeros((n,), jnp.float32)))
 
-    n = pts.shape[0]
+        def body(state):
+            i, cents, _, inertia, prev_cents, bstate, skips = state
+            delta = bounds.centroid_movement(cents, prev_cents)
+            rnd = backend.assign_update(stream, cents.astype(stream.dtype),
+                                        None, norms, cache=cache,
+                                        state=bstate, delta=delta)
+            new_inertia = backend.allreduce(jnp.sum(rnd.state.partials))
+            new_cents = centroid_means(rnd.sums, rnd.counts, cents)
+            if empty == "reseed":
+                new_cents = reseed_split_largest(new_cents, rnd.counts)
+            skips = skips.at[i].set(rnd.skipped)
+            return (i + 1, new_cents, inertia, new_inertia, cents,
+                    rnd.state, skips)
+
+        init = (jnp.zeros((), jnp.int32),
+                init_centroids.astype(jnp.float32), jnp.inf, jnp.inf,
+                init_centroids.astype(jnp.float32), init_state,
+                jnp.zeros((max_iters,), jnp.int32))
+        i, cents, _, inertia, _, bstate, skips = jax.lax.while_loop(
+            cond, body, init)
+        return cents, bstate.assignment, inertia, i, skips
+
+    def body(state):
+        i, cents, _, inertia, a = state
+        rnd = backend.assign_update(stream, cents.astype(stream.dtype), w,
+                                    norms, cache=cache)
+        if tiled:
+            new_inertia = backend.allreduce(jnp.sum(rnd.state.partials))
+        else:
+            mw = rnd.min_d2 if w is None else rnd.min_d2 * w
+            new_inertia = backend.allreduce(jnp.sum(mw))
+        new_cents = centroid_means(rnd.sums, rnd.counts, cents)
+        if empty == "reseed":
+            new_cents = reseed_split_largest(new_cents, rnd.counts)
+        return i + 1, new_cents, inertia, new_inertia, rnd.assignment
+
     init = (jnp.zeros((), jnp.int32), init_centroids.astype(jnp.float32),
             jnp.inf, jnp.inf, backend.pvary(jnp.zeros((n,), jnp.int32)))
     i, cents, _, inertia, a = jax.lax.while_loop(cond, body, init)
-    return cents, a, inertia, i
+    return cents, a, inertia, i, None
 
 
 def fit_points(points: jax.Array, init_centroids: jax.Array,
                weights: Optional[jax.Array], backend: Backend,
                max_iters: int, tol: float, empty: str = "keep",
-               precision: str = "fp32") -> LloydResult:
+               precision: str = "fp32",
+               bound_gate: bool = True) -> LloydResult:
     """Lloyd clustering through `backend` (untraced core). `empty` picks the
     empty-cluster policy: 'keep' (previous centroid survives) or 'reseed'
     (split the largest cluster — see reseed_split_largest)."""
@@ -770,37 +969,40 @@ def fit_points(points: jax.Array, init_centroids: jax.Array,
                          "expected 'keep' or 'reseed'")
     if backend.distributed:
         return _fit_mesh(points, init_centroids, weights, backend,
-                         max_iters, tol, empty, precision)
-    cents, a, inertia, i = _fit_loop(points, init_centroids, weights,
-                                     backend, max_iters, tol, empty,
-                                     precision)
-    return LloydResult(cents.astype(points.dtype), a, inertia, i)
+                         max_iters, tol, empty, precision, bound_gate)
+    cents, a, inertia, i, skips = _fit_loop(points, init_centroids, weights,
+                                            backend, max_iters, tol, empty,
+                                            precision, bound_gate)
+    return LloydResult(cents.astype(points.dtype), a, inertia, i, skips)
 
 
 def _fit_mesh(points, init_centroids, weights, backend: MeshBackend,
-              max_iters, tol, empty: str = "keep",
-              precision: str = "fp32") -> LloydResult:
+              max_iters, tol, empty: str = "keep", precision: str = "fp32",
+              bound_gate: bool = True) -> LloydResult:
     axes = backend.axes
+    gated = weights is None and bound_gate
 
     if weights is None:
         def local_fn(pp, cc):
             return _fit_loop(pp.astype(jnp.float32), cc, None, backend,
-                             max_iters, tol, empty, precision)
+                             max_iters, tol, empty, precision, bound_gate)
         in_specs = (P(axes), P())
         args = (points, init_centroids)
     else:
         def local_fn(pp, cc, ww):
             return _fit_loop(pp.astype(jnp.float32), cc, ww, backend,
-                             max_iters, tol, empty, precision)
+                             max_iters, tol, empty, precision, bound_gate)
         in_specs = (P(axes), P(), P(axes))
         args = (points, init_centroids, weights)
 
+    del gated  # the skips leaf is replicated when present, absent otherwise;
+    #            P() is a valid prefix spec for the empty (None) subtree too
     mapped = collectives.shard_map(
         local_fn, mesh=backend.mesh,
         in_specs=in_specs,
-        out_specs=(P(), P(axes), P(), P()))
-    cents, a, inertia, i = mapped(*args)
-    return LloydResult(cents.astype(points.dtype), a, inertia, i)
+        out_specs=(P(), P(axes), P(), P(), P()))
+    cents, a, inertia, i, skips = mapped(*args)
+    return LloydResult(cents.astype(points.dtype), a, inertia, i, skips)
 
 
 # ---------------------------------------------------------------------------
@@ -808,21 +1010,30 @@ def _fit_mesh(points, init_centroids, weights, backend: MeshBackend,
 # ---------------------------------------------------------------------------
 
 
-def minibatch_step(cents, counts, batch, backend: Backend):
+def minibatch_step(cents, counts, batch, backend: Backend,
+                   precision: str = "fp32"):
     """One mini-batch Lloyd step (Sculley 2010, batch form): per-center counts
     give each center a 1/t-decaying learning rate, so centers converge to the
     running mean of every point ever assigned to them.
 
         c_j <- c_j + eta_j * (batch_mean_j - c_j),  eta_j = m_j / (N_j + m_j)
-    """
-    a, md, sums, bcounts = backend.assign_update(batch, cents, None)
+
+    With precision='bf16' the batch streams through the SAME half-width
+    tile path as full fit (bf16 points/centroids into the MXU, fp32 norms
+    computed per batch, fp32 accumulators and fp32 centroid carry)."""
+    pts = batch.astype(jnp.promote_types(batch.dtype, jnp.float32))
+    stream = _stream_of(pts, precision)
+    norms = bounds.point_norms(pts)
+    rnd = backend.assign_update(stream, cents.astype(stream.dtype), None,
+                                norms)
+    bcounts = rnd.counts
     new_counts = counts + bcounts
     eta = jnp.where(new_counts > 0,
                     bcounts / jnp.maximum(new_counts, 1.0), 0.0)
-    bmeans = sums / jnp.maximum(bcounts, 1e-12)[:, None]
+    bmeans = rnd.sums / jnp.maximum(bcounts, 1e-12)[:, None]
     new_cents = jnp.where((bcounts > 0)[:, None],
                           cents + eta[:, None] * (bmeans - cents), cents)
-    return new_cents, new_counts, jnp.sum(md), a
+    return new_cents, new_counts, jnp.sum(rnd.min_d2), rnd.assignment
 
 
 BatchSource = Union[Iterable, Callable[[int], "jax.typing.ArrayLike"]]
@@ -875,16 +1086,16 @@ def _seed_jit(key, points, weights, k, backend, sampler, precision,
 
 @functools.partial(jax.jit,
                    static_argnames=("backend", "max_iters", "tol", "empty",
-                                    "precision"))
+                                    "precision", "bound_gate"))
 def _fit_jit(points, init_centroids, weights, backend, max_iters, tol, empty,
-             precision):
+             precision, bound_gate):
     return fit_points(points, init_centroids, weights, backend,
-                      max_iters, tol, empty, precision)
+                      max_iters, tol, empty, precision, bound_gate)
 
 
-@functools.partial(jax.jit, static_argnames=("backend",))
-def _minibatch_jit(cents, counts, batch, backend):
-    return minibatch_step(cents, counts, batch, backend)
+@functools.partial(jax.jit, static_argnames=("backend", "precision"))
+def _minibatch_jit(cents, counts, batch, backend, precision):
+    return minibatch_step(cents, counts, batch, backend, precision)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "backend", "sampler",
@@ -900,12 +1111,12 @@ def _seed_batched_jit(keys, points, k, backend, sampler, precision,
 
 @functools.partial(jax.jit,
                    static_argnames=("backend", "max_iters", "tol", "empty",
-                                    "precision"))
+                                    "precision", "bound_gate"))
 def _fit_batched_jit(points, init_centroids, backend, max_iters, tol, empty,
-                     precision):
+                     precision, bound_gate):
     return jax.vmap(
         lambda pp, cc: fit_points(pp, cc, None, backend, max_iters, tol,
-                                  empty, precision)
+                                  empty, precision, bound_gate)
     )(points, init_centroids)
 
 
@@ -964,25 +1175,84 @@ class ClusterEngine:
         return _seed_jit(key, points, weights, k, self.backend, sampler,
                          self.precision, self.bounds)
 
+    def _resolve_order(self, points: jax.Array, order):
+        """order: None (natural), an ordering name ('morton' — see
+        repro.data.ordering), or a precomputed (n,) permutation array.
+        Returns (perm, inv) or (None, None)."""
+        if order is None:
+            return None, None
+        from repro.data import ordering
+        if isinstance(order, str):
+            return ordering.spatial_order(points, method=order)
+        perm = jnp.asarray(order)
+        return perm, ordering.inverse_permutation(perm)
+
+    def _order_in(self, points, order, weights=None, *, batched=False):
+        """Permute-on-entry half of the ordering plumbing (shared by fit /
+        kmeans / fit_batched / kmeans_batched): returns
+        (points', weights', perm, inv)."""
+        perm, inv = (self._resolve_order_batched(points, order) if batched
+                     else self._resolve_order(points, order))
+        if perm is not None:
+            if batched:
+                points = jnp.take_along_axis(points, perm[..., None], axis=1)
+            else:
+                points = jnp.take(points, perm, axis=0)
+                if weights is not None:
+                    weights = jnp.take(weights, perm, axis=0)
+        return points, weights, perm, inv
+
+    @staticmethod
+    def _order_out(res: LloydResult, perm, inv, *,
+                   batched: bool = False) -> LloydResult:
+        """Invert-on-exit half: assignment back to the caller's row order,
+        permutation recorded as provenance."""
+        if perm is None:
+            return res
+        if batched:
+            a = jnp.take_along_axis(res.assignment, inv, axis=1)
+        else:
+            a = jnp.take(res.assignment, inv)
+        return res._replace(assignment=a, reorder=perm)
+
     # -- full-batch Lloyd -------------------------------------------------
     def fit(self, points: jax.Array, init_centroids: jax.Array, *,
             max_iters: int = 50, tol: float = 1e-6,
             weights: Optional[jax.Array] = None,
-            empty: str = "keep") -> LloydResult:
+            empty: str = "keep", order=None) -> LloydResult:
         """Lloyd iterations from `init_centroids` until convergence.
 
         empty: what happens to clusters that lose all their points — 'keep'
         (previous centroid survives, the default) or 'reseed' (each empty
         centroid jumps to a nudged copy of the largest cluster's centroid and
-        splits it on the next iteration)."""
-        return _fit_jit(points, init_centroids, weights, self.backend,
-                        max_iters, float(tol), empty, self.precision)
+        splits it on the next iteration).
+
+        order: feed the kernels a tile-coherent row layout — None (natural
+        order), 'morton' (Z-order curve over the coordinates), or a
+        precomputed (n,) permutation (e.g. repro.data.ordering's
+        label_sort_order). The permutation is applied on the way in and
+        INVERTED on the way out, so `assignment` is always in the caller's
+        row order; the permutation used is recorded in
+        ``LloydResult.reorder`` for pruning audits. Spatial coherence is
+        what makes the movement-bound tile gate fire (see docs/engine.md
+        "Bounded assignment")."""
+        points, weights, perm, inv = self._order_in(points, order, weights)
+        res = _fit_jit(points, init_centroids, weights, self.backend,
+                       max_iters, float(tol), empty, self.precision,
+                       self.bounds)
+        return self._order_out(res, perm, inv)
 
     def kmeans(self, key: jax.Array, points: jax.Array, k: int, *,
                init: str = "kmeans++", max_iters: int = 50, tol: float = 1e-6,
                sampler: str = "cdf", empty: str = "keep",
-               weights: Optional[jax.Array] = None) -> LloydResult:
-        """End-to-end: seeding (the paper's phase) + Lloyd clustering."""
+               weights: Optional[jax.Array] = None,
+               order=None) -> LloydResult:
+        """End-to-end: seeding (the paper's phase) + Lloyd clustering.
+        ``order`` reorders the rows ONCE up front (see `fit`): both the
+        seeding scan and every Lloyd iteration then see the tile-coherent
+        layout, and the returned assignment is mapped back to the caller's
+        row order."""
+        points, weights, perm, inv = self._order_in(points, order, weights)
         if init == "kmeans++":
             seeds = self.seed(key, points, k, weights=weights,
                               sampler=sampler).centroids
@@ -998,13 +1268,15 @@ class ClusterEngine:
             seeds = random_init(key, points, k).centroids
         else:
             raise ValueError(f"unknown init {init!r}")
-        return self.fit(points, seeds, max_iters=max_iters, tol=tol,
-                        weights=weights, empty=empty)
+        res = self.fit(points, seeds, max_iters=max_iters, tol=tol,
+                       weights=weights, empty=empty)
+        return self._order_out(res, perm, inv)
 
     # -- streaming mini-batch Lloyd ---------------------------------------
     def fit_minibatch(self, init_centroids: jax.Array, batches: BatchSource,
                       *, n_batches: Optional[int] = None,
-                      tol: float = 0.0, patience: int = 5) -> LloydResult:
+                      tol: float = 0.0, patience: int = 5,
+                      order=None) -> LloydResult:
         """Streaming mini-batch k-means over fixed-size batches.
 
         `batches` can be a ``read_fn(step) -> (b, d) array`` (driven through a
@@ -1013,6 +1285,18 @@ class ClusterEngine:
         1/t-decaying learning rate (Sculley 2010), so the result converges to
         the same fixed points as full-batch Lloyd without ever holding the
         dataset in device memory.
+
+        The engine's ``precision`` applies per batch: with 'bf16' each batch
+        streams through the same half-width tile path as full fit (fp32
+        norms/accumulators/centroid carry). ``order='morton'`` Z-orders each
+        batch before its step; the final batch's assignment is mapped back
+        to the batch's own row order. NOTE: the mini-batch step has no
+        loop-carried bound state (every batch is fresh points, so there is
+        no previous iteration for a movement bound to compare against) —
+        today the per-batch ordering is layout plumbing only, costing one
+        argsort per batch; it becomes load-bearing if a gated/tiled
+        mini-batch round lands. Prefer ordering the BATCH SOURCE itself
+        (e.g. persist label-sorted shards) over this knob.
 
         Early stop: if `tol` > 0, stops after `patience` consecutive batches
         whose smoothed per-point inertia improves by less than `tol`
@@ -1030,10 +1314,14 @@ class ClusterEngine:
         seen = 0
         ema = None
         stale = 0
+        inv = None
         last_inertia = jnp.asarray(jnp.inf, jnp.float32)
         for batch in _iter_batches(batches, n_batches):
+            perm, inv = self._resolve_order(batch, order)
+            if perm is not None:
+                batch = jnp.take(batch, perm, axis=0)
             cents, counts, last_inertia, a = _minibatch_jit(
-                cents, counts, batch, self.backend)
+                cents, counts, batch, self.backend, self.precision)
             seen += 1
             if tol > 0.0:
                 per_point = float(last_inertia) / max(batch.shape[0], 1)
@@ -1048,6 +1336,8 @@ class ClusterEngine:
                     stale = 0
         if seen == 0:
             raise ValueError("empty batch source")
+        if inv is not None:
+            a = jnp.take(a, inv, axis=0)
         init_dtype = jnp.asarray(init_centroids).dtype
         return LloydResult(cents.astype(init_dtype), a, last_inertia,
                            jnp.asarray(seen, jnp.int32))
@@ -1077,25 +1367,46 @@ class ClusterEngine:
         return _seed_batched_jit(keys, points, k, self.backend, sampler,
                                  self.precision, self.bounds)
 
+    def _resolve_order_batched(self, points: jax.Array, order):
+        """Per-problem (B, n) permutations for batched fits."""
+        if order is None:
+            return None, None
+        from repro.data import ordering
+        if isinstance(order, str):
+            return jax.vmap(
+                lambda p: ordering.spatial_order(p, method=order))(points)
+        perm = jnp.asarray(order)
+        return perm, jax.vmap(ordering.inverse_permutation)(perm)
+
     def fit_batched(self, points: jax.Array, init_centroids: jax.Array, *,
                     max_iters: int = 50, tol: float = 1e-6,
-                    empty: str = "keep") -> LloydResult:
+                    empty: str = "keep", order=None) -> LloydResult:
         """Lloyd over B independent problems: points (B, n, d), inits
         (B, k, d) -> LloydResult of (B, ...) leaves. One compiled vmap call;
         iteration stops when EVERY problem has converged (n_iters is shared).
         On the pallas backend the vmap lowers to the batch-grid assign kernel
-        (one launch per iteration, every problem in the grid)."""
+        (one launch per iteration, every problem in the grid). ``order``
+        reorders each problem's rows independently (see `fit`); assignments
+        come back in the caller's row order with the (B, n) permutations in
+        ``LloydResult.reorder``."""
         if self.backend.distributed:
             raise NotImplementedError("use a local backend for batched "
                                       "problems (vmap inside each shard)")
-        return _fit_batched_jit(points, init_centroids, self.backend,
-                                max_iters, float(tol), empty, self.precision)
+        points, _, perm, inv = self._order_in(points, order, batched=True)
+        res = _fit_batched_jit(points, init_centroids, self.backend,
+                               max_iters, float(tol), empty, self.precision,
+                               self.bounds)
+        return self._order_out(res, perm, inv, batched=True)
 
     def kmeans_batched(self, key: jax.Array, points: jax.Array, k: int, *,
                        max_iters: int = 50, tol: float = 1e-6,
-                       sampler: str = "cdf",
-                       empty: str = "keep") -> LloydResult:
-        """seed_batched + fit_batched in sequence (both single compiled calls)."""
+                       sampler: str = "cdf", empty: str = "keep",
+                       order=None) -> LloydResult:
+        """seed_batched + fit_batched in sequence (both single compiled
+        calls). ``order`` reorders each problem ONCE up front so both phases
+        see the coherent layout; assignments map back to the caller's rows."""
+        points, _, perm, inv = self._order_in(points, order, batched=True)
         seeds = self.seed_batched(key, points, k, sampler=sampler)
-        return self.fit_batched(points, seeds.centroids, max_iters=max_iters,
-                                tol=tol, empty=empty)
+        res = self.fit_batched(points, seeds.centroids, max_iters=max_iters,
+                               tol=tol, empty=empty)
+        return self._order_out(res, perm, inv, batched=True)

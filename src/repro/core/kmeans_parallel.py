@@ -50,7 +50,7 @@ def kmeans_parallel_init(key: jax.Array, points: jax.Array, k: int, *,
     cands = jnp.zeros((n_cand, d), jnp.float32).at[0].set(pts[first])
     cand_idx = jnp.zeros((n_cand,), jnp.int32).at[0].set(first)
     min_d2 = point_d2(pts, pts[first])
-    state = bounds.RoundState(sampling.tile_partials(min_d2, tile),
+    state = bounds.BoundState(sampling.tile_partials(min_d2, tile),
                               bounds.tile_reduce_max(min_d2, tile))
 
     def body(r, carry):
@@ -64,18 +64,21 @@ def kmeans_parallel_init(key: jax.Array, points: jax.Array, k: int, *,
         # fold D² against all l new candidates in one multi-centroid round
         rnd = be.seed_round(pts, new_pts, min_d2, None, cache=cache,
                             state=state)
-        state = bounds.RoundState(rnd.partials, rnd.tile_max)
+        state = bounds.BoundState(rnd.partials, rnd.tile_max)
         return key, cands, cand_idx, rnd.min_d2, state
 
     key, cands, cand_idx, min_d2, _ = jax.lax.fori_loop(
         0, rounds, body, (key, cands, cand_idx, min_d2, state))
 
-    # weight each candidate by how many points it is closest to, then reduce the
-    # small weighted candidate set to k seeds with weighted k-means++.
+    # weight each candidate by how many points it is closest to, then reduce
+    # the small weighted candidate set to k seeds with weighted k-means++.
+    # The reduce draws with the TILED two-level sampler, so it stays
+    # O(candidates/bn + bn) per seed as l*rounds grows instead of re-scanning
+    # the full candidate set's cumsum every round.
     a = jnp.argmin(pairwise_d2(pts, cands), axis=1)
     w = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), a, num_segments=n_cand)
     key, kr = jax.random.split(key)
-    red = engine.seed_points(kr, cands, k, w, be, "cdf")
+    red = engine.seed_points(kr, cands, k, w, be, "tiled")
     final_idx = cand_idx[red.indices]
     final_min_d2 = jnp.min(pairwise_d2(pts, red.centroids), axis=1)
     return KmeansppResult(red.centroids.astype(points.dtype), final_idx,

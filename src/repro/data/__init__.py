@@ -1,7 +1,13 @@
-"""repro.data — synthetic sources, sharded pipeline, semantic dedup."""
+"""repro.data — synthetic sources, sharded pipeline, spatial orderings,
+semantic dedup."""
+from repro.data import ordering
+from repro.data.ordering import (inverse_permutation, label_sort_order,
+                                 morton_order, spatial_order)
 from repro.data.pipeline import DataPipeline, host_slice
 from repro.data.semdedup import DedupResult, semdedup
 from repro.data.synthetic import TokenStream, blobs, zipf_probs
 
 __all__ = ["DataPipeline", "host_slice", "DedupResult", "semdedup",
-           "TokenStream", "blobs", "zipf_probs"]
+           "TokenStream", "blobs", "zipf_probs", "ordering",
+           "inverse_permutation", "label_sort_order", "morton_order",
+           "spatial_order"]

@@ -1,0 +1,95 @@
+"""Spatial row orderings for tile-coherent clustering layouts.
+
+Tile-level bound gating (seeding's triangle-inequality gate and the Lloyd
+movement gate — see ``repro.core.bounds``) prunes whole point TILES, so it
+only fires when nearby rows are nearby in space: on shuffled rows every tile
+spans the whole dataset and nothing is provably unchangeable (skip rate ~0),
+while on coherent rows most tiles sit deep inside one cluster (up to ~75%
+of tiles skipped per round on label-sorted blobs). This module produces the
+permutations that manufacture that coherence:
+
+* :func:`morton_order` — Z-order (Morton) curve over quantized coordinates.
+  Needs no labels, O(n log n), and preserves locality well for moderate d
+  (the code interleaves ``32 // d`` bits per dimension; above ``_MAX_DIMS``
+  leading dimensions the extra coordinates are ignored — at that point a
+  space-filling curve no longer buys locality and :func:`label_sort_order`
+  is the right tool).
+* :func:`label_sort_order` — stable sort by a caller-supplied label array
+  (true blob labels, a previous fit's assignment, a coarse quantizer...).
+  The strongest coherence when labels exist; this is what production
+  pipelines should persist alongside re-clustered corpora.
+
+Every ordering returns ``(perm, inv)`` int32 arrays with
+``ordered = x[perm]`` and ``ordered[inv] == x``; the engine applies ``perm``
+on the way into a fit and ``inv`` on the way out, so callers always see
+results in their own row order (``LloydResult.reorder`` records the
+permutation for audit). Pure jnp — composes with jit/vmap (the batched
+engine paths vmap :func:`spatial_order` per problem).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_MAX_DIMS = 16   # morton interleaves at most this many leading dimensions
+
+
+def inverse_permutation(perm: jax.Array) -> jax.Array:
+    """inv with inv[perm[i]] = i — the scatter that undoes a gather."""
+    n = perm.shape[0]
+    return jnp.zeros((n,), jnp.int32).at[perm].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+def morton_code(points: jax.Array, *, bits: int | None = None) -> jax.Array:
+    """(n,) uint32 Z-order code: per-dimension min-max quantization to
+    ``bits`` bits, then bit interleaving (dimension-major). ``bits``
+    defaults to ``32 // d`` capped at 16 (16 for the paper's d=2; the cap
+    keeps the d=1 constant inside int32 range — fp32 coordinates cannot
+    resolve more than 16 bits of quantization anyway)."""
+    x = points.astype(jnp.float32)
+    d = min(x.shape[1], _MAX_DIMS)
+    x = x[:, :d]
+    if bits is None:
+        bits = max(1, 32 // d)
+    bits = max(1, min(bits, 32 // d, 16))
+    lo = jnp.min(x, axis=0)
+    span = jnp.maximum(jnp.max(x, axis=0) - lo, 1e-30)
+    q = ((x - lo) / span * ((1 << bits) - 1) + 0.5).astype(jnp.uint32)
+    code = jnp.zeros((x.shape[0],), jnp.uint32)
+    for b in range(bits):
+        for j in range(d):
+            bit = (q[:, j] >> jnp.uint32(b)) & jnp.uint32(1)
+            code = code | (bit << jnp.uint32(b * d + j))
+    return code
+
+
+def morton_order(points: jax.Array, *,
+                 bits: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """Morton/Z-order permutation: rows sorted by their Z-order code.
+    Returns (perm, inv) int32; ``points[perm]`` is tile-coherent."""
+    perm = jnp.argsort(morton_code(points, bits=bits),
+                       stable=True).astype(jnp.int32)
+    return perm, inverse_permutation(perm)
+
+
+def label_sort_order(labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Stable sort by label — the strongest tile coherence when a (coarse)
+    clustering is already known. Returns (perm, inv) int32."""
+    perm = jnp.argsort(labels, stable=True).astype(jnp.int32)
+    return perm, inverse_permutation(perm)
+
+
+def spatial_order(points: jax.Array, *, method: str = "morton",
+                  labels: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Named-dispatch entry the engine's ``order=`` knob resolves through:
+    'morton' (coordinates only) or 'label' (requires ``labels``)."""
+    if method == "morton":
+        return morton_order(points)
+    if method == "label":
+        if labels is None:
+            raise ValueError("spatial_order(method='label') needs labels=")
+        return label_sort_order(labels)
+    raise ValueError(f"unknown ordering {method!r}; "
+                     "expected 'morton' or 'label'")

@@ -1,4 +1,4 @@
-"""Fused Lloyd assignment kernel: nearest-centroid assignment + per-cluster
+"""Fused Lloyd assignment kernels: nearest-centroid assignment + per-cluster
 partial sums/counts in ONE pass over the points (the clustering-phase hot spot).
 
 Centroids are VMEM-resident (constant-memory analogue); the per-cluster
@@ -7,11 +7,27 @@ with a constant index_map), initialized at grid step 0 — the TPU version of a
 privatized-then-reduced histogram, with the one-hot matmul on the MXU instead
 of atomics (TPU has no global atomics; this is the idiomatic replacement).
 
-Like the seeding-round kernels, the assignment kernel streams a cached fp32
+Like the seeding-round kernels, the assignment kernels stream a cached fp32
 ``||x||^2`` input (norm caching: computed once per fit, not once per
-iteration) and keeps the point/centroid tiles in their input dtype into the
+iteration) and keep the point/centroid tiles in their input dtype into the
 MXU (bf16 streams at half the HBM bytes; accumulators stay fp32). Raw
 kernels take ``interpret`` explicitly — ``kernels.ops`` owns the default.
+
+Two kernel families:
+
+* ``lloyd_assign_pallas`` (+ batched) — the historical accumulated form: one
+  (k, d)/(k,) VMEM accumulator pair for the whole grid. Used by the legacy
+  weighted / mini-batch paths.
+* ``lloyd_assign_tiled_pallas`` / ``lloyd_assign_gated_pallas`` (+ batched)
+  — the BOUNDED-LLOYD form: per-tile outputs (inertia partial, second-best
+  gap, per-cluster sums/counts per tile, reduced over the tile axis outside
+  the kernel) so the gated variant can reuse PR 3's scalar-prefetched
+  compacted index map + ``input_output_aliases``: a tile whose movement
+  bound proves no label can change is neither computed nor fetched, and all
+  six of its output blocks keep the previous iteration's (bitwise-identical)
+  values. The per-tile reduction tree is shared by the gated and ungated
+  tiled kernels, which is what makes bounded-vs-unbounded fits bitwise
+  comparable end to end.
 """
 from __future__ import annotations
 
@@ -20,6 +36,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 # the one shared definition of the cached-norm matmul-form D^2 — the
 # fused==pallas bitwise-parity claims hang off every kernel using it
@@ -190,3 +207,351 @@ def lloyd_assign_batched_pallas(points: jax.Array, norms: jax.Array,
         interpret=interpret,
     )(n_valid, pts, nrm, centroids)
     return a[:, :n], md[:, :n], sums, counts
+
+
+# ---------------------------------------------------------------------------
+# tiled variant (bounded Lloyd): per-tile partial/gap/sums/counts outputs
+# ---------------------------------------------------------------------------
+
+
+def _tile_assign(x_raw, xn, c_raw, valid):
+    """Shared per-tile assignment math for the tiled/gated kernels:
+    (labels, masked min_d2, tile inertia partial, tile second-best gap,
+    tile per-cluster sums, tile per-cluster counts). The second-best gap is
+    in DISTANCE units (the movement bound compares it against centroid
+    movement); a k=1 tile has no runner-up, so its gap is +inf."""
+    d2 = _tile_d2(x_raw, c_raw, xn)                     # (block_n, k)
+    k = d2.shape[1]
+    a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    m = jnp.min(d2, axis=1)
+    won = a[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    second = jnp.min(jnp.where(won, jnp.inf, d2), axis=1)
+    gap_pt = jnp.sqrt(second) - jnp.sqrt(m)
+    gap = jnp.min(jnp.where(valid, gap_pt, jnp.inf))
+    m = jnp.where(valid, m, 0.0)
+
+    x = x_raw.astype(jnp.float32)
+    onehot = jnp.where(valid[:, None], won.astype(jnp.float32), 0.0)
+    tile_sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    tile_counts = jnp.sum(onehot, axis=0)
+    return a, m, jnp.sum(m), gap, tile_sums, tile_counts
+
+
+def _assign_tiled_kernel(n_valid_ref, pts_ref, norms_ref, cents_ref,
+                         assign_ref, md_ref, partial_ref, gap_ref, tsums_ref,
+                         tcounts_ref, *, block_n: int):
+    i = pl.program_id(0)
+    xn = norms_ref[...].astype(jnp.float32)
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = row < n_valid_ref[0]
+    a, m, part, gap, tsums, tcounts = _tile_assign(pts_ref[...], xn,
+                                                   cents_ref[...], valid)
+    assign_ref[...] = a
+    md_ref[...] = m
+    partial_ref[0] = part
+    gap_ref[0] = gap
+    tsums_ref[0] = tsums
+    tcounts_ref[0] = tcounts
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lloyd_assign_tiled_pallas(points: jax.Array, norms: jax.Array,
+                              centroids: jax.Array, *, block_n: int,
+                              interpret: bool):
+    """Bounded-Lloyd assignment half-step with PER-TILE outputs.
+
+    Returns (assignment (n,) int32, min_d2 (n,), partials (n_tiles,),
+    gaps (n_tiles,), tile_sums (n_tiles, k, d), tile_counts (n_tiles, k)).
+    ``sum(partials)`` is the iteration's inertia; ``tile_sums.sum(0)`` /
+    ``tile_counts.sum(0)`` are the centroid-update accumulators — the SAME
+    reduction tree the gated kernel produces, so bounded and unbounded fits
+    compare bitwise."""
+    n, d = points.shape
+    k = centroids.shape[0]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
+    n_valid = jnp.array([n], jnp.int32)
+
+    a, md, partials, gaps, tsums, tcounts = pl.pallas_call(
+        functools.partial(_assign_tiled_kernel, block_n=block_n),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),      # cached ||x||^2
+            pl.BlockSpec((k, d), lambda i: (0, 0)),        # resident
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((grid, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_valid, pts, nrm, centroids)
+    return a[:n], md[:n], partials, gaps, tsums, tcounts
+
+
+def _assign_gated_kernel(ids_ref, meta_ref, pts_ref, norms_ref, cents_ref,
+                         pa_ref, pmd_ref, pp_ref, pg_ref, pts_s_ref,
+                         ptc_ref, assign_ref, md_ref, partial_ref, gap_ref,
+                         tsums_ref, tcounts_ref, *, block_n: int):
+    """Grid step i streams tile ``ids[i]``; steps >= n_active revisit the
+    last active tile (VMEM-resident, no HBM fetch) gated off by pl.when.
+    The prev_* refs are never read — they carry the aliased buffers the
+    skipped tiles' six outputs fall back to, and live in ANY memory space
+    so active tiles pay no DMA for them."""
+    del pa_ref, pmd_ref, pp_ref, pg_ref, pts_s_ref, ptc_ref
+    i = pl.program_id(0)
+
+    @pl.when(i < meta_ref[1])
+    def _compute():
+        t = ids_ref[i]                                 # the REAL tile id
+        xn = norms_ref[...].astype(jnp.float32)
+        row = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+        valid = row < meta_ref[0]
+        a, m, part, gap, tsums, tcounts = _tile_assign(pts_ref[...], xn,
+                                                       cents_ref[...], valid)
+        assign_ref[...] = a
+        md_ref[...] = m
+        partial_ref[0] = part
+        gap_ref[0] = gap
+        tsums_ref[0] = tsums
+        tcounts_ref[0] = tcounts
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lloyd_assign_gated_pallas(points: jax.Array, norms: jax.Array,
+                              centroids: jax.Array, prev_assign: jax.Array,
+                              prev_min_d2: jax.Array,
+                              prev_partials: jax.Array, prev_gaps: jax.Array,
+                              prev_tile_sums: jax.Array,
+                              prev_tile_counts: jax.Array, ids: jax.Array,
+                              meta: jax.Array, *, block_n: int,
+                              interpret: bool):
+    """Bound-gated assignment half-step (exact tile skipping for Lloyd).
+
+    ``ids``/``meta=[n_valid, n_active]`` come from `core.bounds.compact_ids`
+    over `core.bounds.assign_active_tiles`: only the first n_active grid
+    steps fetch + compute; every output block of a skipped tile keeps the
+    aliased previous-iteration value, which the movement bound proves is
+    bitwise what a recompute would write (labels cannot change AND the
+    tile's assigned centroids did not move). Same returns as
+    `lloyd_assign_tiled_pallas`."""
+    n, d = points.shape
+    k = centroids.shape[0]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
+    pa = jnp.pad(prev_assign.astype(jnp.int32), (0, pad))
+    pmd = jnp.pad(prev_min_d2.astype(jnp.float32), (0, pad))
+
+    # the six prev_* operands exist ONLY to donate their buffers via
+    # input_output_aliases (the kernel never reads them): ANY memory space
+    # keeps them in HBM with no per-step VMEM DMA, so active tiles pay zero
+    # traffic for the carries and skipped tiles still inherit them
+    carry_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                          # ids, meta
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, ids, meta: (ids[i], 0)),
+            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((k, d), lambda i, ids, meta: (0, 0)),   # resident
+        ] + [carry_spec] * 6,
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((1, k, d), lambda i, ids, meta: (ids[i], 0, 0)),
+            pl.BlockSpec((1, k), lambda i, ids, meta: (ids[i], 0)),
+        ],
+    )
+    a, md, partials, gaps, tsums, tcounts = pl.pallas_call(
+        functools.partial(_assign_gated_kernel, block_n=block_n),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((grid, k), jnp.float32),
+        ],
+        # skipped tiles reuse all six of their prior output blocks
+        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5},
+        interpret=interpret,
+    )(ids, meta, pts, nrm, centroids, pa, pmd,
+      prev_partials.astype(jnp.float32), prev_gaps.astype(jnp.float32),
+      prev_tile_sums.astype(jnp.float32),
+      prev_tile_counts.astype(jnp.float32))
+    return a[:n], md[:n], partials, gaps, tsums, tcounts
+
+
+def _assign_tiled_kernel_batched(n_valid_ref, pts_ref, norms_ref, cents_ref,
+                                 assign_ref, md_ref, partial_ref, gap_ref,
+                                 tsums_ref, tcounts_ref, *, block_n: int):
+    i = pl.program_id(1)
+    xn = norms_ref[0].astype(jnp.float32)
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    valid = row < n_valid_ref[0]
+    a, m, part, gap, tsums, tcounts = _tile_assign(pts_ref[0], xn,
+                                                   cents_ref[0], valid)
+    assign_ref[0] = a
+    md_ref[0] = m
+    partial_ref[0, 0] = part
+    gap_ref[0, 0] = gap
+    tsums_ref[0, 0] = tsums
+    tcounts_ref[0, 0] = tcounts
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lloyd_assign_tiled_batched_pallas(points: jax.Array, norms: jax.Array,
+                                      centroids: jax.Array, *, block_n: int,
+                                      interpret: bool):
+    """Batch-grid tiled assignment over B independent problems in ONE launch;
+    row b is bitwise `lloyd_assign_tiled_pallas` on problem b."""
+    B, n, d = points.shape
+    k = centroids.shape[1]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, 0), (0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pad)))
+    n_valid = jnp.array([n], jnp.int32)
+
+    a, md, partials, gaps, tsums, tcounts = pl.pallas_call(
+        functools.partial(_assign_tiled_kernel_batched, block_n=block_n),
+        grid=(B, grid),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, i: (0,)),
+            pl.BlockSpec((1, block_n, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+            pl.BlockSpec((1, k, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, i)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, i)),
+            pl.BlockSpec((1, 1, k, d), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, k), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n + pad), jnp.int32),
+            jax.ShapeDtypeStruct((B, n + pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n_valid, pts, nrm, centroids)
+    return a[:, :n], md[:, :n], partials, gaps, tsums, tcounts
+
+
+def _assign_gated_kernel_batched(ids_ref, nact_ref, nv_ref, pts_ref,
+                                 norms_ref, cents_ref, pa_ref, pmd_ref,
+                                 pp_ref, pg_ref, pts_s_ref, ptc_ref,
+                                 assign_ref, md_ref, partial_ref, gap_ref,
+                                 tsums_ref, tcounts_ref, *, block_n: int):
+    """Grid step (b, i) streams tile ids[b, i] of problem b; steps past
+    problem b's n_active are no-ops (per-problem compaction)."""
+    del pa_ref, pmd_ref, pp_ref, pg_ref, pts_s_ref, ptc_ref
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i < nact_ref[b])
+    def _compute():
+        t = ids_ref[b, i]
+        xn = norms_ref[0].astype(jnp.float32)
+        row = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+        valid = row < nv_ref[0]
+        a, m, part, gap, tsums, tcounts = _tile_assign(pts_ref[0], xn,
+                                                       cents_ref[0], valid)
+        assign_ref[0] = a
+        md_ref[0] = m
+        partial_ref[0, 0] = part
+        gap_ref[0, 0] = gap
+        tsums_ref[0, 0] = tsums
+        tcounts_ref[0, 0] = tcounts
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lloyd_assign_gated_batched_pallas(
+        points: jax.Array, norms: jax.Array, centroids: jax.Array,
+        prev_assign: jax.Array, prev_min_d2: jax.Array,
+        prev_partials: jax.Array, prev_gaps: jax.Array,
+        prev_tile_sums: jax.Array, prev_tile_counts: jax.Array,
+        ids: jax.Array, n_active: jax.Array, *, block_n: int,
+        interpret: bool):
+    """Batch-grid bound-gated assignment: per-problem compacted active-tile
+    maps ids (B, n_tiles) / n_active (B,). Row b is bitwise
+    `lloyd_assign_gated_pallas` on problem b."""
+    B, n, d = points.shape
+    k = centroids.shape[1]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, 0), (0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pad)))
+    pa = jnp.pad(prev_assign.astype(jnp.int32), ((0, 0), (0, pad)))
+    pmd = jnp.pad(prev_min_d2.astype(jnp.float32), ((0, 0), (0, pad)))
+    nv = jnp.array([n], jnp.int32)
+
+    # never-read aliased carries: ANY memory space, no per-step DMA
+    carry_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                      # ids, n_active, n_valid
+        grid=(B, grid),
+        in_specs=[
+            pl.BlockSpec((1, block_n, d),
+                         lambda b, i, ids, na, nv: (b, ids[b, i], 0)),
+            pl.BlockSpec((1, block_n),
+                         lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, k, d), lambda b, i, ids, na, nv: (b, 0, 0)),
+        ] + [carry_spec] * 6,
+        out_specs=[
+            pl.BlockSpec((1, block_n),
+                         lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, block_n),
+                         lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1, k, d),
+                         lambda b, i, ids, na, nv: (b, ids[b, i], 0, 0)),
+            pl.BlockSpec((1, 1, k),
+                         lambda b, i, ids, na, nv: (b, ids[b, i], 0)),
+        ],
+    )
+    a, md, partials, gaps, tsums, tcounts = pl.pallas_call(
+        functools.partial(_assign_gated_kernel_batched, block_n=block_n),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n + pad), jnp.int32),
+            jax.ShapeDtypeStruct((B, n + pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid, k), jnp.float32),
+        ],
+        input_output_aliases={6: 0, 7: 1, 8: 2, 9: 3, 10: 4, 11: 5},
+        interpret=interpret,
+    )(ids.astype(jnp.int32), n_active.astype(jnp.int32), nv, pts, nrm,
+      centroids, pa, pmd, prev_partials.astype(jnp.float32),
+      prev_gaps.astype(jnp.float32), prev_tile_sums.astype(jnp.float32),
+      prev_tile_counts.astype(jnp.float32))
+    return a[:, :n], md[:, :n], partials, gaps, tsums, tcounts

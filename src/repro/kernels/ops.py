@@ -34,7 +34,11 @@ from repro.core.bounds import point_norms  # noqa: F401  (re-exported: the
 #   cached-norm input the kernels stream; wrappers compute it on the fly
 #   when the caller has no prologue cache)
 from repro.kernels.lloyd_assign import (lloyd_assign_batched_pallas,
-                                        lloyd_assign_pallas)
+                                        lloyd_assign_gated_batched_pallas,
+                                        lloyd_assign_gated_pallas,
+                                        lloyd_assign_pallas,
+                                        lloyd_assign_tiled_batched_pallas,
+                                        lloyd_assign_tiled_pallas)
 
 _VMEM_BUDGET = 48 * 1024 * 1024  # leave headroom out of ~64-128MB
 
@@ -64,6 +68,11 @@ def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
         (the seeding kernel's thrust::reduce analogue)
       bound-state blocks: previous-partial/tile-max in + partial/tile-max out
         scalars per step, double-buffered (the gated kernel's skip state)
+      bounded-assignment blocks: the tiled/gated Lloyd kernels additionally
+        stream a per-tile (k, d)+(k,) cluster sums/counts OUT block (plus
+        the gated kernel's aliased prev block in flight), the int32
+        assignment + fp32 min_d2 aliased in/out blocks, and the per-tile
+        gap/partial movement-bound scalars
 
     `batched=True` budgets the batch-grid kernels, whose centroid block is
     re-fetched per problem and therefore double-buffered like the point
@@ -74,6 +83,10 @@ def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
         working += 4 * 2 * bn               # cached ||x||^2 (fp32, 2 buffers)
         working += 4 * (k * d + k + 8)      # fp32 accumulators + partial
         working += 4 * 2 * 4                # bound-state scalar blocks
+        working += 4 * 2 * (k * d + k)      # per-tile sums/counts out block
+                                            #   (+ gated aliased prev block)
+        working += 4 * 4 * bn               # assignment/min_d2 aliased i/o
+        working += 4 * 2 * 4                # gap/partial movement scalars
         if batched:
             working += dtype_bytes * k * d  # second centroid buffer
         if working <= _VMEM_BUDGET:
@@ -286,3 +299,92 @@ def lloyd_assign_batched(points: jax.Array, centroids: jax.Array, *,
     centroids, norms = _align(points, centroids, norms)
     return lloyd_assign_batched_pallas(points, norms, centroids,
                                        block_n=block_n, interpret=interpret)
+
+
+def lloyd_assign_tiled(points: jax.Array, centroids: jax.Array, *,
+                       norms: jax.Array | None = None,
+                       block_n: int | None = None,
+                       interpret: bool | None = None):
+    """Bounded-Lloyd assignment half-step with per-tile outputs.
+
+    Returns (assignment, min_d2, partials (n_tiles,), gaps (n_tiles,),
+    tile_sums (n_tiles, k, d), tile_counts (n_tiles, k)) — the ungated twin
+    of `lloyd_assign_gated`, sharing its per-tile reduction tree so bounded
+    and unbounded fits compare bitwise. Under `jax.vmap` this dispatches to
+    the batch-grid kernel."""
+    n, d = points.shape
+    k = centroids.shape[0]
+    if block_n is None:
+        block_n = choose_block_n(n, d, k)
+    bn = block_n
+    if interpret is None:
+        interpret = default_interpret()
+    centroids, norms = _align(points, centroids, norms)
+
+    @custom_vmap
+    def call(pts, cents, nrm):
+        return lloyd_assign_tiled_pallas(pts, nrm, cents, block_n=bn,
+                                         interpret=interpret)
+
+    @call.def_vmap
+    def _rule(axis_size, in_batched, pts, cents, nrm):
+        pts = _ensure_batched(pts, in_batched[0], axis_size)
+        cents = _ensure_batched(cents, in_batched[1], axis_size)
+        nrm = _ensure_batched(nrm, in_batched[2], axis_size)
+        out = lloyd_assign_tiled_batched_pallas(pts, nrm, cents, block_n=bn,
+                                                interpret=interpret)
+        return out, (True,) * 6
+
+    return call(points, centroids, norms)
+
+
+def lloyd_assign_gated(points: jax.Array, centroids: jax.Array,
+                       norms: jax.Array, prev_assign: jax.Array,
+                       prev_min_d2: jax.Array, prev_partials: jax.Array,
+                       prev_gaps: jax.Array, prev_tile_sums: jax.Array,
+                       prev_tile_counts: jax.Array, active: jax.Array, *,
+                       block_n: int, interpret: bool | None = None):
+    """Bound-gated assignment half-step (exact Lloyd tile skipping).
+
+    ``active`` is the (n_tiles,) bool mask from
+    `core.bounds.assign_active_tiles`; it is compacted into the
+    scalar-prefetched index map here, so inactive tiles are neither fetched
+    nor computed and all six of their outputs keep the previous iteration's
+    (bitwise-identical) values. Returns the `lloyd_assign_tiled` tuple plus
+    a trailing ``skipped`` count. ``block_n`` is required: it must match the
+    tile height of the carried bound state. Under `jax.vmap` this dispatches
+    to the gated batch-grid kernel with per-problem compaction."""
+    from repro.core import bounds as bnd
+
+    n, d = points.shape
+    if interpret is None:
+        interpret = default_interpret()
+    centroids = centroids.astype(points.dtype)
+    norms = norms.astype(jnp.float32)
+    grid = -(-n // block_n)
+    ids, n_active = bnd.compact_ids(active)
+    skipped = (grid - n_active).astype(jnp.int32)
+
+    @custom_vmap
+    def call(pts, cents, nrm, pa, pmd, pp, pg, pts_s, ptc, ids_, nact):
+        meta = jnp.stack([jnp.full((), n, jnp.int32), nact.astype(jnp.int32)])
+        return lloyd_assign_gated_pallas(
+            pts, nrm, cents, pa, pmd, pp, pg, pts_s, ptc, ids_, meta,
+            block_n=block_n, interpret=interpret)
+
+    @call.def_vmap
+    def _rule(axis_size, in_batched, pts, cents, nrm, pa, pmd, pp, pg,
+              pts_s, ptc, ids_, nact):
+        args = [pts, cents, nrm, pa, pmd, pp, pg, pts_s, ptc, ids_, nact]
+        args = [_ensure_batched(a, b, axis_size)
+                for a, b in zip(args, in_batched)]
+        (pts, cents, nrm, pa, pmd, pp, pg, pts_s, ptc, ids_, nact) = args
+        out = lloyd_assign_gated_batched_pallas(
+            pts, nrm, cents, pa, pmd, pp, pg, pts_s, ptc, ids_, nact,
+            block_n=block_n, interpret=interpret)
+        return out, (True,) * 6
+
+    out = call(points, centroids, norms, prev_assign, prev_min_d2,
+               prev_partials, prev_gaps, prev_tile_sums, prev_tile_counts,
+               ids, n_active)
+    return out + (skipped,)

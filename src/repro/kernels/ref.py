@@ -67,3 +67,37 @@ def lloyd_assign_ref(points: jax.Array, centroids: jax.Array):
     sums = onehot.T @ points.astype(jnp.float32)
     counts = jnp.sum(onehot, axis=0)
     return a, m, sums, counts
+
+
+def lloyd_assign_tiled_ref(points: jax.Array, centroids: jax.Array,
+                           block_n: int):
+    """Oracle for kernels.lloyd_assign_tiled: per-tile assignment outputs.
+
+    Returns (assignment (n,) int32, min_d2 (n,), partials (n_tiles,),
+    gaps (n_tiles,), tile_sums (n_tiles, k, d), tile_counts (n_tiles, k)).
+    ``gaps`` is the per-tile min of the second-best margin in distance units
+    (+inf for k == 1 — no runner-up exists)."""
+    n, d = points.shape
+    k = centroids.shape[0]
+    d2 = _d2(points, centroids)
+    a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    m = jnp.min(d2, axis=1)
+    won = jax.nn.one_hot(a, k, dtype=bool)
+    second = jnp.min(jnp.where(won, jnp.inf, d2), axis=1)
+    gap_pt = jnp.sqrt(second) - jnp.sqrt(m)
+
+    pad = (-n) % block_n
+    n_tiles = (n + pad) // block_n
+    valid = jnp.arange(n + pad) < n
+    mt = jnp.pad(m, (0, pad)).reshape(n_tiles, block_n)
+    partials = jnp.sum(mt, axis=1)
+    gaps = jnp.min(jnp.pad(gap_pt, (0, pad), constant_values=jnp.inf)
+                   .reshape(n_tiles, block_n), axis=1)
+    onehot = jnp.where(valid[:, None],
+                       jnp.pad(won.astype(jnp.float32), ((0, pad), (0, 0))),
+                       0.0).reshape(n_tiles, block_n, k)
+    xt = jnp.pad(points.astype(jnp.float32),
+                 ((0, pad), (0, 0))).reshape(n_tiles, block_n, d)
+    tile_sums = jnp.einsum("tbk,tbd->tkd", onehot, xt)
+    tile_counts = jnp.sum(onehot, axis=1)
+    return a, m, partials, gaps, tile_sums, tile_counts

@@ -39,19 +39,23 @@ _DEFAULT_ENGINE = ClusterEngine("fused")
 
 
 def _fit_codebooks(key: jax.Array, problems: jax.Array, *, n_codes: int,
-                   lloyd_iters: int, engine: Optional[ClusterEngine]
-                   ) -> jax.Array:
+                   lloyd_iters: int, engine: Optional[ClusterEngine],
+                   order=None) -> jax.Array:
     """problems (B, take, dsub) -> (B, n_codes, dsub) centroids.
 
     ONE `ClusterEngine.kmeans_batched` call clusters every sub-space problem
     in the batch — a single compiled seeding sweep + a single batched Lloyd,
     instead of the old per-sub-space Python loop of kmeanspp+lloyd calls. On
-    the pallas backend this runs the batch-grid kernels."""
+    the pallas backend this runs the batch-grid kernels. ``order`` (e.g.
+    'morton') feeds each sub-space problem to the kernels in a tile-coherent
+    row layout so the bound gates can prune; the engine inverts the
+    permutation internally, so codebooks are unaffected."""
     eng = _DEFAULT_ENGINE if engine is None else engine
     B, take, _ = problems.shape
     k_eff = min(n_codes, take)
     keys = jax.random.split(key, B)
-    res = eng.kmeans_batched(keys, problems, k_eff, max_iters=lloyd_iters)
+    res = eng.kmeans_batched(keys, problems, k_eff, max_iters=lloyd_iters,
+                             order=order)
     cents = res.centroids
     if k_eff < n_codes:         # pad (tiny caches in tests)
         cents = jnp.pad(cents, ((0, 0), (0, n_codes - k_eff), (0, 0)))
@@ -61,11 +65,13 @@ def _fit_codebooks(key: jax.Array, problems: jax.Array, *, n_codes: int,
 def build_codebook(key: jax.Array, vectors: jax.Array, *, n_sub: int,
                    n_codes: int = 256, lloyd_iters: int = 10,
                    sample: int = 16384,
-                   engine: Optional[ClusterEngine] = None) -> PQCodebook:
+                   engine: Optional[ClusterEngine] = None,
+                   order=None) -> PQCodebook:
     """vectors (N, d) -> PQ codebook. d % n_sub == 0. The n_sub sub-space
     clusterings run as one batched multi-problem sweep through `engine`
     (default: the fused ClusterEngine; pass ClusterEngine('pallas') for the
-    batch-grid kernels)."""
+    batch-grid kernels). ``order='morton'`` reorders each sub-space sample
+    into a tile-coherent layout for the bound-gated kernels."""
     N, d = vectors.shape
     assert d % n_sub == 0, (d, n_sub)
     dsub = d // n_sub
@@ -73,7 +79,8 @@ def build_codebook(key: jax.Array, vectors: jax.Array, *, n_sub: int,
     stride = max(N // take, 1)
     sub = vectors[::stride][:take].reshape(take, n_sub, dsub)
     cents = _fit_codebooks(key, jnp.moveaxis(sub, 1, 0), n_codes=n_codes,
-                           lloyd_iters=lloyd_iters, engine=engine)
+                           lloyd_iters=lloyd_iters, engine=engine,
+                           order=order)
     return PQCodebook(cents)
 
 
@@ -102,12 +109,13 @@ def decode(codes: jax.Array, cb: PQCodebook) -> jax.Array:
 
 def compress_kv(key: jax.Array, kv: jax.Array, *, n_sub: int = 8,
                 lloyd_iters: int = 10,
-                engine: Optional[ClusterEngine] = None) -> PQCache:
+                engine: Optional[ClusterEngine] = None,
+                order=None) -> PQCache:
     """kv (..., d) -> PQ cache (codes + codebook). Compression vs bf16 is
     (d * 2) / n_sub, e.g. head_dim 128, n_sub 8 -> 32x."""
     flat = kv.reshape(-1, kv.shape[-1])
     cb = build_codebook(key, flat, n_sub=n_sub, lloyd_iters=lloyd_iters,
-                        engine=engine)
+                        engine=engine, order=order)
     return PQCache(encode(kv, cb), cb)
 
 
@@ -131,7 +139,8 @@ def compression_ratio(kv: jax.Array, pq: PQCache) -> float:
 def compress_transformer_cache(key: jax.Array, cache: dict, *,
                                n_sub: int = 16, lloyd_iters: int = 6,
                                sample: int = 16384,
-                               engine: Optional[ClusterEngine] = None) -> dict:
+                               engine: Optional[ClusterEngine] = None,
+                               order=None) -> dict:
     """Convert a dense transformer KV cache {"k","v": (L,B,S,KH,hd), "pos"}
     into the PQ layout the flash-decode-over-codes kernel reads:
 
@@ -161,7 +170,7 @@ def compress_transformer_cache(key: jax.Array, cache: dict, *,
         ).reshape(L * KH * n_sub, take, dsub)
         cents = _fit_codebooks(jax.random.fold_in(key, i), problems,
                                n_codes=256, lloyd_iters=lloyd_iters,
-                               engine=engine)
+                               engine=engine, order=order)
         cbs = cents.reshape(L, KH, n_sub, 256, dsub)
         codes = jnp.stack([
             jnp.stack([encode(kv[l, :, :, h], PQCodebook(cbs[l, h]))

@@ -1,0 +1,541 @@
+"""Bounded Lloyd engine tests (ISSUE 4 tentpole): bitwise gated-vs-ungated
+fit parity across backends (single, batch-grid, vmap), movement-bound skip
+telemetry, spatial-ordering plumbing, kernel-level tiled/gated parity, and
+the bf16 mini-batch path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bounds, quality
+from repro.core.engine import ClusterEngine, FusedBackend, MeshBackend
+from repro.data import ordering
+from repro.data.synthetic import blobs
+from repro.kernels import ops, ref
+
+
+def _coherent(n=16384, d=2, k=4, seed=0, spread=0.05):
+    pts, labels = blobs(n, d, k, seed=seed, spread=spread)
+    order = np.argsort(labels, kind="stable")
+    return jnp.asarray(pts[order])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: fp32 bounded Lloyd is bitwise identical to the ungated path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused", "pallas"])
+def test_bounded_fit_is_bitwise_exact(backend):
+    """The gated fit must produce BITWISE the ungated fit's centroids,
+    assignment, inertia and iteration count — while actually skipping."""
+    pts = _coherent()
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(0), pts,
+                                        4).centroids
+    on = ClusterEngine(backend).fit(pts, seeds, max_iters=10, tol=-1.0)
+    off = ClusterEngine(backend, bounds=False).fit(pts, seeds, max_iters=10,
+                                                   tol=-1.0)
+    np.testing.assert_array_equal(np.asarray(on.centroids),
+                                  np.asarray(off.centroids))
+    np.testing.assert_array_equal(np.asarray(on.assignment),
+                                  np.asarray(off.assignment))
+    assert float(on.inertia) == float(off.inertia)
+    assert int(on.n_iters) == int(off.n_iters)
+    assert off.skipped is None
+    assert on.skipped is not None and on.skipped.shape == (10,)
+    assert int(jnp.sum(on.skipped)) > 0, np.asarray(on.skipped)
+
+
+@pytest.mark.parametrize("offset", [100.0, -3000.0])
+def test_bounded_fit_exact_far_from_origin(offset):
+    """The gap margin is ABSOLUTE in the operand magnitude (matmul-form fp32
+    cancellation grows with ||x||^2): off-origin data is where a
+    relative-only slack would silently break the bitwise claim."""
+    pts = _coherent(seed=3) + offset
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(4), pts,
+                                        4).centroids
+    for backend in ("fused", "pallas"):
+        on = ClusterEngine(backend).fit(pts, seeds, max_iters=8, tol=-1.0)
+        off = ClusterEngine(backend, bounds=False).fit(pts, seeds,
+                                                       max_iters=8, tol=-1.0)
+        np.testing.assert_array_equal(np.asarray(on.centroids),
+                                      np.asarray(off.centroids))
+        np.testing.assert_array_equal(np.asarray(on.assignment),
+                                      np.asarray(off.assignment))
+        assert float(on.inertia) == float(off.inertia)
+
+
+def test_bounded_fit_exact_on_shuffled_rows():
+    """Shuffled rows give the gate nothing to prune — results must stay
+    exactly the ungated fit's (exactness is layout-independent)."""
+    pts = jnp.asarray(blobs(8192, 2, 4, seed=5)[0])
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(6), pts,
+                                        4).centroids
+    on = ClusterEngine("fused").fit(pts, seeds, max_iters=8)
+    off = ClusterEngine("fused", bounds=False).fit(pts, seeds, max_iters=8)
+    np.testing.assert_array_equal(np.asarray(on.centroids),
+                                  np.asarray(off.centroids))
+    assert float(on.inertia) == float(off.inertia)
+
+
+def test_bounded_fit_skip_counts_agree_fused_vs_pallas():
+    """The pure-JAX gate model and the compacted gated kernel must make the
+    same skip decisions iteration by iteration."""
+    pts = _coherent(seed=7)
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(8), pts,
+                                        4).centroids
+    f = ClusterEngine("fused").fit(pts, seeds, max_iters=10, tol=-1.0)
+    p = ClusterEngine("pallas").fit(pts, seeds, max_iters=10, tol=-1.0)
+    np.testing.assert_allclose(np.asarray(f.skipped), np.asarray(p.skipped),
+                               atol=1)
+    assert int(jnp.sum(f.skipped)) > 0
+
+
+def test_bounded_fit_skip_rate_on_label_sorted_blobs():
+    """Acceptance trajectory: well-separated label-sorted blobs reach a
+    >= 50% assignment-tile skip rate by iteration 3 (0-indexed)."""
+    n, d, k = 2 ** 16, 8, 16
+    pts = _coherent(n=n, d=d, k=k, seed=0)
+    eng = ClusterEngine("fused")
+    seeds = eng.seed(jax.random.PRNGKey(1), pts, k).centroids
+    res = eng.fit(pts, seeds, max_iters=6, tol=-1.0)
+    n_tiles = -(-n // eng.backend.seed_tile(n, d, k))
+    rate = np.asarray(res.skipped, np.float64) / n_tiles
+    assert rate[3] >= 0.5, rate
+    # skipping must not have changed the result
+    off = ClusterEngine("fused", bounds=False).fit(pts, seeds, max_iters=6,
+                                                   tol=-1.0)
+    assert float(res.inertia) == float(off.inertia)
+
+
+def test_bounded_fit_with_reseed_policy_stays_exact():
+    """empty='reseed' moves centroids discontinuously — the movement bound
+    must force recomputation (reseeded centroids have delta > 0) and keep
+    gated == ungated bitwise."""
+    pts = _coherent(seed=9)
+    cents = jnp.concatenate([pts[:3], jnp.full((1, 2), 99.0)])
+    on = ClusterEngine("fused").fit(pts, cents, max_iters=8, empty="reseed")
+    off = ClusterEngine("fused", bounds=False).fit(pts, cents, max_iters=8,
+                                                   empty="reseed")
+    np.testing.assert_array_equal(np.asarray(on.centroids),
+                                  np.asarray(off.centroids))
+    assert float(on.inertia) == float(off.inertia)
+
+
+# ---------------------------------------------------------------------------
+# batch-grid / vmap / mesh composition
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_fit_batched_matches_per_problem():
+    """fit_batched (gated, batch-grid kernels under vmap) is bitwise the
+    per-problem gated fit, and per-problem skip counters come back (B, it)."""
+    B = 3
+    bpts = jnp.stack([_coherent(n=4096, seed=10 + s) for s in range(B)])
+    binit = jnp.stack([bpts[s][:4] for s in range(B)])
+    for backend in ("fused", "pallas"):
+        bat = ClusterEngine(backend).fit_batched(bpts, binit, max_iters=6,
+                                                 tol=-1.0)
+        assert bat.skipped.shape == (B, 6)
+        for b in range(B):
+            single = ClusterEngine(backend).fit(bpts[b], binit[b],
+                                                max_iters=6, tol=-1.0)
+            np.testing.assert_array_equal(np.asarray(bat.centroids[b]),
+                                          np.asarray(single.centroids))
+            np.testing.assert_array_equal(np.asarray(bat.assignment[b]),
+                                          np.asarray(single.assignment))
+            np.testing.assert_array_equal(np.asarray(bat.skipped[b]),
+                                          np.asarray(single.skipped))
+
+
+def test_bounded_fit_batched_gated_vs_ungated():
+    B = 2
+    bpts = jnp.stack([_coherent(n=4096, seed=20 + s) for s in range(B)])
+    binit = jnp.stack([bpts[s][:4] for s in range(B)])
+    on = ClusterEngine("pallas").fit_batched(bpts, binit, max_iters=6)
+    off = ClusterEngine("pallas", bounds=False).fit_batched(bpts, binit,
+                                                            max_iters=6)
+    np.testing.assert_array_equal(np.asarray(on.centroids),
+                                  np.asarray(off.centroids))
+    np.testing.assert_array_equal(np.asarray(on.assignment),
+                                  np.asarray(off.assignment))
+
+
+def test_mesh_fit_composes_skip_counters():
+    """The mesh fit psums the per-shard skipped-tile counts and matches the
+    local fit's quality (1-device mesh: bitwise the local backend)."""
+    mesh = jax.make_mesh((1,), ("data",))
+    pts = _coherent(n=8192, seed=11)
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(2), pts,
+                                        4).centroids
+    res = ClusterEngine(MeshBackend(mesh=mesh, axes=("data",))).fit(
+        pts, seeds, max_iters=8, tol=-1.0)
+    local = ClusterEngine("fused").fit(pts, seeds, max_iters=8, tol=-1.0)
+    assert res.skipped is not None and res.skipped.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(res.skipped),
+                                  np.asarray(local.skipped))
+    np.testing.assert_array_equal(np.asarray(res.centroids),
+                                  np.asarray(local.centroids))
+
+
+# ---------------------------------------------------------------------------
+# result reporting (KmeansppResult-style audit surface for fit)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_result_reports_skips_and_reorder_provenance():
+    pts = _coherent(n=8192, seed=12)
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(3), pts,
+                                        4).centroids
+    res = ClusterEngine("fused").fit(pts, seeds, max_iters=20)
+    # counters beyond the converged iteration stay zero
+    it = int(res.n_iters)
+    assert it < 20
+    np.testing.assert_array_equal(np.asarray(res.skipped)[it:],
+                                  np.zeros(20 - it))
+    assert res.reorder is None          # natural order: no provenance
+    ordered = ClusterEngine("fused").fit(pts, seeds, max_iters=20,
+                                         order="morton")
+    assert ordered.reorder is not None and ordered.reorder.shape == (8192,)
+    # the recorded permutation IS a permutation
+    assert np.array_equal(np.sort(np.asarray(ordered.reorder)),
+                          np.arange(8192))
+
+
+def test_weighted_fit_keeps_legacy_contract():
+    """Weighted fits take the legacy accumulated path: no skip telemetry,
+    same numbers as before."""
+    pts = _coherent(n=2048, seed=13)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (2048,))) + 0.1
+    res = ClusterEngine("fused").fit(pts, pts[:4], max_iters=6, weights=w)
+    assert res.skipped is None
+
+
+# ---------------------------------------------------------------------------
+# spatial ordering: repro.data.ordering + engine plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_morton_order_is_a_permutation_with_inverse():
+    pts = jnp.asarray(blobs(1000, 3, 4, seed=1)[0])
+    perm, inv = ordering.morton_order(pts)
+    assert np.array_equal(np.sort(np.asarray(perm)), np.arange(1000))
+    np.testing.assert_array_equal(np.asarray(perm[inv]), np.arange(1000))
+    np.testing.assert_array_equal(np.asarray(inv[perm]), np.arange(1000))
+
+
+def test_morton_order_improves_tile_coherence():
+    """Z-ordering shuffled blobs must recover most of the skip rate the
+    shuffled layout loses."""
+    n, d, k = 2 ** 15, 8, 16
+    pts = jnp.asarray(blobs(n, d, k, seed=2)[0])     # shuffled labels
+    eng = ClusterEngine("fused")
+    seeds = eng.seed(jax.random.PRNGKey(7), pts, k).centroids
+    shuf = eng.fit(pts, seeds, max_iters=6, tol=-1.0)
+    mort = eng.fit(pts, seeds, max_iters=6, tol=-1.0, order="morton")
+    assert int(jnp.sum(mort.skipped)) > int(jnp.sum(shuf.skipped))
+    assert int(jnp.sum(mort.skipped)) > 0
+
+
+def test_morton_order_handles_one_dimension():
+    """d=1 caps the per-dim bits at 16 (32//1 would overflow int32) and
+    degenerates to a plain coordinate sort."""
+    x = jax.random.uniform(jax.random.PRNGKey(0), (257, 1))
+    perm, inv = ordering.morton_order(x)
+    assert np.array_equal(np.sort(np.asarray(perm)), np.arange(257))
+    sorted_x = np.asarray(x[perm, 0])
+    assert (np.diff(sorted_x) >= -1e-4).all()   # 16-bit quantized sort
+    np.testing.assert_array_equal(np.asarray(perm[inv]), np.arange(257))
+
+
+def test_label_sort_order_groups_labels():
+    labels = jnp.asarray([2, 0, 1, 0, 2, 1], jnp.int32)
+    perm, inv = ordering.label_sort_order(labels)
+    np.testing.assert_array_equal(np.asarray(labels[perm]),
+                                  [0, 0, 1, 1, 2, 2])
+    np.testing.assert_array_equal(np.asarray(perm[inv]), np.arange(6))
+
+
+def test_spatial_order_dispatch_and_errors():
+    pts = jnp.zeros((8, 2))
+    with pytest.raises(ValueError, match="unknown ordering"):
+        ordering.spatial_order(pts, method="hilbert")
+    with pytest.raises(ValueError, match="labels"):
+        ordering.spatial_order(pts, method="label")
+
+
+def test_fit_order_returns_original_row_order():
+    """order='morton' must hand results back in the CALLER's row order: the
+    reported inertia must match an inertia recomputed from the returned
+    (assignment, centroids) against the caller's points."""
+    pts = jnp.asarray(blobs(4096, 2, 4, seed=3)[0])
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(9), pts,
+                                        4).centroids
+    res = ClusterEngine("fused").fit(pts, seeds, max_iters=10,
+                                     order="morton")
+    diff = pts - res.centroids[res.assignment]
+    phi = float(jnp.sum(jnp.sum(diff * diff, axis=1)))
+    np.testing.assert_allclose(phi, float(res.inertia), rtol=1e-4)
+    # and the clustering quality matches the natural-order fit
+    nat = ClusterEngine("fused").fit(pts, seeds, max_iters=10)
+    np.testing.assert_allclose(float(res.inertia), float(nat.inertia),
+                               rtol=1e-4)
+
+
+def test_fit_order_accepts_precomputed_permutation():
+    pts, labels = blobs(2 ** 15, 8, 8, seed=4)
+    pts = jnp.asarray(pts)
+    perm, _ = ordering.label_sort_order(jnp.asarray(labels))
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(10), pts,
+                                        8).centroids
+    res = ClusterEngine("fused").fit(pts, seeds, max_iters=8, tol=-1.0,
+                                     order=perm)
+    np.testing.assert_array_equal(np.asarray(res.reorder), np.asarray(perm))
+    assert int(jnp.sum(res.skipped)) > 0   # label sort makes the gate fire
+
+
+def test_kmeans_batched_order_matches_natural_quality():
+    B, n, k = 2, 2048, 4
+    bpts = jnp.stack([jnp.asarray(blobs(n, 2, k, seed=30 + s)[0])
+                      for s in range(B)])
+    key = jax.random.PRNGKey(11)
+    nat = ClusterEngine("fused").kmeans_batched(key, bpts, k, max_iters=15)
+    mort = ClusterEngine("fused").kmeans_batched(key, bpts, k, max_iters=15,
+                                                 order="morton")
+    assert mort.reorder.shape == (B, n)
+    for b in range(B):
+        diff = bpts[b] - mort.centroids[b][mort.assignment[b]]
+        phi = float(jnp.sum(jnp.sum(diff * diff, axis=1)))
+        np.testing.assert_allclose(phi, float(mort.inertia[b]), rtol=1e-4)
+        assert phi < 3 * float(nat.inertia[b]) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity (tiled vs oracle, gated vs tiled)
+# ---------------------------------------------------------------------------
+
+
+ASSIGN_TILED_SHAPES = [(1000, 5, 7, 128), (512, 2, 4, 128), (100, 3, 2, 128)]
+
+
+@pytest.mark.parametrize("n,d,k,bn", ASSIGN_TILED_SHAPES)
+def test_lloyd_assign_tiled_matches_ref(n, d, k, bn):
+    pts = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    cents = jax.random.normal(jax.random.PRNGKey(1), (k, d))
+    got = ops.lloyd_assign_tiled(pts, cents, block_n=bn)
+    want = ref.lloyd_assign_tiled_ref(pts, cents, bn)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    for g, w, tol in zip(got[1:], want[1:], (1e-6, 1e-5, 1e-5, 1e-5, 0)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=tol)
+    # reduced tile sums equal the accumulated kernel's totals
+    a2, md2, sums2, counts2 = ops.lloyd_assign(pts, cents)
+    np.testing.assert_allclose(np.asarray(got[4].sum(0)), np.asarray(sums2),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got[5].sum(0)),
+                                  np.asarray(counts2))
+
+
+def test_lloyd_assign_gated_all_active_bitwise_equals_tiled():
+    n, d, k, bn = 1000, 5, 7, 128
+    pts = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    cents = jax.random.normal(jax.random.PRNGKey(3), (k, d))
+    nrm = ops.point_norms(pts)
+    grid = -(-n // bn)
+    tiled = ops.lloyd_assign_tiled(pts, cents, norms=nrm, block_n=bn)
+    z = jnp.zeros
+    gated = ops.lloyd_assign_gated(
+        pts, cents, nrm, z((n,), jnp.int32), z((n,)), z((grid,)),
+        z((grid,)), z((grid, k, d)), z((grid, k)),
+        jnp.ones((grid,), bool), block_n=bn)
+    for g, t in zip(gated[:6], tiled):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(t))
+    assert int(gated[6]) == 0
+
+
+def test_lloyd_assign_gated_skipping_carries_previous_blocks():
+    """Inactive tiles keep ALL six aliased outputs bitwise; with unchanged
+    centroids the carried values equal a recompute, so the full outputs are
+    bitwise the tiled kernel's."""
+    n, d, k, bn = 1024, 3, 5, 128
+    pts = jax.random.normal(jax.random.PRNGKey(4), (n, d))
+    cents = jax.random.normal(jax.random.PRNGKey(5), (k, d))
+    nrm = ops.point_norms(pts)
+    grid = -(-n // bn)
+    prev = ops.lloyd_assign_tiled(pts, cents, norms=nrm, block_n=bn)
+    active = jnp.arange(grid) % 3 == 0
+    gated = ops.lloyd_assign_gated(pts, cents, nrm, *prev, active,
+                                   block_n=bn)
+    for g, t in zip(gated[:6], prev):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(t))
+    assert int(gated[6]) == grid - int(jnp.sum(active))
+
+
+def test_lloyd_assign_gated_batched_matches_single():
+    B, n, d, k, bn = 3, 512, 2, 4, 128
+    keys = jax.random.split(jax.random.PRNGKey(6), 4)
+    pts = jax.random.normal(keys[0], (B, n, d))
+    cents = jax.random.normal(keys[1], (B, k, d))
+    nrm = jax.vmap(ops.point_norms)(pts)
+    grid = -(-n // bn)
+    prev = jax.vmap(lambda p, c, nr: ops.lloyd_assign_tiled(
+        p, c, norms=nr, block_n=bn))(pts, cents, nrm)
+    active = jnp.arange(grid)[None, :] % (jnp.arange(B)[:, None] + 2) == 0
+    out = jax.vmap(lambda p, c, nr, pa, pm, pp, pg, ts, tc, ac:
+                   ops.lloyd_assign_gated(p, c, nr, pa, pm, pp, pg, ts, tc,
+                                          ac, block_n=bn))(
+        pts, cents, nrm, *prev, active)
+    for b in range(B):
+        single = ops.lloyd_assign_gated(pts[b], cents[b], nrm[b],
+                                        *[p[b] for p in prev], active[b],
+                                        block_n=bn)
+        for x, y in zip([o[b] for o in out], single):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_assign_gate_model_requires_unmoved_assigned_centroids():
+    """A centroid that moved even slightly keeps every tile it owns active —
+    the carried min_d2 would otherwise be stale."""
+    pts = _coherent(n=4096, seed=14)
+    be = FusedBackend()
+    cache = be.prologue(pts, m=4)
+    tile = be.seed_tile(4096, 2, 4)
+    cents = jnp.asarray(pts[::1024][:4], jnp.float32)
+    first = be.assign_update(pts, cents, None, cache.norms, cache=cache)
+    st = first.state
+    # no movement at all: every occupied tile with a healthy gap may skip
+    delta0 = jnp.zeros((4,), jnp.float32)
+    active0 = bounds.assign_active_tiles(delta0, cents, st, cache)
+    # every centroid moved: nothing may skip
+    delta1 = jnp.full((4,), 0.5, jnp.float32)
+    active1 = bounds.assign_active_tiles(delta1, cents, st, cache)
+    assert bool(jnp.all(active1))
+    assert int(jnp.sum(active0)) <= int(jnp.sum(active1))
+
+
+# ---------------------------------------------------------------------------
+# bf16 mini-batch streaming (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_minibatch_bf16_streams_and_matches_fp32_quality():
+    n, d, k, batch = 8192, 2, 8, 512
+    full = jnp.asarray(blobs(n, d, k, seed=15)[0])
+    np_pts = np.asarray(full)
+
+    def read_fn(step):
+        lo = (step * batch) % n
+        return np_pts[lo:lo + batch]
+
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(12), full[:512],
+                                        k).centroids
+    f32 = ClusterEngine("fused").fit_minibatch(seeds, read_fn, n_batches=24)
+    b16 = ClusterEngine("fused", precision="bf16").fit_minibatch(
+        seeds, read_fn, n_batches=24)
+    phi32 = float(quality.inertia(full, f32.centroids))
+    phi16 = float(quality.inertia(full, b16.centroids))
+    assert abs(phi16 - phi32) / phi32 < 0.15, (phi16, phi32)
+
+
+def test_minibatch_bf16_jaxpr_streams_bf16():
+    from repro.core import engine as eng_mod
+    cents = jnp.zeros((4, 2), jnp.float32)
+    counts = jnp.zeros((4,), jnp.float32)
+    batch = jnp.zeros((256, 2), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda c, n, b: eng_mod.minibatch_step(c, n, b, FusedBackend(),
+                                               "bf16"))(cents, counts, batch)
+    assert "bf16" in str(jaxpr.jaxpr)
+
+
+def test_minibatch_order_morton_returns_batch_row_order():
+    n, d, k, batch = 4096, 2, 4, 512
+    full = jnp.asarray(blobs(n, d, k, seed=16)[0])
+    np_pts = np.asarray(full)
+
+    def read_fn(step):
+        lo = (step * batch) % n
+        return np_pts[lo:lo + batch]
+
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(13), full[:512],
+                                        k).centroids
+    res = ClusterEngine("fused").fit_minibatch(seeds, read_fn, n_batches=8,
+                                               order="morton")
+    assert res.assignment.shape == (batch,)
+    # the last batch's assignment is in the BATCH's own row order: its
+    # inertia against the returned centroids must sit within the one-step
+    # centroid-update drift of the reported (pre-update) inertia — a
+    # scrambled (non-inverted) assignment would be off by >10x on blobs
+    last = jnp.asarray(read_fn(7))
+    diff = last - res.centroids[res.assignment]
+    phi = float(jnp.sum(jnp.sum(diff * diff, axis=1)))
+    np.testing.assert_allclose(phi, float(res.inertia), rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# k-means|| tiled weighted reduce (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_tiled_seeding_respects_zero_weights():
+    pts = jnp.asarray(blobs(512, 2, 4, seed=17)[0])
+    w = jnp.where(jnp.arange(512) < 256, 1.0, 0.0)
+    for backend in ("fused", "pallas"):
+        res = ClusterEngine(backend).seed(jax.random.PRNGKey(14), pts, 6,
+                                          weights=w, sampler="tiled")
+        idx = np.asarray(res.indices)
+        assert (idx < 256).all(), idx
+
+
+def test_kmeans_parallel_reduce_has_no_full_n_cumsum():
+    """The k-means|| weighted reduce now draws with the tiled sampler: no
+    cumsum over the full candidate axis may appear in the traced program
+    once the candidate set spans multiple tiles."""
+    from repro.core.kmeans_parallel import kmeans_parallel_init
+    from repro.kernels.ops import choose_block_n
+    n, d, k, rounds = 4096, 2, 4, 4
+    l = 2 * k
+    n_cand = rounds * l + 1
+    pts = jnp.zeros((n, d), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda kk, pp: kmeans_parallel_init(kk, pp, k, rounds=rounds))(
+        jax.random.PRNGKey(0), pts)
+    import tests.test_engine as te
+    sizes = set()
+    for eqn in te._iter_eqns(jaxpr.jaxpr):
+        if "cumsum" in eqn.primitive.name:
+            sizes.add(eqn.invars[0].aval.shape)
+    assert (n_cand,) not in sizes, sizes
+
+
+def test_kmeans_parallel_quality_with_tiled_reduce():
+    pts = jnp.asarray(blobs(4096, 2, 8, seed=18)[0])
+    from repro.core.kmeans_parallel import kmeans_parallel_init
+    res = kmeans_parallel_init(jax.random.PRNGKey(15), pts, 8)
+    idx = np.asarray(res.indices)
+    assert ((0 <= idx) & (idx < 4096)).all()
+    assert len(set(idx.tolist())) == 8
+    phi = float(quality.inertia(pts, res.centroids))
+    rand = jnp.asarray(pts[np.random.default_rng(0).choice(4096, 8)])
+    assert phi < 2.0 * float(quality.inertia(pts, rand)) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# serve/kvquant ordering plumb (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_kvquant_codebook_accepts_order():
+    from repro.serve import kvquant
+    key = jax.random.PRNGKey(0)
+    vecs = jax.random.normal(key, (1024, 16))
+    cb = kvquant.build_codebook(key, vecs, n_sub=4, n_codes=16,
+                                lloyd_iters=3, order="morton")
+    assert cb.centroids.shape == (4, 16, 4)
+    pq = kvquant.PQCache(kvquant.encode(vecs, cb), cb)
+    err = float(kvquant.reconstruction_error(vecs, pq))
+    base = kvquant.build_codebook(key, vecs, n_sub=4, n_codes=16,
+                                  lloyd_iters=3)
+    base_err = float(kvquant.reconstruction_error(
+        vecs, kvquant.PQCache(kvquant.encode(vecs, base), base)))
+    assert err < 2.0 * base_err + 1e-6

@@ -207,10 +207,12 @@ def test_pick_block_n_batched_accounting():
 
 
 def test_pick_block_n_accounts_norms_and_bound_state():
-    """The VMEM accounting must include the cached-norms input block and the
-    bound-state buffers: for a given budget the pick with those terms can
-    never exceed a hand-computed pick WITHOUT them, and at large d the
-    norms term visibly matters (it scales with bn)."""
+    """The VMEM accounting must include the cached-norms input block, the
+    bound-state buffers AND the bounded-assignment buffers (per-tile cluster
+    sums/counts block + aliased prev, assignment/min_d2 aliased i/o,
+    movement-bound scalars): for a given budget the pick with those terms
+    can never exceed a hand-computed pick WITHOUT them, and the returned
+    pick must be the LARGEST power of two whose full working set fits."""
     budget = ops._VMEM_BUDGET
     for d, k in ((2, 8), (64, 256), (512, 1024), (4096, 256)):
         bn = ops.pick_block_n(d, k)
@@ -221,6 +223,9 @@ def test_pick_block_n_accounts_norms_and_bound_state():
             w += 4 * 2 * b              # cached-norms block (fp32, 2 buffers)
             w += 4 * (k * d + k + 8)    # accumulators + partial
             w += 4 * 2 * 4              # bound-state scalar blocks
+            w += 4 * 2 * (k * d + k)    # per-tile sums/counts out (+ aliased)
+            w += 4 * 4 * b              # assignment/min_d2 aliased i/o blocks
+            w += 4 * 2 * 4              # gap/partial movement scalars
             return w
         assert working(bn) <= budget or bn == 128
         if bn < 4096:
@@ -371,9 +376,14 @@ def test_argmin_tie_break_parity_across_paths():
     a_b, _, _, _ = jax.vmap(lambda p, c: ops.lloyd_assign(p, c))(bpts, bc)
     np.testing.assert_array_equal(np.asarray(a_b[0]), np.asarray(a_ref))
     for be in (ReferenceBackend(), FusedBackend(), PallasBackend()):
-        a_e, _, _, _ = be.assign_update(pts, cents, None)
-        np.testing.assert_array_equal(np.asarray(a_e), np.asarray(a_ref),
-                                      err_msg=be.name)
+        rnd = be.assign_update(pts, cents, None)
+        np.testing.assert_array_equal(np.asarray(rnd.assignment),
+                                      np.asarray(a_ref), err_msg=be.name)
+        # the tiled (bounded-fit) path must break ties identically
+        cache = be.prologue(pts, m=cents.shape[0], with_bounds=False)
+        tiled = be.assign_update(pts, cents, None, cache=cache)
+        np.testing.assert_array_equal(np.asarray(tiled.assignment),
+                                      np.asarray(a_ref), err_msg=be.name)
 
 
 def test_kernel_inside_seeding_loop():
