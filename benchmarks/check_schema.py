@@ -1,0 +1,84 @@
+"""Schema check for emitted benchmark JSON (CI smoke gate).
+
+The checked-in BENCH_*.json baselines are trajectory records other PRs diff
+against; a module refactor that silently drops a column (the ISSUE 5
+failure mode: a fit section without its ``prune_rate``) would corrupt the
+trajectory without failing any test. This gate runs right after the CI
+bench smoke and fails LOUDLY when a required per-bench column is missing
+from any row of the freshly emitted JSON.
+
+  PYTHONPATH=src python -m benchmarks.check_schema bench-out/BENCH_round.json
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+# required columns per `bench` section of each BENCH_<name>.json payload
+REQUIRED: dict[str, dict[str, set]] = {
+    "round": {
+        "round_traffic": {"skip_rate_mean", "prune_rate", "bytes_per_round",
+                          "seconds"},
+        "skip_vs_round": {"skip_rate_mean", "prune_rate", "bytes_per_round"},
+        "fit_traffic": {"skip_rate_mean", "prune_rate", "bytes_per_round",
+                        "accum_hbm", "accum_hbm_flat", "seconds"},
+        "fit_skip_vs_iter": {"skip_rate_mean", "prune_rate",
+                             "bytes_per_round", "accum_hbm",
+                             "accum_hbm_flat"},
+    },
+}
+
+
+def check_payload(name: str, payload: dict) -> list[str]:
+    """Returns a list of human-readable schema violations (empty = clean)."""
+    errors = []
+    rules = REQUIRED.get(name)
+    if rules is None:
+        return errors
+    rows = payload.get("rows")
+    if not rows:
+        return [f"BENCH_{name}: no rows emitted"]
+    seen = set()
+    for i, row in enumerate(rows):
+        bench = row.get("bench")
+        seen.add(bench)
+        missing = rules.get(bench, set()) - row.keys()
+        if missing:
+            errors.append(f"BENCH_{name} row {i} (bench={bench!r}): "
+                          f"missing {sorted(missing)}")
+    absent_sections = set(rules) - seen
+    if absent_sections:
+        errors.append(f"BENCH_{name}: sections never emitted: "
+                      f"{sorted(absent_sections)}")
+    return errors
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    name = path.name.removeprefix("BENCH_").removesuffix(".json")
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    return check_payload(name, payload)
+
+
+def main() -> None:
+    paths = [pathlib.Path(p) for p in sys.argv[1:]]
+    if not paths:
+        print("usage: python -m benchmarks.check_schema BENCH_*.json ...",
+              file=sys.stderr)
+        raise SystemExit(2)
+    errors = []
+    for p in paths:
+        errors += check_file(p)
+    if errors:
+        print("BENCH SCHEMA CHECK FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"bench schema ok: {', '.join(p.name for p in paths)}")
+
+
+if __name__ == "__main__":
+    main()

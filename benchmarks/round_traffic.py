@@ -1,13 +1,18 @@
 """Round-kernel traffic trajectory — what the bound-gated, mixed-precision
 round kernels actually save (ISSUE 3 tentpole; ISSUE 4 adds the ``fit``
-section for the bounded Lloyd assignment round).
+section for the bounded Lloyd assignment round; ISSUE 5 adds the per-POINT
+prune rate and the hierarchical-accumulator HBM columns).
 
-Three columns per seeding run:
+Columns per seeding run:
 
   skip_rate     — fraction of point tiles the triangle-inequality bound
                   skipped, per round (exact: fp32 results are bitwise
                   identical to the ungated kernels). Reported vs round
                   number: early rounds touch everything, later rounds prune.
+  prune_rate    — fraction of ALL points whose k-way distance update the
+                  per-point (fine-level) bound short-circuited inside
+                  ACTIVE tiles — the modelled FLOP saving the tile gate
+                  alone cannot reach (also exact / bitwise-pinned).
   bytes/round   — modelled HBM traffic of one round at the engine's tile
                   height: active tiles stream (points + cached norms +
                   min_d2 in/out + partial/tile-max scalars); skipped tiles
@@ -18,17 +23,22 @@ Three columns per seeding run:
                   host and ~2x on the round-kernel fraction on TPU).
 
 The ``fit_traffic`` / ``fit_skip_vs_iter`` rows track the ASSIGNMENT round
-(the Lloyd hot path): per-iteration skip rate of the movement-bound gate on
-label-sorted vs shuffled vs Morton-ordered rows, and the modelled bytes per
-iteration of the gated assignment kernel.
+(the Lloyd hot path): per-iteration skip/prune rates of the two-level
+movement-bound gate on label-sorted vs shuffled vs Morton-ordered rows, the
+modelled bytes per iteration of the gated assignment kernel, and the
+accumulator-HBM columns ``accum_hbm`` (hierarchical tile → super-tile
+layout, O(n_super·k·d)) vs ``accum_hbm_flat`` (what the flat per-tile
+layout of PR 4 would cost, O(n_tiles·k·d)) — the closed "memory trade".
 
 Data is label-sorted blobs: tile-level pruning needs spatially coherent
 tiles (Capó et al.) — the unsorted control row shows skip_rate ~= 0, and
 the `morton` row shows how much `repro.data.ordering` recovers without
-labels.
+labels (its per-point prune_rate stays > 0 even where tile skips sag).
 
 Emits BENCH_round.json via REPRO_BENCH_OUT; benchmarks/BENCH_round.json is
-the checked-in smoke-mode baseline tracking the trajectory across PRs."""
+the checked-in smoke-mode baseline tracking the trajectory across PRs. The
+CI smoke run schema-checks the fit sections for the prune_rate/accum_hbm
+columns (benchmarks/check_schema.py)."""
 from __future__ import annotations
 
 import numpy as np
@@ -77,6 +87,7 @@ def run(rows: list):
                 # carries bf16-derived tile_max, so its trajectory can differ
                 res = peng.seed(key, pts, SEEDS)
                 skips = np.asarray(res.skipped, np.float64) / n_tiles
+                prunes = np.asarray(res.pruned, np.float64) / n
                 t = time_fn(lambda: jax.block_until_ready(
                     peng.seed(key, pts, SEEDS)), iters=3)
                 rows.append({
@@ -85,6 +96,7 @@ def run(rows: list):
                     "rounds": SEEDS,
                     "skip_rate_mean": round(float(skips.mean()), 4),
                     "skip_rate_last": round(float(skips[-4:].mean()), 4),
+                    "prune_rate": round(float(prunes.mean()), 4),
                     "bytes_per_round": round_bytes(
                         n, float(skips.mean()),
                         2 if precision == "bf16" else 4),
@@ -98,12 +110,14 @@ def run_skip_vs_round(rows: list):
     pts = coherent_blobs(N)
     res = eng.seed(jax.random.PRNGKey(1), pts, SEEDS)
     n_tiles = -(-N // eng.backend.seed_tile(N, D))
-    for r, s in enumerate(np.asarray(res.skipped)):
+    for r, (s, p) in enumerate(zip(np.asarray(res.skipped),
+                                   np.asarray(res.pruned))):
         rows.append({
             "bench": "skip_vs_round", "backend": "fused",
             "layout": "coherent", "precision": "fp32", "n": N, "rounds": r,
             "skip_rate_mean": round(float(s) / n_tiles, 4),
             "skip_rate_last": "",
+            "prune_rate": round(float(p) / N, 4),
             "bytes_per_round": round_bytes(N, float(s) / n_tiles, 4),
             "seconds": "",
         })
@@ -121,18 +135,35 @@ FIT_ITERS = 6 if SMOKE else 10
 def fit_bytes(n: int, skip_rate: float, dtype_bytes: int) -> int:
     """Modelled HBM bytes of ONE gated assignment iteration at the engine
     tile height: per ACTIVE tile the kernel streams the point block (stream
-    dtype) + the fp32 cached-norms block in and writes the assignment/min_d2
-    blocks, the per-tile cluster sums/counts block and the partial/gap
-    scalars out. The aliased prev_* carries live in ANY memory space — no
-    per-step DMA — and skipped tiles move nothing."""
+    dtype) + the fp32 cached-norms block + the int32 label / fp32 min_d2 /
+    fp32 point_lb carries in, writes those three back out along with the
+    partial/gap/pruned scalars, and amortizes the per-SUPER cluster
+    sums/counts block over its tps tiles. The never-read aliased carries
+    live in ANY memory space — no per-step DMA — and skipped tiles move
+    nothing."""
+    from repro.core import bounds as bnd
     bn = choose_block_n(n, D_FIT, K_FIT, batched=True)
     n_tiles = -(-n // bn)
+    tps = bnd.tiles_per_super(n_tiles)
     active = round(n_tiles * (1.0 - skip_rate))
     per_tile = (bn * (D_FIT * dtype_bytes + 4)      # points + norms in
-                + bn * (4 + 4)                      # assign/md out
-                + 4 * (K_FIT * D_FIT + K_FIT)       # tile sums/counts out
-                + 2 * 4)                            # partial/gap scalars
-    return active * per_tile
+                + 2 * bn * (4 + 4 + 4)              # assign/md/lb i/o
+                + 4 * (K_FIT * D_FIT + K_FIT) / tps  # super sums/counts,
+                                                     # amortized over tps
+                + 3 * 4)                            # partial/gap/pruned
+    return round(active * per_tile)
+
+
+def accum_hbm(n: int) -> tuple[int, int]:
+    """Modelled accumulator footprint of one assignment iteration:
+    (hierarchical O(n_super·k·d), flat O(n_tiles·k·d)) fp32 bytes — the
+    "memory trade" closed by the tile -> super-tile -> global reduce."""
+    from repro.core import bounds as bnd
+    bn = choose_block_n(n, D_FIT, K_FIT, batched=True)
+    n_tiles = -(-n // bn)
+    n_super = -(-n_tiles // bnd.tiles_per_super(n_tiles))
+    per_slot = 4 * (K_FIT * D_FIT + K_FIT)
+    return n_super * per_slot, n_tiles * per_slot
 
 
 def _fit_layouts(n: int):
@@ -150,11 +181,13 @@ def run_fit(rows: list):
     for backend, n in (("fused", N_FIT), ("pallas", N_FIT_PALLAS)):
         eng = ClusterEngine(backend)
         n_tiles = -(-n // eng.backend.seed_tile(n, D_FIT, K_FIT))
+        hier, flat = accum_hbm(n)
         for layout, pts, order in _fit_layouts(n):
             seeds = eng.seed(key, pts, K_FIT).centroids
             res = eng.fit(pts, seeds, max_iters=FIT_ITERS, tol=-1.0,
                           order=order)
             skips = np.asarray(res.skipped, np.float64) / n_tiles
+            prunes = np.asarray(res.pruned, np.float64) / n
             t = time_fn(lambda: jax.block_until_ready(
                 eng.fit(pts, seeds, max_iters=FIT_ITERS, tol=-1.0,
                         order=order).centroids), iters=3)
@@ -164,7 +197,10 @@ def run_fit(rows: list):
                 "rounds": FIT_ITERS,
                 "skip_rate_mean": round(float(skips.mean()), 4),
                 "skip_rate_last": round(float(skips[-3:].mean()), 4),
+                "prune_rate": round(float(prunes.mean()), 4),
                 "bytes_per_round": fit_bytes(n, float(skips.mean()), 4),
+                "accum_hbm": hier,
+                "accum_hbm_flat": flat,
                 "seconds": round(t, 6),
             })
 
@@ -177,13 +213,18 @@ def run_fit_skip_vs_iter(rows: list):
     seeds = eng.seed(jax.random.PRNGKey(3), pts, K_FIT).centroids
     res = eng.fit(pts, seeds, max_iters=FIT_ITERS, tol=-1.0)
     n_tiles = -(-N_FIT // eng.backend.seed_tile(N_FIT, D_FIT, K_FIT))
-    for it, s in enumerate(np.asarray(res.skipped)):
+    hier, flat = accum_hbm(N_FIT)
+    for it, (s, p) in enumerate(zip(np.asarray(res.skipped),
+                                    np.asarray(res.pruned))):
         rows.append({
             "bench": "fit_skip_vs_iter", "backend": "fused",
             "layout": layout, "precision": "fp32", "n": N_FIT, "rounds": it,
             "skip_rate_mean": round(float(s) / n_tiles, 4),
             "skip_rate_last": "",
+            "prune_rate": round(float(p) / N_FIT, 4),
             "bytes_per_round": fit_bytes(N_FIT, float(s) / n_tiles, 4),
+            "accum_hbm": hier,
+            "accum_hbm_flat": flat,
             "seconds": "",
         })
 
@@ -195,8 +236,8 @@ def main():
     run_fit(rows)
     run_fit_skip_vs_iter(rows)
     header = ["bench", "backend", "layout", "precision", "n", "rounds",
-              "skip_rate_mean", "skip_rate_last", "bytes_per_round",
-              "seconds"]
+              "skip_rate_mean", "skip_rate_last", "prune_rate",
+              "bytes_per_round", "accum_hbm", "accum_hbm_flat", "seconds"]
     emit(rows, header)
     write_json("round", {
         "meta": {"smoke": SMOKE, "N": N, "D": D, "K": K, "seeds": SEEDS,

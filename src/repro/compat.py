@@ -46,3 +46,26 @@ def cost_analysis(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return cost
+
+
+def _register_optimization_barrier_batcher() -> None:
+    """jax 0.4.x has no vmap rule for ``optimization_barrier`` (added
+    upstream later). The rule is trivial — the barrier is identity-shaped,
+    so bind the batched operands and pass the batch dims through — and the
+    engine's reduction-tree pinning uses the barrier under ``vmap``
+    (fit_batched), so register it when missing."""
+    try:
+        from jax._src.lax.lax import optimization_barrier_p
+        from jax.interpreters import batching
+    except ImportError:                                  # pragma: no cover
+        return
+    if optimization_barrier_p in batching.primitive_batchers:
+        return
+
+    def _rule(args, dims):
+        return optimization_barrier_p.bind(*args), dims
+
+    batching.primitive_batchers[optimization_barrier_p] = _rule
+
+
+_register_optimization_barrier_batcher()

@@ -80,6 +80,9 @@ class KmeansppResult(NamedTuple):
     min_d2: jax.Array      # (n,) final D^2 to nearest seed (useful for k-means||)
     skipped: Optional[jax.Array] = None  # (k,) int32 tiles skipped per round
                                          # (None when bound gating is off)
+    pruned: Optional[jax.Array] = None   # (k,) int32 points whose min-update
+                                         # the per-point bound short-circuited
+                                         # inside ACTIVE tiles, per round
 
 
 class SeedRound(NamedTuple):
@@ -90,6 +93,8 @@ class SeedRound(NamedTuple):
     tile_max: Optional[jax.Array] = None  # (n_tiles,) per-tile max of min_d2
                                           # (bound state; None when gating off)
     skipped: Union[jax.Array, int] = 0    # () tiles skipped this round
+    pruned: Union[jax.Array, int] = 0     # () points short-circuited inside
+                                          # active tiles this round
 
 
 class LloydResult(NamedTuple):
@@ -101,6 +106,9 @@ class LloydResult(NamedTuple):
     skipped: Optional[jax.Array] = None  # (max_iters,) int32 assignment tiles
                                          # skipped per iteration (None when
                                          # bound gating is off / weighted)
+    pruned: Optional[jax.Array] = None   # (max_iters,) int32 points the
+                                         # per-point Hamerly bound short-
+                                         # circuited inside active tiles
     reorder: Optional[jax.Array] = None  # (n,) int32 row permutation the
                                          # kernels saw (None = natural order)
                                          # — provenance for pruning audits
@@ -115,6 +123,8 @@ class AssignRound(NamedTuple):
     state: Optional[BoundState] = None   # next iteration's bound state
                                          # (None on the legacy/weighted path)
     skipped: Union[jax.Array, int] = 0   # () tiles skipped this iteration
+    pruned: Union[jax.Array, int] = 0    # () points short-circuited inside
+                                         # active tiles this iteration
 
 
 def pairwise_d2(x: jax.Array, c: jax.Array) -> jax.Array:
@@ -240,15 +250,20 @@ def _gate_model(new_md_full, min_d2, weights, c_new, cache: RoundCache,
     """Pure-JAX model of the gated kernel, shared by the reference and fused
     backends: tiles the bound proves unchanged take their ``min_d2`` slice
     and partial/tile-max entries from the CARRIED state instead of the fresh
-    compute — exactly what the Pallas kernel's aliased outputs do, so the
-    distribution/parity tests cover the skip logic itself. (Skipping is
-    exact, so in fp32 the selects are value-noops unless the bound were
-    wrong; under bf16 streams they additionally suppress bf16-noise updates
-    the bound proves spurious — see docs/engine.md "Precision & bounds".)"""
+    compute, and inside ACTIVE tiles the per-point bound keeps every row
+    whose min-update provably cannot fire — exactly what the Pallas
+    kernel's aliased outputs and in-kernel prune do, so the distribution/
+    parity tests cover both levels of the skip logic. (Skipping is exact, so
+    in fp32 the selects are value-noops unless the bound were wrong; under
+    bf16 streams they additionally suppress bf16-noise updates the bound
+    proves spurious — see docs/engine.md "Precision & bounds".)"""
     n = min_d2.shape[0]
-    active = bounds.active_tiles(c_new, cache, state.tile_max)
+    active, dc, margin = bounds.seed_gate(c_new, cache, state.tile_max)
     act_pt = bounds.expand_mask(active, tile, n)
-    md = jnp.where(act_pt, new_md_full, min_d2)
+    prune = bounds.seed_point_prune(min_d2, cache.center_d,
+                                    bounds.expand_mask(dc, tile, n),
+                                    bounds.expand_mask(margin, tile, n))
+    md = jnp.where(act_pt & jnp.logical_not(prune), new_md_full, min_d2)
     wmd = md if weights is None else md * weights
     partials = jnp.where(active, sampling.tile_partials(wmd, tile),
                          state.partials)
@@ -259,20 +274,24 @@ def _gate_model(new_md_full, min_d2, weights, c_new, cache: RoundCache,
     # differences in the two prologues' tile geometry at bound boundaries)
     skipped = jnp.minimum(jnp.sum(jnp.logical_not(active)),
                           active.shape[0] - 1).astype(jnp.int32)
-    return SeedRound(md, jnp.sum(partials), partials, tile_max, skipped)
+    pruned = jnp.sum((act_pt & prune).astype(jnp.int32))
+    return SeedRound(md, jnp.sum(partials), partials, tile_max, skipped,
+                     pruned)
 
 
 def _assign_tiled_model(points, centroids, norms, tile):
     """Pure-JAX twin of `lloyd_assign_tiled_pallas`, shared by the reference
     and fused backends: `jax.lax.map` over point tiles of the SAME per-tile
     assignment math the kernel runs (`kernels.lloyd_assign._tile_assign`),
-    so the per-tile partial/gap/sums/counts trees agree and the gate model's
-    selects are value-noops in fp32. Returns (assignment, min_d2, partials,
-    gaps, tile_sums, tile_counts)."""
+    so the per-tile partial/gap trees and the hierarchical super-tile
+    sums/counts agree and the gate model's selects are value-noops in fp32.
+    Returns (assignment, min_d2, partials, gaps, lb, super_sums,
+    super_counts)."""
     from repro.kernels.lloyd_assign import _tile_assign
 
     n, d = points.shape
     pad = (-n) % tile
+    tps = bounds.tiles_per_super((n + pad) // tile)
     pts = jnp.pad(points, ((0, pad), (0, 0)))
     nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
     valid = jnp.arange(n + pad) < n
@@ -282,10 +301,45 @@ def _assign_tiled_model(points, centroids, norms, tile):
         x, xn, vld = args
         return _tile_assign(x, xn, cents, vld)
 
-    a, m, part, gap, tsums, tcounts = jax.lax.map(
+    a, m, part, gap, lb, tsums, tcounts = jax.lax.map(
         blk, (pts.reshape(-1, tile, d), nrm.reshape(-1, tile),
               valid.reshape(-1, tile)))
-    return (a.reshape(-1)[:n], m.reshape(-1)[:n], part, gap, tsums, tcounts)
+    return (a.reshape(-1)[:n], m.reshape(-1)[:n], part, gap,
+            lb.reshape(-1)[:n], bounds.super_reduce(tsums, tps),
+            bounds.super_reduce(tcounts, tps))
+
+
+def _assign_pruned_model(points, centroids, norms, tile, state: BoundState,
+                         delta, thresh, absorb):
+    """Pure-JAX twin of the GATED kernel's in-tile math: the per-point
+    Hamerly prune (`kernels.lloyd_assign._tile_assign_pruned`) over every
+    tile. Returns per-tile trees BEFORE the coarse tile-level selects
+    (assignment, min_d2, partials, gaps, lb, pruned (n_tiles,), tile_sums,
+    tile_counts — the last two still per-tile so the caller can select at
+    super granularity)."""
+    from repro.kernels.lloyd_assign import _tile_assign_pruned
+
+    n, d = points.shape
+    pad = (-n) % tile
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
+    valid = jnp.arange(n + pad) < n
+    cents = centroids.astype(points.dtype)
+    pa = jnp.pad(state.assignment.astype(jnp.int32), (0, pad))
+    pmd = jnp.pad(state.min_d2.astype(jnp.float32), (0, pad))
+    plb = jnp.pad(state.point_lb.astype(jnp.float32), (0, pad))
+
+    def blk(args):
+        x, xn, vld, a0, m0, l0, th, ab = args
+        return _tile_assign_pruned(x, xn, cents, vld, a0, m0, l0, delta,
+                                   th, ab)
+
+    a, m, part, gap, lb, pruned, tsums, tcounts = jax.lax.map(
+        blk, (pts.reshape(-1, tile, d), nrm.reshape(-1, tile),
+              valid.reshape(-1, tile), pa.reshape(-1, tile),
+              pmd.reshape(-1, tile), plb.reshape(-1, tile), thresh, absorb))
+    return (a.reshape(-1)[:n], m.reshape(-1)[:n], part, gap,
+            lb.reshape(-1)[:n], pruned, tsums, tcounts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -294,6 +348,12 @@ class Backend:
 
     name: ClassVar[str] = "base"
     distributed: ClassVar[bool] = False
+
+    # floor on the centroid-count the seed_tile VMEM pick budgets for.
+    # ``kmeans_points`` sets this to k (dataclasses.replace) so the seeding
+    # AND fit phases agree on one tile geometry and can share one prologue;
+    # 0 leaves the per-call m untouched (the historical behavior).
+    tile_m: int = 0
 
     def seed_round(self, points, c_new, min_d2, weights, *,
                    cache: Optional[RoundCache] = None,
@@ -326,32 +386,69 @@ class Backend:
         ALL their outputs from the carried state — exactly what the gated
         kernel's aliased outputs do — which is a value-noop in fp32 because
         skipping additionally requires the tile's assigned centroids to be
-        bitwise unmoved (see core.bounds.assign_active_tiles)."""
+        bitwise unmoved (see core.bounds.assign_active_tiles). The skip mask
+        is expanded to whole SUPER-tiles (the hierarchical accumulators
+        alias at super granularity), and inside active tiles the per-point
+        Hamerly bound short-circuits provably-stable points — also a
+        value-noop, counted in ``pruned``."""
         n, d = points.shape
-        tile = self.seed_tile(n, d, centroids.shape[0])
-        a, md, part, gap, tsums, tcounts = _assign_tiled_model(
-            points, centroids, norms, tile)
-        skipped = jnp.zeros((), jnp.int32)
+        k = centroids.shape[0]
+        tile = self.seed_tile(n, d, k)
+        tps = bounds.tiles_per_super(-(-n // tile))
         if (state is not None and delta is not None
                 and cache.centers is not None):
-            active = bounds.assign_active_tiles(delta, centroids, state,
-                                                cache)
+            dmax = jnp.max(delta)
+            cand = bounds.assign_active_tiles(delta, centroids, state, cache)
+            active = bounds.expand_active_supers(cand, tps)
+            thresh, absorb = bounds.assign_point_scalars(delta, centroids,
+                                                         state, cache)
+            a, md, part, gap, lb, pruned_t, tsums, tcounts = \
+                _assign_pruned_model(points, centroids, norms, tile, state,
+                                     delta, thresh, absorb)
             act_pt = bounds.expand_mask(active, tile, n)
             a = jnp.where(act_pt, a, state.assignment)
             md = jnp.where(act_pt, md, state.min_d2)
+            lb = jnp.where(act_pt, lb, state.point_lb)
             part = jnp.where(active, part, state.partials)
-            gap = bounds.decay_gap(state.tile_gap, active, gap,
-                                   jnp.max(delta))
-            tsums = jnp.where(active[:, None, None], tsums, state.tile_sums)
-            tcounts = jnp.where(active[:, None], tcounts, state.tile_counts)
-            # floor at one computed tile, mirroring compact_ids' write-back
-            # guard in the gated kernel, so model/kernel counters agree
-            skipped = jnp.minimum(jnp.sum(jnp.logical_not(active)),
-                                  active.shape[0] - 1).astype(jnp.int32)
-        new_state = BoundState(part, tile_gap=gap, tile_sums=tsums,
-                               tile_counts=tcounts, assignment=a, min_d2=md)
-        return AssignRound(a, md, jnp.sum(tsums, axis=0),
-                           jnp.sum(tcounts, axis=0), new_state, skipped)
+            gap = bounds.decay_gap(state.tile_gap, active, gap, dmax)
+            sup_act = bounds.super_any(active, tps)
+            ssums = jnp.where(sup_act[:, None, None],
+                              bounds.super_reduce(tsums, tps),
+                              state.tile_sums)
+            scounts = jnp.where(sup_act[:, None],
+                                bounds.super_reduce(tcounts, tps),
+                                state.tile_counts)
+            # same tree-pinning barrier as the ungated branch (the where
+            # usually blocks XLA's reduce merging already; the barrier makes
+            # the two-level tree unconditional)
+            ssums, scounts = jax.lax.optimization_barrier((ssums, scounts))
+            debt = jnp.where(active, 0.0, state.lb_debt + dmax)
+            skipped = jnp.sum(jnp.logical_not(active)).astype(jnp.int32)
+            # cast the fp32 per-tile counts BEFORE reducing (exact > 2^24)
+            pruned = jnp.sum(jnp.where(active, pruned_t,
+                                       0.0).astype(jnp.int32))
+            new_state = BoundState(part, tile_gap=gap, tile_sums=ssums,
+                                   tile_counts=scounts, assignment=a,
+                                   min_d2=md, point_lb=lb, lb_debt=debt)
+            return AssignRound(a, md, jnp.sum(ssums, axis=0),
+                               jnp.sum(scounts, axis=0), new_state, skipped,
+                               pruned)
+        a, md, part, gap, lb, ssums, scounts = _assign_tiled_model(
+            points, centroids, norms, tile)
+        del lb  # the ungated state carries no per-point bound fields (same
+        #         pytree as the Pallas ungated branch — the gated loop
+        #         builds its own init state)
+        # pin the two-level tree: without the barrier XLA merges the
+        # super-level reshape-sum into the outer cluster sum (one flat
+        # reduce over all tiles), which would make the ungated reduction
+        # order differ from the gated branch's where-blocked tree and break
+        # the bitwise gated==ungated claim
+        ssums, scounts = jax.lax.optimization_barrier((ssums, scounts))
+        new_state = BoundState(part, tile_gap=gap, tile_sums=ssums,
+                               tile_counts=scounts, assignment=a, min_d2=md)
+        return AssignRound(a, md, jnp.sum(ssums, axis=0),
+                           jnp.sum(scounts, axis=0), new_state,
+                           jnp.zeros((), jnp.int32))
 
     def prologue(self, points, m: int = 1,
                  with_bounds: bool = True) -> RoundCache:
@@ -366,9 +463,11 @@ class Backend:
         """Static tile height of seed_round's partials: every backend uses the
         Pallas kernel's VMEM-fitted block (batch-grid accounting — slightly
         conservative for the single-problem launch) so partial shapes agree
-        across backends and the tiled sampler slices the right window."""
+        across backends and the tiled sampler slices the right window.
+        ``tile_m`` (see the field) floors m so a kmeans call's two phases
+        share one geometry."""
         from repro.kernels.ops import choose_block_n
-        return choose_block_n(n, d, m, batched=True)
+        return choose_block_n(n, d, max(m, self.tile_m, 1), batched=True)
 
     def _partials(self, min_d2, weights, n: int, d: int, m: int):
         w_md = min_d2 if weights is None else min_d2 * weights
@@ -487,9 +586,9 @@ class PallasBackend(Backend):
         n, d = points.shape
         if not with_bounds:
             return RoundCache(kops.point_norms(points))
-        norms, centers, radii = kops.seed_prologue(
+        norms, centers, radii, center_d = kops.seed_prologue(
             points, block_n=self.seed_tile(n, d, m))
-        return RoundCache(norms, centers, radii)
+        return RoundCache(norms, centers, radii, center_d)
 
     def seed_round(self, points, c_new, min_d2, weights, *, cache=None,
                    state=None):
@@ -506,11 +605,17 @@ class PallasBackend(Backend):
             # cache.norms is always populated (and always fp32 — never derive
             # norms from `points` here: under bf16 streaming that would feed
             # bf16-noise into the bound, exceeding active_tiles' fp32 slack)
-            active = bounds.active_tiles(c_new, cache, state.tile_max)
-            md, partials, tmax, skipped = kops.distance_min_update_gated(
-                points, c_new, min_d2, norms, state.partials, state.tile_max,
-                active, block_n=tile, resident_centroids=self.resident)
-            return SeedRound(md, jnp.sum(partials), partials, tmax, skipped)
+            active, dc, margin = bounds.seed_gate(c_new, cache,
+                                                  state.tile_max)
+            md, partials, tmax, pruned, skipped = \
+                kops.distance_min_update_gated(
+                    points, c_new, min_d2, norms, cache.center_d, dc, margin,
+                    state.partials, state.tile_max, active, block_n=tile,
+                    resident_centroids=self.resident)
+            # per-tile counts are fp32 (kernel vectors); cast BEFORE the
+            # reduction so the counter stays exact past 2^24 points
+            return SeedRound(md, jnp.sum(partials), partials, tmax, skipped,
+                             jnp.sum(pruned.astype(jnp.int32)))
         min_d2, partials = kops.distance_min_update(
             points, c_new, min_d2, norms=norms,
             resident_centroids=self.resident, block_n=tile)
@@ -537,27 +642,44 @@ class PallasBackend(Backend):
         from repro.kernels import ops as kops
         n, d = points.shape
         tile = self.seed_tile(n, d, centroids.shape[0])
+        tps = bounds.tiles_per_super(-(-n // tile))
         if (state is not None and delta is not None
                 and cache.centers is not None):
-            active = bounds.assign_active_tiles(delta, centroids, state,
-                                                cache)
-            a, md, part, gap, tsums, tcounts, skipped = \
+            dmax = jnp.max(delta)
+            cand = bounds.assign_active_tiles(delta, centroids, state, cache)
+            # expand to whole super-tiles HERE (the wrapper re-expands,
+            # idempotently) so the gap-decay / debt bookkeeping below sees
+            # exactly the tiles the kernel rewrote
+            active = bounds.expand_active_supers(cand, tps)
+            thresh, absorb = bounds.assign_point_scalars(delta, centroids,
+                                                         state, cache)
+            a, md, lb, part, gap, ssums, scounts, pruned_t, skipped = \
                 kops.lloyd_assign_gated(
-                    points, centroids, norms, state.assignment, state.min_d2,
+                    points, centroids, norms, delta, thresh, absorb,
+                    state.assignment, state.min_d2, state.point_lb,
                     state.partials, state.tile_gap, state.tile_sums,
                     state.tile_counts, active, block_n=tile)
             # kernel gap output: fresh for computed tiles, the ALIASED carry
             # for skipped ones — decay the latter by this step's movement so
-            # it stays a valid lower bound across consecutive skips
-            gap = bounds.decay_gap(gap, active, gap, jnp.max(delta))
-        else:
-            a, md, part, gap, tsums, tcounts = kops.lloyd_assign_tiled(
-                points, centroids, norms=norms, block_n=tile)
-            skipped = jnp.zeros((), jnp.int32)
-        new_state = BoundState(part, tile_gap=gap, tile_sums=tsums,
-                               tile_counts=tcounts, assignment=a, min_d2=md)
-        return AssignRound(a, md, jnp.sum(tsums, axis=0),
-                           jnp.sum(tcounts, axis=0), new_state, skipped)
+            # it stays a valid lower bound across consecutive skips; the
+            # stored per-point lb of skipped tiles decays LAZILY instead
+            # (lb_debt), so the skipped blocks are never touched
+            gap = bounds.decay_gap(gap, active, gap, dmax)
+            debt = jnp.where(active, 0.0, state.lb_debt + dmax)
+            new_state = BoundState(part, tile_gap=gap, tile_sums=ssums,
+                                   tile_counts=scounts, assignment=a,
+                                   min_d2=md, point_lb=lb, lb_debt=debt)
+            # cast the fp32 per-tile counts BEFORE reducing (exact > 2^24)
+            return AssignRound(a, md, jnp.sum(ssums, axis=0),
+                               jnp.sum(scounts, axis=0), new_state, skipped,
+                               jnp.sum(pruned_t.astype(jnp.int32)))
+        a, md, part, gap, ssums, scounts = kops.lloyd_assign_tiled(
+            points, centroids, norms=norms, block_n=tile)
+        new_state = BoundState(part, tile_gap=gap, tile_sums=ssums,
+                               tile_counts=scounts, assignment=a, min_d2=md)
+        return AssignRound(a, md, jnp.sum(ssums, axis=0),
+                           jnp.sum(scounts, axis=0), new_state,
+                           jnp.zeros((), jnp.int32))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -581,11 +703,12 @@ class MeshBackend(Backend):
         # potential phi), so we keep the collective — it is O(1) bytes. The
         # tile partials/bound state stay SHARD-LOCAL: the distributed tiled
         # sampler combines them with one pmax/pmin pair, never gathering
-        # them. The per-shard skip counters compose through one more O(1)
-        # psum, so `skipped` reports the POD-WIDE skipped-tile count.
+        # them. The per-shard skip/prune counters compose through two more
+        # O(1) psums, so `skipped`/`pruned` report POD-WIDE counts.
         return SeedRound(rnd.min_d2, jax.lax.psum(rnd.total, self.axes),
                          rnd.partials, rnd.tile_max,
-                         jax.lax.psum(rnd.skipped, self.axes))
+                         jax.lax.psum(rnd.skipped, self.axes),
+                         jax.lax.psum(rnd.pruned, self.axes))
 
     def seed_tile(self, n: int, d: int, m: int = 1) -> int:
         return self.local.seed_tile(n, d, m)
@@ -598,13 +721,16 @@ class MeshBackend(Backend):
                       cache=None, state=None, delta=None):
         rnd = self.local.assign_update(points, centroids, weights, norms,
                                        cache=cache, state=state, delta=delta)
-        # the per-tile bound state stays SHARD-LOCAL; only the O(k*d)
-        # accumulators and the O(1) skip counter cross the mesh
+        # the per-tile/per-point bound state stays SHARD-LOCAL; only the
+        # O(k*d) accumulators and the O(1) skip/prune counters cross the mesh
         sums = jax.lax.psum(rnd.sums, self.axes)      # O(k*d) per iteration
         counts = jax.lax.psum(rnd.counts, self.axes)  # O(k)
         skipped = (jax.lax.psum(rnd.skipped, self.axes)
                    if cache is not None else rnd.skipped)
-        return rnd._replace(sums=sums, counts=counts, skipped=skipped)
+        pruned = (jax.lax.psum(rnd.pruned, self.axes)
+                  if cache is not None else rnd.pruned)
+        return rnd._replace(sums=sums, counts=counts, skipped=skipped,
+                            pruned=pruned)
 
     def allreduce(self, x):
         return jax.lax.psum(x, self.axes)
@@ -674,12 +800,14 @@ def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
     centroids = jnp.zeros((k, d), pts.dtype).at[0].set(take_fn(first))
     indices = jnp.zeros((k,), jnp.int32).at[0].set(first)
     skips = jnp.zeros((k,), jnp.int32)
+    prunes = jnp.zeros((k,), jnp.int32)
 
     def body(m, carry):
-        key, centroids, indices, min_d2, state, skips = carry
+        key, centroids, indices, min_d2, state, skips, prunes = carry
         rnd = round_fn(centroids[m - 1], min_d2, state)
         min_d2 = rnd.min_d2
         skips = skips.at[m - 1].set(rnd.skipped)
+        prunes = prunes.at[m - 1].set(rnd.pruned)
         # rnd.total is the paper's thrust::reduce term — kept for phi logging;
         # the cdf sampler normalizes by its OWN cumsum's last entry instead:
         # serial and parallel reductions sum in different orders, and a 1-ulp
@@ -695,16 +823,17 @@ def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
         indices = indices.at[m].set(nxt)
         state = (None if state is None
                  else BoundState(rnd.partials, rnd.tile_max))
-        return key, centroids, indices, min_d2, state, skips
+        return key, centroids, indices, min_d2, state, skips, prunes
 
-    key, centroids, indices, min_d2, state, skips = jax.lax.fori_loop(
+    key, centroids, indices, min_d2, state, skips, prunes = jax.lax.fori_loop(
         1, k, body,
-        (key, centroids, indices, init_min_d2, init_state, skips))
+        (key, centroids, indices, init_min_d2, init_state, skips, prunes))
     # final D^2 update against the last chosen centroid (callers like
     # k-means|| want the potential phi over *all* k centroids).
     rnd = round_fn(centroids[k - 1], min_d2, state)
     skips = skips.at[k - 1].set(rnd.skipped)
-    return centroids, indices, rnd.min_d2, skips
+    prunes = prunes.at[k - 1].set(rnd.pruned)
+    return centroids, indices, rnd.min_d2, skips, prunes
 
 
 def _stream_of(pts: jax.Array, precision: str) -> jax.Array:
@@ -722,7 +851,8 @@ def _stream_of(pts: jax.Array, precision: str) -> jax.Array:
 def seed_points(key: jax.Array, points: jax.Array, k: int,
                 weights: Optional[jax.Array], backend: Backend,
                 sampler: str = "cdf", *, precision: str = "fp32",
-                bound_gate: bool = True) -> KmeansppResult:
+                bound_gate: bool = True,
+                cache: Optional[RoundCache] = None) -> KmeansppResult:
     """Full k-means++ seeding through `backend` (untraced core; see
     ClusterEngine.seed for the jitted entry). Samplers: 'cdf' (full inverse
     CDF — the serial algorithm; fused and pallas pick bitwise-identical
@@ -731,12 +861,16 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     'gumbel' (Gumbel-max), 'tiled' (two-level inverse CDF from the round's
     per-tile partials — O(n/tile + tile) post-kernel reads per round).
 
-    The prologue (cached fp32 norms + tile centroid-balls) runs ONCE here —
-    no round recomputes ||x||^2. With ``bound_gate`` the loop carries the
-    per-tile bound state so each round skips every provably-unchanged tile
-    (exact: fp32 results are bitwise identical to the ungated path); with
-    ``precision='bf16'`` the rounds stream a bf16 copy of the points (seeds
-    are still *taken* from the full-precision array)."""
+    The prologue (cached fp32 norms + tile centroid-balls + per-point
+    center distances) runs ONCE here — no round recomputes ||x||^2 — unless
+    a precomputed ``cache`` is passed in (``kmeans_points`` shares one
+    prologue across the seed AND fit phases). With ``bound_gate`` the loop
+    carries the per-tile bound state so each round skips every
+    provably-unchanged tile and short-circuits provably-stable points
+    inside active tiles (exact: fp32 results are bitwise identical to the
+    ungated path); with ``precision='bf16'`` the rounds stream a bf16 copy
+    of the points (seeds are still *taken* from the full-precision
+    array)."""
     if backend.distributed:
         return _seed_mesh(key, points, k, weights, backend, sampler,
                           precision=precision, bound_gate=bound_gate)
@@ -745,7 +879,8 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     pts = points.astype(compute_dtype)
     w = None if weights is None else weights.astype(compute_dtype)
     stream = _stream_of(pts, precision)
-    cache = backend.prologue(pts, with_bounds=bound_gate)
+    if cache is None:
+        cache = backend.prologue(pts, with_bounds=bound_gate)
     tile = backend.seed_tile(n, d)
     if bound_gate:
         n_tiles = -(-n // tile)
@@ -778,7 +913,7 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
             return sampling.categorical(
                 ks, weight, method=sampler).astype(jnp.int32)
 
-    centroids, indices, min_d2, skips = _seed_loop(
+    centroids, indices, min_d2, skips, prunes = _seed_loop(
         key, pts, k, w,
         round_fn=lambda c, md, st: backend.seed_round(
             stream, c.astype(stream.dtype)[None, :], md, w, cache=cache,
@@ -790,7 +925,8 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
         init_state=init_state,
     )
     return KmeansppResult(centroids.astype(points.dtype), indices, min_d2,
-                          skips if bound_gate else None)
+                          skips if bound_gate else None,
+                          prunes if bound_gate else None)
 
 
 def _seed_mesh(key, points, k, weights, backend: MeshBackend,
@@ -849,10 +985,11 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
     mapped = collectives.shard_map(
         local_fn, mesh=backend.mesh,
         in_specs=(P(), P(axes)),
-        out_specs=(P(), P(), P(axes), P()))
-    centroids, indices, min_d2, skips = mapped(key, points)
+        out_specs=(P(), P(), P(axes), P(), P()))
+    centroids, indices, min_d2, skips, prunes = mapped(key, points)
     return KmeansppResult(centroids.astype(points.dtype), indices, min_d2,
-                          skips if bound_gate else None)
+                          skips if bound_gate else None,
+                          prunes if bound_gate else None)
 
 
 # ---------------------------------------------------------------------------
@@ -862,7 +999,7 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
 
 def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
               empty: str = "keep", precision: str = "fp32",
-              bound_gate: bool = True):
+              bound_gate: bool = True, cache: Optional[RoundCache] = None):
     """Lloyd iterations until the relative inertia improvement falls below
     `tol` or `max_iters` is hit. The k-means potential is monotonically
     non-increasing — a property test asserts this — except under
@@ -882,19 +1019,23 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
     iterations stream bf16 points/centroids while the norms, per-cluster
     accumulators, bound state and the centroid carry stay fp32.
 
-    Returns (centroids, assignment, inertia, n_iters, skips) — ``skips`` is
-    the (max_iters,) per-iteration skipped-tile counts, or None when the
-    gate is off or the fit is weighted (the legacy accumulated path)."""
+    Returns (centroids, assignment, inertia, n_iters, skips, prunes) —
+    ``skips``/``prunes`` are the (max_iters,) per-iteration skipped-tile /
+    pruned-point counts, or None when the gate is off or the fit is
+    weighted (the legacy accumulated path). A precomputed ``cache`` (from
+    ``kmeans_points``) suppresses this call's own prologue."""
     k = init_centroids.shape[0]
     n, d = pts.shape
     stream = _stream_of(pts, precision)
     tiled = w is None
     if tiled:
-        cache = backend.prologue(pts, m=k, with_bounds=bound_gate)
+        if cache is None:
+            cache = backend.prologue(pts, m=k, with_bounds=bound_gate)
         norms = cache.norms             # once per fit, NOT once per iteration
     else:
+        norms = (cache.norms if cache is not None
+                 else bounds.point_norms(pts))
         cache = None
-        norms = bounds.point_norms(pts)
 
     def cond(state):
         i, _, prev_inertia, inertia = state[0], state[1], state[2], state[3]
@@ -905,17 +1046,20 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
     if tiled and bound_gate:
         tile = backend.seed_tile(n, d, k)
         n_tiles = -(-n // tile)
+        n_super = bounds.n_supers(n_tiles)
         pv = backend.pvary
         init_state = BoundState(
             pv(jnp.zeros((n_tiles,), jnp.float32)),
             tile_gap=pv(jnp.full((n_tiles,), -jnp.inf, jnp.float32)),
-            tile_sums=pv(jnp.zeros((n_tiles, k, d), jnp.float32)),
-            tile_counts=pv(jnp.zeros((n_tiles, k), jnp.float32)),
+            tile_sums=pv(jnp.zeros((n_super, k, d), jnp.float32)),
+            tile_counts=pv(jnp.zeros((n_super, k), jnp.float32)),
             assignment=pv(jnp.zeros((n,), jnp.int32)),
-            min_d2=pv(jnp.zeros((n,), jnp.float32)))
+            min_d2=pv(jnp.zeros((n,), jnp.float32)),
+            point_lb=pv(jnp.full((n,), -jnp.inf, jnp.float32)),
+            lb_debt=pv(jnp.zeros((n_tiles,), jnp.float32)))
 
         def body(state):
-            i, cents, _, inertia, prev_cents, bstate, skips = state
+            i, cents, _, inertia, prev_cents, bstate, skips, prunes = state
             delta = bounds.centroid_movement(cents, prev_cents)
             rnd = backend.assign_update(stream, cents.astype(stream.dtype),
                                         None, norms, cache=cache,
@@ -925,16 +1069,18 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
             if empty == "reseed":
                 new_cents = reseed_split_largest(new_cents, rnd.counts)
             skips = skips.at[i].set(rnd.skipped)
+            prunes = prunes.at[i].set(rnd.pruned)
             return (i + 1, new_cents, inertia, new_inertia, cents,
-                    rnd.state, skips)
+                    rnd.state, skips, prunes)
 
         init = (jnp.zeros((), jnp.int32),
                 init_centroids.astype(jnp.float32), jnp.inf, jnp.inf,
                 init_centroids.astype(jnp.float32), init_state,
+                jnp.zeros((max_iters,), jnp.int32),
                 jnp.zeros((max_iters,), jnp.int32))
-        i, cents, _, inertia, _, bstate, skips = jax.lax.while_loop(
+        i, cents, _, inertia, _, bstate, skips, prunes = jax.lax.while_loop(
             cond, body, init)
-        return cents, bstate.assignment, inertia, i, skips
+        return cents, bstate.assignment, inertia, i, skips, prunes
 
     def body(state):
         i, cents, _, inertia, a = state
@@ -953,27 +1099,30 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
     init = (jnp.zeros((), jnp.int32), init_centroids.astype(jnp.float32),
             jnp.inf, jnp.inf, backend.pvary(jnp.zeros((n,), jnp.int32)))
     i, cents, _, inertia, a = jax.lax.while_loop(cond, body, init)
-    return cents, a, inertia, i, None
+    return cents, a, inertia, i, None, None
 
 
 def fit_points(points: jax.Array, init_centroids: jax.Array,
                weights: Optional[jax.Array], backend: Backend,
                max_iters: int, tol: float, empty: str = "keep",
-               precision: str = "fp32",
-               bound_gate: bool = True) -> LloydResult:
+               precision: str = "fp32", bound_gate: bool = True,
+               cache: Optional[RoundCache] = None) -> LloydResult:
     """Lloyd clustering through `backend` (untraced core). `empty` picks the
     empty-cluster policy: 'keep' (previous centroid survives) or 'reseed'
-    (split the largest cluster — see reseed_split_largest)."""
+    (split the largest cluster — see reseed_split_largest). ``cache`` is an
+    optional precomputed prologue (``kmeans_points`` shares one across the
+    seed and fit phases)."""
     if empty not in ("keep", "reseed"):
         raise ValueError(f"unknown empty-cluster policy {empty!r}; "
                          "expected 'keep' or 'reseed'")
     if backend.distributed:
         return _fit_mesh(points, init_centroids, weights, backend,
                          max_iters, tol, empty, precision, bound_gate)
-    cents, a, inertia, i, skips = _fit_loop(points, init_centroids, weights,
-                                            backend, max_iters, tol, empty,
-                                            precision, bound_gate)
-    return LloydResult(cents.astype(points.dtype), a, inertia, i, skips)
+    cents, a, inertia, i, skips, prunes = _fit_loop(
+        points, init_centroids, weights, backend, max_iters, tol, empty,
+        precision, bound_gate, cache)
+    return LloydResult(cents.astype(points.dtype), a, inertia, i, skips,
+                       prunes)
 
 
 def _fit_mesh(points, init_centroids, weights, backend: MeshBackend,
@@ -995,14 +1144,44 @@ def _fit_mesh(points, init_centroids, weights, backend: MeshBackend,
         in_specs = (P(axes), P(), P(axes))
         args = (points, init_centroids, weights)
 
-    del gated  # the skips leaf is replicated when present, absent otherwise;
-    #            P() is a valid prefix spec for the empty (None) subtree too
+    del gated  # the skips/prunes leaves are replicated when present, absent
+    #            otherwise; P() is a valid prefix spec for the empty (None)
+    #            subtree too
     mapped = collectives.shard_map(
         local_fn, mesh=backend.mesh,
         in_specs=in_specs,
-        out_specs=(P(), P(axes), P(), P(), P()))
-    cents, a, inertia, i, skips = mapped(*args)
-    return LloydResult(cents.astype(points.dtype), a, inertia, i, skips)
+        out_specs=(P(), P(axes), P(), P(), P(), P()))
+    cents, a, inertia, i, skips, prunes = mapped(*args)
+    return LloydResult(cents.astype(points.dtype), a, inertia, i, skips,
+                       prunes)
+
+
+def kmeans_points(key: jax.Array, points: jax.Array, k: int,
+                  weights: Optional[jax.Array], backend: Backend,
+                  sampler: str = "cdf", max_iters: int = 50,
+                  tol: float = 1e-6, empty: str = "keep",
+                  precision: str = "fp32",
+                  bound_gate: bool = True) -> LloydResult:
+    """End-to-end k-means++ seeding + Lloyd with ONE shared prologue.
+
+    The seed phase and the fit phase historically each ran
+    ``backend.prologue`` over the same points (two full O(n·d) streaming
+    passes, two norm computations). Here the backend's ``tile_m`` is pinned
+    to k so both phases agree on one tile geometry, the prologue runs once,
+    and the same RoundCache threads through ``seed_points`` and
+    ``fit_points`` — a jaxpr test pins that the whole kmeans program
+    computes the row norms exactly once. Local backends only (the mesh path
+    keeps per-phase prologues inside shard_map)."""
+    be = dataclasses.replace(backend, tile_m=k)
+    compute_dtype = jnp.promote_types(points.dtype, jnp.float32)
+    pts = points.astype(compute_dtype)
+    cache = be.prologue(pts, m=k, with_bounds=bound_gate)
+    seeds = seed_points(key, pts, k, weights, be, sampler,
+                        precision=precision, bound_gate=bound_gate,
+                        cache=cache)
+    res = fit_points(pts, seeds.centroids, weights, be, max_iters, tol,
+                     empty, precision, bound_gate, cache=cache)
+    return res._replace(centroids=res.centroids.astype(points.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -1091,6 +1270,16 @@ def _fit_jit(points, init_centroids, weights, backend, max_iters, tol, empty,
              precision, bound_gate):
     return fit_points(points, init_centroids, weights, backend,
                       max_iters, tol, empty, precision, bound_gate)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "backend", "sampler", "max_iters",
+                                    "tol", "empty", "precision",
+                                    "bound_gate"))
+def _kmeans_jit(key, points, weights, k, backend, sampler, max_iters, tol,
+                empty, precision, bound_gate):
+    return kmeans_points(key, points, k, weights, backend, sampler,
+                         max_iters, tol, empty, precision, bound_gate)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "precision"))
@@ -1251,8 +1440,18 @@ class ClusterEngine:
         ``order`` reorders the rows ONCE up front (see `fit`): both the
         seeding scan and every Lloyd iteration then see the tile-coherent
         layout, and the returned assignment is mapped back to the caller's
-        row order."""
+        row order. On local backends the kmeans++ path runs as ONE compiled
+        call sharing a single prologue (norms + tile balls computed once for
+        both phases — see ``kmeans_points``)."""
         points, weights, perm, inv = self._order_in(points, order, weights)
+        if init == "kmeans++" and not self.backend.distributed:
+            n = points.shape[0]
+            if not 0 < k <= n:
+                raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
+            res = _kmeans_jit(key, points, weights, k, self.backend, sampler,
+                              max_iters, float(tol), empty, self.precision,
+                              self.bounds)
+            return self._order_out(res, perm, inv)
         if init == "kmeans++":
             seeds = self.seed(key, points, k, weights=weights,
                               sampler=sampler).centroids

@@ -50,6 +50,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# the ONE definition of the fine-level (per-point) seeding prune test — the
+# pure-JAX gate model in core.engine evaluates the same function, so model
+# and kernel prune decisions share a single source of truth
+from repro.core.bounds import seed_point_prune as _seed_point_prune
+
 
 def tile_d2(x_raw, c_raw, xn):
     """(block_n, k) matmul-form D^2 for one point tile — THE shared round
@@ -146,15 +151,21 @@ def distance_min_update_pallas(points: jax.Array, norms: jax.Array,
 
 
 def _round_kernel_gated(ids_ref, meta_ref, pts_ref, norms_ref, cents_ref,
-                        md_ref, pp_ref, ptm_ref, out_md_ref, partial_ref,
-                        tmax_ref, *, block_n: int):
+                        md_ref, cdist_ref, dc_ref, margin_ref, pp_ref,
+                        ptm_ref, pz_ref, out_md_ref, partial_ref,
+                        tmax_ref, pruned_ref, *, block_n: int):
     """Grid step i streams tile ``ids[i]``; steps >= n_active are no-ops.
 
-    ``meta`` = [n_valid, n_active]. ``pp_ref``/``ptm_ref`` (previous partials
-    / tile-max) are never read — they exist to carry the aliased buffers the
-    skipped tiles' outputs fall back to.
+    ``meta`` = [n_valid, n_active]. ``pp_ref``/``ptm_ref``/``pz_ref``
+    (previous partials / tile-max / a zeros buffer) are never read — they
+    exist to carry the aliased buffers the skipped tiles' outputs fall back
+    to. Inside an active tile the FINE level of the bound fires per point:
+    rows whose carried ``min_d2`` provably cannot improve (``(dc −
+    center_d)² >= md`` with margin — see ``core.bounds.seed_point_prune``)
+    keep it verbatim, a value-noop by construction that the ``pruned``
+    output counts (the modelled per-point FLOP saving).
     """
-    del pp_ref, ptm_ref
+    del pp_ref, ptm_ref, pz_ref
     i = pl.program_id(0)
 
     @pl.when(i < meta_ref[1])
@@ -162,34 +173,42 @@ def _round_kernel_gated(ids_ref, meta_ref, pts_ref, norms_ref, cents_ref,
         t = ids_ref[i]                             # the REAL tile id
         md = md_ref[...].astype(jnp.float32)
         xn = norms_ref[...].astype(jnp.float32)
-        new_md = jnp.minimum(md, _tile_d2_min(pts_ref[...], cents_ref[...],
-                                              xn))
         row = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
         valid = row < meta_ref[0]
+        prune = valid & _seed_point_prune(md, cdist_ref[...], dc_ref[0],
+                                          margin_ref[0])
+        upd = jnp.minimum(md, _tile_d2_min(pts_ref[...], cents_ref[...], xn))
+        new_md = jnp.where(prune, md, upd)
         new_md = jnp.where(valid, new_md, 0.0)
 
         out_md_ref[...] = new_md.astype(out_md_ref.dtype)
         partial_ref[0] = jnp.sum(new_md)
         tmax_ref[0] = jnp.max(new_md)              # bound state for next round
+        pruned_ref[0] = jnp.sum(prune.astype(jnp.float32))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_n", "resident", "interpret"))
 def distance_min_update_gated_pallas(points: jax.Array, norms: jax.Array,
                                      centroids: jax.Array, min_d2: jax.Array,
+                                     center_d: jax.Array, dc: jax.Array,
+                                     margin: jax.Array,
                                      prev_partials: jax.Array,
                                      prev_tile_max: jax.Array,
                                      ids: jax.Array, meta: jax.Array, *,
                                      block_n: int, resident: bool,
                                      interpret: bool):
     """Bound-gated seeding round. Returns (new_min_d2 (n,), partials (grid,),
-    tile_max (grid,)).
+    tile_max (grid,), pruned (grid,)).
 
     ``ids``/``meta=[n_valid, n_active]`` come from `core.bounds.compact_ids`:
     only the first n_active grid steps fetch + compute (each visiting active
     tile ids[i]); every output block of a skipped tile keeps the aliased
     previous-round value, which the bound proves is bitwise what a full
-    recompute would write.
+    recompute would write. ``center_d``/``dc``/``margin`` are the fine-level
+    inputs from the prologue and `core.bounds.seed_gate`; ``pruned`` counts
+    per-point short-circuits per tile (zero for skipped tiles via a donated
+    zeros buffer).
     """
     n, d = points.shape
     k_new = centroids.shape[0]
@@ -199,6 +218,7 @@ def distance_min_update_gated_pallas(points: jax.Array, norms: jax.Array,
     nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
     md = jnp.pad(min_d2.astype(jnp.float32), (0, pad),
                  constant_values=jnp.inf)
+    cd = jnp.pad(center_d.astype(jnp.float32), (0, pad))
 
     if resident:
         cent_spec = pl.BlockSpec((k_new, d), lambda i, ids, meta: (0, 0))
@@ -213,29 +233,37 @@ def distance_min_update_gated_pallas(points: jax.Array, norms: jax.Array,
             pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
             cent_spec,
             pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),  # c_d
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),   # dc
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),   # margin
             pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),   # prev part
             pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),   # prev tmax
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),   # zeros
         ],
         out_specs=[
             pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
             pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),
             pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),
+            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),
         ],
     )
-    out_md, partials, tile_max = pl.pallas_call(
+    out_md, partials, tile_max, pruned = pl.pallas_call(
         functools.partial(_round_kernel_gated, block_n=block_n),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n + pad,), jnp.float32),
             jax.ShapeDtypeStruct((grid,), jnp.float32),
             jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
         ],
-        # skipped tiles reuse their prior min_d2 / partials / tile-max
-        input_output_aliases={5: 0, 6: 1, 7: 2},
+        # skipped tiles reuse their prior min_d2 / partials / tile-max and
+        # report zero pruned points (the donated zeros buffer)
+        input_output_aliases={5: 0, 9: 1, 10: 2, 11: 3},
         interpret=interpret,
-    )(ids, meta, pts, nrm, centroids, md,
-      prev_partials.astype(jnp.float32), prev_tile_max.astype(jnp.float32))
-    return out_md[:n], partials, tile_max
+    )(ids, meta, pts, nrm, centroids, md, cd, dc.astype(jnp.float32),
+      margin.astype(jnp.float32), prev_partials.astype(jnp.float32),
+      prev_tile_max.astype(jnp.float32), jnp.zeros((grid,), jnp.float32))
+    return out_md[:n], partials, tile_max, pruned
 
 
 # ---------------------------------------------------------------------------
@@ -244,7 +272,7 @@ def distance_min_update_gated_pallas(points: jax.Array, norms: jax.Array,
 
 
 def _prologue_kernel(n_valid_ref, pts_ref, norms_ref, center_ref, radius_ref,
-                     *, block_n: int):
+                     cdist_ref, *, block_n: int):
     i = pl.program_id(0)
     x = pts_ref[...].astype(jnp.float32)           # (block_n, d)
     xn = jnp.sum(x * x, axis=1)
@@ -259,19 +287,23 @@ def _prologue_kernel(n_valid_ref, pts_ref, norms_ref, center_ref, radius_ref,
     center_ref[0, :] = ctr
     d2c = jnp.sum((x - ctr[None, :]) ** 2, axis=1)
     radius_ref[0] = jnp.sqrt(jnp.max(jnp.where(valid, d2c, 0.0)))
+    # per-point distance to the ball center — the fine-level seeding bound
+    cdist_ref[...] = jnp.where(valid, jnp.sqrt(d2c), 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def seed_prologue_pallas(points: jax.Array, *, block_n: int, interpret: bool):
     """ONE streaming pass computing everything the round kernels cache:
-    (norms (n,) fp32, tile centers (grid, d) fp32, tile radii (grid,) fp32)."""
+    (norms (n,) fp32, tile centers (grid, d) fp32, tile radii (grid,) fp32,
+    center_d (n,) fp32 — each point's distance to its tile ball center, the
+    per-point seeding bound)."""
     n, d = points.shape
     pad = (-n) % block_n
     grid = (n + pad) // block_n
     pts = jnp.pad(points, ((0, pad), (0, 0)))
     n_valid = jnp.array([n], jnp.int32)
 
-    norms, centers, radii = pl.pallas_call(
+    norms, centers, radii, center_d = pl.pallas_call(
         functools.partial(_prologue_kernel, block_n=block_n),
         grid=(grid,),
         in_specs=[
@@ -282,15 +314,17 @@ def seed_prologue_pallas(points: jax.Array, *, block_n: int, interpret: bool):
             pl.BlockSpec((block_n,), lambda i: (i,)),
             pl.BlockSpec((1, d), lambda i: (i, 0)),
             pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n + pad,), jnp.float32),
             jax.ShapeDtypeStruct((grid, d), jnp.float32),
             jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((n + pad,), jnp.float32),
         ],
         interpret=interpret,
     )(n_valid, pts)
-    return norms[:n], centers, radii
+    return norms[:n], centers, radii, center_d[:n]
 
 
 # ---------------------------------------------------------------------------
@@ -363,12 +397,13 @@ def distance_min_update_batched_pallas(points: jax.Array, norms: jax.Array,
 
 
 def _round_kernel_gated_batched(ids_ref, nact_ref, nv_ref, pts_ref, norms_ref,
-                                cents_ref, md_ref, pp_ref, ptm_ref,
-                                out_md_ref, partial_ref, tmax_ref, *,
-                                block_n: int):
+                                cents_ref, md_ref, cdist_ref, dc_ref,
+                                margin_ref, pp_ref, ptm_ref, pz_ref,
+                                out_md_ref, partial_ref, tmax_ref,
+                                pruned_ref, *, block_n: int):
     """Grid step (b, i) streams tile ids[b, i] of problem b; steps past
     problem b's n_active are no-ops (per-problem compaction)."""
-    del pp_ref, ptm_ref
+    del pp_ref, ptm_ref, pz_ref
     b = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -377,20 +412,25 @@ def _round_kernel_gated_batched(ids_ref, nact_ref, nv_ref, pts_ref, norms_ref,
         t = ids_ref[b, i]
         md = md_ref[0].astype(jnp.float32)
         xn = norms_ref[0].astype(jnp.float32)
-        new_md = jnp.minimum(md, _tile_d2_min(pts_ref[0], cents_ref[0], xn))
         row = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
         valid = row < nv_ref[0]
+        prune = valid & _seed_point_prune(md, cdist_ref[0], dc_ref[0, 0],
+                                          margin_ref[0, 0])
+        upd = jnp.minimum(md, _tile_d2_min(pts_ref[0], cents_ref[0], xn))
+        new_md = jnp.where(prune, md, upd)
         new_md = jnp.where(valid, new_md, 0.0)
 
         out_md_ref[0] = new_md.astype(out_md_ref.dtype)
         partial_ref[0, 0] = jnp.sum(new_md)
         tmax_ref[0, 0] = jnp.max(new_md)
+        pruned_ref[0, 0] = jnp.sum(prune.astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def distance_min_update_gated_batched_pallas(
         points: jax.Array, norms: jax.Array, centroids: jax.Array,
-        min_d2: jax.Array, prev_partials: jax.Array,
+        min_d2: jax.Array, center_d: jax.Array, dc: jax.Array,
+        margin: jax.Array, prev_partials: jax.Array,
         prev_tile_max: jax.Array, ids: jax.Array, n_active: jax.Array, *,
         block_n: int, interpret: bool):
     """Batch-grid bound-gated round: (B, n, d) problems, per-problem compacted
@@ -404,6 +444,7 @@ def distance_min_update_gated_batched_pallas(
     nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pad)))
     md = jnp.pad(min_d2.astype(jnp.float32), ((0, 0), (0, pad)),
                  constant_values=jnp.inf)
+    cd = jnp.pad(center_d.astype(jnp.float32), ((0, 0), (0, pad)))
     nv = jnp.array([n], jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -417,6 +458,11 @@ def distance_min_update_gated_batched_pallas(
             pl.BlockSpec((1, k_new, d), lambda b, i, ids, na, nv: (b, 0, 0)),
             pl.BlockSpec((1, block_n),
                          lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, block_n),
+                         lambda b, i, ids, na, nv: (b, ids[b, i])),   # c_d
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
             pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
             pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
         ],
@@ -425,19 +471,22 @@ def distance_min_update_gated_batched_pallas(
                          lambda b, i, ids, na, nv: (b, ids[b, i])),
             pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
             pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
         ],
     )
-    out_md, partials, tile_max = pl.pallas_call(
+    out_md, partials, tile_max, pruned = pl.pallas_call(
         functools.partial(_round_kernel_gated_batched, block_n=block_n),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B, n + pad), jnp.float32),
             jax.ShapeDtypeStruct((B, grid), jnp.float32),
             jax.ShapeDtypeStruct((B, grid), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid), jnp.float32),
         ],
-        input_output_aliases={6: 0, 7: 1, 8: 2},
+        input_output_aliases={6: 0, 10: 1, 11: 2, 12: 3},
         interpret=interpret,
     )(ids.astype(jnp.int32), n_active.astype(jnp.int32), nv, pts, nrm,
-      centroids, md, prev_partials.astype(jnp.float32),
-      prev_tile_max.astype(jnp.float32))
-    return out_md[:, :n], partials, tile_max
+      centroids, md, cd, dc.astype(jnp.float32), margin.astype(jnp.float32),
+      prev_partials.astype(jnp.float32), prev_tile_max.astype(jnp.float32),
+      jnp.zeros((B, grid), jnp.float32))
+    return out_md[:, :n], partials, tile_max, pruned

@@ -19,15 +19,27 @@ Two kernel families:
   (k, d)/(k,) VMEM accumulator pair for the whole grid. Used by the legacy
   weighted / mini-batch paths.
 * ``lloyd_assign_tiled_pallas`` / ``lloyd_assign_gated_pallas`` (+ batched)
-  — the BOUNDED-LLOYD form: per-tile outputs (inertia partial, second-best
-  gap, per-cluster sums/counts per tile, reduced over the tile axis outside
-  the kernel) so the gated variant can reuse PR 3's scalar-prefetched
+  — the BOUNDED-LLOYD form: per-tile inertia partials and second-best gaps,
+  per-point labels/D², and HIERARCHICAL per-cluster accumulators: every
+  ``tps = tiles_per_super(n_tiles)`` consecutive tiles accumulate into ONE
+  per-super-tile (k, d)/(k,) slot (sequential, ascending tile order inside
+  the kernel; the engine reduces the small (n_super, k, d) array outside),
+  capping accumulator HBM at O(n_super·k·d) instead of the flat
+  O(n_tiles·k·d). The gated variant reuses PR 3's scalar-prefetched
   compacted index map + ``input_output_aliases``: a tile whose movement
-  bound proves no label can change is neither computed nor fetched, and all
-  six of its output blocks keep the previous iteration's (bitwise-identical)
-  values. The per-tile reduction tree is shared by the gated and ungated
-  tiled kernels, which is what makes bounded-vs-unbounded fits bitwise
-  comparable end to end.
+  bound proves no label can change is neither computed nor fetched, its
+  per-tile/per-point output blocks keep the previous iteration's
+  (bitwise-identical) values, and the accumulator aliasing happens at the
+  SUPER level — a super-tile's slot is carried only when ALL its tiles
+  skip, so callers must pass super-aligned active sets
+  (``core.bounds.expand_active_supers``; the ops wrapper enforces it).
+  Inside an active tile the FINE level fires: per-point Hamerly bounds
+  (carried ``point_lb`` + exact ``min_d2``) short-circuit the k-way
+  distance recomputation for every point whose label and D² provably
+  cannot change (``core.bounds.assign_point_prune``) — the selects are
+  value-noops, pinned bitwise, and the ``pruned`` output counts them. The
+  reduction tree is shared by the gated and ungated tiled kernels, which
+  is what makes bounded-vs-unbounded fits bitwise comparable end to end.
 """
 from __future__ import annotations
 
@@ -41,6 +53,9 @@ from jax.experimental.pallas import tpu as pltpu
 # the one shared definition of the cached-norm matmul-form D^2 — the
 # fused==pallas bitwise-parity claims hang off every kernel using it
 from repro.kernels.kmeans_distance import tile_d2 as _tile_d2
+# the ONE definition of the fine-level per-point prune test (the pure-JAX
+# gate model evaluates the same function — single source of truth)
+from repro.core.bounds import assign_point_prune as _assign_point_prune
 
 
 def _assign_kernel(n_valid_ref, pts_ref, norms_ref, cents_ref, assign_ref,
@@ -217,9 +232,10 @@ def lloyd_assign_batched_pallas(points: jax.Array, norms: jax.Array,
 def _tile_assign(x_raw, xn, c_raw, valid):
     """Shared per-tile assignment math for the tiled/gated kernels:
     (labels, masked min_d2, tile inertia partial, tile second-best gap,
-    tile per-cluster sums, tile per-cluster counts). The second-best gap is
-    in DISTANCE units (the movement bound compares it against centroid
-    movement); a k=1 tile has no runner-up, so its gap is +inf."""
+    per-point second-best lower bound, tile per-cluster sums, tile
+    per-cluster counts). The gap/lb are in DISTANCE units (the movement
+    bound compares them against centroid movement); a k=1 tile has no
+    runner-up, so its gap/lb are +inf."""
     d2 = _tile_d2(x_raw, c_raw, xn)                     # (block_n, k)
     k = d2.shape[1]
     a = jnp.argmin(d2, axis=1).astype(jnp.int32)
@@ -235,48 +251,100 @@ def _tile_assign(x_raw, xn, c_raw, valid):
     tile_sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
                                     preferred_element_type=jnp.float32)
     tile_counts = jnp.sum(onehot, axis=0)
-    return a, m, jnp.sum(m), gap, tile_sums, tile_counts
+    return a, m, jnp.sum(m), gap, jnp.sqrt(second), tile_sums, tile_counts
+
+
+def _tile_assign_pruned(x_raw, xn, c_raw, valid, prev_a, prev_md, prev_lb,
+                        delta, thresh, absorb):
+    """Fine-level twin of `_tile_assign`: per-point Hamerly pruning inside
+    one ACTIVE tile. Points whose own centroid is bitwise unmoved and whose
+    carried second-best lower bound clears the movement threshold
+    (`core.bounds.assign_point_prune`) short-circuit the k-way distance
+    recomputation: label, min_d2 come from the carry (bitwise what a fresh
+    compute would produce — the exactness argument in ``core.bounds``), and
+    their lb decays by ``absorb`` instead of being re-derived. Returns
+    (labels, masked min_d2, tile partial, tile gap, per-point lb,
+    pruned-point count, tile sums, tile counts)."""
+    prune = _assign_point_prune(prev_a, prev_md, prev_lb, delta, thresh,
+                                valid)
+    d2 = _tile_d2(x_raw, c_raw, xn)                     # (block_n, k)
+    k = d2.shape[1]
+    a_f = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    m_f = jnp.min(d2, axis=1)
+    a = jnp.where(prune, prev_a, a_f)
+    m = jnp.where(prune, prev_md, m_f)
+    won = a[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    second = jnp.min(jnp.where(won, jnp.inf, d2), axis=1)
+    # pruned rows carry the decayed bound — their fresh second-best was
+    # never (conceptually) computed; fresh rows re-derive it exactly
+    lb = jnp.where(prune, prev_lb - absorb, jnp.sqrt(second))
+    gap_pt = lb - jnp.sqrt(m)
+    gap = jnp.min(jnp.where(valid, gap_pt, jnp.inf))
+    m = jnp.where(valid, m, 0.0)
+
+    x = x_raw.astype(jnp.float32)
+    onehot = jnp.where(valid[:, None], won.astype(jnp.float32), 0.0)
+    tile_sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    tile_counts = jnp.sum(onehot, axis=0)
+    return (a, m, jnp.sum(m), gap, lb,
+            jnp.sum(prune.astype(jnp.float32)), tile_sums, tile_counts)
+
+
+def _super_accum(cond_first, ssums_ref, scounts_ref, tsums, tcounts, idx):
+    """Accumulate one tile's contribution into its super-tile's resident
+    accumulator slot at ``ssums_ref[idx]``: re-initialize on the super's
+    first visited tile (the freshly-mapped output block is undefined VMEM —
+    the where never USES it then), sequential adds after. One shared
+    definition keeps the gated and ungated kernels on the same tree."""
+    prev_s = jnp.where(cond_first, jnp.zeros_like(tsums), ssums_ref[idx])
+    prev_c = jnp.where(cond_first, jnp.zeros_like(tcounts),
+                       scounts_ref[idx])
+    ssums_ref[idx] = prev_s + tsums
+    scounts_ref[idx] = prev_c + tcounts
 
 
 def _assign_tiled_kernel(n_valid_ref, pts_ref, norms_ref, cents_ref,
-                         assign_ref, md_ref, partial_ref, gap_ref, tsums_ref,
-                         tcounts_ref, *, block_n: int):
+                         assign_ref, md_ref, partial_ref, gap_ref, ssums_ref,
+                         scounts_ref, *, block_n: int, tps: int):
     i = pl.program_id(0)
     xn = norms_ref[...].astype(jnp.float32)
     row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
     valid = row < n_valid_ref[0]
-    a, m, part, gap, tsums, tcounts = _tile_assign(pts_ref[...], xn,
-                                                   cents_ref[...], valid)
+    a, m, part, gap, _, tsums, tcounts = _tile_assign(pts_ref[...], xn,
+                                                      cents_ref[...], valid)
     assign_ref[...] = a
     md_ref[...] = m
     partial_ref[0] = part
     gap_ref[0] = gap
-    tsums_ref[0] = tsums
-    tcounts_ref[0] = tcounts
+    _super_accum(i % tps == 0, ssums_ref, scounts_ref, tsums, tcounts, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_n", "tps", "interpret"))
 def lloyd_assign_tiled_pallas(points: jax.Array, norms: jax.Array,
                               centroids: jax.Array, *, block_n: int,
-                              interpret: bool):
-    """Bounded-Lloyd assignment half-step with PER-TILE outputs.
+                              tps: int, interpret: bool):
+    """Bounded-Lloyd assignment half-step with per-tile scalars and
+    HIERARCHICAL per-cluster accumulators.
 
     Returns (assignment (n,) int32, min_d2 (n,), partials (n_tiles,),
-    gaps (n_tiles,), tile_sums (n_tiles, k, d), tile_counts (n_tiles, k)).
-    ``sum(partials)`` is the iteration's inertia; ``tile_sums.sum(0)`` /
-    ``tile_counts.sum(0)`` are the centroid-update accumulators — the SAME
-    reduction tree the gated kernel produces, so bounded and unbounded fits
-    compare bitwise."""
+    gaps (n_tiles,), super_sums (n_super, k, d), super_counts (n_super, k))
+    where every ``tps`` consecutive tiles share one accumulator slot
+    (n_super = ceil(n_tiles / tps)). ``sum(partials)`` is the iteration's
+    inertia; ``super_sums.sum(0)`` / ``super_counts.sum(0)`` are the
+    centroid-update accumulators — the SAME two-level reduction tree the
+    gated kernel produces, so bounded and unbounded fits compare bitwise."""
     n, d = points.shape
     k = centroids.shape[0]
     pad = (-n) % block_n
     grid = (n + pad) // block_n
+    n_super = -(-grid // tps)
     pts = jnp.pad(points, ((0, pad), (0, 0)))
     nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
     n_valid = jnp.array([n], jnp.int32)
 
-    a, md, partials, gaps, tsums, tcounts = pl.pallas_call(
-        functools.partial(_assign_tiled_kernel, block_n=block_n),
+    a, md, partials, gaps, ssums, scounts = pl.pallas_call(
+        functools.partial(_assign_tiled_kernel, block_n=block_n, tps=tps),
         grid=(grid,),
         in_specs=[
             pl.BlockSpec((1,), lambda i: (0,)),
@@ -289,32 +357,39 @@ def lloyd_assign_tiled_pallas(points: jax.Array, norms: jax.Array,
             pl.BlockSpec((block_n,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (i,)),
             pl.BlockSpec((1,), lambda i: (i,)),
-            pl.BlockSpec((1, k, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k, d), lambda i: (i // tps, 0, 0)),  # super
+            pl.BlockSpec((1, k), lambda i: (i // tps, 0)),        # super
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n + pad,), jnp.int32),
             jax.ShapeDtypeStruct((n + pad,), jnp.float32),
             jax.ShapeDtypeStruct((grid,), jnp.float32),
             jax.ShapeDtypeStruct((grid,), jnp.float32),
-            jax.ShapeDtypeStruct((grid, k, d), jnp.float32),
-            jax.ShapeDtypeStruct((grid, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_super, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((n_super, k), jnp.float32),
         ],
         interpret=interpret,
     )(n_valid, pts, nrm, centroids)
-    return a[:n], md[:n], partials, gaps, tsums, tcounts
+    return a[:n], md[:n], partials, gaps, ssums, scounts
 
 
 def _assign_gated_kernel(ids_ref, meta_ref, pts_ref, norms_ref, cents_ref,
-                         pa_ref, pmd_ref, pp_ref, pg_ref, pts_s_ref,
-                         ptc_ref, assign_ref, md_ref, partial_ref, gap_ref,
-                         tsums_ref, tcounts_ref, *, block_n: int):
+                         delta_ref, thresh_ref, absorb_ref, pa_ref, pmd_ref,
+                         plb_ref, pp_ref, pg_ref, pss_ref, psc_ref, pz_ref,
+                         assign_ref, md_ref, lb_ref, partial_ref, gap_ref,
+                         ssums_ref, scounts_ref, pruned_ref, *, block_n: int,
+                         tps: int):
     """Grid step i streams tile ``ids[i]``; steps >= n_active revisit the
     last active tile (VMEM-resident, no HBM fetch) gated off by pl.when.
-    The prev_* refs are never read — they carry the aliased buffers the
-    skipped tiles' six outputs fall back to, and live in ANY memory space
-    so active tiles pay no DMA for them."""
-    del pa_ref, pmd_ref, pp_ref, pg_ref, pts_s_ref, ptc_ref
+    ``pa``/``pmd``/``plb`` (the per-point carries) are READ — they feed the
+    fine-level per-point prune — and their buffers are donated to the
+    matching outputs; the pp/pg/pss/psc/pz refs are never read and live in
+    ANY memory space (zero DMA), existing only to carry the aliased buffers
+    the skipped tiles'/supers' outputs fall back to. The super-tile
+    accumulator re-initializes on each super's first tile (``ids[i] % tps
+    == 0`` — the caller guarantees super-aligned active sets, so a super's
+    tiles are visited completely and in ascending order)."""
+    del pp_ref, pg_ref, pss_ref, psc_ref, pz_ref
     i = pl.program_id(0)
 
     @pl.when(i < meta_ref[1])
@@ -323,119 +398,152 @@ def _assign_gated_kernel(ids_ref, meta_ref, pts_ref, norms_ref, cents_ref,
         xn = norms_ref[...].astype(jnp.float32)
         row = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
         valid = row < meta_ref[0]
-        a, m, part, gap, tsums, tcounts = _tile_assign(pts_ref[...], xn,
-                                                       cents_ref[...], valid)
+        a, m, part, gap, lb, pruned, tsums, tcounts = _tile_assign_pruned(
+            pts_ref[...], xn, cents_ref[...], valid, pa_ref[...],
+            pmd_ref[...].astype(jnp.float32),
+            plb_ref[...].astype(jnp.float32), delta_ref[...],
+            thresh_ref[0], absorb_ref[0])
         assign_ref[...] = a
         md_ref[...] = m
+        lb_ref[...] = lb
         partial_ref[0] = part
         gap_ref[0] = gap
-        tsums_ref[0] = tsums
-        tcounts_ref[0] = tcounts
+        pruned_ref[0] = pruned
+        _super_accum(t % tps == 0, ssums_ref, scounts_ref, tsums, tcounts, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_n", "tps", "interpret"))
 def lloyd_assign_gated_pallas(points: jax.Array, norms: jax.Array,
-                              centroids: jax.Array, prev_assign: jax.Array,
-                              prev_min_d2: jax.Array,
+                              centroids: jax.Array, delta: jax.Array,
+                              thresh: jax.Array, absorb: jax.Array,
+                              prev_assign: jax.Array,
+                              prev_min_d2: jax.Array, prev_lb: jax.Array,
                               prev_partials: jax.Array, prev_gaps: jax.Array,
-                              prev_tile_sums: jax.Array,
-                              prev_tile_counts: jax.Array, ids: jax.Array,
-                              meta: jax.Array, *, block_n: int,
+                              prev_super_sums: jax.Array,
+                              prev_super_counts: jax.Array, ids: jax.Array,
+                              meta: jax.Array, *, block_n: int, tps: int,
                               interpret: bool):
-    """Bound-gated assignment half-step (exact tile skipping for Lloyd).
+    """Bound-gated assignment half-step (two-level exact pruning for Lloyd).
 
     ``ids``/``meta=[n_valid, n_active]`` come from `core.bounds.compact_ids`
-    over `core.bounds.assign_active_tiles`: only the first n_active grid
-    steps fetch + compute; every output block of a skipped tile keeps the
-    aliased previous-iteration value, which the movement bound proves is
-    bitwise what a recompute would write (labels cannot change AND the
-    tile's assigned centroids did not move). Same returns as
-    `lloyd_assign_tiled_pallas`."""
+    over a SUPER-ALIGNED active mask (`core.bounds.expand_active_supers` of
+    `assign_active_tiles` — the ops wrapper enforces it): only the first
+    n_active grid steps fetch + compute; every output block of a skipped
+    tile keeps the aliased previous-iteration value, which the movement
+    bound proves is bitwise what a recompute would write (labels cannot
+    change AND the tile's assigned centroids did not move). The per-cluster
+    accumulators are per-SUPER-tile (aliased at super granularity — carried
+    iff the whole super skipped). Inside computed tiles the per-point
+    Hamerly bound short-circuits stable points (``delta``/``thresh``/
+    ``absorb`` from `core.bounds.assign_point_scalars`). Same returns as
+    `lloyd_assign_tiled_pallas` plus (lb (n,), pruned (n_tiles,))."""
     n, d = points.shape
     k = centroids.shape[0]
     pad = (-n) % block_n
     grid = (n + pad) // block_n
+    n_super = -(-grid // tps)
     pts = jnp.pad(points, ((0, pad), (0, 0)))
     nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
     pa = jnp.pad(prev_assign.astype(jnp.int32), (0, pad))
     pmd = jnp.pad(prev_min_d2.astype(jnp.float32), (0, pad))
+    plb = jnp.pad(prev_lb.astype(jnp.float32), (0, pad))
 
-    # the six prev_* operands exist ONLY to donate their buffers via
-    # input_output_aliases (the kernel never reads them): ANY memory space
-    # keeps them in HBM with no per-step VMEM DMA, so active tiles pay zero
-    # traffic for the carries and skipped tiles still inherit them
+    # the five pp/pg/pss/psc/pz operands exist ONLY to donate their buffers
+    # via input_output_aliases (the kernel never reads them): ANY memory
+    # space keeps them in HBM with no per-step VMEM DMA, so active tiles pay
+    # zero traffic for those carries and skipped tiles still inherit them
     carry_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    blk = pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],))
+    one = pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                          # ids, meta
         grid=(grid,),
         in_specs=[
             pl.BlockSpec((block_n, d), lambda i, ids, meta: (ids[i], 0)),
-            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
+            blk,                                            # norms
             pl.BlockSpec((k, d), lambda i, ids, meta: (0, 0)),   # resident
-        ] + [carry_spec] * 6,
+            pl.BlockSpec((k,), lambda i, ids, meta: (0,)),  # delta, resident
+            one,                                            # thresh
+            one,                                            # absorb
+            blk,                                            # prev assign
+            blk,                                            # prev min_d2
+            blk,                                            # prev lb
+        ] + [carry_spec] * 5,
         out_specs=[
-            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
-            pl.BlockSpec((block_n,), lambda i, ids, meta: (ids[i],)),
-            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),
-            pl.BlockSpec((1,), lambda i, ids, meta: (ids[i],)),
-            pl.BlockSpec((1, k, d), lambda i, ids, meta: (ids[i], 0, 0)),
-            pl.BlockSpec((1, k), lambda i, ids, meta: (ids[i], 0)),
+            blk,                                            # assignment
+            blk,                                            # min_d2
+            blk,                                            # lb
+            one,                                            # partial
+            one,                                            # gap
+            pl.BlockSpec((1, k, d),
+                         lambda i, ids, meta: (ids[i] // tps, 0, 0)),
+            pl.BlockSpec((1, k), lambda i, ids, meta: (ids[i] // tps, 0)),
+            one,                                            # pruned
         ],
     )
-    a, md, partials, gaps, tsums, tcounts = pl.pallas_call(
-        functools.partial(_assign_gated_kernel, block_n=block_n),
+    a, md, lb, partials, gaps, ssums, scounts, pruned = pl.pallas_call(
+        functools.partial(_assign_gated_kernel, block_n=block_n, tps=tps),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((n + pad,), jnp.int32),
             jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n + pad,), jnp.float32),
             jax.ShapeDtypeStruct((grid,), jnp.float32),
             jax.ShapeDtypeStruct((grid,), jnp.float32),
-            jax.ShapeDtypeStruct((grid, k, d), jnp.float32),
-            jax.ShapeDtypeStruct((grid, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_super, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((n_super, k), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
         ],
-        # skipped tiles reuse all six of their prior output blocks
-        input_output_aliases={5: 0, 6: 1, 7: 2, 8: 3, 9: 4, 10: 5},
+        # skipped tiles/supers reuse all of their prior output blocks;
+        # skipped tiles report zero pruned points (the donated zeros)
+        input_output_aliases={8: 0, 9: 1, 10: 2, 11: 3, 12: 4, 13: 5,
+                              14: 6, 15: 7},
         interpret=interpret,
-    )(ids, meta, pts, nrm, centroids, pa, pmd,
+    )(ids, meta, pts, nrm, centroids, delta.astype(jnp.float32),
+      thresh.astype(jnp.float32), absorb.astype(jnp.float32), pa, pmd, plb,
       prev_partials.astype(jnp.float32), prev_gaps.astype(jnp.float32),
-      prev_tile_sums.astype(jnp.float32),
-      prev_tile_counts.astype(jnp.float32))
-    return a[:n], md[:n], partials, gaps, tsums, tcounts
+      prev_super_sums.astype(jnp.float32),
+      prev_super_counts.astype(jnp.float32),
+      jnp.zeros((grid,), jnp.float32))
+    return a[:n], md[:n], lb[:n], partials, gaps, ssums, scounts, pruned
 
 
 def _assign_tiled_kernel_batched(n_valid_ref, pts_ref, norms_ref, cents_ref,
                                  assign_ref, md_ref, partial_ref, gap_ref,
-                                 tsums_ref, tcounts_ref, *, block_n: int):
+                                 ssums_ref, scounts_ref, *, block_n: int,
+                                 tps: int):
     i = pl.program_id(1)
     xn = norms_ref[0].astype(jnp.float32)
     row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
     valid = row < n_valid_ref[0]
-    a, m, part, gap, tsums, tcounts = _tile_assign(pts_ref[0], xn,
-                                                   cents_ref[0], valid)
+    a, m, part, gap, _, tsums, tcounts = _tile_assign(pts_ref[0], xn,
+                                                      cents_ref[0], valid)
     assign_ref[0] = a
     md_ref[0] = m
     partial_ref[0, 0] = part
     gap_ref[0, 0] = gap
-    tsums_ref[0, 0] = tsums
-    tcounts_ref[0, 0] = tcounts
+    _super_accum(i % tps == 0, ssums_ref, scounts_ref, tsums, tcounts,
+                 (0, 0))
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_n", "tps", "interpret"))
 def lloyd_assign_tiled_batched_pallas(points: jax.Array, norms: jax.Array,
                                       centroids: jax.Array, *, block_n: int,
-                                      interpret: bool):
+                                      tps: int, interpret: bool):
     """Batch-grid tiled assignment over B independent problems in ONE launch;
     row b is bitwise `lloyd_assign_tiled_pallas` on problem b."""
     B, n, d = points.shape
     k = centroids.shape[1]
     pad = (-n) % block_n
     grid = (n + pad) // block_n
+    n_super = -(-grid // tps)
     pts = jnp.pad(points, ((0, 0), (0, pad), (0, 0)))
     nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pad)))
     n_valid = jnp.array([n], jnp.int32)
 
-    a, md, partials, gaps, tsums, tcounts = pl.pallas_call(
-        functools.partial(_assign_tiled_kernel_batched, block_n=block_n),
+    a, md, partials, gaps, ssums, scounts = pl.pallas_call(
+        functools.partial(_assign_tiled_kernel_batched, block_n=block_n,
+                          tps=tps),
         grid=(B, grid),
         in_specs=[
             pl.BlockSpec((1,), lambda b, i: (0,)),
@@ -448,30 +556,32 @@ def lloyd_assign_tiled_batched_pallas(points: jax.Array, norms: jax.Array,
             pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
             pl.BlockSpec((1, 1), lambda b, i: (b, i)),
             pl.BlockSpec((1, 1), lambda b, i: (b, i)),
-            pl.BlockSpec((1, 1, k, d), lambda b, i: (b, i, 0, 0)),
-            pl.BlockSpec((1, 1, k), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1, k, d), lambda b, i: (b, i // tps, 0, 0)),
+            pl.BlockSpec((1, 1, k), lambda b, i: (b, i // tps, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, n + pad), jnp.int32),
             jax.ShapeDtypeStruct((B, n + pad), jnp.float32),
             jax.ShapeDtypeStruct((B, grid), jnp.float32),
             jax.ShapeDtypeStruct((B, grid), jnp.float32),
-            jax.ShapeDtypeStruct((B, grid, k, d), jnp.float32),
-            jax.ShapeDtypeStruct((B, grid, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_super, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_super, k), jnp.float32),
         ],
         interpret=interpret,
     )(n_valid, pts, nrm, centroids)
-    return a[:, :n], md[:, :n], partials, gaps, tsums, tcounts
+    return a[:, :n], md[:, :n], partials, gaps, ssums, scounts
 
 
 def _assign_gated_kernel_batched(ids_ref, nact_ref, nv_ref, pts_ref,
-                                 norms_ref, cents_ref, pa_ref, pmd_ref,
-                                 pp_ref, pg_ref, pts_s_ref, ptc_ref,
-                                 assign_ref, md_ref, partial_ref, gap_ref,
-                                 tsums_ref, tcounts_ref, *, block_n: int):
+                                 norms_ref, cents_ref, delta_ref, thresh_ref,
+                                 absorb_ref, pa_ref, pmd_ref, plb_ref,
+                                 pp_ref, pg_ref, pss_ref, psc_ref, pz_ref,
+                                 assign_ref, md_ref, lb_ref, partial_ref,
+                                 gap_ref, ssums_ref, scounts_ref, pruned_ref,
+                                 *, block_n: int, tps: int):
     """Grid step (b, i) streams tile ids[b, i] of problem b; steps past
     problem b's n_active are no-ops (per-problem compaction)."""
-    del pa_ref, pmd_ref, pp_ref, pg_ref, pts_s_ref, ptc_ref
+    del pp_ref, pg_ref, pss_ref, psc_ref, pz_ref
     b = pl.program_id(0)
     i = pl.program_id(1)
 
@@ -481,77 +591,101 @@ def _assign_gated_kernel_batched(ids_ref, nact_ref, nv_ref, pts_ref,
         xn = norms_ref[0].astype(jnp.float32)
         row = t * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
         valid = row < nv_ref[0]
-        a, m, part, gap, tsums, tcounts = _tile_assign(pts_ref[0], xn,
-                                                       cents_ref[0], valid)
+        a, m, part, gap, lb, pruned, tsums, tcounts = _tile_assign_pruned(
+            pts_ref[0], xn, cents_ref[0], valid, pa_ref[0],
+            pmd_ref[0].astype(jnp.float32), plb_ref[0].astype(jnp.float32),
+            delta_ref[0], thresh_ref[0, 0], absorb_ref[0, 0])
         assign_ref[0] = a
         md_ref[0] = m
+        lb_ref[0] = lb
         partial_ref[0, 0] = part
         gap_ref[0, 0] = gap
-        tsums_ref[0, 0] = tsums
-        tcounts_ref[0, 0] = tcounts
+        pruned_ref[0, 0] = pruned
+        _super_accum(t % tps == 0, ssums_ref, scounts_ref, tsums, tcounts,
+                     (0, 0))
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_n", "tps", "interpret"))
 def lloyd_assign_gated_batched_pallas(
         points: jax.Array, norms: jax.Array, centroids: jax.Array,
-        prev_assign: jax.Array, prev_min_d2: jax.Array,
+        delta: jax.Array, thresh: jax.Array, absorb: jax.Array,
+        prev_assign: jax.Array, prev_min_d2: jax.Array, prev_lb: jax.Array,
         prev_partials: jax.Array, prev_gaps: jax.Array,
-        prev_tile_sums: jax.Array, prev_tile_counts: jax.Array,
-        ids: jax.Array, n_active: jax.Array, *, block_n: int,
+        prev_super_sums: jax.Array, prev_super_counts: jax.Array,
+        ids: jax.Array, n_active: jax.Array, *, block_n: int, tps: int,
         interpret: bool):
-    """Batch-grid bound-gated assignment: per-problem compacted active-tile
-    maps ids (B, n_tiles) / n_active (B,). Row b is bitwise
-    `lloyd_assign_gated_pallas` on problem b."""
+    """Batch-grid bound-gated assignment: per-problem compacted
+    (super-aligned) active-tile maps ids (B, n_tiles) / n_active (B,).
+    Row b is bitwise `lloyd_assign_gated_pallas` on problem b."""
     B, n, d = points.shape
     k = centroids.shape[1]
     pad = (-n) % block_n
     grid = (n + pad) // block_n
+    n_super = -(-grid // tps)
     pts = jnp.pad(points, ((0, 0), (0, pad), (0, 0)))
     nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pad)))
     pa = jnp.pad(prev_assign.astype(jnp.int32), ((0, 0), (0, pad)))
     pmd = jnp.pad(prev_min_d2.astype(jnp.float32), ((0, 0), (0, pad)))
+    plb = jnp.pad(prev_lb.astype(jnp.float32), ((0, 0), (0, pad)))
     nv = jnp.array([n], jnp.int32)
 
     # never-read aliased carries: ANY memory space, no per-step DMA
     carry_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    blk = pl.BlockSpec((1, block_n),
+                       lambda b, i, ids, na, nv: (b, ids[b, i]))
+    one = pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i]))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,                      # ids, n_active, n_valid
         grid=(B, grid),
         in_specs=[
             pl.BlockSpec((1, block_n, d),
                          lambda b, i, ids, na, nv: (b, ids[b, i], 0)),
-            pl.BlockSpec((1, block_n),
-                         lambda b, i, ids, na, nv: (b, ids[b, i])),
+            blk,                                        # norms
             pl.BlockSpec((1, k, d), lambda b, i, ids, na, nv: (b, 0, 0)),
-        ] + [carry_spec] * 6,
+            pl.BlockSpec((1, k), lambda b, i, ids, na, nv: (b, 0)),  # delta
+            one,                                        # thresh
+            one,                                        # absorb
+            blk,                                        # prev assign
+            blk,                                        # prev min_d2
+            blk,                                        # prev lb
+        ] + [carry_spec] * 5,
         out_specs=[
-            pl.BlockSpec((1, block_n),
-                         lambda b, i, ids, na, nv: (b, ids[b, i])),
-            pl.BlockSpec((1, block_n),
-                         lambda b, i, ids, na, nv: (b, ids[b, i])),
-            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
-            pl.BlockSpec((1, 1), lambda b, i, ids, na, nv: (b, ids[b, i])),
+            blk,                                        # assignment
+            blk,                                        # min_d2
+            blk,                                        # lb
+            one,                                        # partial
+            one,                                        # gap
             pl.BlockSpec((1, 1, k, d),
-                         lambda b, i, ids, na, nv: (b, ids[b, i], 0, 0)),
+                         lambda b, i, ids, na, nv: (b, ids[b, i] // tps,
+                                                    0, 0)),
             pl.BlockSpec((1, 1, k),
-                         lambda b, i, ids, na, nv: (b, ids[b, i], 0)),
+                         lambda b, i, ids, na, nv: (b, ids[b, i] // tps, 0)),
+            one,                                        # pruned
         ],
     )
-    a, md, partials, gaps, tsums, tcounts = pl.pallas_call(
-        functools.partial(_assign_gated_kernel_batched, block_n=block_n),
+    a, md, lb, partials, gaps, ssums, scounts, pruned = pl.pallas_call(
+        functools.partial(_assign_gated_kernel_batched, block_n=block_n,
+                          tps=tps),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B, n + pad), jnp.int32),
             jax.ShapeDtypeStruct((B, n + pad), jnp.float32),
+            jax.ShapeDtypeStruct((B, n + pad), jnp.float32),
             jax.ShapeDtypeStruct((B, grid), jnp.float32),
             jax.ShapeDtypeStruct((B, grid), jnp.float32),
-            jax.ShapeDtypeStruct((B, grid, k, d), jnp.float32),
-            jax.ShapeDtypeStruct((B, grid, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_super, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_super, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, grid), jnp.float32),
         ],
-        input_output_aliases={6: 0, 7: 1, 8: 2, 9: 3, 10: 4, 11: 5},
+        input_output_aliases={9: 0, 10: 1, 11: 2, 12: 3, 13: 4, 14: 5,
+                              15: 6, 16: 7},
         interpret=interpret,
     )(ids.astype(jnp.int32), n_active.astype(jnp.int32), nv, pts, nrm,
-      centroids, pa, pmd, prev_partials.astype(jnp.float32),
-      prev_gaps.astype(jnp.float32), prev_tile_sums.astype(jnp.float32),
-      prev_tile_counts.astype(jnp.float32))
-    return a[:, :n], md[:, :n], partials, gaps, tsums, tcounts
+      centroids, delta.astype(jnp.float32), thresh.astype(jnp.float32),
+      absorb.astype(jnp.float32), pa, pmd, plb,
+      prev_partials.astype(jnp.float32), prev_gaps.astype(jnp.float32),
+      prev_super_sums.astype(jnp.float32),
+      prev_super_counts.astype(jnp.float32),
+      jnp.zeros((B, grid), jnp.float32))
+    return (a[:, :n], md[:, :n], lb[:, :n], partials, gaps, ssums, scounts,
+            pruned)

@@ -68,11 +68,15 @@ def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
         (the seeding kernel's thrust::reduce analogue)
       bound-state blocks: previous-partial/tile-max in + partial/tile-max out
         scalars per step, double-buffered (the gated kernel's skip state)
-      bounded-assignment blocks: the tiled/gated Lloyd kernels additionally
-        stream a per-tile (k, d)+(k,) cluster sums/counts OUT block (plus
-        the gated kernel's aliased prev block in flight), the int32
-        assignment + fp32 min_d2 aliased in/out blocks, and the per-tile
-        gap/partial movement-bound scalars
+      per-point bound blocks: the fine-level gates stream the prologue's
+        fp32 ``center_d`` block (seeding, 2 buffers) and the assignment
+        carries' int32 label + fp32 min_d2 + fp32 point_lb aliased in/out
+        block pairs, plus the (k,) movement vector and the per-tile
+        dc/margin/thresh/absorb scalars
+      hierarchical accumulator: the tiled/gated Lloyd kernels keep ONE
+        per-SUPER-tile (k, d)+(k,) cluster sums/counts block resident (plus
+        the gated kernel's aliased prev block in flight) — per-tile sums no
+        longer stream through VMEM per step
 
     `batched=True` budgets the batch-grid kernels, whose centroid block is
     re-fetched per problem and therefore double-buffered like the point
@@ -83,10 +87,14 @@ def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
         working += 4 * 2 * bn               # cached ||x||^2 (fp32, 2 buffers)
         working += 4 * (k * d + k + 8)      # fp32 accumulators + partial
         working += 4 * 2 * 4                # bound-state scalar blocks
-        working += 4 * 2 * (k * d + k)      # per-tile sums/counts out block
-                                            #   (+ gated aliased prev block)
-        working += 4 * 4 * bn               # assignment/min_d2 aliased i/o
-        working += 4 * 2 * 4                # gap/partial movement scalars
+        working += 4 * 2 * (k * d + k)      # super-tile sums/counts out
+                                            #   block (+ gated aliased prev)
+        working += 4 * 6 * bn               # assignment/min_d2/point_lb
+                                            #   aliased i/o block pairs
+        working += 4 * 2 * bn               # center_d block (fp32, 2 bufs)
+        working += 4 * k                    # movement vector (k,)
+        working += 4 * 2 * 8                # dc/margin/thresh/absorb +
+                                            #   gap/partial/pruned scalars
         if batched:
             working += dtype_bytes * k * d  # second centroid buffer
         if working <= _VMEM_BUDGET:
@@ -197,21 +205,24 @@ def distance_min_update_batched(points: jax.Array, centroids: jax.Array,
 
 def distance_min_update_gated(points: jax.Array, centroids: jax.Array,
                               min_d2: jax.Array, norms: jax.Array,
-                              prev_partials: jax.Array,
+                              center_d: jax.Array, dc: jax.Array,
+                              margin: jax.Array, prev_partials: jax.Array,
                               prev_tile_max: jax.Array, active: jax.Array, *,
                               block_n: int,
                               resident_centroids: bool = True,
                               interpret: bool | None = None):
-    """Bound-gated seeding round (exact tile skipping).
+    """Bound-gated seeding round (two-level exact pruning).
 
-    ``active`` is the (n_tiles,) bool mask from `core.bounds.active_tiles`;
-    it is compacted here into the scalar-prefetched index map the gated
-    kernel consumes, so inactive tiles are neither fetched nor computed and
-    their outputs keep the previous round's (bitwise-identical) values.
-    Returns (new_min_d2, partials, tile_max, skipped). ``block_n`` is
-    required: it must match the tile height of the carried bound state.
-    Under `jax.vmap` this dispatches to the gated batch-grid kernel with
-    per-problem compaction."""
+    ``active``/``dc``/``margin`` come from `core.bounds.seed_gate` and
+    ``center_d`` from the prologue; the mask is compacted here into the
+    scalar-prefetched index map the gated kernel consumes, so inactive tiles
+    are neither fetched nor computed and their outputs keep the previous
+    round's (bitwise-identical) values, while inside active tiles the
+    per-point bound short-circuits rows whose ``min_d2`` provably cannot
+    improve. Returns (new_min_d2, partials, tile_max, pruned (n_tiles,),
+    skipped). ``block_n`` is required: it must match the tile height of the
+    carried bound state. Under `jax.vmap` this dispatches to the gated
+    batch-grid kernel with per-problem compaction."""
     from repro.core import bounds as bnd
 
     n, d = points.shape
@@ -224,32 +235,27 @@ def distance_min_update_gated(points: jax.Array, centroids: jax.Array,
     skipped = (grid - n_active).astype(jnp.int32)
 
     @custom_vmap
-    def call(pts, cents, md, nrm, pp, ptm, ids_, nact):
+    def call(pts, cents, md, nrm, cd, dc_, mg, pp, ptm, ids_, nact):
         meta = jnp.stack([jnp.full((), n, jnp.int32), nact.astype(jnp.int32)])
         return distance_min_update_gated_pallas(
-            pts, nrm, cents, md, pp, ptm, ids_, meta, block_n=block_n,
-            resident=resident_centroids, interpret=interpret)
+            pts, nrm, cents, md, cd, dc_, mg, pp, ptm, ids_, meta,
+            block_n=block_n, resident=resident_centroids,
+            interpret=interpret)
 
     @call.def_vmap
-    def _rule(axis_size, in_batched, pts, cents, md, nrm, pp, ptm, ids_,
-              nact):
-        pts = _ensure_batched(pts, in_batched[0], axis_size)
-        cents = _ensure_batched(cents, in_batched[1], axis_size)
-        md = _ensure_batched(md, in_batched[2], axis_size)
-        nrm = _ensure_batched(nrm, in_batched[3], axis_size)
-        pp = _ensure_batched(pp, in_batched[4], axis_size)
-        ptm = _ensure_batched(ptm, in_batched[5], axis_size)
-        ids_ = _ensure_batched(ids_, in_batched[6], axis_size)
-        nact = _ensure_batched(nact, in_batched[7], axis_size)
+    def _rule(axis_size, in_batched, *args):
+        args = [_ensure_batched(a, b, axis_size)
+                for a, b in zip(args, in_batched)]
+        pts, cents, md, nrm, cd, dc_, mg, pp, ptm, ids_, nact = args
         out = distance_min_update_gated_batched_pallas(
-            pts, nrm, cents, md, pp, ptm, ids_, nact, block_n=block_n,
-            interpret=interpret)
-        return out, (True, True, True)
+            pts, nrm, cents, md, cd, dc_, mg, pp, ptm, ids_, nact,
+            block_n=block_n, interpret=interpret)
+        return out, (True, True, True, True)
 
-    new_md, partials, tile_max = call(points, centroids, min_d2, norms,
-                                      prev_partials, prev_tile_max, ids,
-                                      n_active)
-    return new_md, partials, tile_max, skipped
+    new_md, partials, tile_max, pruned = call(
+        points, centroids, min_d2, norms, center_d.astype(jnp.float32), dc,
+        margin, prev_partials, prev_tile_max, ids, n_active)
+    return new_md, partials, tile_max, pruned, skipped
 
 
 def lloyd_assign(points: jax.Array, centroids: jax.Array, *,
@@ -305,18 +311,23 @@ def lloyd_assign_tiled(points: jax.Array, centroids: jax.Array, *,
                        norms: jax.Array | None = None,
                        block_n: int | None = None,
                        interpret: bool | None = None):
-    """Bounded-Lloyd assignment half-step with per-tile outputs.
+    """Bounded-Lloyd assignment half-step with per-tile scalars and
+    hierarchical accumulators.
 
     Returns (assignment, min_d2, partials (n_tiles,), gaps (n_tiles,),
-    tile_sums (n_tiles, k, d), tile_counts (n_tiles, k)) — the ungated twin
-    of `lloyd_assign_gated`, sharing its per-tile reduction tree so bounded
-    and unbounded fits compare bitwise. Under `jax.vmap` this dispatches to
-    the batch-grid kernel."""
+    super_sums (n_super, k, d), super_counts (n_super, k)) with
+    ``n_super = ceil(n_tiles / core.bounds.tiles_per_super(n_tiles))`` — the
+    ungated twin of `lloyd_assign_gated`, sharing its two-level reduction
+    tree so bounded and unbounded fits compare bitwise. Under `jax.vmap`
+    this dispatches to the batch-grid kernel."""
+    from repro.core import bounds as bnd
+
     n, d = points.shape
     k = centroids.shape[0]
     if block_n is None:
         block_n = choose_block_n(n, d, k)
     bn = block_n
+    tps = bnd.tiles_per_super(-(-n // bn))
     if interpret is None:
         interpret = default_interpret()
     centroids, norms = _align(points, centroids, norms)
@@ -324,7 +335,7 @@ def lloyd_assign_tiled(points: jax.Array, centroids: jax.Array, *,
     @custom_vmap
     def call(pts, cents, nrm):
         return lloyd_assign_tiled_pallas(pts, nrm, cents, block_n=bn,
-                                         interpret=interpret)
+                                         tps=tps, interpret=interpret)
 
     @call.def_vmap
     def _rule(axis_size, in_batched, pts, cents, nrm):
@@ -332,28 +343,35 @@ def lloyd_assign_tiled(points: jax.Array, centroids: jax.Array, *,
         cents = _ensure_batched(cents, in_batched[1], axis_size)
         nrm = _ensure_batched(nrm, in_batched[2], axis_size)
         out = lloyd_assign_tiled_batched_pallas(pts, nrm, cents, block_n=bn,
-                                                interpret=interpret)
+                                                tps=tps, interpret=interpret)
         return out, (True,) * 6
 
     return call(points, centroids, norms)
 
 
 def lloyd_assign_gated(points: jax.Array, centroids: jax.Array,
-                       norms: jax.Array, prev_assign: jax.Array,
-                       prev_min_d2: jax.Array, prev_partials: jax.Array,
-                       prev_gaps: jax.Array, prev_tile_sums: jax.Array,
-                       prev_tile_counts: jax.Array, active: jax.Array, *,
+                       norms: jax.Array, delta: jax.Array,
+                       thresh: jax.Array, absorb: jax.Array,
+                       prev_assign: jax.Array, prev_min_d2: jax.Array,
+                       prev_lb: jax.Array, prev_partials: jax.Array,
+                       prev_gaps: jax.Array, prev_super_sums: jax.Array,
+                       prev_super_counts: jax.Array, active: jax.Array, *,
                        block_n: int, interpret: bool | None = None):
-    """Bound-gated assignment half-step (exact Lloyd tile skipping).
+    """Bound-gated assignment half-step (two-level exact Lloyd pruning).
 
     ``active`` is the (n_tiles,) bool mask from
-    `core.bounds.assign_active_tiles`; it is compacted into the
-    scalar-prefetched index map here, so inactive tiles are neither fetched
-    nor computed and all six of their outputs keep the previous iteration's
-    (bitwise-identical) values. Returns the `lloyd_assign_tiled` tuple plus
-    a trailing ``skipped`` count. ``block_n`` is required: it must match the
-    tile height of the carried bound state. Under `jax.vmap` this dispatches
-    to the gated batch-grid kernel with per-problem compaction."""
+    `core.bounds.assign_active_tiles`; it is EXPANDED to whole super-tiles
+    here (the hierarchical accumulators alias at super granularity — see
+    `core.bounds.expand_active_supers`) and compacted into the
+    scalar-prefetched index map, so skipped tiles are neither fetched nor
+    computed and all of their outputs keep the previous iteration's
+    (bitwise-identical) values. ``delta``/``thresh``/``absorb`` (from
+    `core.bounds.assign_point_scalars`) drive the per-point Hamerly prune
+    inside computed tiles. Returns the `lloyd_assign_tiled` tuple plus
+    (lb (n,), pruned (n_tiles,), skipped ()). ``block_n`` is required: it
+    must match the tile height of the carried bound state. Under `jax.vmap`
+    this dispatches to the gated batch-grid kernel with per-problem
+    expansion + compaction."""
     from repro.core import bounds as bnd
 
     n, d = points.shape
@@ -362,29 +380,32 @@ def lloyd_assign_gated(points: jax.Array, centroids: jax.Array,
     centroids = centroids.astype(points.dtype)
     norms = norms.astype(jnp.float32)
     grid = -(-n // block_n)
+    tps = bnd.tiles_per_super(grid)
+    active = bnd.expand_active_supers(active, tps)
     ids, n_active = bnd.compact_ids(active)
     skipped = (grid - n_active).astype(jnp.int32)
 
     @custom_vmap
-    def call(pts, cents, nrm, pa, pmd, pp, pg, pts_s, ptc, ids_, nact):
+    def call(pts, cents, nrm, dl, th, ab, pa, pmd, plb, pp, pg, pss, psc,
+             ids_, nact):
         meta = jnp.stack([jnp.full((), n, jnp.int32), nact.astype(jnp.int32)])
         return lloyd_assign_gated_pallas(
-            pts, nrm, cents, pa, pmd, pp, pg, pts_s, ptc, ids_, meta,
-            block_n=block_n, interpret=interpret)
+            pts, nrm, cents, dl, th, ab, pa, pmd, plb, pp, pg, pss, psc,
+            ids_, meta, block_n=block_n, tps=tps, interpret=interpret)
 
     @call.def_vmap
-    def _rule(axis_size, in_batched, pts, cents, nrm, pa, pmd, pp, pg,
-              pts_s, ptc, ids_, nact):
-        args = [pts, cents, nrm, pa, pmd, pp, pg, pts_s, ptc, ids_, nact]
+    def _rule(axis_size, in_batched, *args):
         args = [_ensure_batched(a, b, axis_size)
                 for a, b in zip(args, in_batched)]
-        (pts, cents, nrm, pa, pmd, pp, pg, pts_s, ptc, ids_, nact) = args
+        (pts, cents, nrm, dl, th, ab, pa, pmd, plb, pp, pg, pss, psc,
+         ids_, nact) = args
         out = lloyd_assign_gated_batched_pallas(
-            pts, nrm, cents, pa, pmd, pp, pg, pts_s, ptc, ids_, nact,
-            block_n=block_n, interpret=interpret)
-        return out, (True,) * 6
+            pts, nrm, cents, dl, th, ab, pa, pmd, plb, pp, pg, pss, psc,
+            ids_, nact, block_n=block_n, tps=tps, interpret=interpret)
+        return out, (True,) * 8
 
-    out = call(points, centroids, norms, prev_assign, prev_min_d2,
-               prev_partials, prev_gaps, prev_tile_sums, prev_tile_counts,
-               ids, n_active)
+    out = call(points, centroids, norms, delta.astype(jnp.float32),
+               thresh.astype(jnp.float32), absorb.astype(jnp.float32),
+               prev_assign, prev_min_d2, prev_lb, prev_partials, prev_gaps,
+               prev_super_sums, prev_super_counts, ids, n_active)
     return out + (skipped,)

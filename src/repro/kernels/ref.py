@@ -70,11 +70,13 @@ def lloyd_assign_ref(points: jax.Array, centroids: jax.Array):
 
 
 def lloyd_assign_tiled_ref(points: jax.Array, centroids: jax.Array,
-                           block_n: int):
-    """Oracle for kernels.lloyd_assign_tiled: per-tile assignment outputs.
+                           block_n: int, tps: int = 1):
+    """Oracle for kernels.lloyd_assign_tiled: per-tile assignment outputs
+    with hierarchical (super-tile) accumulators.
 
     Returns (assignment (n,) int32, min_d2 (n,), partials (n_tiles,),
-    gaps (n_tiles,), tile_sums (n_tiles, k, d), tile_counts (n_tiles, k)).
+    gaps (n_tiles,), super_sums (n_super, k, d), super_counts (n_super, k))
+    where every ``tps`` consecutive tiles share one accumulator slot.
     ``gaps`` is the per-tile min of the second-best margin in distance units
     (+inf for k == 1 — no runner-up exists)."""
     n, d = points.shape
@@ -100,4 +102,9 @@ def lloyd_assign_tiled_ref(points: jax.Array, centroids: jax.Array,
                  ((0, pad), (0, 0))).reshape(n_tiles, block_n, d)
     tile_sums = jnp.einsum("tbk,tbd->tkd", onehot, xt)
     tile_counts = jnp.sum(onehot, axis=1)
-    return a, m, partials, gaps, tile_sums, tile_counts
+    spad = (-n_tiles) % tps
+    super_sums = jnp.pad(tile_sums, ((0, spad), (0, 0), (0, 0))) \
+        .reshape(-1, tps, k, d).sum(axis=1)
+    super_counts = jnp.pad(tile_counts, ((0, spad), (0, 0))) \
+        .reshape(-1, tps, k).sum(axis=1)
+    return a, m, partials, gaps, super_sums, super_counts

@@ -322,18 +322,47 @@ ASSIGN_TILED_SHAPES = [(1000, 5, 7, 128), (512, 2, 4, 128), (100, 3, 2, 128)]
 def test_lloyd_assign_tiled_matches_ref(n, d, k, bn):
     pts = jax.random.normal(jax.random.PRNGKey(0), (n, d))
     cents = jax.random.normal(jax.random.PRNGKey(1), (k, d))
+    tps = bounds.tiles_per_super(-(-n // bn))
     got = ops.lloyd_assign_tiled(pts, cents, block_n=bn)
-    want = ref.lloyd_assign_tiled_ref(pts, cents, bn)
+    want = ref.lloyd_assign_tiled_ref(pts, cents, bn, tps)
     np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
     for g, w, tol in zip(got[1:], want[1:], (1e-6, 1e-5, 1e-5, 1e-5, 0)):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=1e-5, atol=tol)
-    # reduced tile sums equal the accumulated kernel's totals
+    # reduced super-tile sums equal the accumulated kernel's totals
     a2, md2, sums2, counts2 = ops.lloyd_assign(pts, cents)
     np.testing.assert_allclose(np.asarray(got[4].sum(0)), np.asarray(sums2),
                                rtol=1e-5, atol=1e-4)
     np.testing.assert_array_equal(np.asarray(got[5].sum(0)),
                                   np.asarray(counts2))
+
+
+def test_lloyd_assign_tiled_hierarchy_fires_above_floor():
+    """Above 8 tiles the accumulators are per-SUPER (n_super ≈ √n_tiles),
+    capping the footprint the flat layout paid per tile."""
+    n, d, k, bn = 2048, 3, 5, 128
+    grid = -(-n // bn)                       # 16 tiles
+    tps = bounds.tiles_per_super(grid)
+    assert 1 < tps < grid
+    pts = jax.random.normal(jax.random.PRNGKey(7), (n, d))
+    cents = jax.random.normal(jax.random.PRNGKey(8), (k, d))
+    got = ops.lloyd_assign_tiled(pts, cents, block_n=bn)
+    assert got[4].shape == (-(-grid // tps), k, d)
+    want = ref.lloyd_assign_tiled_ref(pts, cents, bn, tps)
+    np.testing.assert_allclose(np.asarray(got[4]), np.asarray(want[4]),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got[5]), np.asarray(want[5]))
+
+
+def _no_prune_prev(n, grid, k, d, bn):
+    """Carry arrays that make the per-point gate a no-op (lb = -inf) and
+    carry recognizable values for skipped blocks."""
+    z = jnp.zeros
+    n_super = -(-grid // bounds.tiles_per_super(grid))
+    return dict(delta=z((k,)), thresh=jnp.full((grid,), jnp.inf),
+                absorb=z((grid,)), pa=z((n,), jnp.int32), pmd=z((n,)),
+                plb=jnp.full((n,), -jnp.inf), pp=z((grid,)), pg=z((grid,)),
+                pss=z((n_super, k, d)), psc=z((n_super, k)))
 
 
 def test_lloyd_assign_gated_all_active_bitwise_equals_tiled():
@@ -343,18 +372,20 @@ def test_lloyd_assign_gated_all_active_bitwise_equals_tiled():
     nrm = ops.point_norms(pts)
     grid = -(-n // bn)
     tiled = ops.lloyd_assign_tiled(pts, cents, norms=nrm, block_n=bn)
-    z = jnp.zeros
+    pv = _no_prune_prev(n, grid, k, d, bn)
     gated = ops.lloyd_assign_gated(
-        pts, cents, nrm, z((n,), jnp.int32), z((n,)), z((grid,)),
-        z((grid,)), z((grid, k, d)), z((grid, k)),
+        pts, cents, nrm, pv["delta"], pv["thresh"], pv["absorb"], pv["pa"],
+        pv["pmd"], pv["plb"], pv["pp"], pv["pg"], pv["pss"], pv["psc"],
         jnp.ones((grid,), bool), block_n=bn)
-    for g, t in zip(gated[:6], tiled):
+    a, md, lb, part, gap, ssums, scounts, pruned, skipped = gated
+    for g, t in zip((a, md, part, gap, ssums, scounts), tiled):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(t))
-    assert int(gated[6]) == 0
+    assert int(skipped) == 0
+    assert float(jnp.sum(pruned)) == 0.0   # thresh=+inf: nothing prunes
 
 
 def test_lloyd_assign_gated_skipping_carries_previous_blocks():
-    """Inactive tiles keep ALL six aliased outputs bitwise; with unchanged
+    """Inactive tiles keep ALL aliased outputs bitwise; with unchanged
     centroids the carried values equal a recompute, so the full outputs are
     bitwise the tiled kernel's."""
     n, d, k, bn = 1024, 3, 5, 128
@@ -362,13 +393,53 @@ def test_lloyd_assign_gated_skipping_carries_previous_blocks():
     cents = jax.random.normal(jax.random.PRNGKey(5), (k, d))
     nrm = ops.point_norms(pts)
     grid = -(-n // bn)
+    assert bounds.tiles_per_super(grid) == 1   # flat: masks are super-aligned
     prev = ops.lloyd_assign_tiled(pts, cents, norms=nrm, block_n=bn)
+    pv = _no_prune_prev(n, grid, k, d, bn)
     active = jnp.arange(grid) % 3 == 0
-    gated = ops.lloyd_assign_gated(pts, cents, nrm, *prev, active,
-                                   block_n=bn)
-    for g, t in zip(gated[:6], prev):
+    gated = ops.lloyd_assign_gated(
+        pts, cents, nrm, pv["delta"], pv["thresh"], pv["absorb"],
+        prev[0], prev[1], pv["plb"], prev[2], prev[3], prev[4], prev[5],
+        active, block_n=bn)
+    a, md, lb, part, gap, ssums, scounts, pruned, skipped = gated
+    # active tiles recompute values bitwise-equal to the carries (centroids
+    # unchanged + thresh=+inf disables the per-point path), skipped tiles
+    # alias them — so every output equals the tiled kernel's
+    for g, t in zip((a, md, part, gap, ssums, scounts), prev):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(t))
-    assert int(gated[6]) == grid - int(jnp.sum(active))
+    # skipped tiles' lb and pruned counters keep the donated carries
+    act_pt = np.repeat(np.asarray(active), bn)[:n]
+    np.testing.assert_array_equal(np.asarray(lb)[~act_pt],
+                                  np.asarray(pv["plb"])[~act_pt])
+    np.testing.assert_array_equal(np.asarray(pruned)[~np.asarray(active)],
+                                  0.0)
+    assert int(skipped) == grid - int(jnp.sum(active))
+
+
+def test_lloyd_assign_gated_per_point_prune_is_bitwise_exact():
+    """A real carried state + zero movement: most points prune, and every
+    output still equals the all-fresh tiled kernel's bitwise (the per-point
+    short-circuit is a value-noop)."""
+    n, d, k, bn = 1024, 3, 5, 128
+    pts = jax.random.normal(jax.random.PRNGKey(14), (n, d))
+    cents = jax.random.normal(jax.random.PRNGKey(15), (k, d))
+    nrm = ops.point_norms(pts)
+    grid = -(-n // bn)
+    prev = ops.lloyd_assign_tiled(pts, cents, norms=nrm, block_n=bn)
+    a0, md0 = prev[0], prev[1]
+    # true per-point lb from the oracle (second-best distance)
+    d2 = np.array(ref._d2(pts, cents))
+    d2[np.arange(n), np.asarray(a0)] = np.inf
+    plb = jnp.asarray(np.sqrt(d2.min(axis=1)), jnp.float32)
+    gated = ops.lloyd_assign_gated(
+        pts, cents, nrm, jnp.zeros((k,)), jnp.full((grid,), 1e-3),
+        jnp.zeros((grid,)), a0, md0, plb, prev[2], prev[3], prev[4],
+        prev[5], jnp.ones((grid,), bool), block_n=bn)
+    a, md, lb, part, gap, ssums, scounts, pruned, skipped = gated
+    assert float(jnp.sum(pruned)) > 0.5 * n     # the fine level fires
+    for g, t in zip((a, md, part, ssums, scounts),
+                    (prev[0], prev[1], prev[2], prev[4], prev[5])):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(t))
 
 
 def test_lloyd_assign_gated_batched_matches_single():
@@ -380,15 +451,18 @@ def test_lloyd_assign_gated_batched_matches_single():
     grid = -(-n // bn)
     prev = jax.vmap(lambda p, c, nr: ops.lloyd_assign_tiled(
         p, c, norms=nr, block_n=bn))(pts, cents, nrm)
+    pv = _no_prune_prev(n, grid, k, d, bn)
+    bcast = lambda x: jnp.broadcast_to(x[None], (B,) + x.shape)
     active = jnp.arange(grid)[None, :] % (jnp.arange(B)[:, None] + 2) == 0
-    out = jax.vmap(lambda p, c, nr, pa, pm, pp, pg, ts, tc, ac:
-                   ops.lloyd_assign_gated(p, c, nr, pa, pm, pp, pg, ts, tc,
-                                          ac, block_n=bn))(
-        pts, cents, nrm, *prev, active)
+    args = (pts, cents, nrm, bcast(pv["delta"]), bcast(pv["thresh"]),
+            bcast(pv["absorb"]), prev[0], prev[1], bcast(pv["plb"]),
+            prev[2], prev[3], prev[4], prev[5], active)
+    out = jax.vmap(lambda p, c, nr, dl, th, ab, pa, pm, pl, pp, pg, ts, tc,
+                   ac: ops.lloyd_assign_gated(p, c, nr, dl, th, ab, pa, pm,
+                                              pl, pp, pg, ts, tc, ac,
+                                              block_n=bn))(*args)
     for b in range(B):
-        single = ops.lloyd_assign_gated(pts[b], cents[b], nrm[b],
-                                        *[p[b] for p in prev], active[b],
-                                        block_n=bn)
+        single = ops.lloyd_assign_gated(*[x[b] for x in args], block_n=bn)
         for x, y in zip([o[b] for o in out], single):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
@@ -411,6 +485,107 @@ def test_assign_gate_model_requires_unmoved_assigned_centroids():
     active1 = bounds.assign_active_tiles(delta1, cents, st, cache)
     assert bool(jnp.all(active1))
     assert int(jnp.sum(active0)) <= int(jnp.sum(active1))
+
+
+# ---------------------------------------------------------------------------
+# bound-state edge cases (ISSUE 5 satellite): k=1, n < one tile, multi-skip
+# decay, reseed-vs-gate interaction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused", "pallas"])
+def test_bounded_fit_k1_is_exact(backend):
+    """k = 1 has no runner-up: per-point lb and tile gaps are +inf, so after
+    the first iteration everything is provably stable — and the gated fit
+    must still be bitwise the ungated one."""
+    pts = _coherent(n=4096, k=1, seed=21)
+    init = pts[:1]
+    on = ClusterEngine(backend).fit(pts, init, max_iters=5, tol=-1.0)
+    off = ClusterEngine(backend, bounds=False).fit(pts, init, max_iters=5,
+                                                   tol=-1.0)
+    np.testing.assert_array_equal(np.asarray(on.centroids),
+                                  np.asarray(off.centroids))
+    np.testing.assert_array_equal(np.asarray(on.assignment),
+                                  np.asarray(off.assignment))
+    assert float(on.inertia) == float(off.inertia)
+    # once the single centroid stops moving the fine level prunes everything
+    assert int(on.pruned[-1]) == 4096, np.asarray(on.pruned)
+
+
+@pytest.mark.parametrize("backend", ["fused", "pallas"])
+def test_bounded_fit_smaller_than_one_tile(backend):
+    """n below the 128-lane tile floor: one padded tile, one super — the
+    whole hierarchy degenerates without breaking exactness."""
+    pts = jnp.asarray(blobs(100, 2, 3, seed=22)[0])
+    init = pts[:3]
+    on = ClusterEngine(backend).fit(pts, init, max_iters=6, tol=-1.0)
+    off = ClusterEngine(backend, bounds=False).fit(pts, init, max_iters=6,
+                                                   tol=-1.0)
+    np.testing.assert_array_equal(np.asarray(on.centroids),
+                                  np.asarray(off.centroids))
+    assert float(on.inertia) == float(off.inertia)
+    s = ClusterEngine(backend).seed(jax.random.PRNGKey(23), pts, 3)
+    s_off = ClusterEngine(backend, bounds=False).seed(jax.random.PRNGKey(23),
+                                                      pts, 3)
+    np.testing.assert_array_equal(np.asarray(s.indices),
+                                  np.asarray(s_off.indices))
+
+
+def test_decay_gap_stays_valid_across_three_plus_skips():
+    """A tile skipped for >= 3 consecutive iterations carries a gap decayed
+    by each step's max movement; when centroids then stop moving bitwise the
+    carried state is still exact (pinned against the ungated fit), and the
+    per-iteration skip telemetry shows the multi-skip streak."""
+    pts = _coherent(n=2 ** 15, d=8, k=16, seed=24)
+    eng = ClusterEngine("fused")
+    seeds = eng.seed(jax.random.PRNGKey(25), pts, 16).centroids
+    res = eng.fit(pts, seeds, max_iters=12, tol=-1.0)
+    off = ClusterEngine("fused", bounds=False).fit(pts, seeds, max_iters=12,
+                                                   tol=-1.0)
+    np.testing.assert_array_equal(np.asarray(res.centroids),
+                                  np.asarray(off.centroids))
+    assert float(res.inertia) == float(off.inertia)
+    skips = np.asarray(res.skipped)
+    # at least one run of >= 3 consecutive iterations with skipped tiles
+    streak = best = 0
+    for s in skips:
+        streak = streak + 1 if s > 0 else 0
+        best = max(best, streak)
+    assert best >= 3, skips
+    # the unit-level property behind it: decayed gaps never exceed what
+    # per-step decay justifies
+    gap = jnp.asarray([5.0, 3.0])
+    active = jnp.asarray([False, False])
+    g = gap
+    for _ in range(3):
+        g = bounds.decay_gap(g, active, jnp.zeros_like(g), jnp.asarray(1.0))
+    np.testing.assert_allclose(np.asarray(g), [2.0, 0.0])
+
+
+def test_reseed_invalidates_bounds_and_stays_exact():
+    """empty='reseed' teleports a centroid: every point/tile whose bound
+    could be stale must recompute (the reseeded cluster has delta > 0, so
+    its points fail the own-centroid check and dmax spikes the thresholds)
+    — and gated == ungated stays bitwise through the reseed."""
+    pts = _coherent(n=2 ** 14, d=8, k=8, seed=26)
+    # one far-away dead centroid forces a reseed on iteration 1
+    cents = jnp.concatenate([pts[:7], jnp.full((1, 8), 500.0)])
+    on = ClusterEngine("fused").fit(pts, cents, max_iters=10, tol=-1.0,
+                                    empty="reseed")
+    off = ClusterEngine("fused", bounds=False).fit(pts, cents, max_iters=10,
+                                                   tol=-1.0, empty="reseed")
+    np.testing.assert_array_equal(np.asarray(on.centroids),
+                                  np.asarray(off.centroids))
+    np.testing.assert_array_equal(np.asarray(on.assignment),
+                                  np.asarray(off.assignment))
+    assert float(on.inertia) == float(off.inertia)
+    # the reseed's teleport (huge dmax) must disable pruning on the next
+    # iteration: no point can clear a threshold scaled by the jump
+    skips = np.asarray(on.skipped)
+    prunes = np.asarray(on.pruned)
+    assert skips[1] == 0 and prunes[1] == 0, (skips, prunes)
+    # pruning resumes once the split settles
+    assert prunes[2:].sum() > 0, prunes
 
 
 # ---------------------------------------------------------------------------
@@ -518,6 +693,33 @@ def test_kmeans_parallel_quality_with_tiled_reduce():
     phi = float(quality.inertia(pts, res.centroids))
     rand = jnp.asarray(pts[np.random.default_rng(0).choice(4096, 8)])
     assert phi < 2.0 * float(quality.inertia(pts, rand)) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# bench schema gate (ISSUE 5 satellite): the CI smoke must fail loudly when
+# a BENCH_round section loses its prune/accumulator columns
+# ---------------------------------------------------------------------------
+
+
+def test_bench_schema_checker_guards_prune_columns():
+    import json
+    import pathlib
+
+    from benchmarks.check_schema import check_file, check_payload
+
+    base = (pathlib.Path(__file__).resolve().parents[1] / "benchmarks"
+            / "BENCH_round.json")
+    assert check_file(base) == []            # the checked-in baseline passes
+    payload = json.loads(base.read_text())
+    stripped = {"rows": [{k: v for k, v in r.items() if k != "prune_rate"}
+                         for r in payload["rows"]]}
+    errs = check_payload("round", stripped)
+    assert errs and all("prune_rate" in e for e in errs), errs
+    # a section that silently disappears is also an error
+    only_seed = {"rows": [r for r in payload["rows"]
+                          if r["bench"] == "round_traffic"]}
+    errs = check_payload("round", only_seed)
+    assert any("never emitted" in e for e in errs), errs
 
 
 # ---------------------------------------------------------------------------

@@ -623,6 +623,55 @@ def test_fit_computes_point_norms_once_per_call(backend):
             "Lloyd loop must NOT recompute ||x||^2"
 
 
+def test_kmeans_computes_point_norms_exactly_once():
+    """Acceptance (ISSUE 5 satellite): ``kmeans`` runs ONE prologue shared
+    by the seed and fit phases — the traced program contains EXACTLY one
+    row-norm reduction over the (n, d) points (it used to contain two, one
+    per phase), and none inside any loop body."""
+    from repro.core import engine as eng_mod
+    n, d, k = 16384, 2, 4
+    pts = jnp.zeros((n, d), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    jaxpr = jax.make_jaxpr(
+        lambda kk, pp: eng_mod.kmeans_points(kk, pp, k, None,
+                                             FusedBackend()))(key, pts)
+    norms = _point_norm_reductions(jaxpr.jaxpr, n, d)
+    assert len(norms) == 1, norms
+    for body in _loop_bodies(jaxpr.jaxpr):
+        assert not _point_norm_reductions(body, n, d), \
+            "no kmeans loop may recompute ||x||^2"
+
+
+def test_kmeans_shared_prologue_matches_two_phase_quality():
+    """The fused one-prologue kmeans must cluster exactly as well as the
+    historical seed-then-fit composition (same seeds under the cdf sampler:
+    min_d2 is tile-independent, so the draw is identical)."""
+    pts = _points(n=4096, d=2, k=8, seed=21)
+    key = jax.random.PRNGKey(22)
+    eng = ClusterEngine("fused")
+    res = eng.kmeans(key, pts, 8, max_iters=15)
+    seeds = eng.seed(key, pts, 8).centroids
+    two = eng.fit(pts, seeds, max_iters=15)
+    np.testing.assert_array_equal(np.asarray(res.centroids),
+                                  np.asarray(two.centroids))
+    assert float(res.inertia) == float(two.inertia)
+
+
+def test_seed_reports_per_point_prune_telemetry():
+    """KmeansppResult.pruned: > 0 on coherent data, identical between the
+    pure-JAX model and the Pallas kernel, absent when gating is off."""
+    pts = _coherent_points(seed=20)
+    key = jax.random.PRNGKey(21)
+    f = ClusterEngine("fused").seed(key, pts, 10)
+    p = ClusterEngine("pallas").seed(key, pts, 10)
+    assert f.pruned is not None and f.pruned.shape == (10,)
+    assert int(jnp.sum(f.pruned)) > 0, np.asarray(f.pruned)
+    np.testing.assert_allclose(np.asarray(f.pruned), np.asarray(p.pruned),
+                               atol=2)
+    off = ClusterEngine("fused", bounds=False).seed(key, pts, 10)
+    assert off.pruned is None
+
+
 # ---------------------------------------------------------------------------
 # kernel block-size selection (satellite: pick_block_n call-site clamp)
 # ---------------------------------------------------------------------------

@@ -208,11 +208,13 @@ def test_pick_block_n_batched_accounting():
 
 def test_pick_block_n_accounts_norms_and_bound_state():
     """The VMEM accounting must include the cached-norms input block, the
-    bound-state buffers AND the bounded-assignment buffers (per-tile cluster
-    sums/counts block + aliased prev, assignment/min_d2 aliased i/o,
-    movement-bound scalars): for a given budget the pick with those terms
-    can never exceed a hand-computed pick WITHOUT them, and the returned
-    pick must be the LARGEST power of two whose full working set fits."""
+    bound-state buffers AND the two-level pruning buffers (resident
+    super-tile cluster sums/counts block + aliased prev, the
+    assignment/min_d2/point_lb aliased i/o pairs, the center_d block, the
+    (k,) movement vector and the per-tile gate scalars): for a given budget
+    the pick with those terms can never exceed a hand-computed pick WITHOUT
+    them, and the returned pick must be the LARGEST power of two whose full
+    working set fits."""
     budget = ops._VMEM_BUDGET
     for d, k in ((2, 8), (64, 256), (512, 1024), (4096, 256)):
         bn = ops.pick_block_n(d, k)
@@ -223,13 +225,27 @@ def test_pick_block_n_accounts_norms_and_bound_state():
             w += 4 * 2 * b              # cached-norms block (fp32, 2 buffers)
             w += 4 * (k * d + k + 8)    # accumulators + partial
             w += 4 * 2 * 4              # bound-state scalar blocks
-            w += 4 * 2 * (k * d + k)    # per-tile sums/counts out (+ aliased)
-            w += 4 * 4 * b              # assignment/min_d2 aliased i/o blocks
-            w += 4 * 2 * 4              # gap/partial movement scalars
+            w += 4 * 2 * (k * d + k)    # super sums/counts out (+ aliased)
+            w += 4 * 6 * b              # assignment/min_d2/point_lb i/o
+            w += 4 * 2 * b              # center_d block (fp32, 2 buffers)
+            w += 4 * k                  # movement vector
+            w += 4 * 2 * 8              # gate scalars (dc/margin/thresh/
+                                        #   absorb + gap/partial/pruned)
             return w
         assert working(bn) <= budget or bn == 128
         if bn < 4096:
             assert working(2 * bn) > budget
+
+
+def test_pick_block_n_per_point_buffers_shrink_or_hold_the_pick():
+    """Adding the per-point bound buffers (4 extra fp32-equivalent streams
+    per row) can only shrink the tile vs a hypothetical pick without them —
+    and at the paper's shapes the pick is unchanged (the buffers are small
+    next to the point block)."""
+    assert ops.pick_block_n(2, 8) == 4096          # paper shapes: unchanged
+    for d, k in ((2, 8), (64, 256), (512, 1024), (4096, 256), (8192, 512)):
+        bn = ops.pick_block_n(d, k)
+        assert 128 <= bn <= 4096
 
 
 def test_pick_block_n_bf16_half_width_stream():
@@ -253,17 +269,24 @@ def test_pick_block_n_bf16_half_width_stream():
 
 def test_prologue_kernel_matches_jnp():
     """The fused prologue kernel's norms are BITWISE the jnp row norms (the
-    reference/fused backends' cache), and the tile geometry matches the pure
-    model tightly."""
+    reference/fused backends' cache), and the tile geometry + per-point
+    center distances match the pure model tightly."""
     pts, _, _ = _mk(1000, 5, 1, jnp.float32, seed=7)
-    norms, centers, radii = seed_prologue_pallas(pts, block_n=256,
-                                                 interpret=True)
+    norms, centers, radii, center_d = seed_prologue_pallas(pts, block_n=256,
+                                                           interpret=True)
     cache = bounds.prologue(pts, 256)
     np.testing.assert_array_equal(np.asarray(norms), np.asarray(cache.norms))
     np.testing.assert_allclose(np.asarray(centers), np.asarray(cache.centers),
                                rtol=1e-6, atol=1e-7)
     np.testing.assert_allclose(np.asarray(radii), np.asarray(cache.radii),
                                rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(center_d),
+                               np.asarray(cache.center_d),
+                               rtol=1e-6, atol=1e-7)
+    assert center_d.shape == (1000,)
+    # every point sits inside its tile ball
+    tile_r = np.repeat(np.asarray(radii), 256)[:1000]
+    assert (np.asarray(center_d) <= tile_r + 1e-6).all()
 
 
 def _gated_setup(n=1000, d=3, block_n=128, seed=0):
@@ -275,6 +298,13 @@ def _gated_setup(n=1000, d=3, block_n=128, seed=0):
     return pts, md, nrm, grid, pp0, tm0
 
 
+def _no_prune_fine(n, grid):
+    """center_d/dc/margin that keep the per-point seeding gate silent
+    (dc = 0 -> lower bound 0 -> never clears a positive min_d2)."""
+    return (jnp.zeros((n,), jnp.float32), jnp.zeros((grid,), jnp.float32),
+            jnp.zeros((grid,), jnp.float32))
+
+
 @pytest.mark.parametrize("n,block_n", [(1000, 128), (512, 128), (100, 128)])
 def test_gated_all_active_bitwise_equals_plain(n, block_n):
     """With every tile active the gated kernel IS the plain kernel, bitwise
@@ -282,8 +312,9 @@ def test_gated_all_active_bitwise_equals_plain(n, block_n):
     pts, md, nrm, grid, pp0, tm0 = _gated_setup(n=n, block_n=block_n)
     cents = jax.random.normal(jax.random.PRNGKey(5), (1, pts.shape[1]))
     active = jnp.ones((grid,), bool)
-    g_md, g_p, g_tm, skipped = ops.distance_min_update_gated(
-        pts, cents, md, nrm, pp0, tm0, active, block_n=block_n)
+    cd, dc, mg = _no_prune_fine(n, grid)
+    g_md, g_p, g_tm, pruned, skipped = ops.distance_min_update_gated(
+        pts, cents, md, nrm, cd, dc, mg, pp0, tm0, active, block_n=block_n)
     p_md, p_p = ops.distance_min_update(pts, cents, md, norms=nrm,
                                         block_n=block_n)
     np.testing.assert_array_equal(np.asarray(g_md), np.asarray(p_md))
@@ -291,28 +322,35 @@ def test_gated_all_active_bitwise_equals_plain(n, block_n):
     np.testing.assert_array_equal(
         np.asarray(g_tm), np.asarray(bounds.tile_reduce_max(p_md, block_n)))
     assert int(skipped) == 0
+    assert float(jnp.sum(pruned)) == 0.0
 
 
 def test_gated_skipping_is_bitwise_exact():
-    """Acceptance pin: a round that skips tiles produces BITWISE the plain
-    kernel's outputs — min_d2, partials AND tile_max — because the bound is
-    a sufficient condition and skipped tiles alias their prior state."""
+    """Acceptance pin: a round that skips tiles AND prunes points produces
+    BITWISE the plain kernel's outputs — min_d2, partials AND tile_max —
+    because both bound levels are sufficient conditions (skipped tiles alias
+    their prior state; pruned points' min-update is a provable no-op)."""
     pts, md0, nrm, grid, pp0, tm0 = _gated_setup(n=1024, d=2, block_n=128)
     cache = bounds.RoundCache(nrm, *seed_prologue_pallas(
         pts, block_n=128, interpret=True)[1:])
     # round 1: everything active, fills the bound state
     c1 = pts[3:4]
-    a1 = bounds.active_tiles(c1, cache, tm0)
-    md1, p1, tm1, _ = ops.distance_min_update_gated(
-        pts, c1, md0, nrm, pp0, tm0, a1, block_n=128)
+    a1, dc1, mg1 = bounds.seed_gate(c1, cache, tm0)
+    md1, p1, tm1, pr1, _ = ops.distance_min_update_gated(
+        pts, c1, md0, nrm, cache.center_d, dc1, mg1, pp0, tm0, a1,
+        block_n=128)
     # round 2: a far-away centroid — most tiles provably cannot change
     c2 = jnp.full((1, 2), 50.0)
-    a2 = bounds.active_tiles(c2, cache, tm1)
+    a2, dc2, mg2 = bounds.seed_gate(c2, cache, tm1)
     assert int(jnp.sum(a2)) < grid, "probe must actually skip tiles"
-    md2, p2, tm2, skipped = ops.distance_min_update_gated(
-        pts, c2, md1, nrm, p1, tm1, a2, block_n=128)
+    md2, p2, tm2, pr2, skipped = ops.distance_min_update_gated(
+        pts, c2, md1, nrm, cache.center_d, dc2, mg2, p1, tm1, a2,
+        block_n=128)
     # one tile is always computed (compact_ids' write-back guard)
     assert int(skipped) == grid - max(int(jnp.sum(a2)), 1) > 0
+    # the fine level fires inside the force-computed tile: every point of a
+    # skippable tile is individually prunable against the far centroid
+    assert float(jnp.sum(pr2)) > 0
     want_md, want_p = ops.distance_min_update(pts, c2, md1, norms=nrm,
                                               block_n=128)
     np.testing.assert_array_equal(np.asarray(md2), np.asarray(want_md))
@@ -324,7 +362,7 @@ def test_gated_skipping_is_bitwise_exact():
 def test_gated_batched_matches_single():
     """vmap over the gated wrapper lowers to the batch-grid gated kernel and
     row b is bitwise the single-problem gated kernel on problem b (including
-    per-problem skip counts)."""
+    per-problem skip/prune counts)."""
     B, n, d, bn = 3, 512, 2, 128
     keys = jax.random.split(jax.random.PRNGKey(8), 3)
     pts = jax.random.normal(keys[0], (B, n, d))
@@ -334,20 +372,24 @@ def test_gated_batched_matches_single():
     grid = -(-n // bn)
     pp = jnp.abs(jax.random.normal(keys[2], (B, grid)))
     tm = jnp.abs(jax.random.normal(jax.random.fold_in(keys[2], 1), (B, grid)))
+    cd = jnp.abs(jax.random.normal(jax.random.fold_in(keys[2], 2), (B, n)))
+    dc = jnp.abs(jax.random.normal(jax.random.fold_in(keys[2], 3),
+                                   (B, grid))) * 3
+    mg = jnp.full((B, grid), 1e-4)
     # a mix of active/inactive tiles per problem
     active = jnp.arange(grid)[None, :] % (jnp.arange(B)[:, None] + 2) == 0
-    out = jax.vmap(lambda p, c, m, nr, a, b_pp, b_tm:
-                   ops.distance_min_update_gated(p, c, m, nr, b_pp, b_tm, a,
+    out = jax.vmap(lambda p, c, m, nr, b_cd, b_dc, b_mg, a, b_pp, b_tm:
+                   ops.distance_min_update_gated(p, c, m, nr, b_cd, b_dc,
+                                                 b_mg, b_pp, b_tm, a,
                                                  block_n=bn))(
-        pts, cents, md, nrm, active, pp, tm)
+        pts, cents, md, nrm, cd, dc, mg, active, pp, tm)
     for b in range(B):
         s = ops.distance_min_update_gated(pts[b], cents[b], md[b], nrm[b],
-                                          pp[b], tm[b], active[b],
-                                          block_n=bn)
-        np.testing.assert_array_equal(np.asarray(out[0][b]), np.asarray(s[0]))
-        np.testing.assert_array_equal(np.asarray(out[1][b]), np.asarray(s[1]))
-        np.testing.assert_array_equal(np.asarray(out[2][b]), np.asarray(s[2]))
-        assert int(out[3][b]) == int(s[3])
+                                          cd[b], dc[b], mg[b], pp[b], tm[b],
+                                          active[b], block_n=bn)
+        for o, w in zip(out[:4], s[:4]):
+            np.testing.assert_array_equal(np.asarray(o[b]), np.asarray(w))
+        assert int(out[4][b]) == int(s[4])
 
 
 # ---------------------------------------------------------------------------
