@@ -27,6 +27,15 @@ REQUIRED: dict[str, dict[str, set]] = {
                              "bytes_per_round", "accum_hbm",
                              "accum_hbm_flat"},
     },
+    "seed": {
+        "seed_sampler": {"post_round_reads", "skip_rate", "accept_rate",
+                         "seed_reads", "seconds"},
+        "kmeans_batched": {"post_round_reads", "skip_rate", "accept_rate",
+                           "seed_reads", "seconds"},
+        "rejection_vs_tiled": {"post_round_reads", "skip_rate",
+                               "accept_rate", "seed_reads", "reads_ratio",
+                               "seconds"},
+    },
 }
 
 

@@ -4,13 +4,19 @@ inverse-CDF re-scan, plus the batched multi-problem kernel path.
 Every seeding round already pays the round kernel (min-update + per-tile
 partials). What this module measures is the traffic AFTER the kernel:
 
-  cdf    — O(n) cumsum + searchsorted over the full min_d2 array per round
-  gumbel — O(n) log + noise + argmax per round
-  tiled  — inverse-CDF over the ~n/block_n tile partials, then a scan of
-           only the chosen tile: O(n/bn + bn) reads per round
+  cdf       — O(n) cumsum + searchsorted over the full min_d2 array per round
+  gumbel    — O(n) log + noise + argmax per round
+  tiled     — inverse-CDF over the ~n/block_n tile partials, then a scan of
+              only the chosen tile: O(n/bn + bn) reads per round
+  rejection — the same tiled draw from a STALE envelope + an O(P·d)
+              single-row exact check; the full refresh runs only every
+              `refresh_block` seeds, so the modelled rows-touched-per-seed
+              (`seed_reads`, from the skip telemetry) goes SUB-LINEAR
 
 plus `kmeans_batched` fused-vs-pallas, where the pallas path runs the
-batch-grid kernels (one launch covers every tenant problem).
+batch-grid kernels (one launch covers every tenant problem), and a
+`rejection_vs_tiled` smoke row at k=64 whose `reads_ratio` pins the
+sub-linear seeding claim (ISSUE 6: >= 4x fewer modelled reads).
 
 Emits BENCH_seed.json via REPRO_BENCH_OUT; benchmarks/BENCH_seed.json is the
 checked-in smoke-mode baseline tracking the trajectory across PRs."""
@@ -30,9 +36,14 @@ N_PALLAS = N if jax.default_backend() == "tpu" else min(N, 2 ** 12)
 BB, BN, BK = (4, 2 ** 10, 4) if SMOKE else (16, 2 ** 13, 16)
 
 
-def _post_round_reads(n: int, sampler: str) -> int:
-    bn = choose_block_n(n, D, 1, batched=True)
-    if sampler == "tiled":
+REFRESH_BLOCK = 8
+
+
+def _post_round_reads(n: int, sampler: str,
+                      eng: ClusterEngine = None) -> int:
+    bn = (eng.backend.seed_tile(n, D) if eng is not None
+          else choose_block_n(n, D, 1, batched=True))
+    if sampler in ("tiled", "rejection"):
         return -(-n // bn) + bn
     return n
 
@@ -46,22 +57,89 @@ def _skip_rate(eng: ClusterEngine, res, n: int) -> float:
     return float(jnp.mean(res.skipped / n_tiles))
 
 
+def _accept_rate(res) -> float:
+    """Fraction of envelope proposals the exact ratio test accepted (1.0 for
+    samplers whose every draw IS the final draw)."""
+    if res.proposals is None:
+        return 1.0
+    props = float(jnp.sum(res.proposals))
+    return float(jnp.sum(res.accepts)) / max(props, 1.0)
+
+
+def _seed_reads(eng: ClusterEngine, res, n: int, k: int,
+                sampler: str) -> float:
+    """Modelled rows touched per SEED, straight from the run's telemetry:
+    refresh-kernel rows streamed (tiles not skipped — untouched rejection
+    rounds report skipped == all tiles, contributing zero) amortized over k,
+    plus the per-round draw cost and, for rejection, the O(refresh_block)
+    single-row exact checks."""
+    tile = eng.backend.seed_tile(n, D)
+    n_tiles = -(-n // tile)
+    if res.skipped is not None:
+        streamed = float(jnp.sum((n_tiles - res.skipped) * tile))
+        if res.skipped.ndim == 2:  # batched: per-problem average
+            streamed /= res.skipped.shape[0]
+    else:
+        streamed = float(n) * k
+    reads = streamed / k + _post_round_reads(n, sampler, eng)
+    if res.proposals is not None:
+        extra = float(jnp.sum(res.proposals)) / k
+        reads += extra * REFRESH_BLOCK  # pending-block rows per exact check
+    return reads
+
+
 def run(rows: list):
     key = jax.random.PRNGKey(0)
     for backend, n in (("fused", N), ("pallas", N_PALLAS)):
         pts = jnp.asarray(blobs(n, D, K, seed=0)[0])
         eng = ClusterEngine(backend)
-        for sampler in ("cdf", "gumbel", "tiled"):
-            res = eng.seed(key, pts, K, sampler=sampler)  # warms the jit too
+        for sampler in ("cdf", "gumbel", "tiled", "rejection"):
+            res = eng.seed(key, pts, K, sampler=sampler,
+                           refresh_block=REFRESH_BLOCK)  # warms the jit too
             t = time_fn(lambda: jax.block_until_ready(
-                eng.seed(key, pts, K, sampler=sampler)))
+                eng.seed(key, pts, K, sampler=sampler,
+                         refresh_block=REFRESH_BLOCK)))
             rows.append({
                 "bench": "seed_sampler", "backend": backend,
                 "sampler": sampler, "n": n, "k": K,
-                "post_round_reads": _post_round_reads(n, sampler),
+                "post_round_reads": _post_round_reads(n, sampler, eng),
                 "skip_rate": round(_skip_rate(eng, res, n), 4),
+                "accept_rate": round(_accept_rate(res), 4),
+                "seed_reads": round(_seed_reads(eng, res, n, K, sampler), 1),
                 "seconds": round(t, 6),
             })
+
+
+def run_rejection_vs_tiled(rows: list):
+    """ISSUE 6 acceptance row: modelled rows-touched-per-seed at k=64 on a
+    coherent blob layout — rejection's refresh-every-8 must come in >= 4x
+    under tiled's refresh-every-round. The row keeps n = 2^16 even in smoke
+    mode: the seed tile caps at 4096 rows, so any smaller n is a SINGLE tile
+    and the two-level draw (hence the whole sub-linearity claim) degenerates
+    to a full scan — the fused engine still runs this size in milliseconds."""
+    k64, n64 = 64, 2 ** 16
+    key = jax.random.PRNGKey(2)
+    pts = jnp.asarray(blobs(n64, D, K, seed=2)[0])
+    eng = ClusterEngine("fused")
+    reads = {}
+    for sampler in ("tiled", "rejection"):
+        res = eng.seed(key, pts, k64, sampler=sampler,
+                       refresh_block=REFRESH_BLOCK)
+        t = time_fn(lambda: jax.block_until_ready(
+            eng.seed(key, pts, k64, sampler=sampler,
+                     refresh_block=REFRESH_BLOCK)))
+        reads[sampler] = _seed_reads(eng, res, n64, k64, sampler)
+        rows.append({
+            "bench": "rejection_vs_tiled", "backend": "fused",
+            "sampler": sampler, "n": n64, "k": k64,
+            "post_round_reads": _post_round_reads(n64, sampler, eng),
+            "skip_rate": round(_skip_rate(eng, res, n64), 4),
+            "accept_rate": round(_accept_rate(res), 4),
+            "seed_reads": round(reads[sampler], 1),
+            "reads_ratio": 1.0 if sampler == "tiled" else
+            round(reads["tiled"] / max(reads["rejection"], 1.0), 2),
+            "seconds": round(t, 6),
+        })
 
 
 def run_batched(rows: list):
@@ -77,6 +155,8 @@ def run_batched(rows: list):
             "bench": "kmeans_batched", "backend": backend, "sampler": "cdf",
             "n": BN, "k": BK, "post_round_reads": BB * BN,
             "skip_rate": round(_skip_rate(eng, seeds, BN), 4),
+            "accept_rate": 1.0,
+            "seed_reads": round(_seed_reads(eng, seeds, BN, BK, "cdf"), 1),
             "seconds": round(t, 6),
         })
 
@@ -85,8 +165,10 @@ def main():
     rows: list = []
     run(rows)
     run_batched(rows)
+    run_rejection_vs_tiled(rows)
     header = ["bench", "backend", "sampler", "n", "k",
-              "post_round_reads", "skip_rate", "seconds"]
+              "post_round_reads", "skip_rate", "accept_rate", "seed_reads",
+              "seconds"]
     emit(rows, header)
     write_json("seed", {
         "meta": {"smoke": SMOKE, "N": N, "D": D, "K": K,

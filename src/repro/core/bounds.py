@@ -260,6 +260,22 @@ def seed_point_prune(min_d2: jax.Array, center_d: jax.Array, dc: jax.Array,
     return lo * lo >= min_d2 * (1.0 + _REL) + margin
 
 
+def seed_envelope(min_d2: jax.Array, weights) -> jax.Array:
+    """The rejection sampler's stale proposal weights ``q_i = stale_min_d2 *
+    w_i`` (see ``engine._seed_rejection_loop``).
+
+    VALIDITY (the exactness precondition ``q_i >= p_i``): during seeding,
+    centroids are only ever ADDED, so every point's min_d2 is monotonically
+    NON-INCREASING across rounds — any stale copy of the array (and of the
+    per-tile partials the tiled inverse-CDF draws from, which are sums of
+    stale entries) dominates the current mass pointwise. No ball-radius or
+    movement-decay argument is needed for domination itself; the ball
+    machinery above gates what the *refresh* recomputes, and the refresh
+    debt is exactly the pending-centroid block the loop carries in place of
+    ``lb_debt``."""
+    return min_d2 if weights is None else min_d2 * weights
+
+
 def expand_mask(active: jax.Array, block_n: int, n: int) -> jax.Array:
     """Per-tile mask -> per-point mask (first n entries). Broadcast+reshape,
     NOT jnp.repeat: repeat lowers to a full-n cumsum, which would put an O(n)

@@ -86,6 +86,42 @@ def dist_tiled_choice(key: jax.Array, weights: jax.Array,
     return shard_argmax(score, me * n_local + local_idx, axes)
 
 
+def dist_gumbel_topl(key: jax.Array, log_w: jax.Array, l: int, axes):
+    """Exact distributed Gumbel top-l: sample l indices WITHOUT replacement
+    from the sharded categorical exp(log_w) — the k-means|| oversampling draw.
+
+    Each shard takes its local top-l Gumbel scores (candidates for the global
+    top-l must be a shard-local top-l), all-gathers the (l,) score/global-index
+    pairs (O(l * n_shards) scalars, independent of N), and every shard reduces
+    the l*S candidates to the same global top-l. Returns (global_idx (l,),
+    scores (l,)), replicated on every shard."""
+    me = axis_index(axes)
+    n_local = log_w.shape[0]
+    shard_key = jax.random.fold_in(key, me)
+    g = log_w.astype(jnp.float32) + jax.random.gumbel(
+        shard_key, log_w.shape, jnp.float32)
+    score, local_idx = jax.lax.top_k(g, l)
+    gidx = me * n_local + local_idx.astype(jnp.int32)
+    all_scores = jax.lax.all_gather(score, axes, tiled=True)
+    all_gidx = jax.lax.all_gather(gidx, axes, tiled=True)
+    best, pos = jax.lax.top_k(all_scores, l)
+    return all_gidx[pos], best
+
+
+def take_global_rows(points_local: jax.Array, global_idx: jax.Array,
+                     axes) -> jax.Array:
+    """Vector form of `take_global`: fetch the (l,) rows `global_idx` of the
+    axis-0-sharded array with a single (l, d) psum — each row contributed by
+    its owning shard, zeros elsewhere."""
+    me = axis_index(axes)
+    n_local = points_local.shape[0]
+    owner = global_idx // n_local
+    local = jnp.clip(global_idx - me * n_local, 0, n_local - 1)
+    rows = jnp.where((me == owner)[:, None], points_local[local],
+                     jnp.zeros_like(points_local[0])[None, :])
+    return jax.lax.psum(rows, axes)
+
+
 def take_global(points_local: jax.Array, global_idx: jax.Array, axes) -> jax.Array:
     """Fetch the row `global_idx` of the sharded (axis-0) array: the owning shard
     contributes the row, everyone else zeros, and one psum broadcasts it."""

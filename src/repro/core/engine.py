@@ -83,6 +83,17 @@ class KmeansppResult(NamedTuple):
     pruned: Optional[jax.Array] = None   # (k,) int32 points whose min-update
                                          # the per-point bound short-circuited
                                          # inside ACTIVE tiles, per round
+    proposals: Optional[jax.Array] = None  # (k,) int32 envelope draws per
+                                           # round (sampler='rejection' only;
+                                           # slot 0 is zero — the first seed
+                                           # is uniform, not proposed)
+    accepts: Optional[jax.Array] = None    # (k,) int32 0/1 ratio-test accepts
+                                           # per round (0 also when the round
+                                           # fell back to an exact full draw)
+    # counter contract (shared with LloydResult; pinned by
+    # tests/test_telemetry_contract.py): fixed length (k,), one slot per
+    # round, slots of rounds that did not run the counted event are ZERO —
+    # never truncated, never NaN-filled.
 
 
 class SeedRound(NamedTuple):
@@ -473,6 +484,16 @@ class Backend:
         w_md = min_d2 if weights is None else min_d2 * weights
         return sampling.tile_partials(w_md, self.seed_tile(n, d, m))
 
+    def row_min_d2(self, points, idx, pending, count):
+        """Scalar D^2 of row ``idx`` to the nearest of ``pending[:count]`` —
+        the rejection sampler's exact-p evaluation (O(count * d) work,
+        independent of n). count == 0 returns +inf, so an empty pending
+        block leaves the accept ratio bitwise at 1. The Pallas backend
+        overrides this with the scalar-prefetched single-row gather kernel;
+        this pure-jnp form is its bitwise oracle."""
+        from repro.kernels.ref import row_min_d2_ref
+        return row_min_d2_ref(points, idx, pending, count)
+
     # mesh hooks — identity on a single device
     def allreduce(self, x):
         return x
@@ -629,6 +650,10 @@ class PallasBackend(Backend):
                              bounds.tile_reduce_max(min_d2, tile))
         return SeedRound(min_d2, jnp.sum(partials), partials)
 
+    def row_min_d2(self, points, idx, pending, count):
+        from repro.kernels import ops as kops
+        return kops.row_min_d2(points, idx, pending, count)
+
     def _assign_plain(self, points, centroids, weights, norms=None):
         from repro.kernels import ops as kops
         a, md, sums, counts = kops.lloyd_assign(points, centroids,
@@ -716,6 +741,12 @@ class MeshBackend(Backend):
     def prologue(self, points, m: int = 1,
                  with_bounds: bool = True) -> RoundCache:
         return self.local.prologue(points, m, with_bounds)
+
+    def row_min_d2(self, points, idx, pending, count):
+        # shard-LOCAL row gather: the mesh rejection path resolves the
+        # global index to the owner shard and psums the scalar (see
+        # _seed_mesh), so the method itself stays local
+        return self.local.row_min_d2(points, idx, pending, count)
 
     def assign_update(self, points, centroids, weights, norms=None, *,
                       cache=None, state=None, delta=None):
@@ -836,6 +867,147 @@ def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
     return centroids, indices, rnd.min_d2, skips, prunes
 
 
+_REJECT_ATTEMPTS = 8  # truncation depth of the rejection loop; past it the
+#                       round falls back to an exact full draw (still exact)
+
+
+def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
+                         propose_fn, pq_fn, fallback_fn, n_tiles, all_tiles,
+                         refresh_block, init_min_d2,
+                         init_state: Optional[BoundState] = None,
+                         init_partials: Optional[jax.Array] = None,
+                         max_attempts: int = _REJECT_ATTEMPTS):
+    """Rejection-sampling k-means++ loop (sampler='rejection').
+
+    Structural difference vs ``_seed_loop``: a round does NOT run the full
+    D^2 refresh. Chosen centroids accumulate in a (refresh_block, d) PENDING
+    buffer and the stale (min_d2, partials) pair from the LAST refresh is the
+    dominating proposal envelope ``q_i = stale_min_d2[i] * w_i`` (valid
+    because seeding only ever adds centroids — ``bounds.seed_envelope``). A
+    round draws from the envelope (two-level tiled inverse-CDF locally, the
+    distributed tiled choice on a mesh), evaluates the exact CURRENT weight
+    of only the drawn row (``p = min(q, w * row_min_d2(row, pending))`` —
+    O(refresh_block * d) work), and accepts with probability p/q. The full
+    min-update refresh runs only (a) when the pending buffer fills, (b) when
+    all ``max_attempts`` proposals reject — the round then falls back to an
+    exact full draw from the freshened weights, keeping the truncated
+    mixture exactly D^2-distributed — and (c) once at the end, so the
+    returned min_d2 is exact over all k seeds. Expected full passes:
+    O(k / refresh_block) instead of k.
+
+    Refresh mechanics: the pending buffer is NEVER cleared — a refresh folds
+    the whole (refresh_block, d) block through the ordinary (gated)
+    ``seed_round`` and resets the count; rows past the count were folded by
+    an earlier refresh, so re-folding them is a value-noop under ``min``.
+    The count-mask lives in the p-evaluation instead (slots >= count are
+    +inf), so a freshly-refreshed envelope gives ``p == q`` BITWISE and the
+    first proposal always accepts.
+
+    PRNG schedule: round m splits ``key, ks = split(key)`` exactly like
+    ``_seed_loop``, and proposal attempt 0 consumes ``ks`` through the same
+    uniform derivation as ``categorical_tiled`` — so with refresh_block=1
+    (every round freshens, p == q) the chosen indices are BITWISE those of
+    sampler='tiled' under a shared key: the pin the distribution tests rely
+    on. The exact-fallback draw uses an independent fold of ``ks``.
+
+    Telemetry: per-round ``skips`` reports ``all_tiles`` for rounds that
+    never touched the dataset and the refresh kernel's (pod-wide on a mesh)
+    count otherwise; ``props``/``accs`` count envelope draws and ratio-test
+    accepts (the counter contract in ``KmeansppResult``).
+    """
+    d = pts.shape[1]
+    P = max(int(refresh_block), 1)
+    key, k0 = jax.random.split(key)
+    first = first_fn(k0)
+    c0 = take_fn(first)
+    centroids = jnp.zeros((k, d), pts.dtype).at[0].set(c0)
+    indices = jnp.zeros((k,), jnp.int32).at[0].set(first)
+    skips = jnp.zeros((k,), jnp.int32)
+    prunes = jnp.zeros((k,), jnp.int32)
+    props = jnp.zeros((k,), jnp.int32)
+    accs = jnp.zeros((k,), jnp.int32)
+    # pending starts as P copies of the first centroid with count = P - 1:
+    # round 1's append fills it, forcing the initial refresh (duplicate rows
+    # are value-noops under the min-fold), which also replaces the +inf
+    # init_min_d2 with a usable envelope before the first proposal
+    pending = jnp.broadcast_to(c0[None, :], (P, d)).astype(pts.dtype)
+    count = jnp.asarray(P - 1, jnp.int32)
+
+    def refresh(md, state, pending, count):
+        rnd = round_fn(pending, md, state)
+        state = (None if state is None
+                 else BoundState(rnd.partials, rnd.tile_max))
+        return (rnd.min_d2, rnd.partials, state,
+                jnp.asarray(rnd.skipped, jnp.int32),
+                jnp.asarray(rnd.pruned, jnp.int32),
+                jnp.zeros_like(count))
+
+    def body(m, carry):
+        (key, centroids, indices, md, partials, state, pending, count,
+         skips, prunes, props, accs) = carry
+        pending = jax.lax.dynamic_update_index_in_dim(
+            pending, centroids[m - 1].astype(pending.dtype), count, 0)
+        count = count + 1
+        rs0 = jnp.asarray(all_tiles, jnp.int32)  # untouched-round default
+        rp0 = jnp.zeros((), jnp.int32)
+
+        md, partials, state, rs, rp, count = jax.lax.cond(
+            count >= P,
+            lambda op: refresh(op[0], op[2], op[3], op[4]),
+            lambda op: (op[0], op[1], op[2], rs0, rp0, op[4]),
+            (md, partials, state, pending, count))
+
+        key, ks = jax.random.split(key)
+        weight = bounds.seed_envelope(md, w)
+        idx, ok, att = sampling.rejection_sample(
+            ks,
+            lambda kj: propose_fn(kj, weight, partials),
+            lambda i: pq_fn(i, weight, pending, count),
+            max_attempts=max_attempts)
+
+        def fb(op):
+            md, partials, state, count, rs, rp = op
+            md, partials, state, rs2, rp2, count = refresh(
+                md, state, pending, count)
+            nxt = fallback_fn(jax.random.fold_in(ks, 0xFB),
+                              bounds.seed_envelope(md, w), partials)
+            return md, partials, state, count, rs2, rp + rp2, nxt
+
+        md, partials, state, count, rs, rp, nxt = jax.lax.cond(
+            ok,
+            lambda op: op[:4] + (rs, rp, idx),
+            fb,
+            (md, partials, state, count, rs, rp))
+
+        centroids = jax.lax.dynamic_update_index_in_dim(
+            centroids, take_fn(nxt), m, 0)
+        indices = indices.at[m].set(nxt)
+        skips = skips.at[m - 1].set(rs)
+        prunes = prunes.at[m - 1].set(rp)
+        props = props.at[m].set(att)
+        accs = accs.at[m].set(ok.astype(jnp.int32))
+        return (key, centroids, indices, md, partials, state, pending, count,
+                skips, prunes, props, accs)
+
+    # the zeros init is never drawn from: round 1's append always fills the
+    # buffer (count starts at P - 1), so a refresh precedes the first proposal
+    if init_partials is None:
+        init_partials = jnp.zeros((n_tiles,), jnp.float32)
+    (key, centroids, indices, md, partials, state, pending, count, skips,
+     prunes, props, accs) = jax.lax.fori_loop(
+        1, k, body,
+        (key, centroids, indices, init_min_d2, init_partials,
+         init_state, pending, count, skips, prunes, props, accs))
+    # settle the refresh debt: fold the last chosen centroid plus every
+    # still-pending one, so the returned min_d2 is exact over all k seeds
+    pending = jax.lax.dynamic_update_index_in_dim(
+        pending, centroids[k - 1].astype(pending.dtype), count, 0)
+    rnd = round_fn(pending, md, state)
+    skips = skips.at[k - 1].set(jnp.asarray(rnd.skipped, jnp.int32))
+    prunes = prunes.at[k - 1].set(jnp.asarray(rnd.pruned, jnp.int32))
+    return centroids, indices, rnd.min_d2, skips, prunes, props, accs
+
+
 def _stream_of(pts: jax.Array, precision: str) -> jax.Array:
     """The array the ROUND primitives stream: a bf16 copy at half the HBM
     bytes under precision='bf16' (norms/accumulators/min_d2 stay fp32), the
@@ -852,14 +1024,19 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
                 weights: Optional[jax.Array], backend: Backend,
                 sampler: str = "cdf", *, precision: str = "fp32",
                 bound_gate: bool = True,
-                cache: Optional[RoundCache] = None) -> KmeansppResult:
+                cache: Optional[RoundCache] = None,
+                refresh_block: int = 8) -> KmeansppResult:
     """Full k-means++ seeding through `backend` (untraced core; see
     ClusterEngine.seed for the jitted entry). Samplers: 'cdf' (full inverse
     CDF — the serial algorithm; fused and pallas pick bitwise-identical
     seeds everywhere, and serial/reference match them on origin-scale data —
     see docs/engine.md "Precision & bounds" for the parity domains),
     'gumbel' (Gumbel-max), 'tiled' (two-level inverse CDF from the round's
-    per-tile partials — O(n/tile + tile) post-kernel reads per round).
+    per-tile partials — O(n/tile + tile) post-kernel reads per round),
+    'rejection' (exact rejection sampling from the STALE envelope: rounds
+    skip the full D^2 refresh entirely, touching only the drawn row, and
+    refresh every ``refresh_block`` seeds — see _seed_rejection_loop;
+    with refresh_block=1 it picks bitwise the 'tiled' seeds).
 
     The prologue (cached fp32 norms + tile centroid-balls + per-point
     center distances) runs ONCE here — no round recomputes ||x||^2 — unless
@@ -873,7 +1050,8 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     array)."""
     if backend.distributed:
         return _seed_mesh(key, points, k, weights, backend, sampler,
-                          precision=precision, bound_gate=bound_gate)
+                          precision=precision, bound_gate=bound_gate,
+                          refresh_block=refresh_block)
     n, d = points.shape
     compute_dtype = jnp.promote_types(points.dtype, jnp.float32)
     pts = points.astype(compute_dtype)
@@ -892,7 +1070,7 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     if w is None:
         def first_fn(k0):
             return jax.random.randint(k0, (), 0, n, dtype=jnp.int32)
-    elif sampler == "tiled":
+    elif sampler in ("tiled", "rejection"):
         # first seed weighted by point weights (k-means|| reduce step): keep
         # the sub-O(n) property — two-level draw over the weights' own tile
         # partials instead of a full-n cumsum
@@ -903,6 +1081,41 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     else:  # first seed weighted by point weights (k-means|| reduce step)
         def first_fn(k0):
             return sampling.categorical(k0, w, method="cdf").astype(jnp.int32)
+
+    if sampler == "rejection":
+        n_tiles = -(-n // tile)
+
+        def propose_fn(kj, weight, partials):
+            u = jax.random.uniform(kj, (), weight.dtype)
+            return sampling.tiled_index_from_uniform(u, weight, partials,
+                                                     block_n=tile)
+
+        def pq_fn(idx, weight, pending, count):
+            q = weight[idx]
+            rd2 = backend.row_min_d2(pts, idx, pending, count)
+            scale = 1.0 if w is None else w[idx]
+            return jnp.minimum(q, scale * rd2), q
+
+        def fallback_fn(kf, weight, partials):
+            return sampling.categorical_tiled(
+                kf, weight, partials, block_n=tile).astype(jnp.int32)
+
+        centroids, indices, min_d2, skips, prunes, props, accs = \
+            _seed_rejection_loop(
+                key, pts, k, w,
+                round_fn=lambda c, md, st: backend.seed_round(
+                    stream, c.astype(stream.dtype), md, w, cache=cache,
+                    state=st),
+                first_fn=first_fn,
+                take_fn=lambda i: pts[i],
+                propose_fn=propose_fn, pq_fn=pq_fn, fallback_fn=fallback_fn,
+                n_tiles=n_tiles, all_tiles=n_tiles,
+                refresh_block=refresh_block,
+                init_min_d2=jnp.full((n,), jnp.inf, compute_dtype),
+                init_state=init_state)
+        return KmeansppResult(centroids.astype(points.dtype), indices,
+                              min_d2, skips if bound_gate else None,
+                              prunes if bound_gate else None, props, accs)
 
     if sampler == "tiled":
         def sample_fn(ks, weight, partials):
@@ -931,7 +1144,8 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
 
 def _seed_mesh(key, points, k, weights, backend: MeshBackend,
                sampler: str = "cdf", *, precision: str = "fp32",
-               bound_gate: bool = True) -> KmeansppResult:
+               bound_gate: bool = True,
+               refresh_block: int = 8) -> KmeansppResult:
     """Distributed seeding: the same loop inside shard_map, with the sampler
     swapped for the exact distributed Gumbel-max and point lookup for the
     psum broadcast. Collective traffic per round is independent of N.
@@ -940,7 +1154,13 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
     per-shard tile selection via Gumbel over the round's partials, then an
     inverse-CDF inside only the winning tile, then the usual pmax/pmin shard
     combine — each shard reads O(n_local/tile + tile) elements post-kernel.
-    Every other sampler name keeps the full-scan distributed Gumbel-max."""
+    sampler='rejection' composes the SAME distributed choice with the
+    rejection loop over per-shard STALE envelopes: the owner shard of each
+    proposal evaluates the exact (p, q) pair against its local pending block
+    and one O(1)-byte psum broadcasts it, so the replicated key stream makes
+    every shard take the identical accept/reject decision (and identical
+    proposal/accept counters) without gathering any weights. Every other
+    sampler name keeps the full-scan distributed Gumbel-max."""
     if weights is not None:
         raise NotImplementedError("mesh seeding does not take weights")
     axes = backend.axes
@@ -951,14 +1171,55 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
         stream = _stream_of(pts, precision)
         cache = backend.prologue(pts, with_bounds=bound_gate)
         tile = backend.seed_tile(n_local, d)
+        n_tiles = -(-n_local // tile)
         if bound_gate:
-            n_tiles = -(-n_local // tile)
             init_state = BoundState(
                 collectives.pvary(jnp.zeros((n_tiles,), jnp.float32), axes),
                 collectives.pvary(jnp.full((n_tiles,), jnp.inf, jnp.float32),
                                   axes))
         else:
             init_state = None
+        first_fn = lambda k0: collectives.dist_gumbel_choice(  # noqa: E731
+            k0, jnp.zeros((n_local,), jnp.float32), axes)
+        take_fn = lambda i: collectives.take_global(pts, i, axes)  # noqa: E731
+        init_min_d2 = collectives.pvary(
+            jnp.full((n_local,), jnp.inf, jnp.float32), axes)
+
+        if sampler == "rejection":
+            def pq_fn(gidx, weight, pending, count):
+                # the OWNER shard evaluates the drawn row's exact current
+                # weight p and envelope weight q; one (2,)-fp32 psum
+                # broadcasts them, keeping the accept decision replicated
+                me = collectives.axis_index(axes)
+                local = jnp.clip(gidx - me * n_local, 0, n_local - 1)
+                rd2 = backend.row_min_d2(pts, local, pending, count)
+                q_loc = weight[local]
+                vec = jnp.where(me == gidx // n_local,
+                                jnp.stack([jnp.minimum(q_loc, rd2), q_loc]),
+                                jnp.zeros((2,), jnp.float32))
+                pq = jax.lax.psum(vec, axes)
+                return pq[0], pq[1]
+
+            return _seed_rejection_loop(
+                kk, pts, k, None,
+                round_fn=lambda c, md, st: backend.seed_round(
+                    stream, c.astype(stream.dtype), md, None, cache=cache,
+                    state=st),
+                first_fn=first_fn, take_fn=take_fn,
+                propose_fn=lambda kj, weight, partials:
+                    collectives.dist_tiled_choice(kj, weight, partials,
+                                                  tile, axes),
+                pq_fn=pq_fn,
+                fallback_fn=lambda kf, weight, partials:
+                    collectives.dist_tiled_choice(kf, weight, partials,
+                                                  tile, axes),
+                n_tiles=n_tiles,
+                all_tiles=n_tiles * collectives.axis_size(axes),
+                refresh_block=refresh_block,
+                init_min_d2=init_min_d2, init_state=init_state,
+                init_partials=collectives.pvary(
+                    jnp.zeros((n_tiles,), jnp.float32), axes))
+
         if sampler == "tiled":
             def sample_fn(ks, weight, partials):
                 return collectives.dist_tiled_choice(ks, weight, partials,
@@ -973,14 +1234,23 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
             round_fn=lambda c, md, st: backend.seed_round(
                 stream, c.astype(stream.dtype)[None, :], md, None,
                 cache=cache, state=st),
-            first_fn=lambda k0: collectives.dist_gumbel_choice(
-                k0, jnp.zeros((n_local,), jnp.float32), axes),
+            first_fn=first_fn,
             sample_fn=sample_fn,
-            take_fn=lambda i: collectives.take_global(pts, i, axes),
-            init_min_d2=collectives.pvary(
-                jnp.full((n_local,), jnp.inf, jnp.float32), axes),
+            take_fn=take_fn,
+            init_min_d2=init_min_d2,
             init_state=init_state,
         )
+
+    if sampler == "rejection":
+        mapped = collectives.shard_map(
+            local_fn, mesh=backend.mesh,
+            in_specs=(P(), P(axes)),
+            out_specs=(P(), P(), P(axes), P(), P(), P(), P()))
+        centroids, indices, min_d2, skips, prunes, props, accs = mapped(
+            key, points)
+        return KmeansppResult(centroids.astype(points.dtype), indices,
+                              min_d2, skips if bound_gate else None,
+                              prunes if bound_gate else None, props, accs)
 
     mapped = collectives.shard_map(
         local_fn, mesh=backend.mesh,
@@ -1161,7 +1431,8 @@ def kmeans_points(key: jax.Array, points: jax.Array, k: int,
                   sampler: str = "cdf", max_iters: int = 50,
                   tol: float = 1e-6, empty: str = "keep",
                   precision: str = "fp32",
-                  bound_gate: bool = True) -> LloydResult:
+                  bound_gate: bool = True,
+                  refresh_block: int = 8) -> LloydResult:
     """End-to-end k-means++ seeding + Lloyd with ONE shared prologue.
 
     The seed phase and the fit phase historically each ran
@@ -1178,7 +1449,7 @@ def kmeans_points(key: jax.Array, points: jax.Array, k: int,
     cache = be.prologue(pts, m=k, with_bounds=bound_gate)
     seeds = seed_points(key, pts, k, weights, be, sampler,
                         precision=precision, bound_gate=bound_gate,
-                        cache=cache)
+                        cache=cache, refresh_block=refresh_block)
     res = fit_points(pts, seeds.centroids, weights, be, max_iters, tol,
                      empty, precision, bound_gate, cache=cache)
     return res._replace(centroids=res.centroids.astype(points.dtype))
@@ -1256,11 +1527,13 @@ def _iter_batches(batches: BatchSource, n_batches: Optional[int]):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "backend", "sampler",
-                                             "precision", "bound_gate"))
+                                             "precision", "bound_gate",
+                                             "refresh_block"))
 def _seed_jit(key, points, weights, k, backend, sampler, precision,
-              bound_gate):
+              bound_gate, refresh_block):
     return seed_points(key, points, k, weights, backend, sampler,
-                       precision=precision, bound_gate=bound_gate)
+                       precision=precision, bound_gate=bound_gate,
+                       refresh_block=refresh_block)
 
 
 @functools.partial(jax.jit,
@@ -1275,11 +1548,12 @@ def _fit_jit(points, init_centroids, weights, backend, max_iters, tol, empty,
 @functools.partial(jax.jit,
                    static_argnames=("k", "backend", "sampler", "max_iters",
                                     "tol", "empty", "precision",
-                                    "bound_gate"))
+                                    "bound_gate", "refresh_block"))
 def _kmeans_jit(key, points, weights, k, backend, sampler, max_iters, tol,
-                empty, precision, bound_gate):
+                empty, precision, bound_gate, refresh_block):
     return kmeans_points(key, points, k, weights, backend, sampler,
-                         max_iters, tol, empty, precision, bound_gate)
+                         max_iters, tol, empty, precision, bound_gate,
+                         refresh_block=refresh_block)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "precision"))
@@ -1288,13 +1562,15 @@ def _minibatch_jit(cents, counts, batch, backend, precision):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "backend", "sampler",
-                                             "precision", "bound_gate"))
+                                             "precision", "bound_gate",
+                                             "refresh_block"))
 def _seed_batched_jit(keys, points, k, backend, sampler, precision,
-                      bound_gate):
+                      bound_gate, refresh_block):
     return jax.vmap(
         lambda kk, pp: seed_points(kk, pp, k, None, backend, sampler,
                                    precision=precision,
-                                   bound_gate=bound_gate)
+                                   bound_gate=bound_gate,
+                                   refresh_block=refresh_block)
     )(keys, points)
 
 
@@ -1351,18 +1627,24 @@ class ClusterEngine:
     # -- seeding ----------------------------------------------------------
     def seed(self, key: jax.Array, points: jax.Array, k: int, *,
              weights: Optional[jax.Array] = None,
-             sampler: str = "cdf") -> KmeansppResult:
+             sampler: str = "cdf",
+             refresh_block: int = 8) -> KmeansppResult:
         """K-means++ seeding: k centroids chosen from `points` ∝ D^2.
 
         sampler: 'cdf' (full inverse-CDF, bitwise-pinned across local
-        backends), 'gumbel' (Gumbel-max), or 'tiled' (two-level draw from the
+        backends), 'gumbel' (Gumbel-max), 'tiled' (two-level draw from the
         round kernel's per-tile partials — O(n/tile + tile) post-kernel reads
-        per round instead of a full O(n) cumsum; same distribution)."""
+        per round instead of a full O(n) cumsum; same distribution), or
+        'rejection' (exact rejection sampling against a STALE envelope: the
+        full D^2 refresh runs only every ``refresh_block`` seeds, each round
+        in between touches O(1) rows — same distribution; refresh_block=1
+        reproduces 'tiled' bitwise). ``refresh_block`` is ignored by the
+        other samplers."""
         n = points.shape[0]
         if not 0 < k <= n:
             raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
         return _seed_jit(key, points, weights, k, self.backend, sampler,
-                         self.precision, self.bounds)
+                         self.precision, self.bounds, int(refresh_block))
 
     def _resolve_order(self, points: jax.Array, order):
         """order: None (natural), an ordering name ('morton' — see
@@ -1435,7 +1717,7 @@ class ClusterEngine:
                init: str = "kmeans++", max_iters: int = 50, tol: float = 1e-6,
                sampler: str = "cdf", empty: str = "keep",
                weights: Optional[jax.Array] = None,
-               order=None) -> LloydResult:
+               order=None, refresh_block: int = 8) -> LloydResult:
         """End-to-end: seeding (the paper's phase) + Lloyd clustering.
         ``order`` reorders the rows ONCE up front (see `fit`): both the
         seeding scan and every Lloyd iteration then see the tile-coherent
@@ -1450,11 +1732,12 @@ class ClusterEngine:
                 raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
             res = _kmeans_jit(key, points, weights, k, self.backend, sampler,
                               max_iters, float(tol), empty, self.precision,
-                              self.bounds)
+                              self.bounds, int(refresh_block))
             return self._order_out(res, perm, inv)
         if init == "kmeans++":
             seeds = self.seed(key, points, k, weights=weights,
-                              sampler=sampler).centroids
+                              sampler=sampler,
+                              refresh_block=refresh_block).centroids
         elif init == "kmeans||":
             if self.backend.distributed:
                 raise NotImplementedError("k-means|| init runs on a local "
@@ -1543,7 +1826,8 @@ class ClusterEngine:
 
     # -- batched multi-problem clustering ---------------------------------
     def seed_batched(self, key: jax.Array, points: jax.Array, k: int, *,
-                     sampler: str = "cdf") -> KmeansppResult:
+                     sampler: str = "cdf",
+                     refresh_block: int = 8) -> KmeansppResult:
         """Seed B independent (n, d) problems in one compiled call.
 
         `points` is (B, n, d); `key` is either one key (split per problem) or
@@ -1564,7 +1848,8 @@ class ClusterEngine:
         single_ndim = 0 if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) else 1
         keys = key if key.ndim > single_ndim else jax.random.split(key, B)
         return _seed_batched_jit(keys, points, k, self.backend, sampler,
-                                 self.precision, self.bounds)
+                                 self.precision, self.bounds,
+                                 int(refresh_block))
 
     def _resolve_order_batched(self, points: jax.Array, order):
         """Per-problem (B, n) permutations for batched fits."""

@@ -121,6 +121,20 @@ def tiled_index_from_uniform(u: jax.Array, weights: jax.Array,
     lcdf = jnp.cumsum(tile)
     li = jnp.clip(jnp.searchsorted(lcdf, r_local, side="right"),
                   0, block_n - 1)
+    # fp-underflow guard: level 1 can land on a tile whose (block_n,) window
+    # re-sums to zero/non-finite even though partials[t] > 0 (the partial came
+    # from the kernel's on-chip tree, a different association order).
+    # searchsorted over a degenerate lcdf pins to one clipped index; fall back
+    # to a uniform offset within the tile instead, matching `categorical`'s
+    # degenerate-weight discipline. Conditional on tile t the residual
+    # r_local / partials[t] is uniform on [0, 1), so the fallback costs no
+    # extra uniform.
+    wtot = lcdf[block_n - 1]
+    frac = jnp.clip(r_local / jnp.maximum(partials[t],
+                                          jnp.finfo(tcdf.dtype).tiny),
+                    0.0, 1.0)
+    li_fb = jnp.minimum((frac * block_n).astype(jnp.int32), block_n - 1)
+    li = jnp.where(jnp.isfinite(wtot) & (wtot > 0), li, li_fb)
     return jnp.minimum(t * block_n + li, n - 1).astype(jnp.int32)
 
 
@@ -143,6 +157,64 @@ def categorical_tiled(key: jax.Array, weights: jax.Array,
     u = jax.random.uniform(key, (), weights.dtype)
     idx = tiled_index_from_uniform(u, weights, partials, block_n=block_n)
     return _guarded(key, idx, jnp.sum(partials), weights.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# rejection sampling from a stale dominating envelope
+# ---------------------------------------------------------------------------
+
+_ACCEPT_SALT = 0xACC  # fold_in salt for the accept uniform (disjoint from
+#                       _guarded's 0x0DD so the two streams never collide)
+
+
+def rejection_sample(key: jax.Array, propose_fn, pq_fn, *,
+                     max_attempts: int):
+    """Truncated rejection draw from a target p via a dominating envelope q.
+
+    ``propose_fn(kj) -> idx`` draws an index from the envelope (q_i / Q) —
+    locally the two-level tiled inverse-CDF over STALE weights, on a mesh the
+    distributed tiled choice. ``pq_fn(idx) -> (p, q)`` returns the exact
+    current weight of the drawn row and its envelope weight; exactness needs
+    ``0 <= p_i <= q_i`` (k-means++ seeding guarantees it: centroids are only
+    ever added, so a stale min_d2 dominates the current one pointwise).
+
+    Attempt j accepts iff ``u2 * q < p`` with u2 ~ U[0, 1): probability
+    p_i/q_i, making each attempt an exact draw from p conditional on
+    acceptance. Attempt 0 uses ``key`` VERBATIM (so a fresh envelope with
+    p == q reproduces ``categorical_tiled(key, ...)`` bitwise — the shared
+    uniform stream the parity tests pin); attempt j > 0 uses
+    ``fold_in(key, j)``. Returns ``(idx, accepted, attempts)``; when all
+    ``max_attempts`` proposals reject the caller MUST fall back to an exact
+    full draw with an INDEPENDENT key — the truncated-attempts + exact-
+    fallback mixture is still exactly p (the attempts are i.i.d., so the
+    geometric telescoping is unchanged by truncation).
+
+    Degenerate envelopes (zero/non-finite mass) make every attempt reject
+    (p = q = 0 fails the strict test; non-finite q poisons it), routing to
+    the fallback draw — whose own `_guarded` uniform fallback then matches
+    `categorical_tiled`'s degenerate-weight discipline.
+    """
+    def attempt_key(j):
+        return jax.lax.cond(j == 0, lambda k: k,
+                            lambda k: jax.random.fold_in(k, j), key)
+
+    def cond(carry):
+        j, _, ok = carry
+        return jnp.logical_not(ok) & (j < max_attempts)
+
+    def body(carry):
+        j, _, _ = carry
+        kj = attempt_key(j)
+        idx = propose_fn(kj)
+        p, q = pq_fn(idx)
+        u2 = jax.random.uniform(jax.random.fold_in(kj, _ACCEPT_SALT), (),
+                                p.dtype)
+        return j + 1, idx.astype(jnp.int32), u2 * q < p
+
+    attempts, idx, ok = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                     jnp.zeros((), bool)))
+    return idx, ok, attempts
 
 
 def _guarded(key: jax.Array, idx: jax.Array, total: jax.Array,

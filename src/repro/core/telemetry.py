@@ -1,0 +1,75 @@
+"""The ONE place the engine's round-counter contract is stated and checked.
+
+Every optional counter array on :class:`~repro.core.engine.KmeansppResult`
+(``skipped``, ``pruned``, ``proposals``, ``accepts``) and
+:class:`~repro.core.engine.LloydResult` (``skipped``, ``pruned``) obeys the
+same shape discipline, because every consumer — benchmarks modelling HBM
+reads, tests pinning gating behaviour, audits of converged runs — relies on
+being able to index a counter by round without bounds checks:
+
+* **fixed length** — ``(k,)`` for seeding (one slot per seed round),
+  ``(max_iters,)`` for Lloyd (one slot per *potential* iteration). Shapes
+  never depend on traced values such as the converged iteration count.
+* **zero-filled, never truncated** — slots for rounds that did not run the
+  counted event (iterations past convergence, the first seed round for
+  ``proposals``/``accepts``) hold exact int32 ``0``, never NaN or garbage.
+* **int32 dtype** — counters cross the shard_map boundary psum'd; a fixed
+  integer dtype keeps the mesh and local results comparable bit-for-bit.
+* **rejection counters** — ``proposals[0] == accepts[0] == 0`` (the first
+  seed is drawn uniformly, not proposed) and for every later round
+  ``0 <= accepts[m] <= 1`` and ``accepts[m] <= proposals[m]``, with
+  ``proposals[m] <= max_attempts`` (a round that exhausts its attempts
+  falls back to an exact full draw and reports ``accepts[m] == 0``).
+
+``tests/test_telemetry_contract.py`` pins the contract through these
+helpers; other tests call them instead of re-stating the rules ad hoc.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "check_counter",
+    "check_rejection_counters",
+    "check_converged_zeros",
+]
+
+
+def check_counter(arr, length: int, name: str = "counter") -> np.ndarray:
+    """Assert the fixed-length/int32/non-negative half of the contract.
+
+    Returns the counter as a numpy array for further assertions."""
+    assert arr is not None, f"{name} missing (expected a ({length},) array)"
+    a = np.asarray(arr)
+    assert a.shape == (length,), \
+        f"{name} shape {a.shape} != ({length},): counters are fixed-length"
+    assert a.dtype == np.int32, \
+        f"{name} dtype {a.dtype} != int32: counters are exact integers"
+    assert np.all(a >= 0), f"{name} has negative entries: {a}"
+    return a
+
+
+def check_converged_zeros(arr, n_ran, length: int,
+                          name: str = "counter") -> np.ndarray:
+    """Assert the zero-filled-past-convergence half: slots for the
+    ``length - n_ran`` rounds that never executed are exact zeros."""
+    a = check_counter(arr, length, name)
+    n_ran = int(n_ran)
+    assert np.array_equal(a[n_ran:], np.zeros(length - n_ran, np.int32)), \
+        f"{name} slots past round {n_ran} are not zero-filled: {a[n_ran:]}"
+    return a
+
+
+def check_rejection_counters(proposals, accepts, k: int,
+                             max_attempts: int) -> None:
+    """Assert the sampler='rejection' counter relations on a seeding result."""
+    p = check_counter(proposals, k, "proposals")
+    a = check_counter(accepts, k, "accepts")
+    assert p[0] == 0 and a[0] == 0, \
+        "round 0 is the uniform first seed: proposals[0]==accepts[0]==0"
+    assert np.all(a <= 1), f"accepts is 0/1 per round: {a}"
+    assert np.all(a <= p), f"an accept implies at least one proposal: {p} {a}"
+    assert np.all(p[1:] >= 1), \
+        f"every later round proposes at least once: {p}"
+    assert np.all(p <= max_attempts), \
+        f"proposals exceed the truncation depth {max_attempts}: {p}"

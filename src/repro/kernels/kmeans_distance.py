@@ -267,6 +267,60 @@ def distance_min_update_gated_pallas(points: jax.Array, norms: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# single-row gather + distance: the rejection sampler's exact-p evaluation
+# ---------------------------------------------------------------------------
+
+
+def _row_min_d2_kernel(meta_ref, row_ref, cents_ref, out_ref):
+    """One grid step: D^2 of the prefetched row to the nearest of the first
+    ``meta[1]`` centroid slots (the rejection loop's pending buffer; slots
+    past the count are +inf-masked, so an empty pending block yields +inf and
+    ``min(q, +inf) == q`` keeps the accept ratio bitwise at 1).
+
+    ``meta = [row_idx, count]`` rides the scalar-prefetch channel: the row
+    index steers the (1, d) point block's DMA — the kernel touches O(d) bytes
+    of the dataset, not a tile — which is the whole point of the rejection
+    sampler (per-proposal work independent of n)."""
+    x = row_ref[...].astype(jnp.float32)           # (1, d)
+    c = cents_ref[...].astype(jnp.float32)         # (m, d)
+    diff = x - c                                   # broadcast over slots
+    d2 = jnp.sum(diff * diff, axis=1)              # (m,)
+    slot = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 0)
+    out_ref[0] = jnp.min(jnp.where(slot < meta_ref[1], d2, jnp.inf))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def row_min_d2_pallas(points: jax.Array, idx: jax.Array,
+                      centroids: jax.Array, count: jax.Array, *,
+                      interpret: bool) -> jax.Array:
+    """Scalar fp32 D^2 of row ``idx`` to the nearest of ``centroids[:count]``.
+
+    The diff-square form (not the matmul/cached-norm form): a single row has
+    no MXU tile to win back, and the rejection sampler's exactness needs only
+    p <= q — which ``min`` with the stale weight enforces regardless of the
+    fp form (see kernels.ref.row_min_d2_ref, the bitwise oracle)."""
+    n, d = points.shape
+    m = centroids.shape[0]
+    meta = jnp.stack([idx.astype(jnp.int32), count.astype(jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                      # meta = [row, count]
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, meta: (meta[0], 0)),  # the row
+            pl.BlockSpec((m, d), lambda i, meta: (0, 0)),        # pending
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, meta: (0,)),
+    )
+    out = pl.pallas_call(
+        _row_min_d2_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=interpret,
+    )(meta, points, centroids.astype(points.dtype))
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
 # prologue kernel: cached norms + tile centroid-balls, ONE pass over the data
 # ---------------------------------------------------------------------------
 

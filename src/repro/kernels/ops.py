@@ -29,7 +29,7 @@ from jax.custom_batching import custom_vmap
 from repro.kernels.kmeans_distance import (
     distance_min_update_batched_pallas, distance_min_update_gated_pallas,
     distance_min_update_gated_batched_pallas, distance_min_update_pallas,
-    seed_prologue_pallas)
+    row_min_d2_pallas, seed_prologue_pallas)
 from repro.core.bounds import point_norms  # noqa: F401  (re-exported: the
 #   cached-norm input the kernels stream; wrappers compute it on the fly
 #   when the caller has no prologue cache)
@@ -256,6 +256,34 @@ def distance_min_update_gated(points: jax.Array, centroids: jax.Array,
         points, centroids, min_d2, norms, center_d.astype(jnp.float32), dc,
         margin, prev_partials, prev_tile_max, ids, n_active)
     return new_md, partials, tile_max, pruned, skipped
+
+
+def row_min_d2(points: jax.Array, idx: jax.Array, centroids: jax.Array,
+               count: jax.Array, *, interpret: bool | None = None):
+    """Scalar D^2 of row ``idx`` to the nearest of ``centroids[:count]`` —
+    the rejection sampler's exact-p gather (O(d) bytes of the dataset per
+    proposal, DMA-steered by the scalar-prefetched row index). count == 0
+    returns +inf. Under `jax.vmap` (the engine's batched seeding) this
+    dispatches to the pure-jnp twin — a (B,)-batch of single-row gathers has
+    no kernel to win."""
+    if interpret is None:
+        interpret = default_interpret()
+
+    @custom_vmap
+    def call(pts, i, cents, cnt):
+        return row_min_d2_pallas(pts, i, cents, cnt, interpret=interpret)
+
+    @call.def_vmap
+    def _rule(axis_size, in_batched, pts, i, cents, cnt):
+        from repro.kernels.ref import row_min_d2_ref
+        pts = _ensure_batched(pts, in_batched[0], axis_size)
+        i = _ensure_batched(i, in_batched[1], axis_size)
+        cents = _ensure_batched(cents, in_batched[2], axis_size)
+        cnt = _ensure_batched(cnt, in_batched[3], axis_size)
+        return jax.vmap(row_min_d2_ref)(pts, i, cents, cnt), True
+
+    return call(points, jnp.asarray(idx, jnp.int32), centroids,
+                jnp.asarray(count, jnp.int32))
 
 
 def lloyd_assign(points: jax.Array, centroids: jax.Array, *,

@@ -28,6 +28,20 @@ def distance_min_update_ref(points: jax.Array, centroids: jax.Array,
     return new, jnp.sum(new)
 
 
+def row_min_d2_ref(points: jax.Array, idx: jax.Array, centroids: jax.Array,
+                   count: jax.Array) -> jax.Array:
+    """Oracle for kernels.row_min_d2: D^2 of the single row ``idx`` to its
+    nearest among the first ``count`` rows of ``centroids`` (slots >= count
+    are masked to +inf, so count == 0 returns +inf — the rejection sampler's
+    empty-pending case, where min(q, +inf) == q keeps the accept ratio
+    bitwise at 1). Scalar fp32; O(count * d) reads."""
+    x = points[idx].astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    d2 = jnp.sum((x[None, :] - c) ** 2, axis=1)
+    slot = jnp.arange(c.shape[0])
+    return jnp.min(jnp.where(slot < count, d2, jnp.inf))
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0,
                         q_offset=0):
     """Oracle for kernels.flash_attention: exact softmax attention in fp32.

@@ -106,6 +106,72 @@ out["gumbel_far_fraction"] = float(counts[1] / counts.sum())
 out["gumbel_dist_ok"] = counts[1] / counts.sum() > 0.7
 
 # ---------------------------------------------------------------------------
+# 4b. rejection seeding on the mesh: shared-stream pin + exact min_d2
+# ---------------------------------------------------------------------------
+from repro.core.engine import ClusterEngine
+
+eng_m = ClusterEngine("mesh", mesh=mesh, axes=("data", "model"))
+t_m = eng_m.seed(key, pts, 16, sampler="tiled")
+r_m1 = eng_m.seed(key, pts, 16, sampler="rejection", refresh_block=1)
+r_m8 = eng_m.seed(key, pts, 16, sampler="rejection", refresh_block=8)
+out["mesh_rejection_pin_ok"] = bool(
+    np.array_equal(np.asarray(t_m.indices), np.asarray(r_m1.indices)))
+d2_m = jnp.min(jnp.sum((pts[:, None, :] - r_m8.centroids[None]) ** 2, -1), 1)
+out["mesh_rejection_min_d2_ok"] = bool(np.allclose(
+    np.asarray(r_m8.min_d2), np.asarray(d2_m), rtol=2e-4, atol=1e-3))
+props_m = np.asarray(r_m8.proposals)
+accs_m = np.asarray(r_m8.accepts)
+out["mesh_rejection_counters_ok"] = bool(
+    props_m.shape == (16,) and props_m[0] == 0 and accs_m[0] == 0
+    and (accs_m <= props_m).all() and (props_m[1:] >= 1).all())
+
+# ---------------------------------------------------------------------------
+# 4c. dist_gumbel_topl: exact distributed top-l == replicated gumbel_topk,
+#     and the k-means|| mesh init built on it returns valid seeds
+# ---------------------------------------------------------------------------
+from repro.core import collectives, sampling
+from repro.core.kmeans_parallel import kmeans_parallel_init
+
+lw = sampling.safe_log(jnp.abs(jnp.asarray(
+    np.random.default_rng(7).normal(size=4096), jnp.float32)) + 1e-3)
+ktop = jax.random.PRNGKey(21)
+
+
+def topl_dist(l):
+    f = shard_map(
+        lambda w: collectives.dist_gumbel_topl(ktop, w, l,
+                                               ("data", "model"))[0],
+        mesh=mesh, in_specs=P(("data", "model")), out_specs=P())
+    return f(lw)
+
+
+# parity oracle: same per-shard fold_in key schedule, replicated
+def topl_ref(l):
+    S, n_loc = 8, 4096 // 8
+    scores = []
+    for s in range(S):
+        g = lw[s * n_loc:(s + 1) * n_loc] + jax.random.gumbel(
+            jax.random.fold_in(ktop, s), (n_loc,), jnp.float32)
+        scores.append(g)
+    allg = jnp.concatenate(scores)
+    _, idx = jax.lax.top_k(allg, l)
+    return idx
+
+
+got = np.sort(np.asarray(topl_dist(32)))
+want = np.sort(np.asarray(topl_ref(32)))
+out["dist_gumbel_topl_ok"] = bool(np.array_equal(got, want))
+
+kp = kmeans_parallel_init(jax.random.PRNGKey(22), pts, 16, rounds=3,
+                          backend=eng_m.backend)
+phi_p = float(np.sum(np.asarray(kp.min_d2)))
+out["mesh_kmeans_parallel_phi"] = phi_p
+out["mesh_kmeans_parallel_ok"] = bool(
+    np.allclose(np.asarray(kp.centroids),
+                np.asarray(pts)[np.asarray(kp.indices)], rtol=1e-5)
+    and phi_p < 3 * phi_s)
+
+# ---------------------------------------------------------------------------
 # 5. checkpoint reshard restore (elasticity): save on (4,2), load on (2,4)
 # ---------------------------------------------------------------------------
 from repro.checkpoint.manager import CheckpointManager

@@ -188,11 +188,12 @@ def test_fit_result_reports_skips_and_reorder_provenance():
     seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(3), pts,
                                         4).centroids
     res = ClusterEngine("fused").fit(pts, seeds, max_iters=20)
-    # counters beyond the converged iteration stay zero
+    # counters beyond the converged iteration stay zero (the shared contract
+    # in repro.core.telemetry, pinned by tests/test_telemetry_contract.py)
+    from repro.core import telemetry
     it = int(res.n_iters)
     assert it < 20
-    np.testing.assert_array_equal(np.asarray(res.skipped)[it:],
-                                  np.zeros(20 - it))
+    telemetry.check_converged_zeros(res.skipped, it, 20, "skipped")
     assert res.reorder is None          # natural order: no provenance
     ordered = ClusterEngine("fused").fit(pts, seeds, max_iters=20,
                                          order="morton")

@@ -54,6 +54,21 @@ def test_distributed_gumbel_distribution(worker_out):
     assert worker_out["gumbel_dist_ok"], worker_out["gumbel_far_fraction"]
 
 
+def test_mesh_rejection_sampler(worker_out):
+    assert worker_out["mesh_rejection_pin_ok"]
+    assert worker_out["mesh_rejection_min_d2_ok"]
+    assert worker_out["mesh_rejection_counters_ok"]
+
+
+def test_dist_gumbel_topl_exact(worker_out):
+    assert worker_out["dist_gumbel_topl_ok"]
+
+
+def test_mesh_kmeans_parallel_init(worker_out):
+    assert worker_out["mesh_kmeans_parallel_ok"], \
+        (worker_out["mesh_kmeans_parallel_phi"], worker_out["serial_phi"])
+
+
 def test_checkpoint_reshard_elastic(worker_out):
     assert worker_out["reshard_values_ok"]
     assert worker_out["reshard_sharding_ok"]

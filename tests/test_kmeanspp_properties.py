@@ -11,6 +11,7 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import kmeanspp, sampling
+from repro.core.engine import ClusterEngine
 from repro.core.lloyd import assign, update
 
 
@@ -55,6 +56,88 @@ def test_property_tiled_seeding_valid(seed):
     assert ((0 <= idx) & (idx < 96)).all()
     assert len(set(idx.tolist())) == 6
     assert np.isfinite(np.asarray(res.centroids)).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(backend=st.sampled_from(["reference", "fused", "pallas"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_rejection_accept_path_pins_tiled(backend, seed):
+    """ISSUE 6 acceptance: sampler='rejection' with refresh_block=1 (every
+    round freshens the envelope, so p == q bitwise and the first proposal
+    always accepts) consumes the SAME uniform stream as sampler='tiled' and
+    must pick the identical seed indices — across every local backend."""
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (192, 4))
+    key = jax.random.PRNGKey(seed ^ 0xBEE5)
+    eng = ClusterEngine(backend)
+    a = eng.seed(key, pts, 7, sampler="tiled")
+    b = eng.seed(key, pts, 7, sampler="rejection", refresh_block=1)
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    assert np.asarray(b.accepts)[1:].all(), "fresh envelope must accept"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       refresh_block=st.sampled_from([2, 4, 8]))
+def test_property_rejection_seeding_valid(seed, refresh_block):
+    """Stale-envelope rounds (refresh_block > 1): valid distinct indices,
+    finite centroids, and a returned min_d2 that is EXACT over all chosen
+    seeds (the loop settles its refresh debt before returning)."""
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (160, 3))
+    res = ClusterEngine("fused").seed(jax.random.PRNGKey(seed + 1), pts, 6,
+                                      sampler="rejection",
+                                      refresh_block=refresh_block)
+    idx = np.asarray(res.indices)
+    assert ((0 <= idx) & (idx < 160)).all()
+    assert len(set(idx.tolist())) == 6
+    d2 = jnp.min(jnp.sum((pts[:, None, :] - res.centroids[None]) ** 2, -1), 1)
+    np.testing.assert_allclose(np.asarray(res.min_d2), np.asarray(d2),
+                               rtol=2e-4, atol=1e-4)
+
+
+def test_rejection_batched_pins_tiled_per_problem():
+    """The vmapped (batched) path keeps the shared-stream pin: every problem
+    in a (B, n, d) batch picks its single-problem rejection == tiled seeds."""
+    B = 4
+    pts = jax.random.normal(jax.random.PRNGKey(3), (B, 128, 3))
+    keys = jax.random.split(jax.random.PRNGKey(4), B)
+    eng = ClusterEngine("fused")
+    t = eng.seed_batched(keys, pts, 5, sampler="tiled")
+    r = eng.seed_batched(keys, pts, 5, sampler="rejection", refresh_block=1)
+    np.testing.assert_array_equal(np.asarray(t.indices), np.asarray(r.indices))
+    for b in range(B):
+        single = eng.seed(keys[b], pts[b], 5, sampler="rejection",
+                          refresh_block=1)
+        np.testing.assert_array_equal(np.asarray(r.indices[b]),
+                                      np.asarray(single.indices))
+
+
+def test_rejection_matches_tiled_seed_distribution_chi_square():
+    """ISSUE 6 acceptance: beyond the shared-key pin, the MARGINAL seed-index
+    distribution of sampler='rejection' (stale envelopes, refresh_block=4)
+    matches sampler='tiled' — two-sample chi-square over the second seed's
+    index across B independent deterministic keys, computed by hand (no scipy
+    dependency). Both samplers are exact, so the statistic is ~chi2(df) and a
+    loose threshold keeps the test deterministic-and-tight-free of flakes."""
+    n, d, k, B = 64, 2, 3, 400
+    pts = jax.random.normal(jax.random.PRNGKey(11), (n, d))
+    batch = jnp.broadcast_to(pts, (B, n, d))
+    keys = jax.random.split(jax.random.PRNGKey(12), B)
+    eng = ClusterEngine("fused")
+    t = np.asarray(eng.seed_batched(keys, batch, k,
+                                    sampler="tiled").indices)
+    r = np.asarray(eng.seed_batched(keys, batch, k, sampler="rejection",
+                                    refresh_block=4).indices)
+    # pool the 2nd seed's index into 16 buckets of 4 rows; two-sample
+    # chi-square: sum (c1 - c2)^2 / (c1 + c2) ~ chi2(#buckets - 1)
+    bins = 16
+    c_t = np.bincount(t[:, 1] // (n // bins), minlength=bins).astype(float)
+    c_r = np.bincount(r[:, 1] // (n // bins), minlength=bins).astype(float)
+    tot = c_t + c_r
+    stat = float(np.sum(np.where(tot > 0, (c_t - c_r) ** 2 /
+                                 np.maximum(tot, 1.0), 0.0)))
+    # df = 15; P(chi2 > 60) ~ 2e-7 — far past any plausible fp wiggle, but
+    # an off-by-one-distribution bug (e.g. biased fallback) blows well past
+    assert stat < 60.0, (stat, c_t, c_r)
 
 
 @settings(max_examples=20, deadline=None)

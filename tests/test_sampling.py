@@ -76,6 +76,41 @@ def test_all_zero_weights_tiled_falls_back_to_uniform():
     assert len(set(idx)) > 4, idx
 
 
+def test_tile_window_underflow_falls_back_to_uniform_within_tile():
+    """A tile whose PARTIAL survived (so the tile can be drawn) but whose
+    window total underflows to exact 0 under fp roundoff must spread
+    uniformly over the tile — matching categorical's degenerate-weight
+    discipline — instead of collapsing every draw onto the clipped last row."""
+    w = jnp.zeros((8,), jnp.float32)
+    # fabricated stale partials: tile 1 is drawn with certainty, yet its
+    # window (rows 4..7) sums to 0 — the underflow the guard covers
+    partials = jnp.asarray([0.0, 1e-30], jnp.float32)
+    idx = [int(sampling.tiled_index_from_uniform(
+        jnp.float32(u), w, partials, block_n=4))
+        for u in np.linspace(0.0, 0.999, 40)]
+    assert all(4 <= i < 8 for i in idx)
+    assert len(set(idx)) == 4, idx  # uniform spread, not the clip corner
+
+
+def test_tiled_index_healthy_path_unchanged_by_underflow_guard():
+    """The guard must not perturb draws whose window total is positive
+    (bitwise parity pin against the pre-guard two-level derivation)."""
+    w = _weights(64, seed=9, with_zeros=False)
+    bn = 16
+    partials = sampling.tile_partials(w, bn)
+    tcdf = jnp.cumsum(partials)
+    for u in np.linspace(0.0, 0.999, 50):
+        r = jnp.float32(u) * tcdf[-1]
+        t = int(jnp.clip(jnp.searchsorted(tcdf, r, side="right"), 0, 3))
+        r_local = r - (tcdf[t - 1] if t > 0 else 0.0)
+        lcdf = jnp.cumsum(sampling.tile_window(w, jnp.int32(t), bn))
+        li = int(jnp.clip(jnp.searchsorted(lcdf, r_local, side="right"),
+                          0, bn - 1))
+        got = int(sampling.tiled_index_from_uniform(
+            jnp.float32(u), w, partials, block_n=bn))
+        assert got == min(t * bn + li, 63), (u, got, t, li)
+
+
 @pytest.mark.parametrize("method", ["cdf", "gumbel"])
 def test_nan_weights_fall_back_to_valid_index(method):
     w = jnp.asarray([1.0, jnp.nan, 2.0, 3.0], jnp.float32)
