@@ -26,6 +26,8 @@ REQUIRED: dict[str, dict[str, set]] = {
         "fit_skip_vs_iter": {"skip_rate_mean", "prune_rate",
                              "bytes_per_round", "accum_hbm",
                              "accum_hbm_flat"},
+        "guard_overhead": {"validate", "guard_hbm", "call_hbm",
+                           "guard_overhead", "seconds"},
     },
     "seed": {
         "seed_sampler": {"post_round_reads", "skip_rate", "accept_rate",

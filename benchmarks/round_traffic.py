@@ -30,6 +30,16 @@ accumulator-HBM columns ``accum_hbm`` (hierarchical tile → super-tile
 layout, O(n_super·k·d)) vs ``accum_hbm_flat`` (what the flat per-tile
 layout of PR 4 would cost, O(n_tiles·k·d)) — the closed "memory trade".
 
+The ``guard_overhead`` section (ISSUE 7) prices the entry guards: the
+``validate="sanitize"`` policy costs ONE streaming ``isfinite`` reduction
+over the points per entry call (``n*d*4`` modelled bytes, the
+``guard_hbm`` column) and nothing per round — ``guard_overhead`` is that
+one-shot cost as a fraction of the modelled traffic of the guarded call
+itself (``call_hbm``: the end-to-end ``kmeans()`` entry — shared prologue
++ k gated seeding rounds + the Lloyd iterations; acceptance: < 5% on the
+smoke shape), with wall-clock rows for validate on vs off pinning that
+clean input pays ~nothing.
+
 Data is label-sorted blobs: tile-level pruning needs spatially coherent
 tiles (Capó et al.) — the unsorted control row shows skip_rate ~= 0, and
 the `morton` row shows how much `repro.data.ordering` recovers without
@@ -123,6 +133,50 @@ def run_skip_vs_round(rows: list):
         })
 
 
+def run_guard_overhead(rows: list):
+    """Entry-guard cost (ISSUE 7): ``validate='sanitize'`` streams the
+    points through one ``isfinite`` reduction at ENTRY — ``n*d*4`` modelled
+    bytes, once per call (``guard_hbm``) — and nothing per round. The
+    honest amortization unit is the end-to-end ``kmeans()`` call (one
+    guarded entry, one shared prologue, k seeding rounds + the Lloyd
+    iterations): ``call_hbm`` is that call's modelled traffic with guards
+    off, and ``guard_overhead = guard_hbm / call_hbm`` (acceptance: < 5%
+    on the smoke shape). The timing rows pin that clean input pays ~nothing
+    in wall clock too (the guard returns clean arrays unchanged, bitwise)."""
+    key = jax.random.PRNGKey(4)
+    pts = coherent_blobs(N)
+    iters = FIT_ITERS
+    base = ClusterEngine("fused", validate="off")
+    # model the gated traffic from the guards-off run's own skip telemetry
+    sres = base.seed(key, pts, K)
+    n_tiles_seed = -(-N // base.backend.seed_tile(N, D))
+    seed_skip = float(np.asarray(sres.skipped,
+                                 np.float64).mean()) / n_tiles_seed
+    fres = base.fit(pts, sres.centroids, max_iters=iters, tol=-1.0)
+    n_tiles_fit = -(-N // base.backend.seed_tile(N, D, K))
+    fit_skip = float(np.asarray(fres.skipped,
+                                np.float64).mean()) / n_tiles_fit
+    call_hbm = (N * (D + 1) * 4                      # prologue: points+norms
+                + K * round_bytes(N, seed_skip, 4)   # k seeding rounds
+                + iters * fit_bytes(N, fit_skip, 4, d=D, k=K))
+    guard_hbm = N * D * 4          # one isfinite stream over the points
+    for policy in ("off", "sanitize"):
+        eng = ClusterEngine("fused", validate=policy)
+        t = time_fn(lambda: jax.block_until_ready(
+            eng.kmeans(key, pts, K, max_iters=iters,
+                       tol=-1.0).centroids), iters=3)
+        cost = guard_hbm if policy != "off" else 0
+        rows.append({
+            "bench": "guard_overhead", "backend": "fused",
+            "layout": "coherent", "precision": "fp32", "n": N,
+            "rounds": K + iters, "validate": policy,
+            "guard_hbm": cost,
+            "call_hbm": call_hbm,
+            "guard_overhead": round(cost / call_hbm, 4),
+            "seconds": round(t, 6),
+        })
+
+
 # the fit section uses well-separated high-d blobs (the regime where the
 # movement bound pays) at enough tiles that blob interiors get their own
 # tiles; the seeding section above keeps the paper's d=2
@@ -132,7 +186,8 @@ N_FIT_PALLAS = N_FIT if jax.default_backend() == "tpu" else min(N_FIT, 2 ** 14)
 FIT_ITERS = 6 if SMOKE else 10
 
 
-def fit_bytes(n: int, skip_rate: float, dtype_bytes: int) -> int:
+def fit_bytes(n: int, skip_rate: float, dtype_bytes: int, *,
+              d: int = None, k: int = None) -> int:
     """Modelled HBM bytes of ONE gated assignment iteration at the engine
     tile height: per ACTIVE tile the kernel streams the point block (stream
     dtype) + the fp32 cached-norms block + the int32 label / fp32 min_d2 /
@@ -142,14 +197,16 @@ def fit_bytes(n: int, skip_rate: float, dtype_bytes: int) -> int:
     live in ANY memory space — no per-step DMA — and skipped tiles move
     nothing."""
     from repro.core import bounds as bnd
-    bn = choose_block_n(n, D_FIT, K_FIT, batched=True)
+    d = D_FIT if d is None else d
+    k = K_FIT if k is None else k
+    bn = choose_block_n(n, d, k, batched=True)
     n_tiles = -(-n // bn)
     tps = bnd.tiles_per_super(n_tiles)
     active = round(n_tiles * (1.0 - skip_rate))
-    per_tile = (bn * (D_FIT * dtype_bytes + 4)      # points + norms in
+    per_tile = (bn * (d * dtype_bytes + 4)          # points + norms in
                 + 2 * bn * (4 + 4 + 4)              # assign/md/lb i/o
-                + 4 * (K_FIT * D_FIT + K_FIT) / tps  # super sums/counts,
-                                                     # amortized over tps
+                + 4 * (k * d + k) / tps             # super sums/counts,
+                                                    # amortized over tps
                 + 3 * 4)                            # partial/gap/pruned
     return round(active * per_tile)
 
@@ -233,11 +290,14 @@ def main():
     rows: list = []
     run(rows)
     run_skip_vs_round(rows)
+    run_guard_overhead(rows)
     run_fit(rows)
     run_fit_skip_vs_iter(rows)
     header = ["bench", "backend", "layout", "precision", "n", "rounds",
               "skip_rate_mean", "skip_rate_last", "prune_rate",
-              "bytes_per_round", "accum_hbm", "accum_hbm_flat", "seconds"]
+              "bytes_per_round", "accum_hbm", "accum_hbm_flat",
+              "validate", "guard_hbm", "call_hbm", "guard_overhead",
+              "seconds"]
     emit(rows, header)
     write_json("round", {
         "meta": {"smoke": SMOKE, "N": N, "D": D, "K": K, "seeds": SEEDS,

@@ -1,4 +1,5 @@
 """repro.checkpoint — atomic, async, reshardable checkpoints."""
 from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.cluster import restore_bound_state, save_bound_state
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "save_bound_state", "restore_bound_state"]

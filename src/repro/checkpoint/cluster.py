@@ -1,0 +1,71 @@
+"""Clustering-specific checkpoint helpers: BoundState across shard counts.
+
+The engine's loop-carried ``BoundState`` is SHARD-LOCAL: its per-tile
+partials/tile_max (and the fit state's super-tile accumulators) are laid out
+for one (shard count, tile height) geometry. A checkpoint written on 8
+shards restored onto 4 would interleave tiles from two old shards into each
+new one — silently wrong bounds, the worst failure mode the gate can have
+(a wrong SKIP is a wrong answer; the gate's exactness argument assumes the
+carried partials describe the carried min_d2).
+
+So restore is geometry-checked: ``restore_bound_state`` returns the saved
+state only when the current (shards, tile) matches what was saved, and
+``None`` otherwise — the caller's contract is to REBUILD the state with one
+ungated round (exact, so the resumed run's results are bitwise unaffected;
+only skip counters differ). A missing or non-bound-state checkpoint is a
+typed ``CheckpointError``, never a silent fresh start.
+
+The generic carry serialization for mid-run resume lives in
+``ClusterEngine._seed_checkpointed`` / ``_fit_checkpointed`` (single-host
+geometry, where the carry round-trips bit-exactly); this module is the
+multi-host half: per-shard bound state saved under a geometry stamp.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.bounds import BoundState
+from repro.core.guards import CheckpointError
+
+__all__ = ["save_bound_state", "restore_bound_state"]
+
+
+def _mgr(directory: Union[str, CheckpointManager]) -> CheckpointManager:
+    if isinstance(directory, CheckpointManager):
+        return directory
+    # blocking writes: bound state is small and the caller's next action
+    # (resume / reshard probe) reads it right back
+    return CheckpointManager(directory, async_save=False)
+
+
+def save_bound_state(directory, step: int, state: BoundState, *,
+                     shards: int, tile: int) -> CheckpointManager:
+    """Persist a (shard-local) BoundState under its geometry stamp."""
+    mgr = _mgr(directory)
+    mgr.save(step, state, blocking=True,
+             meta={"kind": "bound_state", "shards": int(shards),
+                   "tile": int(tile)})
+    return mgr
+
+
+def restore_bound_state(directory, like: BoundState, *, shards: int,
+                        tile: int,
+                        step: Optional[int] = None) -> Optional[BoundState]:
+    """The saved BoundState when the (shards, tile) geometry matches, else
+    ``None`` — the caller then rebuilds via one ungated round. ``like``
+    supplies the pytree structure/dtypes (same contract as
+    ``CheckpointManager.restore``)."""
+    mgr = _mgr(directory)
+    st = mgr.latest_step() if step is None else step
+    if st is None:
+        raise CheckpointError(f"no bound-state checkpoint under {mgr.dir}")
+    meta = mgr.read_manifest(st).get("meta") or {}
+    if meta.get("kind") != "bound_state":
+        raise CheckpointError(
+            f"step {st} under {mgr.dir} is not a bound-state checkpoint "
+            f"(meta={meta})")
+    if meta.get("shards") != int(shards) or meta.get("tile") != int(tile):
+        return None
+    _, state = mgr.restore(like, step=st)
+    return state

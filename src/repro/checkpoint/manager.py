@@ -55,13 +55,19 @@ class CheckpointManager:
         self._pending: Optional[threading.Thread] = None
 
     # -- save ---------------------------------------------------------------
-    def save(self, step: int, state: Any, *, blocking: bool = False):
-        """Snapshot `state` (pytree of jax/np arrays) and write step_<step>."""
+    def save(self, step: int, state: Any, *, blocking: bool = False,
+             meta: Optional[dict] = None):
+        """Snapshot `state` (pytree of jax/np arrays) and write step_<step>.
+        ``meta`` (optional JSON-able dict) is stored in the manifest — the
+        restore side uses it to verify problem-shape compatibility before
+        trusting the leaves (see ``read_manifest``)."""
         named = []
         dtypes = []
+        shapes = []
         for n, x in _flatten_with_names(state):
             a = np.asarray(jax.device_get(x))
             dtypes.append(str(a.dtype))
+            shapes.append(list(a.shape))
             # npz can't serialize ml_dtypes (bfloat16 etc.) — store raw bytes;
             # restore() rebuilds from the manifest dtype + the template leaf
             if a.dtype.kind == "V" or a.dtype.name not in np.sctypeDict:
@@ -70,7 +76,10 @@ class CheckpointManager:
             named.append((n, a))
         treedef = jax.tree_util.tree_structure(state)
         manifest = {"step": step, "treedef": str(treedef),
-                    "leaves": [n for n, _ in named], "dtypes": dtypes}
+                    "leaves": [n for n, _ in named], "dtypes": dtypes,
+                    "shapes": shapes}
+        if meta is not None:
+            manifest["meta"] = meta
 
         def write():
             tmp = self.dir / f"step_{step:08d}.tmp"
@@ -110,6 +119,18 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def read_manifest(self, step: Optional[int] = None) -> dict:
+        """The JSON manifest of ``step`` (latest when None) WITHOUT loading
+        any arrays — the cheap compatibility probe a resuming caller runs
+        before ``restore``."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        return json.loads((d / "manifest.json").read_text())
 
     def restore(self, like: Any, *, step: Optional[int] = None,
                 shardings: Any = None) -> tuple[int, Any]:

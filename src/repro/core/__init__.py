@@ -12,6 +12,9 @@ from repro.core.distributed import (dist_kmeans, dist_kmeanspp, dist_lloyd,
                                     dist_gumbel_choice, mesh_engine, ring_psum,
                                     take_global)
 from repro.core import quality, sampling
+from repro.core.guards import (CheckpointError, ClusteringError,
+                               CorruptedStateError, InvalidInputError,
+                               KernelFailureError, PipelineError)
 
 __all__ = [
     "Backend", "ClusterEngine", "FusedBackend", "KmeansppResult",
@@ -20,4 +23,6 @@ __all__ = [
     "pairwise_d2", "point_d2", "random_init", "kmeans_parallel_init",
     "dist_kmeans", "dist_kmeanspp", "dist_lloyd", "dist_gumbel_choice",
     "mesh_engine", "ring_psum", "take_global", "quality", "sampling",
+    "ClusteringError", "InvalidInputError", "CorruptedStateError",
+    "PipelineError", "KernelFailureError", "CheckpointError",
 ]

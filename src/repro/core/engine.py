@@ -60,14 +60,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Callable, ClassVar, Iterable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import bounds, collectives, sampling
+from repro.core import bounds, collectives, guards, sampling
 from repro.core.bounds import BoundState, RoundCache
+from repro.core.guards import (CheckpointError, KernelFailureError,
+                               PipelineError)
 
 # ---------------------------------------------------------------------------
 # result contracts + distance helpers
@@ -90,6 +93,10 @@ class KmeansppResult(NamedTuple):
     accepts: Optional[jax.Array] = None    # (k,) int32 0/1 ratio-test accepts
                                            # per round (0 also when the round
                                            # fell back to an exact full draw)
+    recovered: Optional[jax.Array] = None  # (k,) int32 0/1 corruption-
+                                           # recovery flags per round (None
+                                           # when the in-flight guard is off;
+                                           # see core.telemetry)
     # counter contract (shared with LloydResult; pinned by
     # tests/test_telemetry_contract.py): fixed length (k,), one slot per
     # round, slots of rounds that did not run the counted event are ZERO —
@@ -123,6 +130,10 @@ class LloydResult(NamedTuple):
     reorder: Optional[jax.Array] = None  # (n,) int32 row permutation the
                                          # kernels saw (None = natural order)
                                          # — provenance for pruning audits
+    recovered: Optional[jax.Array] = None  # (max_iters,) int32 0/1
+                                           # corruption-recovery flags per
+                                           # iteration (None when the guard
+                                           # is off; see core.telemetry)
 
 
 class AssignRound(NamedTuple):
@@ -814,8 +825,139 @@ def make_backend(name: Union[str, Backend], **opts) -> Backend:
 # ---------------------------------------------------------------------------
 
 
+def _inject_seed_fault(fault, m, min_d2, state):
+    """Deterministic corruption hook for the seeding loops (see
+    repro.testing.faults.FaultSpec). Poisons the CARRIED round inputs at
+    round ``fault.round`` — exactly the state a flipped bit / bad DMA would
+    hit — and is a no-op for every other round and for fault=None."""
+    if fault is None:
+        return min_d2, state
+    kind = getattr(fault, "kind", None)
+    trip = jnp.asarray(m == fault.round)
+    if kind == "nan_tile":
+        rows = jnp.arange(min_d2.shape[0]) < min(64, min_d2.shape[0])
+        bad = jnp.where(rows & trip, jnp.nan, 0.0).astype(min_d2.dtype)
+        return min_d2 + bad, state
+    if kind == "nan_state" and state is not None:
+        parts = jnp.where(trip, state.partials.at[0].set(jnp.nan),
+                          state.partials)
+        return min_d2, state._replace(partials=parts)
+    return min_d2, state
+
+
+def _seed_parts(pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
+                init_min_d2, init_state: Optional[BoundState] = None,
+                guard: bool = False, tile: Optional[int] = None, fault=None):
+    """Builds the generic k-means++ loop as (make_init, body, finish) so the
+    one-shot ``_seed_loop`` and the checkpointed chunk runner share one body.
+
+    carry = (m, key, centroids, indices, min_d2, state, skips, prunes, rec)
+
+    ``guard`` arms in-flight corruption detection: every round's psum'd
+    ``total`` (the paper's thrust::reduce scalar — already computed, already
+    replicated on a mesh) doubles as the finite flag. A fresh NaN anywhere
+    the round computed reaches ``total`` through the partial tree (computed
+    tiles re-sum their rows; a poisoned carried partial is summed directly),
+    so a non-finite total means the carry is untrusted: the heal branch
+    DISCARDS min_d2 and the bound state and refolds rounds 0..m-1 ungated
+    from the clean +inf carry. Recovery is bitwise: gated == ungated
+    exactly, and the refold applies the same min-folds in the same order a
+    never-corrupted run applied, so the healed carry (and every seed drawn
+    from it) is bit-identical to the uncorrupted trajectory. Corruption
+    that strikes rows of a tile the gate is currently SKIPPING is not
+    witnessed until that tile next activates (its rows are by construction
+    neither read nor written); see docs/engine.md "Failure semantics"."""
+    d = pts.shape[1]
+    gated = init_state is not None
+    if guard and tile is None:
+        raise ValueError("guarded seeding needs the partials tile height")
+
+    def heal_min_d2(m, centroids):
+        def fold(j, mdc):
+            return round_fn(centroids[j], mdc, None).min_d2
+        return jax.lax.fori_loop(0, m, fold, init_min_d2)
+
+    def checked_round(m, centroids, min_d2, state):
+        rnd = round_fn(centroids[m - 1], min_d2, state)
+        zi = jnp.zeros((), jnp.int32)
+        if not guard:
+            st = (None if not gated
+                  else BoundState(rnd.partials, rnd.tile_max))
+            return (rnd.min_d2, rnd.partials, st,
+                    jnp.asarray(rnd.skipped, jnp.int32),
+                    jnp.asarray(rnd.pruned, jnp.int32), zi)
+        healthy = jnp.isfinite(rnd.total)
+
+        def keep(_):
+            out = (rnd.min_d2, rnd.partials,
+                   jnp.asarray(rnd.skipped, jnp.int32),
+                   jnp.asarray(rnd.pruned, jnp.int32))
+            return out + (rnd.tile_max,) if gated else out
+
+        def heal(_):
+            md = heal_min_d2(m, centroids)
+            wmd = md if w is None else md * w
+            parts = sampling.tile_partials(wmd, tile)
+            out = (md, parts, zi, zi)
+            return out + (bounds.tile_reduce_max(md, tile),) if gated else out
+
+        out = jax.lax.cond(healthy, keep, heal, None)
+        md, parts, rs, rp = out[:4]
+        st = BoundState(parts, out[4]) if gated else None
+        return md, parts, st, rs, rp, 1 - healthy.astype(jnp.int32)
+
+    def make_init(key):
+        key, k0 = jax.random.split(key)
+        first = first_fn(k0)
+        centroids = jnp.zeros((k, d), pts.dtype).at[0].set(take_fn(first))
+        indices = jnp.zeros((k,), jnp.int32).at[0].set(first)
+        zk = jnp.zeros((k,), jnp.int32)
+        return (jnp.ones((), jnp.int32), key, centroids, indices,
+                init_min_d2, init_state, zk, zk, zk)
+
+    def body(carry):
+        m, key, centroids, indices, min_d2, state, skips, prunes, rec = carry
+        min_d2, state = _inject_seed_fault(fault, m, min_d2, state)
+        min_d2, partials, state, rs, rp, rc = checked_round(
+            m, centroids, min_d2, state)
+        skips = skips.at[m - 1].set(rs)
+        prunes = prunes.at[m - 1].set(rp)
+        rec = rec.at[m - 1].set(rc)
+        # rnd.total is the paper's thrust::reduce term — kept for phi logging
+        # (and, under guard, as the finite flag); the cdf sampler normalizes
+        # by its OWN cumsum's last entry instead: serial and parallel
+        # reductions sum in different orders, and a 1-ulp difference in the
+        # scale flips boundary samples. With cdf[-1] every backend picks
+        # bitwise-identical seeds (the paper's quality claim, verified
+        # exactly in tests/test_engine.py). The tiled sampler draws from the
+        # round partials instead, touching O(n/tile + tile) elements.
+        key, ks = jax.random.split(key)
+        weight = min_d2 if w is None else min_d2 * w
+        nxt = sample_fn(ks, weight, partials)
+        centroids = jax.lax.dynamic_update_index_in_dim(
+            centroids, take_fn(nxt), m, 0)
+        indices = indices.at[m].set(nxt)
+        return (m + 1, key, centroids, indices, min_d2, state, skips,
+                prunes, rec)
+
+    def finish(carry):
+        _, _, centroids, indices, min_d2, state, skips, prunes, rec = carry
+        # final D^2 update against the last chosen centroid (callers like
+        # k-means|| want the potential phi over *all* k centroids).
+        min_d2, state = _inject_seed_fault(fault, k, min_d2, state)
+        min_d2, _parts, _st, rs, rp, rc = checked_round(
+            k, centroids, min_d2, state)
+        skips = skips.at[k - 1].set(rs)
+        prunes = prunes.at[k - 1].set(rp)
+        rec = rec.at[k - 1].set(rc)
+        return centroids, indices, min_d2, skips, prunes, rec
+
+    return make_init, body, finish
+
+
 def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
-               init_min_d2, init_state: Optional[BoundState] = None):
+               init_min_d2, init_state: Optional[BoundState] = None,
+               guard: bool = False, tile: Optional[int] = None, fault=None):
     """Generic k-means++ loop. The four hooks are the only difference between
     the single-device and the shard_map execution; the loop structure (and its
     PRNG key schedule) is shared so all backends pick identical seeds.
@@ -824,47 +966,16 @@ def _seed_loop(key, pts, k, w, *, round_fn, first_fn, sample_fn, take_fn,
     round's (partials, tile_max) into each ``round_fn`` call, so rounds skip
     every tile the triangle-inequality bound proves unchanged. Round 1
     starts from tile_max = +inf (nothing skippable), which also fills the
-    state. The per-round skipped-tile counts come back as a (k,) array."""
-    d = pts.shape[1]
-    key, k0 = jax.random.split(key)
-    first = first_fn(k0)
-    centroids = jnp.zeros((k, d), pts.dtype).at[0].set(take_fn(first))
-    indices = jnp.zeros((k,), jnp.int32).at[0].set(first)
-    skips = jnp.zeros((k,), jnp.int32)
-    prunes = jnp.zeros((k,), jnp.int32)
-
-    def body(m, carry):
-        key, centroids, indices, min_d2, state, skips, prunes = carry
-        rnd = round_fn(centroids[m - 1], min_d2, state)
-        min_d2 = rnd.min_d2
-        skips = skips.at[m - 1].set(rnd.skipped)
-        prunes = prunes.at[m - 1].set(rnd.pruned)
-        # rnd.total is the paper's thrust::reduce term — kept for phi logging;
-        # the cdf sampler normalizes by its OWN cumsum's last entry instead:
-        # serial and parallel reductions sum in different orders, and a 1-ulp
-        # difference in the scale flips boundary samples. With cdf[-1] every
-        # backend picks bitwise-identical seeds (the paper's quality claim,
-        # verified exactly in tests/test_engine.py). The tiled sampler draws
-        # from rnd.partials instead, touching O(n/tile + tile) elements.
-        key, ks = jax.random.split(key)
-        weight = min_d2 if w is None else min_d2 * w
-        nxt = sample_fn(ks, weight, rnd.partials)
-        centroids = jax.lax.dynamic_update_index_in_dim(
-            centroids, take_fn(nxt), m, 0)
-        indices = indices.at[m].set(nxt)
-        state = (None if state is None
-                 else BoundState(rnd.partials, rnd.tile_max))
-        return key, centroids, indices, min_d2, state, skips, prunes
-
-    key, centroids, indices, min_d2, state, skips, prunes = jax.lax.fori_loop(
-        1, k, body,
-        (key, centroids, indices, init_min_d2, init_state, skips, prunes))
-    # final D^2 update against the last chosen centroid (callers like
-    # k-means|| want the potential phi over *all* k centroids).
-    rnd = round_fn(centroids[k - 1], min_d2, state)
-    skips = skips.at[k - 1].set(rnd.skipped)
-    prunes = prunes.at[k - 1].set(rnd.pruned)
-    return centroids, indices, rnd.min_d2, skips, prunes
+    state. The per-round skipped-tile counts come back as a (k,) array;
+    ``guard`` additionally verifies each round's total and heals poisoned
+    carries (see ``_seed_parts``) — the (k,) recovery flags are the sixth
+    output."""
+    make_init, body, finish = _seed_parts(
+        pts, k, w, round_fn=round_fn, first_fn=first_fn, sample_fn=sample_fn,
+        take_fn=take_fn, init_min_d2=init_min_d2, init_state=init_state,
+        guard=guard, tile=tile, fault=fault)
+    carry = jax.lax.while_loop(lambda c: c[0] < k, body, make_init(key))
+    return finish(carry)
 
 
 _REJECT_ATTEMPTS = 8  # truncation depth of the rejection loop; past it the
@@ -876,7 +987,9 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
                          refresh_block, init_min_d2,
                          init_state: Optional[BoundState] = None,
                          init_partials: Optional[jax.Array] = None,
-                         max_attempts: int = _REJECT_ATTEMPTS):
+                         max_attempts: int = _REJECT_ATTEMPTS,
+                         tile: Optional[int] = None, guard: bool = False,
+                         fault=None, allreduce=None):
     """Rejection-sampling k-means++ loop (sampler='rejection').
 
     Structural difference vs ``_seed_loop``: a round does NOT run the full
@@ -914,9 +1027,30 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
     never touched the dataset and the refresh kernel's (pod-wide on a mesh)
     count otherwise; ``props``/``accs`` count envelope draws and ratio-test
     accepts (the counter contract in ``KmeansppResult``).
+
+    Envelope guard (always on): the rejection sampler's exactness needs the
+    stale envelope to DOMINATE the current weights pointwise — a negative or
+    NaN stale partial breaks that precondition, and an accepted draw against
+    a broken envelope is silently biased. Every round therefore checks the
+    (n_tiles,) partials for fp-validity (one O(n_tiles) read, psum-combined
+    on a mesh via ``allreduce``) and, when invalid, REBUILDS the stale
+    envelope BEFORE proposing: the corrupt carried (min_d2, partials, bound
+    state) are discarded and the m - count centroids the envelope is
+    supposed to cover are refolded ungated from the clean +inf carry.
+    Pending rows stay pending (they are clean, carried separately), so the
+    healed envelope is BITWISE the stale envelope a never-corrupted run
+    carries — every subsequent proposal, accept test and chosen seed
+    replays identically (recovery is bitwise, flagged in ``rec[m]``). A
+    healthy envelope executes bitwise the unguarded loop (same attempt
+    keys, same uniforms). ``guard`` additionally verifies the final
+    settle-refresh total; ``tile`` (the partials tile height) is required
+    for the rebuild path.
     """
     d = pts.shape[1]
     P = max(int(refresh_block), 1)
+    ar = (lambda x: x) if allreduce is None else allreduce
+    if tile is None:
+        raise ValueError("the rejection loop needs the partials tile height")
     key, k0 = jax.random.split(key)
     first = first_fn(k0)
     c0 = take_fn(first)
@@ -926,6 +1060,7 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
     prunes = jnp.zeros((k,), jnp.int32)
     props = jnp.zeros((k,), jnp.int32)
     accs = jnp.zeros((k,), jnp.int32)
+    rec = jnp.zeros((k,), jnp.int32)
     # pending starts as P copies of the first centroid with count = P - 1:
     # round 1's append fills it, forcing the initial refresh (duplicate rows
     # are value-noops under the min-fold), which also replaces the +inf
@@ -942,9 +1077,28 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
                 jnp.asarray(rnd.pruned, jnp.int32),
                 jnp.zeros_like(count))
 
+    def heal_stale(m, centroids, count):
+        # the carried (md, partials, state) are untrusted: refold the
+        # REFRESHED PREFIX — centroids 0..m-count-1, exactly the set the
+        # stale envelope is supposed to cover — ungated from the clean +inf
+        # carry. Rows past the prefix are replaced by centroid 0 (duplicate
+        # rows are value-noops under the min-fold) so the block shape stays
+        # static. min-folds are exact and order-independent, so the rebuilt
+        # envelope is BITWISE the stale one a never-corrupted run carries;
+        # the still-pending rows remain pending (count unchanged) and the
+        # round's proposals replay identically.
+        have = jnp.arange(k)[:, None] < (m - count)
+        block = jnp.where(have, centroids, centroids[0][None, :]).astype(
+            pending.dtype)
+        rnd = round_fn(block, init_min_d2, None)
+        state = (None if init_state is None
+                 else BoundState(rnd.partials,
+                                 bounds.tile_reduce_max(rnd.min_d2, tile)))
+        return rnd.min_d2, rnd.partials, state
+
     def body(m, carry):
         (key, centroids, indices, md, partials, state, pending, count,
-         skips, prunes, props, accs) = carry
+         skips, prunes, props, accs, rec) = carry
         pending = jax.lax.dynamic_update_index_in_dim(
             pending, centroids[m - 1].astype(pending.dtype), count, 0)
         count = count + 1
@@ -956,6 +1110,21 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
             lambda op: refresh(op[0], op[2], op[3], op[4]),
             lambda op: (op[0], op[1], op[2], rs0, rp0, op[4]),
             (md, partials, state, pending, count))
+
+        if fault is not None and getattr(fault, "kind", None) == "neg_envelope":
+            trip = jnp.asarray(m == fault.round)
+            partials = jnp.where(trip, partials.at[0].set(-1.0), partials)
+
+        # envelope fp-validity: one scalar reduction (psum'd on a mesh).
+        # Invalid -> rebuild the stale envelope BEFORE proposing, so the
+        # round's proposal/accept stream replays bitwise the clean run's.
+        bad = jnp.sum(jnp.where(
+            jnp.isfinite(partials) & (partials >= 0), 0.0, 1.0))
+        env_ok = ar(bad) == 0
+        md, partials, state = jax.lax.cond(
+            env_ok, lambda op: op[:3],
+            lambda op: heal_stale(m, centroids, op[3]),
+            (md, partials, state, count))
 
         key, ks = jax.random.split(key)
         weight = bounds.seed_envelope(md, w)
@@ -986,26 +1155,37 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
         prunes = prunes.at[m - 1].set(rp)
         props = props.at[m].set(att)
         accs = accs.at[m].set(ok.astype(jnp.int32))
+        rec = rec.at[m].set(1 - env_ok.astype(jnp.int32))
         return (key, centroids, indices, md, partials, state, pending, count,
-                skips, prunes, props, accs)
+                skips, prunes, props, accs, rec)
 
     # the zeros init is never drawn from: round 1's append always fills the
     # buffer (count starts at P - 1), so a refresh precedes the first proposal
     if init_partials is None:
         init_partials = jnp.zeros((n_tiles,), jnp.float32)
     (key, centroids, indices, md, partials, state, pending, count, skips,
-     prunes, props, accs) = jax.lax.fori_loop(
+     prunes, props, accs, rec) = jax.lax.fori_loop(
         1, k, body,
         (key, centroids, indices, init_min_d2, init_partials,
-         init_state, pending, count, skips, prunes, props, accs))
+         init_state, pending, count, skips, prunes, props, accs, rec))
     # settle the refresh debt: fold the last chosen centroid plus every
     # still-pending one, so the returned min_d2 is exact over all k seeds
     pending = jax.lax.dynamic_update_index_in_dim(
         pending, centroids[k - 1].astype(pending.dtype), count, 0)
     rnd = round_fn(pending, md, state)
+    final_md = rnd.min_d2
+    if guard:
+        healthy = jnp.isfinite(rnd.total)
+        final_md = jax.lax.cond(
+            healthy,
+            lambda _: rnd.min_d2,
+            lambda _: round_fn(centroids.astype(pending.dtype),
+                               init_min_d2, None).min_d2,
+            None)
+        rec = rec.at[k - 1].max(1 - healthy.astype(jnp.int32))
     skips = skips.at[k - 1].set(jnp.asarray(rnd.skipped, jnp.int32))
     prunes = prunes.at[k - 1].set(jnp.asarray(rnd.pruned, jnp.int32))
-    return centroids, indices, rnd.min_d2, skips, prunes, props, accs
+    return centroids, indices, final_md, skips, prunes, props, accs, rec
 
 
 def _stream_of(pts: jax.Array, precision: str) -> jax.Array:
@@ -1025,7 +1205,8 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
                 sampler: str = "cdf", *, precision: str = "fp32",
                 bound_gate: bool = True,
                 cache: Optional[RoundCache] = None,
-                refresh_block: int = 8) -> KmeansppResult:
+                refresh_block: int = 8, guard: bool = False,
+                fault=None, parts: bool = False):
     """Full k-means++ seeding through `backend` (untraced core; see
     ClusterEngine.seed for the jitted entry). Samplers: 'cdf' (full inverse
     CDF — the serial algorithm; fused and pallas pick bitwise-identical
@@ -1051,7 +1232,8 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     if backend.distributed:
         return _seed_mesh(key, points, k, weights, backend, sampler,
                           precision=precision, bound_gate=bound_gate,
-                          refresh_block=refresh_block)
+                          refresh_block=refresh_block, guard=guard,
+                          fault=fault)
     n, d = points.shape
     compute_dtype = jnp.promote_types(points.dtype, jnp.float32)
     pts = points.astype(compute_dtype)
@@ -1100,7 +1282,7 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
             return sampling.categorical_tiled(
                 kf, weight, partials, block_n=tile).astype(jnp.int32)
 
-        centroids, indices, min_d2, skips, prunes, props, accs = \
+        centroids, indices, min_d2, skips, prunes, props, accs, rec = \
             _seed_rejection_loop(
                 key, pts, k, w,
                 round_fn=lambda c, md, st: backend.seed_round(
@@ -1112,10 +1294,11 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
                 n_tiles=n_tiles, all_tiles=n_tiles,
                 refresh_block=refresh_block,
                 init_min_d2=jnp.full((n,), jnp.inf, compute_dtype),
-                init_state=init_state)
+                init_state=init_state, tile=tile, guard=guard, fault=fault)
         return KmeansppResult(centroids.astype(points.dtype), indices,
                               min_d2, skips if bound_gate else None,
-                              prunes if bound_gate else None, props, accs)
+                              prunes if bound_gate else None, props, accs,
+                              recovered=rec if guard else None)
 
     if sampler == "tiled":
         def sample_fn(ks, weight, partials):
@@ -1126,8 +1309,7 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
             return sampling.categorical(
                 ks, weight, method=sampler).astype(jnp.int32)
 
-    centroids, indices, min_d2, skips, prunes = _seed_loop(
-        key, pts, k, w,
+    loop_kwargs = dict(
         round_fn=lambda c, md, st: backend.seed_round(
             stream, c.astype(stream.dtype)[None, :], md, w, cache=cache,
             state=st),
@@ -1136,16 +1318,25 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
         take_fn=lambda i: pts[i],
         init_min_d2=jnp.full((n,), jnp.inf, compute_dtype),
         init_state=init_state,
+        guard=guard, tile=tile, fault=fault,
     )
+    if parts:
+        # the checkpointed driver runs the SAME loop in resumable chunks:
+        # hand it (make_init, body, finish) instead of running to completion
+        return _seed_parts(pts, k, w, **loop_kwargs)
+    centroids, indices, min_d2, skips, prunes, rec = _seed_loop(
+        key, pts, k, w, **loop_kwargs)
     return KmeansppResult(centroids.astype(points.dtype), indices, min_d2,
                           skips if bound_gate else None,
-                          prunes if bound_gate else None)
+                          prunes if bound_gate else None,
+                          recovered=rec if guard else None)
 
 
 def _seed_mesh(key, points, k, weights, backend: MeshBackend,
                sampler: str = "cdf", *, precision: str = "fp32",
                bound_gate: bool = True,
-               refresh_block: int = 8) -> KmeansppResult:
+               refresh_block: int = 8, guard: bool = False,
+               fault=None) -> KmeansppResult:
     """Distributed seeding: the same loop inside shard_map, with the sampler
     swapped for the exact distributed Gumbel-max and point lookup for the
     psum broadcast. Collective traffic per round is independent of N.
@@ -1218,7 +1409,9 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
                 refresh_block=refresh_block,
                 init_min_d2=init_min_d2, init_state=init_state,
                 init_partials=collectives.pvary(
-                    jnp.zeros((n_tiles,), jnp.float32), axes))
+                    jnp.zeros((n_tiles,), jnp.float32), axes),
+                tile=tile, guard=guard, fault=fault,
+                allreduce=lambda x: jax.lax.psum(x, axes))
 
         if sampler == "tiled":
             def sample_fn(ks, weight, partials):
@@ -1239,27 +1432,30 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
             take_fn=take_fn,
             init_min_d2=init_min_d2,
             init_state=init_state,
+            guard=guard, tile=tile, fault=fault,
         )
 
     if sampler == "rejection":
         mapped = collectives.shard_map(
             local_fn, mesh=backend.mesh,
             in_specs=(P(), P(axes)),
-            out_specs=(P(), P(), P(axes), P(), P(), P(), P()))
-        centroids, indices, min_d2, skips, prunes, props, accs = mapped(
+            out_specs=(P(), P(), P(axes), P(), P(), P(), P(), P()))
+        centroids, indices, min_d2, skips, prunes, props, accs, rec = mapped(
             key, points)
         return KmeansppResult(centroids.astype(points.dtype), indices,
                               min_d2, skips if bound_gate else None,
-                              prunes if bound_gate else None, props, accs)
+                              prunes if bound_gate else None, props, accs,
+                              recovered=rec if guard else None)
 
     mapped = collectives.shard_map(
         local_fn, mesh=backend.mesh,
         in_specs=(P(), P(axes)),
-        out_specs=(P(), P(), P(axes), P(), P()))
-    centroids, indices, min_d2, skips, prunes = mapped(key, points)
+        out_specs=(P(), P(), P(axes), P(), P(), P()))
+    centroids, indices, min_d2, skips, prunes, rec = mapped(key, points)
     return KmeansppResult(centroids.astype(points.dtype), indices, min_d2,
                           skips if bound_gate else None,
-                          prunes if bound_gate else None)
+                          prunes if bound_gate else None,
+                          recovered=rec if guard else None)
 
 
 # ---------------------------------------------------------------------------
@@ -1267,9 +1463,136 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
 # ---------------------------------------------------------------------------
 
 
+def _inject_fit_fault(fault, i, rnd: AssignRound) -> AssignRound:
+    """Test-only corruption of one Lloyd iteration's outputs (fault matrix).
+    'zero_counts' halves the psum'd sums/counts — a dropped shard's
+    contribution — tripping the count-mass check; 'nan_state' poisons the
+    carried partial-sum inertia, tripping the finite check."""
+    if fault is None:
+        return rnd
+    trip = jnp.asarray(i == fault.round)
+    kind = getattr(fault, "kind", None)
+    if kind == "zero_counts":
+        s = jnp.where(trip, 0.5, 1.0)
+        return rnd._replace(sums=rnd.sums * s, counts=rnd.counts * s)
+    if kind == "nan_state" and rnd.state is not None:
+        parts = jnp.where(trip, rnd.state.partials.at[0].set(jnp.nan),
+                          rnd.state.partials)
+        return rnd._replace(state=rnd.state._replace(partials=parts))
+    return rnd
+
+
+def _fit_gated_parts(pts, stream, init_centroids, backend: Backend,
+                     max_iters, tol, empty, norms, cache, *,
+                     guard: bool = False, fault=None):
+    """(cond, body, make_init) of the gated Lloyd while-loop — the carry is
+    ``(i, cents, prev_inertia, inertia, prev_cents, bstate, skips, prunes,
+    rec)``. Split out of ``_fit_loop`` so the checkpointed driver can run
+    the SAME loop in chunks (``while_loop(cond & (i < stop), body, carry)``)
+    and serialize the carry between chunks, with bitwise-identical
+    iterations.
+
+    ``guard`` adds the in-flight corruption detector: each iteration checks
+    the psum'd inertia for finiteness and the psum'd count mass against the
+    global n (a dropped shard's contribution shows up as missing mass —
+    both checks are O(1) on top of reductions the round already does). On a
+    trip the carried bound state is DISCARDED and the iteration re-runs
+    ungated from the same centroids — exact gating makes the healed results
+    bitwise those of a never-corrupted run; only the skip/prune counters
+    differ (the rebuilt state has no per-point bounds, so the next
+    iteration prunes less). ``rec[i]`` records the trip.
+    """
+    n, d = pts.shape
+    k = init_centroids.shape[0]
+    tile = backend.seed_tile(n, d, k)
+    n_tiles = -(-n // tile)
+    n_super = bounds.n_supers(n_tiles)
+    pv = backend.pvary
+    init_state = BoundState(
+        pv(jnp.zeros((n_tiles,), jnp.float32)),
+        tile_gap=pv(jnp.full((n_tiles,), -jnp.inf, jnp.float32)),
+        tile_sums=pv(jnp.zeros((n_super, k, d), jnp.float32)),
+        tile_counts=pv(jnp.zeros((n_super, k), jnp.float32)),
+        assignment=pv(jnp.zeros((n,), jnp.int32)),
+        min_d2=pv(jnp.zeros((n,), jnp.float32)),
+        point_lb=pv(jnp.full((n,), -jnp.inf, jnp.float32)),
+        lb_debt=pv(jnp.zeros((n_tiles,), jnp.float32)))
+    n_total = (backend.allreduce(pv(jnp.asarray(float(n), jnp.float32)))
+               if guard else None)
+
+    def cond(state):
+        i, prev_inertia, inertia = state[0], state[2], state[3]
+        rel = (prev_inertia - inertia) / jnp.maximum(prev_inertia, 1e-30)
+        return jnp.logical_and(i < max_iters,
+                               jnp.logical_or(i < 2, rel > tol))
+
+    def body(state):
+        i, cents, _, inertia, prev_cents, bstate, skips, prunes, rec = state
+        delta = bounds.centroid_movement(cents, prev_cents)
+        rnd = backend.assign_update(stream, cents.astype(stream.dtype),
+                                    None, norms, cache=cache,
+                                    state=bstate, delta=delta)
+        rnd = _inject_fit_fault(fault, i, rnd)
+        new_inertia = backend.allreduce(jnp.sum(rnd.state.partials))
+        if not guard:
+            bstate2, sums, counts = rnd.state, rnd.sums, rnd.counts
+            rs = jnp.asarray(rnd.skipped, jnp.int32)
+            rp = jnp.asarray(rnd.pruned, jnp.int32)
+            healed = jnp.zeros((), jnp.int32)
+        else:
+            mass = jnp.sum(rnd.counts)  # counts are already psum'd on a mesh
+            healthy = (jnp.isfinite(new_inertia)
+                       & (jnp.abs(mass - n_total) < 0.5))
+
+            def keep(_):
+                return (rnd.state, rnd.sums, rnd.counts, new_inertia,
+                        jnp.asarray(rnd.skipped, jnp.int32),
+                        jnp.asarray(rnd.pruned, jnp.int32))
+
+            def heal(_):
+                # the carried bound state is untrusted: re-run this
+                # iteration UNGATED (exact, touches every tile) and rebuild
+                # the carry from its outputs. The ungated round carries no
+                # per-point bounds, so point_lb/lb_debt restart pessimistic
+                # (-inf / 0): later iterations prune less but compute the
+                # bitwise-same results.
+                r2 = backend.assign_update(stream,
+                                           cents.astype(stream.dtype),
+                                           None, norms, cache=cache)
+                st = r2.state._replace(
+                    point_lb=pv(jnp.full((n,), -jnp.inf, jnp.float32)),
+                    lb_debt=pv(jnp.zeros((n_tiles,), jnp.float32)))
+                return (st, r2.sums, r2.counts,
+                        backend.allreduce(jnp.sum(r2.state.partials)),
+                        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+
+            bstate2, sums, counts, new_inertia, rs, rp = jax.lax.cond(
+                healthy, keep, heal, None)
+            healed = 1 - healthy.astype(jnp.int32)
+        new_cents = centroid_means(sums, counts, cents)
+        if empty == "reseed":
+            new_cents = reseed_split_largest(new_cents, counts)
+        skips = skips.at[i].set(rs)
+        prunes = prunes.at[i].set(rp)
+        rec = rec.at[i].set(healed)
+        return (i + 1, new_cents, inertia, new_inertia, cents, bstate2,
+                skips, prunes, rec)
+
+    def make_init():
+        return (jnp.zeros((), jnp.int32),
+                init_centroids.astype(jnp.float32), jnp.inf, jnp.inf,
+                init_centroids.astype(jnp.float32), init_state,
+                jnp.zeros((max_iters,), jnp.int32),
+                jnp.zeros((max_iters,), jnp.int32),
+                jnp.zeros((max_iters,), jnp.int32))
+
+    return cond, body, make_init
+
+
 def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
               empty: str = "keep", precision: str = "fp32",
-              bound_gate: bool = True, cache: Optional[RoundCache] = None):
+              bound_gate: bool = True, cache: Optional[RoundCache] = None,
+              guard: bool = False, fault=None):
     """Lloyd iterations until the relative inertia improvement falls below
     `tol` or `max_iters` is hit. The k-means potential is monotonically
     non-increasing — a property test asserts this — except under
@@ -1314,43 +1637,13 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
                                jnp.logical_or(i < 2, rel > tol))
 
     if tiled and bound_gate:
-        tile = backend.seed_tile(n, d, k)
-        n_tiles = -(-n // tile)
-        n_super = bounds.n_supers(n_tiles)
-        pv = backend.pvary
-        init_state = BoundState(
-            pv(jnp.zeros((n_tiles,), jnp.float32)),
-            tile_gap=pv(jnp.full((n_tiles,), -jnp.inf, jnp.float32)),
-            tile_sums=pv(jnp.zeros((n_super, k, d), jnp.float32)),
-            tile_counts=pv(jnp.zeros((n_super, k), jnp.float32)),
-            assignment=pv(jnp.zeros((n,), jnp.int32)),
-            min_d2=pv(jnp.zeros((n,), jnp.float32)),
-            point_lb=pv(jnp.full((n,), -jnp.inf, jnp.float32)),
-            lb_debt=pv(jnp.zeros((n_tiles,), jnp.float32)))
-
-        def body(state):
-            i, cents, _, inertia, prev_cents, bstate, skips, prunes = state
-            delta = bounds.centroid_movement(cents, prev_cents)
-            rnd = backend.assign_update(stream, cents.astype(stream.dtype),
-                                        None, norms, cache=cache,
-                                        state=bstate, delta=delta)
-            new_inertia = backend.allreduce(jnp.sum(rnd.state.partials))
-            new_cents = centroid_means(rnd.sums, rnd.counts, cents)
-            if empty == "reseed":
-                new_cents = reseed_split_largest(new_cents, rnd.counts)
-            skips = skips.at[i].set(rnd.skipped)
-            prunes = prunes.at[i].set(rnd.pruned)
-            return (i + 1, new_cents, inertia, new_inertia, cents,
-                    rnd.state, skips, prunes)
-
-        init = (jnp.zeros((), jnp.int32),
-                init_centroids.astype(jnp.float32), jnp.inf, jnp.inf,
-                init_centroids.astype(jnp.float32), init_state,
-                jnp.zeros((max_iters,), jnp.int32),
-                jnp.zeros((max_iters,), jnp.int32))
-        i, cents, _, inertia, _, bstate, skips, prunes = jax.lax.while_loop(
-            cond, body, init)
-        return cents, bstate.assignment, inertia, i, skips, prunes
+        gcond, gbody, make_init = _fit_gated_parts(
+            pts, stream, init_centroids, backend, max_iters, tol, empty,
+            norms, cache, guard=guard, fault=fault)
+        i, cents, _, inertia, _, bstate, skips, prunes, rec = \
+            jax.lax.while_loop(gcond, gbody, make_init())
+        return (cents, bstate.assignment, inertia, i, skips, prunes,
+                rec if guard else None)
 
     def body(state):
         i, cents, _, inertia, a = state
@@ -1369,61 +1662,67 @@ def _fit_loop(pts, init_centroids, w, backend: Backend, max_iters, tol,
     init = (jnp.zeros((), jnp.int32), init_centroids.astype(jnp.float32),
             jnp.inf, jnp.inf, backend.pvary(jnp.zeros((n,), jnp.int32)))
     i, cents, _, inertia, a = jax.lax.while_loop(cond, body, init)
-    return cents, a, inertia, i, None, None
+    return cents, a, inertia, i, None, None, None
 
 
 def fit_points(points: jax.Array, init_centroids: jax.Array,
                weights: Optional[jax.Array], backend: Backend,
                max_iters: int, tol: float, empty: str = "keep",
                precision: str = "fp32", bound_gate: bool = True,
-               cache: Optional[RoundCache] = None) -> LloydResult:
+               cache: Optional[RoundCache] = None, guard: bool = False,
+               fault=None) -> LloydResult:
     """Lloyd clustering through `backend` (untraced core). `empty` picks the
     empty-cluster policy: 'keep' (previous centroid survives) or 'reseed'
     (split the largest cluster — see reseed_split_largest). ``cache`` is an
     optional precomputed prologue (``kmeans_points`` shares one across the
-    seed and fit phases)."""
+    seed and fit phases). ``guard`` turns on the in-flight corruption
+    detector (gated unweighted fits only — see ``_fit_gated_parts``)."""
     if empty not in ("keep", "reseed"):
         raise ValueError(f"unknown empty-cluster policy {empty!r}; "
                          "expected 'keep' or 'reseed'")
     if backend.distributed:
         return _fit_mesh(points, init_centroids, weights, backend,
-                         max_iters, tol, empty, precision, bound_gate)
-    cents, a, inertia, i, skips, prunes = _fit_loop(
+                         max_iters, tol, empty, precision, bound_gate,
+                         guard=guard, fault=fault)
+    cents, a, inertia, i, skips, prunes, rec = _fit_loop(
         points, init_centroids, weights, backend, max_iters, tol, empty,
-        precision, bound_gate, cache)
+        precision, bound_gate, cache, guard=guard, fault=fault)
     return LloydResult(cents.astype(points.dtype), a, inertia, i, skips,
-                       prunes)
+                       prunes, recovered=rec)
 
 
 def _fit_mesh(points, init_centroids, weights, backend: MeshBackend,
               max_iters, tol, empty: str = "keep", precision: str = "fp32",
-              bound_gate: bool = True) -> LloydResult:
+              bound_gate: bool = True, guard: bool = False,
+              fault=None) -> LloydResult:
     axes = backend.axes
     gated = weights is None and bound_gate
 
     if weights is None:
         def local_fn(pp, cc):
             return _fit_loop(pp.astype(jnp.float32), cc, None, backend,
-                             max_iters, tol, empty, precision, bound_gate)
+                             max_iters, tol, empty, precision, bound_gate,
+                             guard=guard, fault=fault)
         in_specs = (P(axes), P())
         args = (points, init_centroids)
     else:
         def local_fn(pp, cc, ww):
             return _fit_loop(pp.astype(jnp.float32), cc, ww, backend,
-                             max_iters, tol, empty, precision, bound_gate)
+                             max_iters, tol, empty, precision, bound_gate,
+                             guard=guard, fault=fault)
         in_specs = (P(axes), P(), P(axes))
         args = (points, init_centroids, weights)
 
-    del gated  # the skips/prunes leaves are replicated when present, absent
-    #            otherwise; P() is a valid prefix spec for the empty (None)
-    #            subtree too
+    del gated  # the skips/prunes/recovered leaves are replicated when
+    #            present, absent otherwise; P() is a valid prefix spec for
+    #            the empty (None) subtree too
     mapped = collectives.shard_map(
         local_fn, mesh=backend.mesh,
         in_specs=in_specs,
-        out_specs=(P(), P(axes), P(), P(), P(), P()))
-    cents, a, inertia, i, skips, prunes = mapped(*args)
+        out_specs=(P(), P(axes), P(), P(), P(), P(), P()))
+    cents, a, inertia, i, skips, prunes, rec = mapped(*args)
     return LloydResult(cents.astype(points.dtype), a, inertia, i, skips,
-                       prunes)
+                       prunes, recovered=rec)
 
 
 def kmeans_points(key: jax.Array, points: jax.Array, k: int,
@@ -1432,7 +1731,7 @@ def kmeans_points(key: jax.Array, points: jax.Array, k: int,
                   tol: float = 1e-6, empty: str = "keep",
                   precision: str = "fp32",
                   bound_gate: bool = True,
-                  refresh_block: int = 8) -> LloydResult:
+                  refresh_block: int = 8, guard: bool = False) -> LloydResult:
     """End-to-end k-means++ seeding + Lloyd with ONE shared prologue.
 
     The seed phase and the fit phase historically each ran
@@ -1449,9 +1748,10 @@ def kmeans_points(key: jax.Array, points: jax.Array, k: int,
     cache = be.prologue(pts, m=k, with_bounds=bound_gate)
     seeds = seed_points(key, pts, k, weights, be, sampler,
                         precision=precision, bound_gate=bound_gate,
-                        cache=cache, refresh_block=refresh_block)
+                        cache=cache, refresh_block=refresh_block,
+                        guard=guard)
     res = fit_points(pts, seeds.centroids, weights, be, max_iters, tol,
-                     empty, precision, bound_gate, cache=cache)
+                     empty, precision, bound_gate, cache=cache, guard=guard)
     return res._replace(centroids=res.centroids.astype(points.dtype))
 
 
@@ -1528,32 +1828,35 @@ def _iter_batches(batches: BatchSource, n_batches: Optional[int]):
 
 @functools.partial(jax.jit, static_argnames=("k", "backend", "sampler",
                                              "precision", "bound_gate",
-                                             "refresh_block"))
+                                             "refresh_block", "guard",
+                                             "fault"))
 def _seed_jit(key, points, weights, k, backend, sampler, precision,
-              bound_gate, refresh_block):
+              bound_gate, refresh_block, guard=False, fault=None):
     return seed_points(key, points, k, weights, backend, sampler,
                        precision=precision, bound_gate=bound_gate,
-                       refresh_block=refresh_block)
+                       refresh_block=refresh_block, guard=guard, fault=fault)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("backend", "max_iters", "tol", "empty",
-                                    "precision", "bound_gate"))
+                                    "precision", "bound_gate", "guard",
+                                    "fault"))
 def _fit_jit(points, init_centroids, weights, backend, max_iters, tol, empty,
-             precision, bound_gate):
+             precision, bound_gate, guard=False, fault=None):
     return fit_points(points, init_centroids, weights, backend,
-                      max_iters, tol, empty, precision, bound_gate)
+                      max_iters, tol, empty, precision, bound_gate,
+                      guard=guard, fault=fault)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "backend", "sampler", "max_iters",
                                     "tol", "empty", "precision",
-                                    "bound_gate", "refresh_block"))
+                                    "bound_gate", "refresh_block", "guard"))
 def _kmeans_jit(key, points, weights, k, backend, sampler, max_iters, tol,
-                empty, precision, bound_gate, refresh_block):
+                empty, precision, bound_gate, refresh_block, guard=False):
     return kmeans_points(key, points, k, weights, backend, sampler,
                          max_iters, tol, empty, precision, bound_gate,
-                         refresh_block=refresh_block)
+                         refresh_block=refresh_block, guard=guard)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "precision"))
@@ -1612,23 +1915,77 @@ class ClusterEngine:
       bound proves unchanged. Skipping is exact: the fp32 results are
       bitwise identical to bounds=False; per-round skipped-tile counts come
       back in ``KmeansppResult.skipped``.
+    * ``validate`` — 'raise' (default), 'sanitize', or 'off': the
+      entry-point input guard (NaN/Inf rows, degenerate weights — see
+      ``core.guards``). Any setting other than 'off' ALSO turns on the
+      in-flight corruption detector inside the loops: each round checks the
+      psum'd total/inertia (and count mass) and, on a trip, discards the
+      carried bound state and replays the round ungated — results stay
+      bitwise those of an uncorrupted run, with the trip recorded in the
+      result's ``recovered`` counter (see docs/engine.md "Failure
+      semantics").
+
+    Kernel failures walk a backend fallback chain (pallas -> fused ->
+    reference): a ``KernelFailureError`` from a compile/launch retries the
+    call on the next backend down, warning once; the hops are recorded in
+    ``self.fallback_events`` and the backend that actually served the last
+    call in ``self.last_backend``.
     """
 
     def __init__(self, backend: Union[str, Backend] = "fused", *,
                  precision: str = "fp32", bounds: bool = True,
-                 **backend_opts):
+                 validate: str = "raise", **backend_opts):
         if precision not in ("fp32", "bf16"):
             raise ValueError(f"unknown precision {precision!r}; "
                              "expected 'fp32' or 'bf16'")
         self.backend = make_backend(backend, **backend_opts)
         self.precision = precision
         self.bounds = bool(bounds)
+        self.validate = guards.check_policy(validate)
+        self._guard = validate != "off"
+        self.fallback_events: list = []   # (failed, fallback, reason) hops
+        self.last_backend: Backend = self.backend
+        self._warned_fallback = False
+
+    # -- robustness plumbing ----------------------------------------------
+    def _run(self, fn):
+        """Run ``fn(backend)``, walking the kernel fallback chain on
+        KernelFailureError. Each hop swaps the (local) backend for the next
+        one down (pallas -> fused -> reference; a mesh backend swaps its
+        per-shard ``local``), warns once per engine, and is appended to
+        ``self.fallback_events``. The error escapes only when the chain is
+        exhausted."""
+        from repro.kernels import ops
+        be = self.backend
+        while True:
+            try:
+                out = fn(be)
+                self.last_backend = be
+                return out
+            except guards.KernelFailureError as e:
+                failed = be.local.name if be.distributed else be.name
+                nxt = ops.FALLBACK_CHAIN.get(failed)
+                if nxt is None:
+                    raise
+                if be.distributed:
+                    be = dataclasses.replace(be, local=make_backend(nxt))
+                else:
+                    be = dataclasses.replace(make_backend(nxt),
+                                             tile_m=be.tile_m)
+                self.fallback_events.append((failed, nxt, str(e)))
+                if not self._warned_fallback:
+                    warnings.warn(
+                        f"kernel backend {failed!r} failed ({e}); falling "
+                        f"back to {nxt!r}", RuntimeWarning, stacklevel=3)
+                    self._warned_fallback = True
 
     # -- seeding ----------------------------------------------------------
     def seed(self, key: jax.Array, points: jax.Array, k: int, *,
              weights: Optional[jax.Array] = None,
              sampler: str = "cdf",
-             refresh_block: int = 8) -> KmeansppResult:
+             refresh_block: int = 8,
+             checkpoint_dir=None, checkpoint_every: int = 1,
+             _fault=None) -> KmeansppResult:
         """K-means++ seeding: k centroids chosen from `points` ∝ D^2.
 
         sampler: 'cdf' (full inverse-CDF, bitwise-pinned across local
@@ -1639,12 +1996,27 @@ class ClusterEngine:
         full D^2 refresh runs only every ``refresh_block`` seeds, each round
         in between touches O(1) rows — same distribution; refresh_block=1
         reproduces 'tiled' bitwise). ``refresh_block`` is ignored by the
-        other samplers."""
+        other samplers.
+
+        ``checkpoint_dir`` runs the loop in resumable chunks of
+        ``checkpoint_every`` rounds, persisting the full carry (centroids,
+        min_d2, bound state, RNG key, round counter) through the atomic
+        step-dir protocol of ``repro.checkpoint``; an existing checkpoint in
+        the directory resumes mid-seed and the finished result is bitwise
+        the uninterrupted one. Local backends, non-rejection samplers only.
+        ``_fault`` is the fault-injection hook (tests only)."""
         n = points.shape[0]
-        if not 0 < k <= n:
-            raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
-        return _seed_jit(key, points, weights, k, self.backend, sampler,
-                         self.precision, self.bounds, int(refresh_block))
+        guards.check_shape(k, n)
+        points = guards.guard_points(points, self.validate)
+        weights = guards.guard_weights(weights, n, self.validate)
+        if checkpoint_dir is not None:
+            return self._seed_checkpointed(
+                key, points, k, weights=weights, sampler=sampler,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=int(checkpoint_every))
+        return self._run(lambda be: _seed_jit(
+            key, points, weights, k, be, sampler, self.precision,
+            self.bounds, int(refresh_block), self._guard, _fault))
 
     def _resolve_order(self, points: jax.Array, order):
         """order: None (natural), an ordering name ('morton' — see
@@ -1690,7 +2062,9 @@ class ClusterEngine:
     def fit(self, points: jax.Array, init_centroids: jax.Array, *,
             max_iters: int = 50, tol: float = 1e-6,
             weights: Optional[jax.Array] = None,
-            empty: str = "keep", order=None) -> LloydResult:
+            empty: str = "keep", order=None,
+            checkpoint_dir=None, checkpoint_every: int = 1,
+            _fault=None) -> LloydResult:
         """Lloyd iterations from `init_centroids` until convergence.
 
         empty: what happens to clusters that lose all their points — 'keep'
@@ -1706,11 +2080,32 @@ class ClusterEngine:
         row order; the permutation used is recorded in
         ``LloydResult.reorder`` for pruning audits. Spatial coherence is
         what makes the movement-bound tile gate fire (see docs/engine.md
-        "Bounded assignment")."""
+        "Bounded assignment").
+
+        ``checkpoint_dir`` runs the loop in resumable chunks of
+        ``checkpoint_every`` iterations, persisting the full carry
+        (centroids, bound state, inertia pair, counters) through the atomic
+        step-dir protocol of ``repro.checkpoint``; an existing checkpoint in
+        the directory resumes mid-fit and the finished result is bitwise
+        the uninterrupted one. Local backends, unweighted, bounds=True only.
+        ``_fault`` is the fault-injection hook (tests only)."""
+        d = points.shape[-1]
+        points = guards.guard_points(points, self.validate)
+        weights = guards.guard_weights(weights, points.shape[0],
+                                       self.validate)
+        init_centroids = guards.guard_centroids(init_centroids, d,
+                                                self.validate)
         points, weights, perm, inv = self._order_in(points, order, weights)
-        res = _fit_jit(points, init_centroids, weights, self.backend,
-                       max_iters, float(tol), empty, self.precision,
-                       self.bounds)
+        if checkpoint_dir is not None:
+            res = self._fit_checkpointed(
+                points, init_centroids, max_iters=max_iters,
+                tol=float(tol), empty=empty, weights=weights,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_every=int(checkpoint_every))
+        else:
+            res = self._run(lambda be: _fit_jit(
+                points, init_centroids, weights, be, max_iters, float(tol),
+                empty, self.precision, self.bounds, self._guard, _fault))
         return self._order_out(res, perm, inv)
 
     def kmeans(self, key: jax.Array, points: jax.Array, k: int, *,
@@ -1725,14 +2120,17 @@ class ClusterEngine:
         row order. On local backends the kmeans++ path runs as ONE compiled
         call sharing a single prologue (norms + tile balls computed once for
         both phases — see ``kmeans_points``)."""
+        points = guards.guard_points(points, self.validate)
+        weights = guards.guard_weights(weights, points.shape[0],
+                                       self.validate)
         points, weights, perm, inv = self._order_in(points, order, weights)
         if init == "kmeans++" and not self.backend.distributed:
             n = points.shape[0]
-            if not 0 < k <= n:
-                raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
-            res = _kmeans_jit(key, points, weights, k, self.backend, sampler,
-                              max_iters, float(tol), empty, self.precision,
-                              self.bounds, int(refresh_block))
+            guards.check_shape(k, n)
+            res = self._run(lambda be: _kmeans_jit(
+                key, points, weights, k, be, sampler, max_iters, float(tol),
+                empty, self.precision, self.bounds, int(refresh_block),
+                self._guard))
             return self._order_out(res, perm, inv)
         if init == "kmeans++":
             seeds = self.seed(key, points, k, weights=weights,
@@ -1785,11 +2183,20 @@ class ClusterEngine:
         (relative). Returns a LloydResult whose assignment/inertia refer to
         the LAST batch seen (there is no global pass in streaming mode);
         n_iters is the number of batches consumed.
+
+        Failure semantics: each batch passes the engine's ``validate``
+        guard before its step, and a batch source that keeps failing past
+        the pipeline's retry budget surfaces as a typed
+        ``repro.core.guards.PipelineError`` carrying the failing step index
+        — the partial model state is NOT silently kept.
         """
         if self.backend.distributed:
             raise NotImplementedError(
                 "mini-batch runs on a local backend; shard the batch source "
                 "instead (each host streams its slice)")
+        init_centroids = guards.guard_centroids(
+            init_centroids, jnp.asarray(init_centroids).shape[-1],
+            self.validate)
         cents = jnp.asarray(init_centroids, jnp.float32)
         counts = jnp.zeros((cents.shape[0],), jnp.float32)
         a = jnp.zeros((0,), jnp.int32)
@@ -1799,11 +2206,14 @@ class ClusterEngine:
         inv = None
         last_inertia = jnp.asarray(jnp.inf, jnp.float32)
         for batch in _iter_batches(batches, n_batches):
+            batch = guards.guard_points(batch, self.validate,
+                                        name=f"batch {seen}")
             perm, inv = self._resolve_order(batch, order)
             if perm is not None:
                 batch = jnp.take(batch, perm, axis=0)
-            cents, counts, last_inertia, a = _minibatch_jit(
-                cents, counts, batch, self.backend, self.precision)
+            cents, counts, last_inertia, a = self._run(
+                lambda be: _minibatch_jit(cents, counts, batch, be,
+                                          self.precision))
             seen += 1
             if tol > 0.0:
                 per_point = float(last_inertia) / max(batch.shape[0], 1)
@@ -1841,15 +2251,18 @@ class ClusterEngine:
             raise NotImplementedError("use a local backend for batched "
                                       "problems (vmap inside each shard)")
         B, n, _ = points.shape
-        if not 0 < k <= n:
-            raise ValueError(f"need 0 < k <= n, got k={k}, n={n}")
+        guards.check_shape(k, n)
+        # entry guard only: the in-flight detector stays OFF under vmap
+        # (lax.cond becomes select there — every problem would pay the heal
+        # rounds whether or not it tripped)
+        points = guards.guard_points(points, self.validate)
         # a single key has ndim 0 (typed) or 1 (raw uint32); anything higher
         # is already a (B,)-batch of keys
         single_ndim = 0 if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) else 1
         keys = key if key.ndim > single_ndim else jax.random.split(key, B)
-        return _seed_batched_jit(keys, points, k, self.backend, sampler,
-                                 self.precision, self.bounds,
-                                 int(refresh_block))
+        return self._run(lambda be: _seed_batched_jit(
+            keys, points, k, be, sampler, self.precision, self.bounds,
+            int(refresh_block)))
 
     def _resolve_order_batched(self, points: jax.Array, order):
         """Per-problem (B, n) permutations for batched fits."""
@@ -1876,10 +2289,13 @@ class ClusterEngine:
         if self.backend.distributed:
             raise NotImplementedError("use a local backend for batched "
                                       "problems (vmap inside each shard)")
+        points = guards.guard_points(points, self.validate)
+        init_centroids = guards.guard_centroids(
+            init_centroids, points.shape[-1], self.validate)
         points, _, perm, inv = self._order_in(points, order, batched=True)
-        res = _fit_batched_jit(points, init_centroids, self.backend,
-                               max_iters, float(tol), empty, self.precision,
-                               self.bounds)
+        res = self._run(lambda be: _fit_batched_jit(
+            points, init_centroids, be, max_iters, float(tol), empty,
+            self.precision, self.bounds))
         return self._order_out(res, perm, inv, batched=True)
 
     def kmeans_batched(self, key: jax.Array, points: jax.Array, k: int, *,
@@ -1894,3 +2310,156 @@ class ClusterEngine:
         res = self.fit_batched(points, seeds.centroids, max_iters=max_iters,
                                tol=tol, empty=empty)
         return self._order_out(res, perm, inv, batched=True)
+
+    # -- checkpointed drivers ---------------------------------------------
+    def _ckpt_meta(self, kind: str, **extra) -> dict:
+        meta = {"kind": kind, "precision": self.precision,
+                "bounds": self.bounds}
+        meta.update(extra)
+        return meta
+
+    @staticmethod
+    def _check_meta(mgr, want: dict) -> Optional[int]:
+        """Latest resumable step, or None for a fresh start. A checkpoint
+        written by an INCOMPATIBLE call (different problem shape, sampler,
+        precision ...) is a typed failure, never a silent restore."""
+        step = mgr.latest_step()
+        if step is None:
+            return None
+        got = mgr.read_manifest(step).get("meta")
+        if got != want:
+            raise CheckpointError(
+                f"checkpoint under {mgr.dir} was written by an incompatible "
+                f"call: saved meta {got} != expected {want}")
+        return step
+
+    def _seed_checkpointed(self, key, points, k, *, weights, sampler,
+                           checkpoint_dir, checkpoint_every):
+        """seed() with checkpoint_dir: the SAME per-round body as the jitted
+        loop, driven in chunks of ``checkpoint_every`` rounds with the full
+        carry (round counter, RNG key, centroids, min_d2, bound state,
+        counters) persisted after each chunk. Resume picks up the latest
+        step and replays the remaining rounds — the carry round-trips
+        bit-exactly through the npz format, so the finished seeds are
+        bitwise the uninterrupted ones."""
+        from repro.checkpoint.manager import CheckpointManager
+        if self.backend.distributed:
+            raise CheckpointError("checkpointed seeding runs on local "
+                                  "backends (seed locally, fit on mesh)")
+        if sampler == "rejection":
+            raise CheckpointError(
+                "checkpointed seeding needs a per-round refresh; the "
+                "rejection sampler's stale-envelope carry is not serialized "
+                "— use sampler='tiled' (same distribution)")
+        # the prologue is jitted SEPARATELY here (the parts builders run it
+        # eagerly otherwise): eager vs jitted fp contraction differs by ulps
+        # in the cached norms, and the bitwise-resume claim needs the chunked
+        # driver to consume exactly the arrays the one-shot jit consumes
+        be = self.backend
+        points = jnp.asarray(points)
+        cache = jax.jit(
+            lambda p: be.prologue(p, with_bounds=self.bounds))(points)
+        make_init, body, finish = seed_points(
+            key, points, k, weights, be, sampler,
+            precision=self.precision, bound_gate=self.bounds,
+            cache=cache, guard=self._guard, parts=True)
+        carry = make_init(key)
+        typed = jnp.issubdtype(jnp.asarray(key).dtype, jax.dtypes.prng_key)
+        wrap = getattr(jax.random, "wrap_key_data", None)
+
+        def ser(c):
+            # npz can't hold typed PRNG keys: store the raw uint32 key data
+            # (raw and typed keys drive identical threefry streams)
+            lst = list(c)
+            if typed:
+                lst[1] = jax.random.key_data(lst[1])
+            return tuple(lst)
+
+        def unser(c):
+            lst = list(c)
+            if typed and wrap is not None:
+                lst[1] = wrap(jnp.asarray(lst[1]))
+            return tuple(lst)
+
+        n, d = points.shape
+        mgr = CheckpointManager(checkpoint_dir, async_save=False)
+        meta = self._ckpt_meta("seed", n=int(n), d=int(d), k=int(k),
+                               sampler=sampler,
+                               weighted=weights is not None)
+        step = self._check_meta(mgr, meta)
+        if step is not None:
+            _, s = mgr.restore(ser(carry), step=step)
+            carry = unser(s)
+
+        chunk_j = jax.jit(lambda c, stop: jax.lax.while_loop(
+            lambda s: s[0] < stop, body, c))
+        every = max(int(checkpoint_every), 1)
+        m = int(jax.device_get(carry[0]))
+        while m < k:
+            carry = chunk_j(carry, jnp.asarray(min(m + every, k), jnp.int32))
+            m = int(jax.device_get(carry[0]))
+            mgr.save(m, ser(carry), blocking=True, meta=meta)
+        # jitted like the one-shot path's tail, so the final settle round's
+        # fp contraction (and thus min_d2) is bitwise the plain seed()'s
+        centroids, indices, min_d2, skips, prunes, rec = jax.jit(finish)(
+            carry)
+        return KmeansppResult(centroids.astype(points.dtype), indices,
+                              min_d2, skips if self.bounds else None,
+                              prunes if self.bounds else None,
+                              recovered=rec if self._guard else None)
+
+    def _fit_checkpointed(self, points, init_centroids, *, max_iters, tol,
+                          empty, weights, checkpoint_dir, checkpoint_every):
+        """fit() with checkpoint_dir: the gated Lloyd body (bitwise the
+        jitted loop's) driven in chunks of ``checkpoint_every`` iterations,
+        the full carry (iteration counter, centroid pair, inertia pair,
+        BoundState, counters) persisted after each chunk. Convergence is
+        detected when a chunk stops short of its target iteration."""
+        from repro.checkpoint.manager import CheckpointManager
+        if self.backend.distributed or weights is not None or not self.bounds:
+            raise CheckpointError(
+                "checkpointed fit needs a local backend, unweighted points "
+                "and bounds=True (the serialized carry is the gated loop's)")
+        if empty not in ("keep", "reseed"):
+            raise ValueError(f"unknown empty-cluster policy {empty!r}; "
+                             "expected 'keep' or 'reseed'")
+        n, d = points.shape
+        k = init_centroids.shape[0]
+        be = self.backend
+        compute_dtype = jnp.promote_types(points.dtype, jnp.float32)
+        pts = points.astype(compute_dtype)
+        stream = _stream_of(pts, self.precision)
+        # jitted for the same reason as _seed_checkpointed: the chunked body
+        # must consume bitwise the norms/centroid-balls the one-shot fit does
+        cache = jax.jit(lambda p: be.prologue(p, m=k, with_bounds=True))(pts)
+        cond, body, make_init = _fit_gated_parts(
+            pts, stream, jnp.asarray(init_centroids, jnp.float32), be,
+            int(max_iters), float(tol), empty, cache.norms, cache,
+            guard=self._guard)
+        mgr = CheckpointManager(checkpoint_dir, async_save=False)
+        meta = self._ckpt_meta("fit", n=int(n), d=int(d), k=int(k),
+                               max_iters=int(max_iters), tol=float(tol),
+                               empty=empty)
+        carry = make_init()
+        step = self._check_meta(mgr, meta)
+        if step is not None:
+            _, carry = mgr.restore(carry, step=step)
+
+        chunk_j = jax.jit(lambda c, stop: jax.lax.while_loop(
+            lambda s: jnp.logical_and(cond(s), s[0] < stop), body, c))
+        every = max(int(checkpoint_every), 1)
+        while True:
+            start = int(jax.device_get(carry[0]))
+            if start >= max_iters:
+                break
+            stop = min(start + every, int(max_iters))
+            carry = chunk_j(carry, jnp.asarray(stop, jnp.int32))
+            done = int(jax.device_get(carry[0]))
+            if done > start:     # a no-progress chunk means the restored
+                mgr.save(done, carry, blocking=True, meta=meta)  # carry had
+            if done < stop:      # already converged; never re-save its step
+                break            # cond false inside the chunk: converged
+        i, cents, _, inertia, _, bstate, skips, prunes, rec = carry
+        return LloydResult(cents.astype(points.dtype), bstate.assignment,
+                           inertia, i, skips, prunes,
+                           recovered=rec if self._guard else None)

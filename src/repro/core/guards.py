@@ -1,0 +1,177 @@
+"""Input guards + the typed failure vocabulary of the clustering stack.
+
+PRs 3-6 made every round primitive fast by *carrying state across rounds*
+(Hamerly bounds, stale tile partials, rejection envelopes), which means one
+NaN row, one negative weight, or one poisoned carry now corrupts *every
+subsequent round* instead of one. This module is the single place the
+engine's failure semantics are named:
+
+* a ``validate="raise" | "sanitize" | "off"`` policy applied at every
+  ``ClusterEngine`` entry point (``seed`` / ``fit`` / ``kmeans`` /
+  ``*_batched`` / ``fit_minibatch``) — NaN/Inf rows, degenerate or negative
+  weights, and k/n/d shape abuse are caught BEFORE they enter a jitted
+  loop, where they could only propagate silently;
+* the :class:`ClusteringError` hierarchy — every fault the stack can
+  surface is a typed subclass, so callers (and the fault-injection matrix
+  in ``tests/test_faults.py``) can assert "recovered bitwise OR raised
+  typed, never a silent wrong answer".
+
+Entry validation is a host-side pass over concrete arrays (the entry
+points are untraced); the *in-flight* corruption detection lives inside
+the jitted loops instead (see ``engine._seed_loop`` / ``engine._fit_loop``
+and the ``recovered`` counters in ``core.telemetry``), because a NaN that
+appears mid-loop cannot raise from inside ``lax.while_loop``.
+
+The sanitize path is allocation-free when the input is clean: the original
+array is returned unchanged (bitwise), so ``validate="sanitize"`` costs one
+streaming ``isfinite`` reduction per entry and nothing per round.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = [
+    "ClusteringError", "InvalidInputError", "CorruptedStateError",
+    "PipelineError", "KernelFailureError", "CheckpointError",
+    "POLICIES", "check_policy", "check_shape", "guard_points",
+    "guard_weights", "guard_centroids",
+]
+
+
+# ---------------------------------------------------------------------------
+# the typed failure vocabulary
+# ---------------------------------------------------------------------------
+
+
+class ClusteringError(Exception):
+    """Base of every typed failure the clustering stack raises. The fault
+    matrix's contract: every injected fault either recovers to a
+    bitwise-correct result or raises a ClusteringError subclass."""
+
+
+class InvalidInputError(ClusteringError, ValueError):
+    """Malformed caller input: NaN/Inf rows under validate='raise',
+    negative/degenerate weights, k/n/d shape abuse. Subclasses ValueError so
+    historical ``raises(ValueError)`` call sites keep working."""
+
+
+class CorruptedStateError(ClusteringError, RuntimeError):
+    """Loop-carried state (bound state, envelope, checkpoint carry) found
+    poisoned where in-loop recovery is not available."""
+
+
+class PipelineError(ClusteringError, RuntimeError):
+    """The data pipeline's read path failed past its retry budget. Carries
+    the failing step index."""
+
+    def __init__(self, message: str, *, step: Optional[int] = None):
+        super().__init__(message)
+        self.step = step
+
+
+class KernelFailureError(ClusteringError, RuntimeError):
+    """A Pallas kernel failed to compile/launch. The engine's backend
+    fallback chain (pallas -> fused -> reference) catches this; it escapes
+    only when the whole chain is exhausted."""
+
+
+class CheckpointError(ClusteringError, RuntimeError):
+    """Checkpoint save/restore failed or the manifest is incompatible with
+    the requested restore (wrong problem shape, unsupported carry)."""
+
+
+# ---------------------------------------------------------------------------
+# entry-point validation
+# ---------------------------------------------------------------------------
+
+POLICIES = ("raise", "sanitize", "off")
+
+
+def check_policy(validate: str) -> str:
+    if validate not in POLICIES:
+        raise InvalidInputError(
+            f"unknown validate policy {validate!r}; expected one of "
+            f"{POLICIES}")
+    return validate
+
+
+def check_shape(k: int, n: int, *, d: Optional[int] = None,
+                what: str = "seed") -> None:
+    """k/n/d shape abuse is never sanitizable — always typed raise."""
+    if not 0 < k <= n:
+        raise InvalidInputError(f"need 0 < k <= n, got k={k}, n={n}")
+    if d is not None and d < 1:
+        raise InvalidInputError(f"{what}: need d >= 1, got d={d}")
+
+
+def _count_bad(mask) -> int:
+    # one device reduction + one scalar sync; the whole cost of a guard
+    # pass on clean input
+    return int(jnp.sum(mask))
+
+
+def guard_points(points, policy: str, *, name: str = "points"):
+    """NaN/Inf entries: 'raise' -> InvalidInputError, 'sanitize' -> the
+    offending ROWS are zeroed (a zero row is a valid, finite point — it
+    clusters like any other instead of poisoning every D^2 it touches),
+    'off' -> passthrough. Clean input is returned unchanged (bitwise)."""
+    if policy == "off":
+        return points
+    x = jnp.asarray(points)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return points
+    finite = jnp.isfinite(x)
+    n_bad = _count_bad(~finite)
+    if n_bad == 0:
+        return points
+    if policy == "raise":
+        raise InvalidInputError(
+            f"{name} has {n_bad} non-finite entries; pass "
+            f"validate='sanitize' to zero the offending rows or "
+            f"validate='off' to skip the check")
+    row_ok = jnp.all(finite, axis=-1, keepdims=True)
+    return jnp.where(row_ok, x, jnp.zeros((), x.dtype))
+
+
+def guard_weights(weights, n: int, policy: str):
+    """Degenerate weights: NaN/Inf/negative entries raise or clamp to 0;
+    an all-zero (or sanitized-to-zero) weight vector always raises — there
+    is no distribution to sample from. Shape mismatch always raises."""
+    if weights is None:
+        return None
+    w = jnp.asarray(weights)
+    if w.shape != (n,):
+        raise InvalidInputError(
+            f"weights shape {w.shape} != ({n},)")
+    if policy == "off":
+        return weights
+    bad = ~jnp.isfinite(w) | (w < 0)
+    n_bad = _count_bad(bad)
+    if n_bad:
+        if policy == "raise":
+            raise InvalidInputError(
+                f"weights has {n_bad} negative/non-finite entries")
+        w = jnp.where(bad, jnp.zeros((), w.dtype), w)
+    if not bool(jnp.any(w > 0)):
+        raise InvalidInputError("weights sum to zero: nothing to sample")
+    return w
+
+
+def guard_centroids(centroids, d: int, policy: str, *,
+                    name: str = "init_centroids"):
+    """Initial centroids: NaN/Inf always raises (a sanitized-to-zero
+    centroid silently moves the optimum — worse than failing); shape abuse
+    always raises."""
+    c = jnp.asarray(centroids)
+    if c.shape[-1] != d:
+        raise InvalidInputError(
+            f"{name} dimension {c.shape[-1]} != points dimension {d}")
+    if policy == "off":
+        return centroids
+    n_bad = _count_bad(~jnp.isfinite(c))
+    if n_bad:
+        raise InvalidInputError(
+            f"{name} has {n_bad} non-finite entries")
+    return centroids

@@ -168,7 +168,8 @@ _ACCEPT_SALT = 0xACC  # fold_in salt for the accept uniform (disjoint from
 
 
 def rejection_sample(key: jax.Array, propose_fn, pq_fn, *,
-                     max_attempts: int):
+                     max_attempts: int,
+                     valid: Optional[jax.Array] = None):
     """Truncated rejection draw from a target p via a dominating envelope q.
 
     ``propose_fn(kj) -> idx`` draws an index from the envelope (q_i / Q) —
@@ -193,14 +194,27 @@ def rejection_sample(key: jax.Array, propose_fn, pq_fn, *,
     (p = q = 0 fails the strict test; non-finite q poisons it), routing to
     the fallback draw — whose own `_guarded` uniform fallback then matches
     `categorical_tiled`'s degenerate-weight discipline.
+
+    ``valid`` (optional traced bool) is the fp-invalid-envelope guard: a
+    corrupted envelope (negative or NaN stale partials) can make the
+    dominance precondition ``p <= q`` FALSE, in which case an accepted draw
+    would be silently biased — rejection-until-fallback is not a safe
+    default there. When ``valid`` is False the proposal loop is skipped
+    outright (``attempts == 0``, ``accepted`` False) so the caller routes
+    straight to its exact fallback path. When ``valid`` is True (or None)
+    the loop executes identically to the unguarded form — same attempt
+    keys, same uniforms — keeping the healthy path bitwise unchanged.
     """
     def attempt_key(j):
         return jax.lax.cond(j == 0, lambda k: k,
                             lambda k: jax.random.fold_in(k, j), key)
 
+    env_ok = (jnp.ones((), bool) if valid is None
+              else jnp.asarray(valid, bool))
+
     def cond(carry):
         j, _, ok = carry
-        return jnp.logical_not(ok) & (j < max_attempts)
+        return jnp.logical_not(ok) & (j < max_attempts) & env_ok
 
     def body(carry):
         j, _, _ = carry

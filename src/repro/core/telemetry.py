@@ -20,6 +20,18 @@ being able to index a counter by round without bounds checks:
   ``0 <= accepts[m] <= 1`` and ``accepts[m] <= proposals[m]``, with
   ``proposals[m] <= max_attempts`` (a round that exhausts its attempts
   falls back to an exact full draw and reports ``accepts[m] == 0``).
+* **recovered counter** — when guards are on (``validate != "off"``),
+  results carry a ``recovered`` counter with the same shape discipline:
+  ``recovered[m] == 1`` iff round ``m``'s corruption detector tripped (a
+  non-finite psum'd total / partial-sum inertia, a dropped shard's count
+  mass, or an fp-invalid rejection envelope) and the round was replayed
+  ungated from clean inputs. It is the psum-able "finite flag" of the
+  fault-tolerance layer: an all-zero ``recovered`` certifies no in-flight
+  corruption was observed. On a recovered rejection round the envelope is
+  untrusted, so NO proposals are attempted: ``proposals[m] == 0`` there —
+  the ``p[1:] >= 1`` relation below holds only for rounds with
+  ``recovered[m] == 0``, which is why :func:`check_rejection_counters`
+  takes the recovery mask.
 
 ``tests/test_telemetry_contract.py`` pins the contract through these
 helpers; other tests call them instead of re-stating the rules ad hoc.
@@ -32,6 +44,7 @@ __all__ = [
     "check_counter",
     "check_rejection_counters",
     "check_converged_zeros",
+    "check_recovered",
 ]
 
 
@@ -61,15 +74,38 @@ def check_converged_zeros(arr, n_ran, length: int,
 
 
 def check_rejection_counters(proposals, accepts, k: int,
-                             max_attempts: int) -> None:
-    """Assert the sampler='rejection' counter relations on a seeding result."""
+                             max_attempts: int, recovered=None) -> None:
+    """Assert the sampler='rejection' counter relations on a seeding result.
+
+    ``recovered`` (optional, same ``(k,)`` discipline) masks rounds whose
+    envelope was invalidated by the corruption guard: those rounds skip the
+    proposal loop entirely, so the ``p[1:] >= 1`` relation is asserted only
+    where ``recovered == 0``."""
     p = check_counter(proposals, k, "proposals")
     a = check_counter(accepts, k, "accepts")
+    rec = (np.zeros(k, np.int32) if recovered is None
+           else check_recovered(recovered, k))
     assert p[0] == 0 and a[0] == 0, \
         "round 0 is the uniform first seed: proposals[0]==accepts[0]==0"
     assert np.all(a <= 1), f"accepts is 0/1 per round: {a}"
     assert np.all(a <= p), f"an accept implies at least one proposal: {p} {a}"
-    assert np.all(p[1:] >= 1), \
-        f"every later round proposes at least once: {p}"
+    assert np.all((p[1:] >= 1) | (rec[1:] == 1)), \
+        f"every later healthy round proposes at least once: {p} (rec={rec})"
     assert np.all(p <= max_attempts), \
         f"proposals exceed the truncation depth {max_attempts}: {p}"
+
+
+def check_recovered(arr, length: int, *, expect=None) -> np.ndarray:
+    """Assert the recovered-counter half of the contract: fixed-length int32
+    0/1 flags, one slot per round. ``expect`` (optional bool array/list)
+    additionally pins exactly WHICH rounds recovered — fault-injection tests
+    use it to assert the detector tripped at the injected round and nowhere
+    else."""
+    a = check_counter(arr, length, "recovered")
+    assert np.all(a <= 1), f"recovered is a 0/1 flag per round: {a}"
+    if expect is not None:
+        want = np.asarray(expect, np.int32)
+        assert np.array_equal(a, want), \
+            f"recovered rounds {np.nonzero(a)[0]} != expected " \
+            f"{np.nonzero(want)[0]}"
+    return a

@@ -26,14 +26,25 @@ _WORKER_FAILED = object()  # queue sentinel: prefetch thread died on exception
 
 class DataPipeline:
     def __init__(self, read_fn: Callable[[int], dict], *, start_step: int = 0,
-                 prefetch: int = 2, sharding=None):
+                 prefetch: int = 2, sharding=None, retries: int = 3,
+                 backoff: float = 0.05):
         """read_fn(step) -> dict of np arrays (the host's slice of the batch).
         sharding: optional jax.sharding.Sharding pytree/leaf to device_put to.
+
+        Transient read failures (flaky storage, throttled object store) are
+        retried in-thread: up to ``retries`` attempts per step with bounded
+        exponential backoff from ``backoff`` seconds (deterministically
+        jittered per (step, attempt) so a fleet of hosts doesn't retry in
+        lockstep). Only after the LAST attempt fails does the worker give up
+        and surface the error to the consumer as a typed
+        ``repro.core.guards.PipelineError`` carrying the failing step.
         """
         self.read_fn = read_fn
         self.step = start_step
         self.prefetch = prefetch
         self.sharding = sharding
+        self.retries = max(int(retries), 1)
+        self.backoff = float(backoff)
         self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -63,11 +74,19 @@ class DataPipeline:
         self.step = step
 
     # -- iteration ---------------------------------------------------------
+    def _delay(self, step: int, attempt: int) -> float:
+        """Bounded exponential backoff before retry ``attempt`` of ``step``:
+        base * 2^attempt, deterministically jittered +-25% per
+        (step, attempt) so restarted runs back off identically but a fleet
+        of hosts doesn't hammer storage in lockstep. Capped at 2s."""
+        u = np.random.default_rng((step << 8) ^ attempt).random()
+        return min(self.backoff * (2.0 ** attempt) * (0.75 + 0.5 * u), 2.0)
+
     def _worker(self):
         s = self.step
         while not self._stop.is_set():
             try:
-                batch = self.read_fn(s)
+                batch = self._read_with_retry(s)
                 if self.sharding is not None:
                     batch = jax.device_put(batch, self.sharding)
             except BaseException as e:  # propagate to the consumer: a dead
@@ -77,11 +96,25 @@ class DataPipeline:
             self._q.put((s, batch))
             s += 1
 
+    def _read_with_retry(self, s: int):
+        for attempt in range(self.retries):
+            try:
+                return self.read_fn(s)
+            except Exception:
+                if attempt + 1 >= self.retries:
+                    raise
+                # stop-aware sleep: shutdown never waits out a backoff
+                if self._stop.wait(self._delay(s, attempt)):
+                    raise
+        raise AssertionError("unreachable")  # pragma: no cover
+
     def _get(self):
         item = self._q.get()
         if item[1] is _WORKER_FAILED:
-            raise RuntimeError(
-                f"DataPipeline read_fn failed at step {item[0]}"
+            from repro.core.guards import PipelineError
+            raise PipelineError(
+                f"DataPipeline read_fn failed at step {item[0]} "
+                f"after {self.retries} attempts", step=item[0],
             ) from self._error
         return item
 

@@ -33,6 +33,7 @@ from repro.kernels.kmeans_distance import (
 from repro.core.bounds import point_norms  # noqa: F401  (re-exported: the
 #   cached-norm input the kernels stream; wrappers compute it on the fly
 #   when the caller has no prologue cache)
+from repro.core.guards import KernelFailureError
 from repro.kernels.lloyd_assign import (lloyd_assign_batched_pallas,
                                         lloyd_assign_gated_batched_pallas,
                                         lloyd_assign_gated_pallas,
@@ -41,6 +42,35 @@ from repro.kernels.lloyd_assign import (lloyd_assign_batched_pallas,
                                         lloyd_assign_tiled_pallas)
 
 _VMEM_BUDGET = 48 * 1024 * 1024  # leave headroom out of ~64-128MB
+
+# The graceful-degradation order when a Pallas kernel fails to compile or
+# launch: each pallas-flavoured local backend degrades to the fused XLA
+# backend (same math, no Mosaic), which itself degrades to the looped
+# reference. `None` terminates the chain — an exhausted chain re-raises the
+# KernelFailureError to the caller. ClusterEngine._dispatch walks this map;
+# the mesh backend substitutes its LOCAL backend through the same chain.
+FALLBACK_CHAIN: dict = {
+    "pallas": "fused",
+    "pallas_constant": "fused",
+    "pallas_fused": "fused",
+    "fused": "reference",
+    "global": "reference",
+    "reference": None,
+    "serial": None,
+}
+
+# Fault-injection hook (see repro.testing.faults.force_kernel_failure): when
+# set to a reason string, EVERY public kernel wrapper raises
+# KernelFailureError at trace time — on this CPU container the kernels run
+# in interpret mode, so a forced trace-time raise is exactly where a real
+# Mosaic compile/launch failure would surface from under jit.
+_FORCED_FAILURE: str | None = None
+
+
+def _check_forced() -> None:
+    if _FORCED_FAILURE is not None:
+        raise KernelFailureError(
+            f"pallas kernel launch failed (forced: {_FORCED_FAILURE})")
 
 
 def _on_tpu() -> bool:
@@ -134,6 +164,7 @@ def seed_prologue(points: jax.Array, *, block_n: int | None = None,
                   interpret: bool | None = None):
     """One streaming pass over the dataset: (norms, tile centers, tile radii)
     at the seed-tile height — everything the gated round kernels cache."""
+    _check_forced()
     n, d = points.shape
     if block_n is None:
         block_n = choose_block_n(n, d, 1, batched=True)
@@ -153,6 +184,7 @@ def distance_min_update(points: jax.Array, centroids: jax.Array,
     `choose_block_n(n, d, k)` — the same tile the two-level `tiled` sampler
     draws from. Under `jax.vmap` this dispatches to the batch-grid kernel
     (`distance_min_update_batched`), not a per-problem loop."""
+    _check_forced()
     n, d = points.shape
     k = centroids.shape[0]
     user_block = block_n
@@ -191,6 +223,7 @@ def distance_min_update_batched(points: jax.Array, centroids: jax.Array,
                                 interpret: bool | None = None):
     """Batched seeding round: (B, n, d) x (B, k, d) -> ((B, n), (B, n_tiles))
     in one batch-grid kernel launch."""
+    _check_forced()
     _, n, d = points.shape
     k = centroids.shape[1]
     if block_n is None:
@@ -225,6 +258,7 @@ def distance_min_update_gated(points: jax.Array, centroids: jax.Array,
     batch-grid kernel with per-problem compaction."""
     from repro.core import bounds as bnd
 
+    _check_forced()
     n, d = points.shape
     if interpret is None:
         interpret = default_interpret()
@@ -266,6 +300,7 @@ def row_min_d2(points: jax.Array, idx: jax.Array, centroids: jax.Array,
     returns +inf. Under `jax.vmap` (the engine's batched seeding) this
     dispatches to the pure-jnp twin — a (B,)-batch of single-row gathers has
     no kernel to win."""
+    _check_forced()
     if interpret is None:
         interpret = default_interpret()
 
@@ -291,6 +326,7 @@ def lloyd_assign(points: jax.Array, centroids: jax.Array, *,
                  interpret: bool | None = None):
     """Fused assignment + per-cluster partial sums/counts. Under `jax.vmap`
     this dispatches to the batch-grid kernel (`lloyd_assign_batched`)."""
+    _check_forced()
     n, d = points.shape
     k = centroids.shape[0]
     user_block = block_n
@@ -324,6 +360,7 @@ def lloyd_assign_batched(points: jax.Array, centroids: jax.Array, *,
                          interpret: bool | None = None):
     """Batched Lloyd half-step: (B, n, d) x (B, k, d) -> per-problem
     (assignment, min_d2, sums, counts) in one batch-grid kernel launch."""
+    _check_forced()
     _, n, d = points.shape
     k = centroids.shape[1]
     if block_n is None:
@@ -350,6 +387,7 @@ def lloyd_assign_tiled(points: jax.Array, centroids: jax.Array, *,
     this dispatches to the batch-grid kernel."""
     from repro.core import bounds as bnd
 
+    _check_forced()
     n, d = points.shape
     k = centroids.shape[0]
     if block_n is None:
@@ -402,6 +440,7 @@ def lloyd_assign_gated(points: jax.Array, centroids: jax.Array,
     expansion + compaction."""
     from repro.core import bounds as bnd
 
+    _check_forced()
     n, d = points.shape
     if interpret is None:
         interpret = default_interpret()

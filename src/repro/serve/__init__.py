@@ -1,5 +1,5 @@
 """repro.serve — batched serving engine + k-means++ KV product quantization."""
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, RequestError, ServeConfig
 from repro.serve import kvquant
 
-__all__ = ["Engine", "ServeConfig", "kvquant"]
+__all__ = ["Engine", "RequestError", "ServeConfig", "kvquant"]

@@ -14,6 +14,7 @@ keeps ragged requests independent. greedy or temperature sampling.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -31,6 +32,24 @@ class ServeConfig:
     max_new_tokens: int = 64
     eos_id: int = -1              # -1: never stops early
     temperature: float = 0.0      # 0 = greedy
+    group_timeout: Optional[float] = None  # wall-clock seconds per decode
+    #                                        group; None = unbounded. On
+    #                                        expiry the group stops decoding
+    #                                        and still-active slots return
+    #                                        their partial completions.
+
+
+@dataclasses.dataclass
+class RequestError(Exception):
+    """A malformed request, rejected per-slot: returned IN PLACE of that
+    prompt's completion so one bad request cannot crash (or stall) the
+    whole batch. Callers pattern-match with ``isinstance(r, RequestError)``
+    — or ``raise`` it, it is a real exception."""
+    reason: str
+    index: int = -1
+
+    def __post_init__(self):
+        super().__init__(f"request {self.index}: {self.reason}")
 
 
 class Engine:
@@ -49,17 +68,47 @@ class Engine:
         return jax.random.categorical(
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
 
+    def _check_prompt(self, p) -> Optional[str]:
+        """Reject reason for a malformed prompt, or None when servable."""
+        a = np.asarray(p)
+        if a.ndim != 1:
+            return f"prompt must be a 1-D token array, got shape {a.shape}"
+        if a.size == 0:
+            return "empty prompt"
+        if not np.issubdtype(a.dtype, np.integer):
+            return f"prompt dtype {a.dtype} is not an integer token dtype"
+        if a.size > self.scfg.max_len:
+            return (f"prompt length {a.size} exceeds max_len "
+                    f"{self.scfg.max_len}")
+        return None
+
     def generate(self, prompts: list[np.ndarray], *, seed: int = 0
-                 ) -> list[np.ndarray]:
+                 ) -> list[Any]:
         """Generate completions for a list of token prompts (np int32 1-D).
         Prompts are grouped into batches of max_batch; each group shares a
-        jitted prefill (padded to the longest prompt) + decode loop."""
-        out: list[np.ndarray] = []
+        jitted prefill (padded to the longest prompt) + decode loop.
+
+        Failure semantics: a malformed prompt (empty, non-1-D, float
+        tokens, longer than ``max_len``) gets a ``RequestError`` in its
+        output slot — the other requests in the call are still served, in
+        order. With ``ServeConfig.group_timeout`` set, each group's decode
+        loop additionally stops at the wall-clock deadline and returns the
+        partial completions instead of holding the queue."""
+        out: list[Any] = [None] * len(prompts)
+        valid: list[int] = []
+        for idx, p in enumerate(prompts):
+            reason = self._check_prompt(p)
+            if reason is None:
+                valid.append(idx)
+            else:
+                out[idx] = RequestError(reason, index=idx)
         key = jax.random.PRNGKey(seed)
         B = self.scfg.max_batch
-        for i in range(0, len(prompts), B):
-            group = prompts[i:i + B]
-            out.extend(self._generate_group(group, key))
+        for i in range(0, len(valid), B):
+            grp = valid[i:i + B]
+            done = self._generate_group([prompts[j] for j in grp], key)
+            for j, g in zip(grp, done):
+                out[j] = g
             key = jax.random.fold_in(key, i)
         return out
 
@@ -72,6 +121,11 @@ class Engine:
             toks[j, L - len(p):] = p          # left-pad: last position = last token
         logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
 
+        # wall-clock budget for THIS group's decode loop: one stuck/huge
+        # group must not hold the rest of the queue; expired slots simply
+        # return the tokens generated so far.
+        deadline = (None if self.scfg.group_timeout is None
+                    else time.monotonic() + self.scfg.group_timeout)
         done = np.zeros(n, bool)
         gen: list[list[int]] = [[] for _ in range(n)]
         tok = self._sample(key, logits)
@@ -83,6 +137,8 @@ class Engine:
                     if t_np[j] == self.scfg.eos_id:
                         done[j] = True
             if done.all():
+                break
+            if deadline is not None and time.monotonic() >= deadline:
                 break
             logits, cache = self._decode(self.params, tok[:, None], cache)
             key = jax.random.fold_in(key, step)

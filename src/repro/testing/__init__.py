@@ -1,0 +1,12 @@
+"""repro.testing — deterministic fault injection for robustness tests.
+
+Never imported by production code paths: ``repro.core.engine`` duck-types
+the ``FaultSpec`` it receives (any hashable object with ``.kind`` and
+``.round`` works as the static ``_fault`` argument), so the core package
+has no dependency on this one.
+"""
+from repro.testing.faults import (FaultSpec, flaky_read_fn, force_kernel_failure,
+                                  kill_prefetch)
+
+__all__ = ["FaultSpec", "flaky_read_fn", "force_kernel_failure",
+           "kill_prefetch"]

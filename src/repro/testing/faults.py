@@ -1,0 +1,101 @@
+"""Deterministic, seedable fault injection for the clustering stack.
+
+Every fault in the matrix is reproducible: faults fire at a named round /
+step, not at a random time, so a failing robustness test replays exactly.
+The injectors cover the layers a real deployment loses sleep over:
+
+  * ``FaultSpec`` — traced-compute corruption, threaded into the engine's
+    jitted loops as a STATIC argument (it is a frozen, hashable dataclass).
+    Kinds:
+      - ``nan_tile``      seed loop: NaN one tile's D2 output at ``round``
+      - ``nan_state``     seed/fit loop: NaN the carried partials (bound
+                          state poisoning) at ``round``
+      - ``zero_counts``   fit loop: halve a round's psum'd sums/counts
+                          (a lost shard contribution) at ``round``
+      - ``neg_envelope``  rejection seeding: corrupt the stale proposal
+                          envelope with a negative partial at ``round``
+  * ``force_kernel_failure`` — context manager that makes every public
+    kernel wrapper in ``repro.kernels.ops`` raise ``KernelFailureError``
+    at trace time (a stand-in for a Pallas compile/launch failure),
+    exercising the engine's backend fallback chain.
+  * ``flaky_read_fn`` / ``kill_prefetch`` — host-side pipeline faults:
+    transient reader failures (retry path) and a dead prefetch thread
+    (typed ``PipelineError`` path).
+
+The contract the fault matrix asserts (tests/test_faults.py): every fault
+either RECOVERS BITWISE (guarded loops heal and the final result equals a
+never-corrupted run's) or raises a typed ``ClusteringError`` subclass.
+Never a silent wrong answer.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Callable, Iterator
+
+from repro.kernels import ops
+
+SEED_FAULTS = ("nan_tile", "nan_state")
+FIT_FAULTS = ("zero_counts", "nan_state")
+REJECTION_FAULTS = ("neg_envelope",)
+ALL_FAULTS = ("nan_tile", "nan_state", "zero_counts", "neg_envelope")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injected fault: ``kind`` names the corruption, ``round`` the
+    loop iteration (seed round / fit iteration / rejection draw) it fires
+    at. Frozen + hashable so it can ride the jit static-argument path."""
+    kind: str
+    round: int = 1
+
+    def __post_init__(self):
+        if self.kind not in ALL_FAULTS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; one of {ALL_FAULTS}")
+
+
+@contextlib.contextmanager
+def force_kernel_failure(reason: str = "injected kernel failure"
+                         ) -> Iterator[None]:
+    """Inside this context every ``repro.kernels.ops`` wrapper raises
+    ``KernelFailureError(reason)`` — the deterministic stand-in for a
+    Pallas compile/launch failure. The engine reacts by walking its
+    backend fallback chain (pallas -> fused -> reference)."""
+    prev = ops._FORCED_FAILURE
+    ops._FORCED_FAILURE = str(reason)
+    try:
+        yield
+    finally:
+        ops._FORCED_FAILURE = prev
+
+
+def flaky_read_fn(read_fn: Callable[[int], dict], *, fail_steps: dict
+                  ) -> Callable[[int], dict]:
+    """Wrap a pipeline ``read_fn`` so step ``s`` fails its first
+    ``fail_steps[s]`` calls (transient storage flake), then succeeds.
+    Thread-safe; mutates ``fail_steps`` down to zero in place so the
+    caller can assert how many retries actually happened."""
+    lock = threading.Lock()
+
+    def flaky(s: int) -> dict:
+        with lock:
+            left = fail_steps.get(s, 0)
+            if left > 0:
+                fail_steps[s] = left - 1
+                raise IOError(f"injected transient read failure at step {s}")
+        return read_fn(s)
+
+    return flaky
+
+
+def kill_prefetch(pipeline) -> None:
+    """Kill a DataPipeline's prefetch thread mid-stream: the next batch the
+    worker tries to read raises, so the consumer's next ``__next__`` gets a
+    typed ``PipelineError`` instead of hanging on a dead queue."""
+    def _dead(s: int) -> dict:
+        raise RuntimeError(f"injected prefetch death at step {s}")
+
+    pipeline.read_fn = _dead
+    pipeline.retries = 1  # no point backing off a deliberate kill

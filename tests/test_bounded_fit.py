@@ -742,3 +742,83 @@ def test_kvquant_codebook_accepts_order():
     base_err = float(kvquant.reconstruction_error(
         vecs, kvquant.PQCache(kvquant.encode(vecs, base), base)))
     assert err < 2.0 * base_err + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# checkpointed gated fit (ISSUE 7): mid-fit resume is bitwise the
+# uninterrupted run — the serialized carry IS the loop carry
+# ---------------------------------------------------------------------------
+
+
+def test_checkpointed_fit_matches_plain_bitwise(tmp_path):
+    pts = _coherent(n=4096, seed=30)
+    eng = ClusterEngine("fused")
+    seeds = eng.seed(jax.random.PRNGKey(30), pts, 4).centroids
+    plain = eng.fit(pts, seeds, max_iters=9, tol=-1.0)
+    ck = eng.fit(pts, seeds, max_iters=9, tol=-1.0,
+                 checkpoint_dir=tmp_path, checkpoint_every=3)
+    np.testing.assert_array_equal(np.asarray(plain.centroids),
+                                  np.asarray(ck.centroids))
+    np.testing.assert_array_equal(np.asarray(plain.assignment),
+                                  np.asarray(ck.assignment))
+    assert float(plain.inertia) == float(ck.inertia)
+    assert int(plain.n_iters) == int(ck.n_iters)
+    np.testing.assert_array_equal(np.asarray(plain.skipped),
+                                  np.asarray(ck.skipped))
+
+
+def test_checkpointed_fit_resumes_mid_fit_bitwise(tmp_path):
+    """Crash simulation: run to completion, drop the newest step dirs (as
+    if the job died mid-run), re-invoke — the resumed run restores the
+    latest surviving carry, replays the remaining iterations, and finishes
+    bit-identical to the uninterrupted fit."""
+    import shutil
+    from repro.checkpoint.manager import CheckpointManager
+    pts = _coherent(n=4096, seed=31)
+    eng = ClusterEngine("fused")
+    seeds = eng.seed(jax.random.PRNGKey(31), pts, 4).centroids
+    plain = eng.fit(pts, seeds, max_iters=10, tol=-1.0)
+    eng.fit(pts, seeds, max_iters=10, tol=-1.0,
+            checkpoint_dir=tmp_path, checkpoint_every=2)
+    mgr = CheckpointManager(tmp_path)
+    steps = mgr.all_steps()
+    assert steps[-1] == 10
+    for step in steps[-2:]:                   # lose the last two checkpoints
+        shutil.rmtree(tmp_path / f"step_{step:08d}")
+    resumed = eng.fit(pts, seeds, max_iters=10, tol=-1.0,
+                      checkpoint_dir=tmp_path, checkpoint_every=2)
+    np.testing.assert_array_equal(np.asarray(plain.centroids),
+                                  np.asarray(resumed.centroids))
+    np.testing.assert_array_equal(np.asarray(plain.assignment),
+                                  np.asarray(resumed.assignment))
+    assert float(plain.inertia) == float(resumed.inertia)
+    assert int(plain.n_iters) == int(resumed.n_iters)
+
+
+def test_checkpointed_fit_detects_convergence(tmp_path):
+    """A chunk that stops short of its target iteration means the loop
+    converged: no further chunks run, and n_iters matches the plain fit."""
+    from repro.checkpoint.manager import CheckpointManager
+    pts = _coherent(n=4096, seed=32)
+    eng = ClusterEngine("fused")
+    seeds = eng.seed(jax.random.PRNGKey(32), pts, 4).centroids
+    plain = eng.fit(pts, seeds, max_iters=30)
+    assert int(plain.n_iters) < 30
+    ck = eng.fit(pts, seeds, max_iters=30, checkpoint_dir=tmp_path,
+                 checkpoint_every=4)
+    assert int(ck.n_iters) == int(plain.n_iters)
+    assert float(ck.inertia) == float(plain.inertia)
+    # no checkpoints were written past convergence
+    assert CheckpointManager(tmp_path).latest_step() <= int(plain.n_iters) + 4
+
+
+def test_checkpointed_fit_rejects_unsupported_modes(tmp_path):
+    from repro.core.guards import CheckpointError
+    pts = _coherent(n=1024, seed=33)
+    with pytest.raises(CheckpointError, match="bounds=True"):
+        ClusterEngine("fused", bounds=False).fit(
+            pts, pts[:4], max_iters=3, checkpoint_dir=tmp_path)
+    w = jnp.ones((1024,), jnp.float32)
+    with pytest.raises(CheckpointError, match="unweighted"):
+        ClusterEngine("fused").fit(pts, pts[:4], max_iters=3, weights=w,
+                                   checkpoint_dir=tmp_path)

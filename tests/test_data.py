@@ -1,6 +1,7 @@
 """Data pipeline: determinism, exact resume, prefetch, semdedup."""
 import numpy as np
 import jax
+import pytest
 import jax.numpy as jnp
 
 from repro.data import DataPipeline, TokenStream, blobs, semdedup
@@ -77,3 +78,46 @@ def test_semdedup_keeps_distinct():
     e = jnp.eye(32)                       # orthogonal: nothing near-duplicate
     res = semdedup(jax.random.PRNGKey(0), e, k=4, threshold=0.9)
     assert int(res.n_kept) == 32
+
+
+# ---------------------------------------------------------------------------
+# transient-failure retries (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_retries_transient_failures_in_order():
+    from repro.testing import flaky_read_fn
+    stream = TokenStream(100, seed=9)
+    fails = {2: 2}                      # step 2 flakes twice, then succeeds
+    pipe = DataPipeline(
+        flaky_read_fn(lambda s: stream.read(s, 2, 8), fail_steps=fails),
+        prefetch=1, backoff=0.01)
+    it = iter(pipe)
+    got = [next(it) for _ in range(4)]
+    pipe.stop()
+    assert [s for s, _ in got] == [0, 1, 2, 3]
+    np.testing.assert_array_equal(got[2][1]["tokens"],
+                                  stream.read(2, 2, 8)["tokens"])
+    assert fails == {2: 0}
+
+
+def test_pipeline_exhausted_retries_raise_typed_error_with_step():
+    from repro.core.guards import PipelineError
+    pipe = DataPipeline(lambda s: (_ for _ in ()).throw(IOError("flaky")),
+                        prefetch=1, retries=3, backoff=0.005)
+    with pytest.raises(PipelineError, match="read_fn failed") as ei:
+        next(iter(pipe))
+    pipe.stop()
+    assert ei.value.step == 0
+    assert isinstance(ei.value.__cause__, IOError)
+
+
+def test_pipeline_backoff_is_bounded_and_deterministic():
+    pipe = DataPipeline(lambda s: {}, retries=5, backoff=0.05)
+    d1 = [pipe._delay(3, a) for a in range(5)]
+    d2 = [pipe._delay(3, a) for a in range(5)]
+    assert d1 == d2                      # same (step, attempt) -> same jitter
+    assert all(0.0 < d <= 2.0 for d in d1)
+    assert d1[1] > d1[0] * 1.2           # exponential growth dominates jitter
+    # different steps de-synchronize (fleet doesn't hammer in lockstep)
+    assert pipe._delay(4, 0) != pipe._delay(3, 0)

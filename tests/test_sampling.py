@@ -148,3 +148,41 @@ def test_tile_partials_sums_match():
                                rtol=1e-6)
     np.testing.assert_allclose(np.asarray(p)[0],
                                float(jnp.sum(w[:32])), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fp-invalid envelope guard (ISSUE 7): rejection_sample's `valid` gate
+# ---------------------------------------------------------------------------
+
+
+def test_rejection_sample_valid_gate_skips_proposals():
+    """valid=False means the dominance precondition is broken: the proposal
+    loop must not run at all (attempts 0, accepted False), routing the
+    caller to its exact fallback path instead of a silently-biased draw."""
+    key = jax.random.key(40)
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    prop = lambda kj: jax.random.randint(kj, (), 0, 4)
+    pq = lambda i: (w[i], w[i])               # fresh envelope: p == q
+    idx, ok, att = sampling.rejection_sample(
+        key, prop, pq, max_attempts=8, valid=jnp.asarray(False))
+    assert int(att) == 0 and not bool(ok)
+
+
+def test_rejection_sample_valid_true_is_bitwise_the_unguarded_path():
+    """The healthy path must be bitwise unchanged by the guard: valid=True
+    (or omitted) produces the identical (idx, accepted, attempts)."""
+    key = jax.random.key(41)
+    w = jnp.asarray([0.1, 0.5, 0.2, 3.0, 0.7])
+    stale = w * 1.5                           # dominating stale envelope
+    prop = lambda kj: jax.random.categorical(kj, jnp.log(stale))
+    pq = lambda i: (w[i], stale[i])
+    base = sampling.rejection_sample(key, prop, pq, max_attempts=8)
+    gated = sampling.rejection_sample(key, prop, pq, max_attempts=8,
+                                      valid=jnp.asarray(True))
+    for b, g in zip(base, gated):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(g))
+    # and under jit with a traced predicate
+    jitted = jax.jit(lambda k, v: sampling.rejection_sample(
+        k, prop, pq, max_attempts=8, valid=v))(key, jnp.asarray(True))
+    for b, g in zip(base, jitted):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(g))

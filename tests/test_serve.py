@@ -115,3 +115,73 @@ def test_kvquant_encode_decode_shapes():
     assert codes.shape == (4, 32, 8, 4)
     rec = kvquant.decode(codes, cb)
     assert rec.shape == kv.shape
+
+
+# ---------------------------------------------------------------------------
+# request guards + group timeout (ISSUE 7 satellites): one bad request must
+# not crash — or stall — the batch
+# ---------------------------------------------------------------------------
+
+
+def test_malformed_prompts_get_typed_per_request_errors(small_lm):
+    from repro.serve import RequestError
+    cfg, _, params = small_lm
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=16,
+                                          max_new_tokens=4))
+    good = np.asarray([1, 2, 3], np.int32)
+    prompts = [good,
+               np.asarray([], np.int32),                  # empty
+               np.asarray([0.5, 1.5], np.float32),        # float tokens
+               np.arange(17, dtype=np.int32),             # > max_len
+               np.zeros((2, 3), np.int32),                # not 1-D
+               good]
+    outs = eng.generate(prompts)
+    assert len(outs) == 6
+    assert isinstance(outs[1], RequestError) and "empty" in outs[1].reason
+    assert isinstance(outs[2], RequestError) and "dtype" in outs[2].reason
+    assert isinstance(outs[3], RequestError) and "max_len" in outs[3].reason
+    assert isinstance(outs[4], RequestError) and "1-D" in outs[4].reason
+    for bad_idx in (1, 2, 3, 4):
+        assert outs[bad_idx].index == bad_idx
+    # the valid slots are still served, in order
+    assert isinstance(outs[0], np.ndarray) and len(outs[0]) == 4
+    assert isinstance(outs[5], np.ndarray) and len(outs[5]) == 4
+
+
+def test_all_valid_batch_is_bitwise_the_unguarded_grouping(small_lm):
+    """Per-request validation must not perturb the healthy path: a batch of
+    valid prompts reproduces the pre-guard outputs (same groups, same key
+    folds) bitwise."""
+    cfg, _, params = small_lm
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=32,
+                                          max_new_tokens=4))
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=m).astype(np.int32)
+               for m in (5, 9, 7, 11, 6)]
+    a = eng.generate(prompts, seed=3)
+    b = eng.generate(prompts, seed=3)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    # dropping an invalid slot must not change the key schedule of the
+    # groups that remain: valid outputs are those of the valid-only call
+    with_bad = prompts[:2] + [np.asarray([], np.int32)] + prompts[2:]
+    mixed = eng.generate(with_bad, seed=3)
+    for got, want in zip(mixed[:2] + mixed[3:], a):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_group_timeout_returns_partial_completions(small_lm):
+    from repro.serve import RequestError
+    cfg, _, params = small_lm
+    eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=32,
+                                          max_new_tokens=64,
+                                          group_timeout=0.0))
+    p = [np.asarray([1, 2, 3], np.int32)]
+    out = eng.generate(p)[0]
+    # deadline expires before the first decode step: only the prefill token
+    assert not isinstance(out, RequestError)
+    assert 1 <= len(out) < 64
+    # unbounded config still decodes to max_new_tokens
+    eng2 = Engine(cfg, params, ServeConfig(max_batch=2, max_len=32,
+                                           max_new_tokens=8))
+    assert len(eng2.generate(p)[0]) == 8
