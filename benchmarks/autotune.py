@@ -1,0 +1,124 @@
+"""Autotuner trajectory — tuned vs default heuristic, per shape (ISSUE 8).
+
+For each swept ``(n, k, d)`` shape the module runs the real search
+(``repro.tune.search``), persists the winner into a tune cache under
+``$REPRO_BENCH_OUT/tune-cache/`` (the artifact CI uploads — a pre-warmed
+cache anyone can ship, see docs/engine.md "Autotuning"), and reports:
+
+  default_*        — the heuristic geometry (`choose_block_n` block,
+                     ~sqrt(n_tiles) super fan-in) and its modelled bytes
+                     for one seeding round + one assignment iteration.
+  tuned_*          — the searched winner and its modelled bytes.
+  improvement      — default_bytes / tuned_bytes (>= 1.0; the acceptance
+                     criterion needs at least one shape > 1.0).
+  predicted_gap    — |analytic model − compiled-HLO accounting| /
+                     HLO accounting for the DEFAULT geometry: the
+                     predicted-vs-measured gap when "measured" is the
+                     per-op byte extraction of ``roofline.hlo`` (the only
+                     trustworthy probe off-TPU). On TPU hardware
+                     ``time_ms`` additionally lands real wall clock.
+  time_ms          — median-of-5 wall clock of one fused assignment round
+                     (NaN off-TPU: CPU wall-clock would be reported as if
+                     it measured the accelerator).
+
+The ``cache`` section records what the run persisted (key, source,
+block_n, tps), so the artifact is self-describing.
+
+Emits BENCH_tune.json via REPRO_BENCH_OUT; benchmarks/BENCH_tune.json is
+the checked-in smoke-mode baseline."""
+from __future__ import annotations
+
+import os
+import pathlib
+
+import jax
+
+from benchmarks.common import SMOKE, emit, sweep, write_json
+from repro.core import bounds as bnd
+from repro.kernels.ops import choose_block_n
+from repro.tune import TuneCache, measure
+from repro.tune.search import resolve
+
+SHAPES = sweep([
+    (2 ** 16, 16, 8),
+    (2 ** 14, 8, 2),
+    (2 ** 17, 32, 16),
+], smoke_take=2)
+
+
+def _cache_dir() -> str | None:
+    out = os.environ.get("REPRO_BENCH_OUT", "")
+    if not out:
+        return None
+    d = pathlib.Path(out) / "tune-cache"
+    d.mkdir(parents=True, exist_ok=True)
+    return str(d)
+
+
+def run(rows: list, cache: TuneCache):
+    for n, k, d in SHAPES:
+        default_bn = choose_block_n(n, d, k, batched=True)
+        default_tps = bnd.tiles_per_super(-(-n // default_bn))
+        default_cost = measure.model_round_cost(n, k, d, block_n=default_bn,
+                                                tps=None)
+        rec = resolve(cache, n=n, k=k, d=d, backend="fused",
+                      dtype="float32", mode="auto")
+        # model-vs-HLO gap on the default geometry: how honest is the
+        # analytic byte model against XLA's actual op schedule?
+        hlo = measure.hlo_round_cost(n, k, d)
+        fit_model = measure.model_fit_round_bytes(n, d, k,
+                                                  block_n=default_bn)
+        gap = abs(fit_model - hlo["bytes"]) / max(hlo["bytes"], 1.0)
+        rows.append({
+            "bench": "tuned_vs_default", "backend": "fused",
+            "n": n, "k": k, "d": d,
+            "default_block_n": default_bn, "default_tps": default_tps,
+            "tuned_block_n": rec.block_n, "tuned_tps": rec.tps,
+            "default_bytes": round(float(default_cost)),
+            "tuned_bytes": round(float(rec.predicted_bytes)),
+            "improvement": round(float(default_cost)
+                                 / max(float(rec.predicted_bytes), 1.0), 4),
+            "model_fit_bytes": round(float(fit_model)),
+            "hlo_fit_bytes": round(float(hlo["bytes"])),
+            "predicted_gap": round(float(gap), 4),
+            "source": rec.source,
+            "time_ms": round(float(rec.measured_ms), 3),
+        })
+
+
+def run_cache(rows: list, cache: TuneCache):
+    persisted = cache.save()
+    for key, rec in sorted(cache.entries.items()):
+        rows.append({
+            "bench": "tune_cache", "backend": rec.backend,
+            "n": rec.n, "k": rec.k, "d": rec.d,
+            "key": key, "source": rec.source,
+            "tuned_block_n": rec.block_n, "tuned_tps": rec.tps,
+            "sampler": rec.sampler, "order": str(rec.order),
+            "precision": rec.precision,
+            "persisted": str(persisted) if persisted else "",
+        })
+
+
+def main():
+    rows: list = []
+    cache = TuneCache(_cache_dir())
+    run(rows, cache)
+    run_cache(rows, cache)
+    header = ["bench", "backend", "n", "k", "d",
+              "default_block_n", "default_tps", "tuned_block_n", "tuned_tps",
+              "default_bytes", "tuned_bytes", "improvement",
+              "model_fit_bytes", "hlo_fit_bytes", "predicted_gap",
+              "key", "source", "sampler", "order", "precision",
+              "persisted", "time_ms"]
+    emit(rows, header)
+    write_json("tune", {
+        "meta": {"smoke": SMOKE, "shapes": [list(s) for s in SHAPES],
+                 "wallclock": measure.wallclock_available(),
+                 "jax_backend": jax.default_backend()},
+        "rows": rows,
+    })
+
+
+if __name__ == "__main__":
+    main()

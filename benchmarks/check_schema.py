@@ -19,24 +19,34 @@ import sys
 REQUIRED: dict[str, dict[str, set]] = {
     "round": {
         "round_traffic": {"skip_rate_mean", "prune_rate", "bytes_per_round",
-                          "seconds"},
+                          "time_ms", "seconds"},
         "skip_vs_round": {"skip_rate_mean", "prune_rate", "bytes_per_round"},
         "fit_traffic": {"skip_rate_mean", "prune_rate", "bytes_per_round",
-                        "accum_hbm", "accum_hbm_flat", "seconds"},
+                        "accum_hbm", "accum_hbm_flat", "time_ms",
+                        "seconds"},
         "fit_skip_vs_iter": {"skip_rate_mean", "prune_rate",
                              "bytes_per_round", "accum_hbm",
                              "accum_hbm_flat"},
         "guard_overhead": {"validate", "guard_hbm", "call_hbm",
-                           "guard_overhead", "seconds"},
+                           "guard_overhead", "time_ms", "seconds"},
     },
     "seed": {
         "seed_sampler": {"post_round_reads", "skip_rate", "accept_rate",
-                         "seed_reads", "seconds"},
+                         "seed_reads", "time_ms", "seconds"},
         "kmeans_batched": {"post_round_reads", "skip_rate", "accept_rate",
-                           "seed_reads", "seconds"},
+                           "seed_reads", "time_ms", "seconds"},
         "rejection_vs_tiled": {"post_round_reads", "skip_rate",
                                "accept_rate", "seed_reads", "reads_ratio",
-                               "seconds"},
+                               "time_ms", "seconds"},
+    },
+    "tune": {
+        "tuned_vs_default": {"n", "k", "d", "default_block_n",
+                             "default_tps", "tuned_block_n", "tuned_tps",
+                             "default_bytes", "tuned_bytes", "improvement",
+                             "model_fit_bytes", "hlo_fit_bytes",
+                             "predicted_gap", "source", "time_ms"},
+        "tune_cache": {"key", "source", "tuned_block_n", "tuned_tps",
+                       "sampler", "order", "precision"},
     },
 }
 

@@ -4,9 +4,10 @@ Set REPRO_BENCH_SMOKE=1 to shrink every sweep to its smallest point (the CI
 smoke mode — each module finishes in seconds while still exercising the full
 code path). Set REPRO_BENCH_OUT=<dir> to additionally capture JSON payloads
 from the modules that emit them via `write_json` (the `seed` module's
-BENCH_seed.json and the `round` module's BENCH_round.json — the CI workflow
-uploads that directory as an artifact; benchmarks/BENCH_seed.json and
-benchmarks/BENCH_round.json are the checked-in baselines)."""
+BENCH_seed.json, the `round` module's BENCH_round.json and the `tune`
+module's BENCH_tune.json — the CI workflow uploads that directory as an
+artifact; the same-named files under benchmarks/ are the checked-in
+baselines)."""
 from __future__ import annotations
 
 import json
@@ -51,6 +52,17 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
+
+
+def time_ms(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            interpreted: bool = False) -> float:
+    """Median wall-time in MILLISECONDS (median-of-`iters` after `warmup`
+    discarded runs), or NaN when the timed path runs in Pallas interpret
+    mode (`interpreted=True`) — interpreter wall-clock would be reported
+    as if it measured the kernel, which is worse than no number."""
+    if interpreted:
+        return float("nan")
+    return 1000.0 * time_fn(fn, *args, warmup=warmup, iters=iters)
 
 
 def emit(rows: list[dict], header: list[str]) -> None:

@@ -21,6 +21,11 @@ Columns per seeding run:
   seconds       — wall time of the full seed call, fp32 vs bf16 (the bf16
                   win is a bandwidth effect, so expect parity on this CPU
                   host and ~2x on the round-kernel fraction on TPU).
+  time_ms       — median-of-5 wall clock in ms (2 warmup runs discarded)
+                  of the same call, sitting next to the modelled bytes so
+                  measured and modelled costs share a row (ISSUE 8); NaN
+                  on pallas rows off-TPU, where interpret mode would time
+                  the interpreter rather than the kernel.
 
 The ``fit_traffic`` / ``fit_skip_vs_iter`` rows track the ASSIGNMENT round
 (the Lloyd hot path): per-iteration skip/prune rates of the two-level
@@ -56,10 +61,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import SMOKE, emit, time_fn, write_json
+from benchmarks.common import SMOKE, emit, time_fn, time_ms, write_json
 from repro.core.engine import ClusterEngine
 from repro.data.synthetic import blobs
 from repro.kernels.ops import choose_block_n
+from repro.tune import measure as tune_measure
+
+
+def _interpreted(backend: str) -> bool:
+    """Pallas rows run in interpret mode off-TPU — their wall clock times
+    the interpreter, so the time_ms column reports NaN there."""
+    return backend == "pallas" and jax.default_backend() != "tpu"
 
 N, D, K = (2 ** 14, 2, 4) if SMOKE else (2 ** 17, 8, 16)
 SEEDS = 8 if SMOKE else 32
@@ -73,15 +85,13 @@ def coherent_blobs(n: int, seed: int = 0) -> jax.Array:
 
 
 def round_bytes(n: int, skip_rate: float, dtype_bytes: int) -> int:
-    """Modelled HBM bytes of ONE gated round at the engine tile height:
-    per active tile, the kernel streams the point block (stream dtype), the
-    fp32 cached-norms block, reads+writes the fp32 min_d2 block and writes
-    the two fp32 bound-state scalars. Skipped tiles move nothing."""
+    """Modelled HBM bytes of ONE gated round at the engine tile height.
+    The formula lives in ``repro.tune.measure`` (the autotuner scores
+    candidates with the same model, so the benchmark column and the tuner
+    objective can't drift); this wrapper just pins the module's shape."""
     bn = choose_block_n(n, D, 1, batched=True)
-    n_tiles = -(-n // bn)
-    active = round(n_tiles * (1.0 - skip_rate))
-    per_tile = bn * (D * dtype_bytes + 4 + 2 * 4) + 2 * 4
-    return active * per_tile
+    return tune_measure.model_seed_round_bytes(
+        n, D, block_n=bn, skip_rate=skip_rate, dtype_bytes=dtype_bytes)
 
 
 def run(rows: list):
@@ -100,6 +110,9 @@ def run(rows: list):
                 prunes = np.asarray(res.pruned, np.float64) / n
                 t = time_fn(lambda: jax.block_until_ready(
                     peng.seed(key, pts, SEEDS)), iters=3)
+                tms = time_ms(lambda: jax.block_until_ready(
+                    peng.seed(key, pts, SEEDS)),
+                    interpreted=_interpreted(backend))
                 rows.append({
                     "bench": "round_traffic", "backend": backend,
                     "layout": layout, "precision": precision, "n": n,
@@ -110,6 +123,7 @@ def run(rows: list):
                     "bytes_per_round": round_bytes(
                         n, float(skips.mean()),
                         2 if precision == "bf16" else 4),
+                    "time_ms": round(tms, 3),
                     "seconds": round(t, 6),
                 })
 
@@ -129,6 +143,7 @@ def run_skip_vs_round(rows: list):
             "skip_rate_last": "",
             "prune_rate": round(float(p) / N, 4),
             "bytes_per_round": round_bytes(N, float(s) / n_tiles, 4),
+            "time_ms": "",
             "seconds": "",
         })
 
@@ -165,6 +180,8 @@ def run_guard_overhead(rows: list):
         t = time_fn(lambda: jax.block_until_ready(
             eng.kmeans(key, pts, K, max_iters=iters,
                        tol=-1.0).centroids), iters=3)
+        tms = time_ms(lambda: jax.block_until_ready(
+            eng.kmeans(key, pts, K, max_iters=iters, tol=-1.0).centroids))
         cost = guard_hbm if policy != "off" else 0
         rows.append({
             "bench": "guard_overhead", "backend": "fused",
@@ -173,6 +190,7 @@ def run_guard_overhead(rows: list):
             "guard_hbm": cost,
             "call_hbm": call_hbm,
             "guard_overhead": round(cost / call_hbm, 4),
+            "time_ms": round(tms, 3),
             "seconds": round(t, 6),
         })
 
@@ -196,19 +214,11 @@ def fit_bytes(n: int, skip_rate: float, dtype_bytes: int, *,
     sums/counts block over its tps tiles. The never-read aliased carries
     live in ANY memory space — no per-step DMA — and skipped tiles move
     nothing."""
-    from repro.core import bounds as bnd
     d = D_FIT if d is None else d
     k = K_FIT if k is None else k
     bn = choose_block_n(n, d, k, batched=True)
-    n_tiles = -(-n // bn)
-    tps = bnd.tiles_per_super(n_tiles)
-    active = round(n_tiles * (1.0 - skip_rate))
-    per_tile = (bn * (d * dtype_bytes + 4)          # points + norms in
-                + 2 * bn * (4 + 4 + 4)              # assign/md/lb i/o
-                + 4 * (k * d + k) / tps             # super sums/counts,
-                                                    # amortized over tps
-                + 3 * 4)                            # partial/gap/pruned
-    return round(active * per_tile)
+    return tune_measure.model_fit_round_bytes(
+        n, d, k, block_n=bn, skip_rate=skip_rate, dtype_bytes=dtype_bytes)
 
 
 def accum_hbm(n: int) -> tuple[int, int]:
@@ -248,6 +258,10 @@ def run_fit(rows: list):
             t = time_fn(lambda: jax.block_until_ready(
                 eng.fit(pts, seeds, max_iters=FIT_ITERS, tol=-1.0,
                         order=order).centroids), iters=3)
+            tms = time_ms(lambda: jax.block_until_ready(
+                eng.fit(pts, seeds, max_iters=FIT_ITERS, tol=-1.0,
+                        order=order).centroids),
+                interpreted=_interpreted(backend))
             rows.append({
                 "bench": "fit_traffic", "backend": backend,
                 "layout": layout, "precision": "fp32", "n": n,
@@ -258,6 +272,7 @@ def run_fit(rows: list):
                 "bytes_per_round": fit_bytes(n, float(skips.mean()), 4),
                 "accum_hbm": hier,
                 "accum_hbm_flat": flat,
+                "time_ms": round(tms, 3),
                 "seconds": round(t, 6),
             })
 
@@ -282,6 +297,7 @@ def run_fit_skip_vs_iter(rows: list):
             "bytes_per_round": fit_bytes(N_FIT, float(s) / n_tiles, 4),
             "accum_hbm": hier,
             "accum_hbm_flat": flat,
+            "time_ms": "",
             "seconds": "",
         })
 
@@ -297,7 +313,7 @@ def main():
               "skip_rate_mean", "skip_rate_last", "prune_rate",
               "bytes_per_round", "accum_hbm", "accum_hbm_flat",
               "validate", "guard_hbm", "call_hbm", "guard_overhead",
-              "seconds"]
+              "time_ms", "seconds"]
     emit(rows, header)
     write_json("round", {
         "meta": {"smoke": SMOKE, "N": N, "D": D, "K": K, "seeds": SEEDS,

@@ -8,7 +8,7 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (dist_scaling, fig1_global, fig2_constant,
+from benchmarks import (autotune, dist_scaling, fig1_global, fig2_constant,
                         fig3_texture, minibatch, quality_parity, roofline,
                         round_traffic, seed_sampling)
 
@@ -22,6 +22,7 @@ MODULES = {
     "roofline": roofline,
     "seed": seed_sampling,
     "round": round_traffic,
+    "tune": autotune,
 }
 
 

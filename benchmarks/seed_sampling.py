@@ -18,6 +18,11 @@ batch-grid kernels (one launch covers every tenant problem), and a
 `rejection_vs_tiled` smoke row at k=64 whose `reads_ratio` pins the
 sub-linear seeding claim (ISSUE 6: >= 4x fewer modelled reads).
 
+Each timed row also carries a ``time_ms`` column (median-of-5 wall clock
+with 2 warmup runs, NaN for pallas rows off-TPU where interpret mode would
+time the interpreter) so the modelled reads and the measured cost sit side
+by side (ISSUE 8).
+
 Emits BENCH_seed.json via REPRO_BENCH_OUT; benchmarks/BENCH_seed.json is the
 checked-in smoke-mode baseline tracking the trajectory across PRs."""
 from __future__ import annotations
@@ -25,10 +30,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import SMOKE, emit, time_fn, write_json
+from benchmarks.common import SMOKE, emit, time_fn, time_ms, write_json
 from repro.core.engine import ClusterEngine
 from repro.data.synthetic import blobs
 from repro.kernels.ops import choose_block_n
+
+
+def _interpreted(backend: str) -> bool:
+    """Pallas rows run in interpret mode off-TPU; their time_ms is NaN."""
+    return backend == "pallas" and jax.default_backend() != "tpu"
 
 N, D, K = (2 ** 12, 2, 8) if SMOKE else (2 ** 16, 16, 32)
 # pallas kernels interpret on CPU — keep their probe small off-TPU
@@ -99,6 +109,10 @@ def run(rows: list):
             t = time_fn(lambda: jax.block_until_ready(
                 eng.seed(key, pts, K, sampler=sampler,
                          refresh_block=REFRESH_BLOCK)))
+            tms = time_ms(lambda: jax.block_until_ready(
+                eng.seed(key, pts, K, sampler=sampler,
+                         refresh_block=REFRESH_BLOCK)),
+                interpreted=_interpreted(backend))
             rows.append({
                 "bench": "seed_sampler", "backend": backend,
                 "sampler": sampler, "n": n, "k": K,
@@ -106,6 +120,7 @@ def run(rows: list):
                 "skip_rate": round(_skip_rate(eng, res, n), 4),
                 "accept_rate": round(_accept_rate(res), 4),
                 "seed_reads": round(_seed_reads(eng, res, n, K, sampler), 1),
+                "time_ms": round(tms, 3),
                 "seconds": round(t, 6),
             })
 
@@ -128,6 +143,9 @@ def run_rejection_vs_tiled(rows: list):
         t = time_fn(lambda: jax.block_until_ready(
             eng.seed(key, pts, k64, sampler=sampler,
                      refresh_block=REFRESH_BLOCK)))
+        tms = time_ms(lambda: jax.block_until_ready(
+            eng.seed(key, pts, k64, sampler=sampler,
+                     refresh_block=REFRESH_BLOCK)))
         reads[sampler] = _seed_reads(eng, res, n64, k64, sampler)
         rows.append({
             "bench": "rejection_vs_tiled", "backend": "fused",
@@ -138,6 +156,7 @@ def run_rejection_vs_tiled(rows: list):
             "seed_reads": round(reads[sampler], 1),
             "reads_ratio": 1.0 if sampler == "tiled" else
             round(reads["tiled"] / max(reads["rejection"], 1.0), 2),
+            "time_ms": round(tms, 3),
             "seconds": round(t, 6),
         })
 
@@ -151,12 +170,16 @@ def run_batched(rows: list):
         seeds = eng.seed_batched(keys, bpts, BK)
         t = time_fn(lambda: jax.block_until_ready(
             eng.kmeans_batched(keys, bpts, BK, max_iters=5)), iters=3)
+        tms = time_ms(lambda: jax.block_until_ready(
+            eng.kmeans_batched(keys, bpts, BK, max_iters=5)),
+            interpreted=_interpreted(backend))
         rows.append({
             "bench": "kmeans_batched", "backend": backend, "sampler": "cdf",
             "n": BN, "k": BK, "post_round_reads": BB * BN,
             "skip_rate": round(_skip_rate(eng, seeds, BN), 4),
             "accept_rate": 1.0,
             "seed_reads": round(_seed_reads(eng, seeds, BN, BK, "cdf"), 1),
+            "time_ms": round(tms, 3),
             "seconds": round(t, 6),
         })
 
@@ -168,7 +191,7 @@ def main():
     run_rejection_vs_tiled(rows)
     header = ["bench", "backend", "sampler", "n", "k",
               "post_round_reads", "skip_rate", "accept_rate", "seed_reads",
-              "seconds"]
+              "time_ms", "seconds"]
     emit(rows, header)
     write_json("seed", {
         "meta": {"smoke": SMOKE, "N": N, "D": D, "K": K,

@@ -303,20 +303,29 @@ def centroid_movement(new_c: jax.Array, old_c: jax.Array) -> jax.Array:
     return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
 
 
-def tiles_per_super(n_tiles: int) -> int:
+def tiles_per_super(n_tiles: int, tps: Optional[int] = None) -> int:
     """Static super-tile width: ~√n_tiles consecutive tiles share one
     accumulator slot (power of two, so ``super_id = t // tps`` is a shift).
     Caps the hierarchical accumulators at O(n_super·k·d) with
     n_super = ceil(n_tiles / tps) ≈ √n_tiles. Problems of ≤ 8 tiles keep
     the flat layout (tps = 1): there is no accumulator footprint to cap,
-    and grouping would only coarsen the skip gate's alias granularity."""
+    and grouping would only coarsen the skip gate's alias granularity.
+
+    ``tps`` overrides the heuristic (the autotuner's knob); it is clamped
+    to [1, next_pow2(n_tiles)] and rounded to a power of two so
+    ``super_id = t // tps`` stays a shift and the aliasing argument holds.
+    """
+    if tps is not None and tps > 0:
+        cap = 1 << max(int(n_tiles - 1).bit_length(), 0) if n_tiles > 1 else 1
+        t = 1 << (int(tps).bit_length() - 1)        # floor to power of two
+        return max(1, min(t, cap))
     if n_tiles <= 8:
         return 1
     return 1 << ((int(n_tiles - 1).bit_length() + 1) // 2)
 
 
-def n_supers(n_tiles: int) -> int:
-    return -(-n_tiles // tiles_per_super(n_tiles))
+def n_supers(n_tiles: int, tps: Optional[int] = None) -> int:
+    return -(-n_tiles // tiles_per_super(n_tiles, tps))
 
 
 def expand_active_supers(active: jax.Array, tps: int) -> jax.Array:
@@ -357,7 +366,8 @@ def super_reduce(tile_arr: jax.Array, tps: int) -> jax.Array:
 
 
 def assign_active_tiles(delta: jax.Array, centroids: jax.Array,
-                        state: BoundState, cache: RoundCache) -> jax.Array:
+                        state: BoundState, cache: RoundCache,
+                        tps: Optional[int] = None) -> jax.Array:
     """(n_tiles,) bool — True where an ASSIGNMENT tile might change labels.
 
     Tile t is skipped only when BOTH hold:
@@ -382,7 +392,7 @@ def assign_active_tiles(delta: jax.Array, centroids: jax.Array,
     tile's distance-unit magnitude (never skips a tile exact arithmetic
     would keep — rounding only prunes less)."""
     n_tiles = state.partials.shape[0]
-    tps = tiles_per_super(n_tiles)
+    tps = tiles_per_super(n_tiles, tps)
     dmax = jnp.max(delta)
     occupied = state.tile_counts > 0.0                      # (n_super, k)
     moved_sup = jnp.any(occupied & (delta[None, :] > 0.0), axis=1)

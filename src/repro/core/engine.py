@@ -97,6 +97,9 @@ class KmeansppResult(NamedTuple):
                                            # recovery flags per round (None
                                            # when the in-flight guard is off;
                                            # see core.telemetry)
+    tune: Optional[object] = None          # repro.tune.TuneRecord provenance
+                                           # (attached POST-jit by the
+                                           # engine; None when tune='off')
     # counter contract (shared with LloydResult; pinned by
     # tests/test_telemetry_contract.py): fixed length (k,), one slot per
     # round, slots of rounds that did not run the counted event are ZERO —
@@ -134,6 +137,9 @@ class LloydResult(NamedTuple):
                                            # corruption-recovery flags per
                                            # iteration (None when the guard
                                            # is off; see core.telemetry)
+    tune: Optional[object] = None          # repro.tune.TuneRecord provenance
+                                           # (attached POST-jit by the
+                                           # engine; None when tune='off')
 
 
 class AssignRound(NamedTuple):
@@ -301,19 +307,20 @@ def _gate_model(new_md_full, min_d2, weights, c_new, cache: RoundCache,
                      pruned)
 
 
-def _assign_tiled_model(points, centroids, norms, tile):
+def _assign_tiled_model(points, centroids, norms, tile, tps=None):
     """Pure-JAX twin of `lloyd_assign_tiled_pallas`, shared by the reference
     and fused backends: `jax.lax.map` over point tiles of the SAME per-tile
     assignment math the kernel runs (`kernels.lloyd_assign._tile_assign`),
     so the per-tile partial/gap trees and the hierarchical super-tile
     sums/counts agree and the gate model's selects are value-noops in fp32.
-    Returns (assignment, min_d2, partials, gaps, lb, super_sums,
+    ``tps`` must match the caller's backend fan-in (``None`` keeps the
+    heuristic). Returns (assignment, min_d2, partials, gaps, lb, super_sums,
     super_counts)."""
     from repro.kernels.lloyd_assign import _tile_assign
 
     n, d = points.shape
     pad = (-n) % tile
-    tps = bounds.tiles_per_super((n + pad) // tile)
+    tps = bounds.tiles_per_super((n + pad) // tile, tps)
     pts = jnp.pad(points, ((0, pad), (0, 0)))
     nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
     valid = jnp.arange(n + pad) < n
@@ -376,6 +383,16 @@ class Backend:
     # AND fit phases agree on one tile geometry and can share one prologue;
     # 0 leaves the per-call m untouched (the historical behavior).
     tile_m: int = 0
+    # autotuner overrides (repro.tune): a tuned point-tile height and
+    # super-tile fan-in. 0 keeps the heuristics (``choose_block_n`` /
+    # ``bounds.tiles_per_super``) — the default, so a backend constructed
+    # without the tuner is bitwise the pre-tuner backend. A tuned block_n
+    # can only SHRINK the heuristic pick (min with the VMEM-fitted cap), so
+    # any cached value — even one recorded for a different shape via the
+    # nearest-shape fallback — stays within the VMEM budget; tps is clamped
+    # and pow2-floored by ``bounds.tiles_per_super``.
+    block_n: int = 0
+    tps: int = 0
 
     def seed_round(self, points, c_new, min_d2, weights, *,
                    cache: Optional[RoundCache] = None,
@@ -416,11 +433,12 @@ class Backend:
         n, d = points.shape
         k = centroids.shape[0]
         tile = self.seed_tile(n, d, k)
-        tps = bounds.tiles_per_super(-(-n // tile))
+        tps = self.tiles_per_super(-(-n // tile))
         if (state is not None and delta is not None
                 and cache.centers is not None):
             dmax = jnp.max(delta)
-            cand = bounds.assign_active_tiles(delta, centroids, state, cache)
+            cand = bounds.assign_active_tiles(delta, centroids, state, cache,
+                                              tps=tps)
             active = bounds.expand_active_supers(cand, tps)
             thresh, absorb = bounds.assign_point_scalars(delta, centroids,
                                                          state, cache)
@@ -456,7 +474,7 @@ class Backend:
                                jnp.sum(scounts, axis=0), new_state, skipped,
                                pruned)
         a, md, part, gap, lb, ssums, scounts = _assign_tiled_model(
-            points, centroids, norms, tile)
+            points, centroids, norms, tile, tps=tps)
         del lb  # the ungated state carries no per-point bound fields (same
         #         pytree as the Pallas ungated branch — the gated loop
         #         builds its own init state)
@@ -487,9 +505,22 @@ class Backend:
         conservative for the single-problem launch) so partial shapes agree
         across backends and the tiled sampler slices the right window.
         ``tile_m`` (see the field) floors m so a kmeans call's two phases
-        share one geometry."""
+        share one geometry. A tuned ``block_n`` (repro.tune) caps the pick
+        from below the heuristic — never above it, so the VMEM accounting
+        of ``pick_block_n`` still holds."""
         from repro.kernels.ops import choose_block_n
-        return choose_block_n(n, d, max(m, self.tile_m, 1), batched=True)
+        pick = choose_block_n(n, d, max(m, self.tile_m, 1), batched=True)
+        if self.block_n > 0:
+            return max(128, min(pick, self.block_n))
+        return pick
+
+    def tiles_per_super(self, n_tiles: int) -> int:
+        """Super-tile fan-in for this backend: the tuned ``tps`` when set
+        (clamped/pow2-floored), else the ~sqrt(n_tiles) heuristic. ALL
+        call sites — the engine's init-state shapes, the pure-JAX model
+        and the Pallas wrappers — route through here so the jnp and pallas
+        accumulator paths can never silently disagree."""
+        return bounds.tiles_per_super(n_tiles, self.tps or None)
 
     def _partials(self, min_d2, weights, n: int, d: int, m: int):
         w_md = min_d2 if weights is None else min_d2 * weights
@@ -678,11 +709,12 @@ class PallasBackend(Backend):
         from repro.kernels import ops as kops
         n, d = points.shape
         tile = self.seed_tile(n, d, centroids.shape[0])
-        tps = bounds.tiles_per_super(-(-n // tile))
+        tps = self.tiles_per_super(-(-n // tile))
         if (state is not None and delta is not None
                 and cache.centers is not None):
             dmax = jnp.max(delta)
-            cand = bounds.assign_active_tiles(delta, centroids, state, cache)
+            cand = bounds.assign_active_tiles(delta, centroids, state, cache,
+                                              tps=tps)
             # expand to whole super-tiles HERE (the wrapper re-expands,
             # idempotently) so the gap-decay / debt bookkeeping below sees
             # exactly the tiles the kernel rewrote
@@ -694,7 +726,7 @@ class PallasBackend(Backend):
                     points, centroids, norms, delta, thresh, absorb,
                     state.assignment, state.min_d2, state.point_lb,
                     state.partials, state.tile_gap, state.tile_sums,
-                    state.tile_counts, active, block_n=tile)
+                    state.tile_counts, active, block_n=tile, tps=tps)
             # kernel gap output: fresh for computed tiles, the ALIASED carry
             # for skipped ones — decay the latter by this step's movement so
             # it stays a valid lower bound across consecutive skips; the
@@ -710,7 +742,7 @@ class PallasBackend(Backend):
                                jnp.sum(scounts, axis=0), new_state, skipped,
                                jnp.sum(pruned_t.astype(jnp.int32)))
         a, md, part, gap, ssums, scounts = kops.lloyd_assign_tiled(
-            points, centroids, norms=norms, block_n=tile)
+            points, centroids, norms=norms, block_n=tile, tps=tps)
         new_state = BoundState(part, tile_gap=gap, tile_sums=ssums,
                                tile_counts=scounts, assignment=a, min_d2=md)
         return AssignRound(a, md, jnp.sum(ssums, axis=0),
@@ -748,6 +780,9 @@ class MeshBackend(Backend):
 
     def seed_tile(self, n: int, d: int, m: int = 1) -> int:
         return self.local.seed_tile(n, d, m)
+
+    def tiles_per_super(self, n_tiles: int) -> int:
+        return self.local.tiles_per_super(n_tiles)
 
     def prologue(self, points, m: int = 1,
                  with_bounds: bool = True) -> RoundCache:
@@ -1506,7 +1541,7 @@ def _fit_gated_parts(pts, stream, init_centroids, backend: Backend,
     k = init_centroids.shape[0]
     tile = backend.seed_tile(n, d, k)
     n_tiles = -(-n // tile)
-    n_super = bounds.n_supers(n_tiles)
+    n_super = -(-n_tiles // backend.tiles_per_super(n_tiles))
     pv = backend.pvary
     init_state = BoundState(
         pv(jnp.zeros((n_tiles,), jnp.float32)),
@@ -1934,29 +1969,85 @@ class ClusterEngine:
 
     def __init__(self, backend: Union[str, Backend] = "fused", *,
                  precision: str = "fp32", bounds: bool = True,
-                 validate: str = "raise", **backend_opts):
+                 validate: str = "raise", tune: str = "off",
+                 tune_dir=None, **backend_opts):
         if precision not in ("fp32", "bf16"):
             raise ValueError(f"unknown precision {precision!r}; "
                              "expected 'fp32' or 'bf16'")
+        if tune not in ("off", "cache", "auto"):
+            raise ValueError(f"unknown tune {tune!r}; "
+                             "expected 'off', 'cache' or 'auto'")
         self.backend = make_backend(backend, **backend_opts)
         self.precision = precision
         self.bounds = bool(bounds)
         self.validate = guards.check_policy(validate)
         self._guard = validate != "off"
+        self.tune = tune
+        self.tune_dir = tune_dir
+        self._tune_cache = None   # lazy repro.tune.TuneCache
         self.fallback_events: list = []   # (failed, fallback, reason) hops
         self.last_backend: Backend = self.backend
         self._warned_fallback = False
 
+    # -- autotune plumbing -------------------------------------------------
+    def _tune_for(self, n: int, k: int, d: int, dtype):
+        """(tuned backend | None, TuneRecord | None) for one call shape.
+
+        tune='off' is the identity: callers run the engine's own backend
+        and attach no provenance. 'cache' consults the persisted cache only
+        (zero measurement/search calls — pinned by test); 'auto' searches
+        on a miss and persists the winner. The tuned geometry is applied as
+        a `dataclasses.replace` of the (local) backend — `block_n` can only
+        SHRINK the heuristic pick and `tps` is clamped/pow2-floored by
+        `bounds.tiles_per_super`, so any cached value is VMEM-safe even via
+        the nearest-shape fallback."""
+        if self.tune == "off":
+            return None, None
+        from repro import tune as _tune
+        if self._tune_cache is None:
+            self._tune_cache = _tune.TuneCache(self.tune_dir)
+        rec = _tune.resolve(self._tune_cache, n=int(n), k=int(k), d=int(d),
+                            backend=self.backend,
+                            dtype=jnp.dtype(dtype).name, mode=self.tune)
+        if rec is None:
+            return None, None
+        if self.backend.distributed:
+            be = dataclasses.replace(
+                self.backend,
+                local=dataclasses.replace(self.backend.local,
+                                          block_n=int(rec.block_n),
+                                          tps=int(rec.tps)))
+        else:
+            be = dataclasses.replace(self.backend,
+                                     block_n=int(rec.block_n),
+                                     tps=int(rec.tps))
+        return be, rec
+
+    @staticmethod
+    def _tune_sampler(sampler, refresh_block, rec):
+        """Resolve sampler='auto' against a TuneRecord (tiled when tuning
+        is off or nothing is known)."""
+        if sampler != "auto":
+            return sampler, refresh_block
+        if rec is None or not rec.sampler:
+            return "tiled", refresh_block
+        if rec.refresh_block:
+            refresh_block = int(rec.refresh_block)
+        return rec.sampler, refresh_block
+
     # -- robustness plumbing ----------------------------------------------
-    def _run(self, fn):
+    def _run(self, fn, backend: Optional[Backend] = None):
         """Run ``fn(backend)``, walking the kernel fallback chain on
         KernelFailureError. Each hop swaps the (local) backend for the next
         one down (pallas -> fused -> reference; a mesh backend swaps its
-        per-shard ``local``), warns once per engine, and is appended to
-        ``self.fallback_events``. The error escapes only when the chain is
-        exhausted."""
+        per-shard ``local``), carrying the tuned geometry fields
+        (``tile_m``/``block_n``/``tps``) across the swap, warns once per
+        engine, and is appended to ``self.fallback_events``. The error
+        escapes only when the chain is exhausted. ``backend`` overrides the
+        engine's own backend for this call (the tuned replica from
+        ``_tune_for``)."""
         from repro.kernels import ops
-        be = self.backend
+        be = self.backend if backend is None else backend
         while True:
             try:
                 out = fn(be)
@@ -1968,10 +2059,16 @@ class ClusterEngine:
                 if nxt is None:
                     raise
                 if be.distributed:
-                    be = dataclasses.replace(be, local=make_backend(nxt))
+                    loc = dataclasses.replace(make_backend(nxt),
+                                              tile_m=be.local.tile_m,
+                                              block_n=be.local.block_n,
+                                              tps=be.local.tps)
+                    be = dataclasses.replace(be, local=loc)
                 else:
                     be = dataclasses.replace(make_backend(nxt),
-                                             tile_m=be.tile_m)
+                                             tile_m=be.tile_m,
+                                             block_n=be.block_n,
+                                             tps=be.tps)
                 self.fallback_events.append((failed, nxt, str(e)))
                 if not self._warned_fallback:
                     warnings.warn(
@@ -1996,7 +2093,9 @@ class ClusterEngine:
         full D^2 refresh runs only every ``refresh_block`` seeds, each round
         in between touches O(1) rows — same distribution; refresh_block=1
         reproduces 'tiled' bitwise). ``refresh_block`` is ignored by the
-        other samplers.
+        other samplers. sampler='auto' takes the tuned sampler (and
+        refresh_block) from the autotune cache when ``tune=`` is on, else
+        'tiled'.
 
         ``checkpoint_dir`` runs the loop in resumable chunks of
         ``checkpoint_every`` rounds, persisting the full carry (centroids,
@@ -2010,13 +2109,23 @@ class ClusterEngine:
         points = guards.guard_points(points, self.validate)
         weights = guards.guard_weights(weights, n, self.validate)
         if checkpoint_dir is not None:
+            # checkpointed runs keep the DEFAULT geometry: the carry shapes
+            # are stamped into the checkpoint meta, and a tune-cache update
+            # between interrupt and resume must not change them
+            if sampler == "auto":
+                sampler = "tiled"
             return self._seed_checkpointed(
                 key, points, k, weights=weights, sampler=sampler,
                 checkpoint_dir=checkpoint_dir,
                 checkpoint_every=int(checkpoint_every))
-        return self._run(lambda be: _seed_jit(
+        tuned_be, rec = self._tune_for(n, k, points.shape[1], points.dtype)
+        sampler, refresh_block = self._tune_sampler(sampler, refresh_block,
+                                                    rec)
+        res = self._run(lambda be: _seed_jit(
             key, points, weights, k, be, sampler, self.precision,
-            self.bounds, int(refresh_block), self._guard, _fault))
+            self.bounds, int(refresh_block), self._guard, _fault),
+            backend=tuned_be)
+        return res if rec is None else res._replace(tune=rec)
 
     def _resolve_order(self, points: jax.Array, order):
         """order: None (natural), an ordering name ('morton' — see
@@ -2073,9 +2182,10 @@ class ClusterEngine:
         splits it on the next iteration).
 
         order: feed the kernels a tile-coherent row layout — None (natural
-        order), 'morton' (Z-order curve over the coordinates), or a
-        precomputed (n,) permutation (e.g. repro.data.ordering's
-        label_sort_order). The permutation is applied on the way in and
+        order), 'morton' (Z-order curve over the coordinates), 'auto' (the
+        tuned order from the autotune cache when ``tune=`` is on, else
+        natural), or a precomputed (n,) permutation (e.g.
+        repro.data.ordering's label_sort_order). The permutation is applied on the way in and
         INVERTED on the way out, so `assignment` is always in the caller's
         row order; the permutation used is recorded in
         ``LloydResult.reorder`` for pruning audits. Spatial coherence is
@@ -2095,6 +2205,14 @@ class ClusterEngine:
                                        self.validate)
         init_centroids = guards.guard_centroids(init_centroids, d,
                                                 self.validate)
+        tuned_be, rec = (None, None)
+        if checkpoint_dir is None:
+            # checkpointed runs keep the default geometry (see seed())
+            tuned_be, rec = self._tune_for(points.shape[0],
+                                           init_centroids.shape[0], d,
+                                           points.dtype)
+        if order == "auto":
+            order = rec.order if rec is not None else None
         points, weights, perm, inv = self._order_in(points, order, weights)
         if checkpoint_dir is not None:
             res = self._fit_checkpointed(
@@ -2105,7 +2223,10 @@ class ClusterEngine:
         else:
             res = self._run(lambda be: _fit_jit(
                 points, init_centroids, weights, be, max_iters, float(tol),
-                empty, self.precision, self.bounds, self._guard, _fault))
+                empty, self.precision, self.bounds, self._guard, _fault),
+                backend=tuned_be)
+        if rec is not None:
+            res = res._replace(tune=rec)
         return self._order_out(res, perm, inv)
 
     def kmeans(self, key: jax.Array, points: jax.Array, k: int, *,
@@ -2123,6 +2244,12 @@ class ClusterEngine:
         points = guards.guard_points(points, self.validate)
         weights = guards.guard_weights(weights, points.shape[0],
                                        self.validate)
+        tuned_be, rec = self._tune_for(points.shape[0], k,
+                                       points.shape[-1], points.dtype)
+        if order == "auto":
+            order = rec.order if rec is not None else None
+        sampler, refresh_block = self._tune_sampler(sampler, refresh_block,
+                                                    rec)
         points, weights, perm, inv = self._order_in(points, order, weights)
         if init == "kmeans++" and not self.backend.distributed:
             n = points.shape[0]
@@ -2130,7 +2257,9 @@ class ClusterEngine:
             res = self._run(lambda be: _kmeans_jit(
                 key, points, weights, k, be, sampler, max_iters, float(tol),
                 empty, self.precision, self.bounds, int(refresh_block),
-                self._guard))
+                self._guard), backend=tuned_be)
+            if rec is not None:
+                res = res._replace(tune=rec)
             return self._order_out(res, perm, inv)
         if init == "kmeans++":
             seeds = self.seed(key, points, k, weights=weights,
@@ -2260,9 +2389,13 @@ class ClusterEngine:
         # is already a (B,)-batch of keys
         single_ndim = 0 if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) else 1
         keys = key if key.ndim > single_ndim else jax.random.split(key, B)
-        return self._run(lambda be: _seed_batched_jit(
+        tuned_be, rec = self._tune_for(n, k, points.shape[-1], points.dtype)
+        sampler, refresh_block = self._tune_sampler(sampler, refresh_block,
+                                                    rec)
+        res = self._run(lambda be: _seed_batched_jit(
             keys, points, k, be, sampler, self.precision, self.bounds,
-            int(refresh_block)))
+            int(refresh_block)), backend=tuned_be)
+        return res if rec is None else res._replace(tune=rec)
 
     def _resolve_order_batched(self, points: jax.Array, order):
         """Per-problem (B, n) permutations for batched fits."""
@@ -2292,10 +2425,17 @@ class ClusterEngine:
         points = guards.guard_points(points, self.validate)
         init_centroids = guards.guard_centroids(
             init_centroids, points.shape[-1], self.validate)
+        tuned_be, rec = self._tune_for(points.shape[1],
+                                       init_centroids.shape[-2],
+                                       points.shape[-1], points.dtype)
+        if order == "auto":
+            order = rec.order if rec is not None else None
         points, _, perm, inv = self._order_in(points, order, batched=True)
         res = self._run(lambda be: _fit_batched_jit(
             points, init_centroids, be, max_iters, float(tol), empty,
-            self.precision, self.bounds))
+            self.precision, self.bounds), backend=tuned_be)
+        if rec is not None:
+            res = res._replace(tune=rec)
         return self._order_out(res, perm, inv, batched=True)
 
     def kmeans_batched(self, key: jax.Array, points: jax.Array, k: int, *,
@@ -2305,6 +2445,10 @@ class ClusterEngine:
         """seed_batched + fit_batched in sequence (both single compiled
         calls). ``order`` reorders each problem ONCE up front so both phases
         see the coherent layout; assignments map back to the caller's rows."""
+        if order == "auto":
+            _, rec = self._tune_for(points.shape[1], k, points.shape[-1],
+                                    points.dtype)
+            order = rec.order if rec is not None else None
         points, _, perm, inv = self._order_in(points, order, batched=True)
         seeds = self.seed_batched(key, points, k, sampler=sampler)
         res = self.fit_batched(points, seeds.centroids, max_iters=max_iters,

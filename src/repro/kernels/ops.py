@@ -113,24 +113,39 @@ def pick_block_n(d: int, k: int, *, dtype_bytes: int = 4,
     stream (one extra (k, d) operand block in flight)."""
     bn = max_block
     while bn > 128:
-        working = dtype_bytes * (2 * bn * d + k * d + bn * k + 4 * bn)
-        working += 4 * 2 * bn               # cached ||x||^2 (fp32, 2 buffers)
-        working += 4 * (k * d + k + 8)      # fp32 accumulators + partial
-        working += 4 * 2 * 4                # bound-state scalar blocks
-        working += 4 * 2 * (k * d + k)      # super-tile sums/counts out
-                                            #   block (+ gated aliased prev)
-        working += 4 * 6 * bn               # assignment/min_d2/point_lb
-                                            #   aliased i/o block pairs
-        working += 4 * 2 * bn               # center_d block (fp32, 2 bufs)
-        working += 4 * k                    # movement vector (k,)
-        working += 4 * 2 * 8                # dc/margin/thresh/absorb +
-                                            #   gap/partial/pruned scalars
-        if batched:
-            working += dtype_bytes * k * d  # second centroid buffer
+        working = sum(vmem_working_set(d, k, bn, dtype_bytes=dtype_bytes,
+                                       batched=batched).values())
         if working <= _VMEM_BUDGET:
             return bn
         bn //= 2
     return 128
+
+
+def vmem_working_set(d: int, k: int, bn: int, *, dtype_bytes: int = 4,
+                     batched: bool = False) -> dict[str, int]:
+    """THE itemized per-grid-step VMEM accounting `pick_block_n` budgets —
+    one shared table so tests (and the autotuner's candidate filter) assert
+    against the implementation instead of hand-copied constants. Keys name
+    the resident buffers; the budget is ``sum(values()) <= _VMEM_BUDGET``."""
+    ws = {
+        # double-buffered point tile + resident centroids + (bn, k) distance
+        # tile + ~4 per-point vectors, all at the stream dtype
+        "stream": dtype_bytes * (2 * bn * d + k * d + bn * k + 4 * bn),
+        "norms": 4 * 2 * bn,                # cached ||x||^2 (fp32, 2 buffers)
+        "accumulators": 4 * (k * d + k + 8),   # fp32 sums/counts + partial
+        "bound_scalars": 4 * 2 * 4,            # bound-state scalar blocks
+        "super_accumulators": 4 * 2 * (k * d + k),  # super sums/counts out
+                                            #   block (+ gated aliased prev)
+        "point_carries": 4 * 6 * bn,        # assignment/min_d2/point_lb
+                                            #   aliased i/o block pairs
+        "center_d": 4 * 2 * bn,             # center_d block (fp32, 2 bufs)
+        "movement": 4 * k,                  # movement vector (k,)
+        "gate_scalars": 4 * 2 * 8,          # dc/margin/thresh/absorb +
+                                            #   gap/partial/pruned scalars
+    }
+    if batched:
+        ws["batched_centroids"] = dtype_bytes * k * d  # second centroid buf
+    return ws
 
 
 def choose_block_n(n: int, d: int, k: int, *, batched: bool = False) -> int:
@@ -375,16 +390,20 @@ def lloyd_assign_batched(points: jax.Array, centroids: jax.Array, *,
 def lloyd_assign_tiled(points: jax.Array, centroids: jax.Array, *,
                        norms: jax.Array | None = None,
                        block_n: int | None = None,
+                       tps: int | None = None,
                        interpret: bool | None = None):
     """Bounded-Lloyd assignment half-step with per-tile scalars and
     hierarchical accumulators.
 
     Returns (assignment, min_d2, partials (n_tiles,), gaps (n_tiles,),
     super_sums (n_super, k, d), super_counts (n_super, k)) with
-    ``n_super = ceil(n_tiles / core.bounds.tiles_per_super(n_tiles))`` — the
-    ungated twin of `lloyd_assign_gated`, sharing its two-level reduction
-    tree so bounded and unbounded fits compare bitwise. Under `jax.vmap`
-    this dispatches to the batch-grid kernel."""
+    ``n_super = ceil(n_tiles / core.bounds.tiles_per_super(n_tiles, tps))``
+    — the ungated twin of `lloyd_assign_gated`, sharing its two-level
+    reduction tree so bounded and unbounded fits compare bitwise. ``tps``
+    overrides the super-tile fan-in heuristic (the autotuner's knob); the
+    gated twin must be called with the SAME value so the carried super
+    accumulator shapes agree. Under `jax.vmap` this dispatches to the
+    batch-grid kernel."""
     from repro.core import bounds as bnd
 
     _check_forced()
@@ -393,7 +412,7 @@ def lloyd_assign_tiled(points: jax.Array, centroids: jax.Array, *,
     if block_n is None:
         block_n = choose_block_n(n, d, k)
     bn = block_n
-    tps = bnd.tiles_per_super(-(-n // bn))
+    tps = bnd.tiles_per_super(-(-n // bn), tps)
     if interpret is None:
         interpret = default_interpret()
     centroids, norms = _align(points, centroids, norms)
@@ -422,7 +441,8 @@ def lloyd_assign_gated(points: jax.Array, centroids: jax.Array,
                        prev_lb: jax.Array, prev_partials: jax.Array,
                        prev_gaps: jax.Array, prev_super_sums: jax.Array,
                        prev_super_counts: jax.Array, active: jax.Array, *,
-                       block_n: int, interpret: bool | None = None):
+                       block_n: int, tps: int | None = None,
+                       interpret: bool | None = None):
     """Bound-gated assignment half-step (two-level exact Lloyd pruning).
 
     ``active`` is the (n_tiles,) bool mask from
@@ -447,7 +467,7 @@ def lloyd_assign_gated(points: jax.Array, centroids: jax.Array,
     centroids = centroids.astype(points.dtype)
     norms = norms.astype(jnp.float32)
     grid = -(-n // block_n)
-    tps = bnd.tiles_per_super(grid)
+    tps = bnd.tiles_per_super(grid, tps)
     active = bnd.expand_active_supers(active, tps)
     ids, n_active = bnd.compact_ids(active)
     skipped = (grid - n_active).astype(jnp.int32)

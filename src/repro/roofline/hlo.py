@@ -374,3 +374,20 @@ def collective_bytes(hlo: str, *, n_devices: int = 0) -> dict:
     out = dict(res["collectives"])
     out["n_devices"] = res["n_devices"]
     return out
+
+
+def analyze_jit(fn, *args, n_devices: int = 0, static_argnums=(),
+                **kwargs) -> dict:
+    """`analyze` of a callable: jit-lower-compile ``fn(*args, **kwargs)``
+    and account the optimized HLO. Nothing executes — this is the
+    measurement-free cost probe the autotuner (repro.tune) falls back to
+    when wall-clock timing is unavailable (interpret mode / CI), so it must
+    stay cheap: compile once, parse text."""
+    import jax
+
+    compiled = jax.jit(fn, static_argnums=static_argnums).lower(
+        *args, **kwargs).compile()
+    texts = compiled.as_text()
+    if not isinstance(texts, str):   # one module per partition
+        texts = "\n".join(texts)
+    return analyze(texts, n_devices=n_devices)

@@ -35,7 +35,13 @@ class PQCache(NamedTuple):
     codebook: PQCodebook
 
 
-_DEFAULT_ENGINE = ClusterEngine("fused")
+# codebook builds hit the same (take, 256, d_sub) shape for every layer of
+# every model — the repeated-shape workload where a persisted autotune
+# cache amortizes best. tune="cache" is lookup-only: zero measurement on a
+# cold cache (pure heuristics, bitwise the pre-tune behavior), tuned
+# geometry for free once a warmed cache is shipped via $REPRO_TUNE_CACHE
+# (see docs/engine.md "Autotuning").
+_DEFAULT_ENGINE = ClusterEngine("fused", tune="cache")
 
 
 def _fit_codebooks(key: jax.Array, problems: jax.Array, *, n_codes: int,

@@ -1,0 +1,17 @@
+"""Measured cost-model autotuner (ISSUE 8).
+
+Per ``(n, k, d, backend, dtype)`` problem shape, pick the round-kernel
+geometry (``block_n``, ``tiles_per_super``) plus the advisory knobs
+(spatial ``order``, stream ``precision``, sampler choice) that minimize
+the measured — or, when wall-clock is unavailable, the modelled — cost of
+one seeding/assignment round, and persist the winner in a schema-versioned
+JSON cache so later calls (and later processes) reuse it with zero extra
+measurement. ``ClusterEngine(tune="auto"|"cache")`` is the only user
+surface; provenance comes back as the ``TuneRecord`` on results.
+"""
+from repro.tune.cache import (SCHEMA_VERSION, TuneCache, TuneRecord,
+                              backend_key)
+from repro.tune.search import resolve, search
+
+__all__ = ["SCHEMA_VERSION", "TuneCache", "TuneRecord", "backend_key",
+           "resolve", "search"]

@@ -1,0 +1,204 @@
+"""Persisted autotune cache: schema-versioned, geometry-stamped JSON.
+
+One file (``tune_cache.json`` under a configurable directory) holds every
+tuned record this machine has measured, keyed by
+``{backend}|{dtype}|n{n}|k{k}|d{d}``. The protocol mirrors the PR 7
+checkpoint manager:
+
+* **atomic writes** — serialize to ``<file>.tmp`` then ``os.replace``, so
+  a crashed process never leaves a torn cache;
+* **schema version** — a ``schema`` field stamped at the top; a bump
+  invalidates the whole file (silently: stale tuning is a perf question,
+  not a correctness one, so we fall back to the heuristics rather than
+  raise);
+* **geometry stamp** — each entry's key is recomputed from its record
+  fields at load; an entry whose stamp disagrees with its fields (a
+  hand-edited or half-merged file) is DROPPED, falling back to the
+  heuristic for that shape;
+* **typed corruption** — a cache file that is not valid JSON (or not a
+  JSON object) raises :class:`repro.core.guards.CorruptedStateError`, the
+  same vocabulary every other poisoned-state failure uses — never a bare
+  ``json.JSONDecodeError`` escaping into the engine.
+
+Lookup prefers an exact shape match, then falls back to the NEAREST tuned
+shape of the same ``(backend, dtype)`` (log-space distance over
+``(n, k, d)``): tuned ``block_n`` only ever *shrinks* the VMEM-validated
+heuristic pick and ``tps`` is clamped by ``bounds.tiles_per_super``, so a
+neighbor's record is always safe to apply, merely less optimal.
+
+``TuneCache(None)`` reads ``$REPRO_TUNE_CACHE`` for the directory; when
+that is unset too, the cache is in-memory only (one search per shape per
+process, nothing persisted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import pathlib
+from typing import Optional
+
+from repro.core.guards import CorruptedStateError
+
+SCHEMA_VERSION = 1
+
+_ENV_DIR = "REPRO_TUNE_CACHE"
+_FILE = "tune_cache.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecord:
+    """One tuned configuration + its provenance.
+
+    The geometry fields (``block_n``, ``tps``) are applied by the engine
+    via ``dataclasses.replace`` on the backend; the rest are advisory —
+    ``order``/``sampler``/``refresh_block`` are consumed only when the
+    caller passes ``order="auto"`` / ``sampler="auto"``, and ``precision``
+    is never auto-applied (it changes numerics; see docs/engine.md
+    "Autotuning")."""
+
+    # -- cache key ---------------------------------------------------------
+    n: int
+    k: int
+    d: int
+    backend: str
+    dtype: str
+    # -- tuned configuration ----------------------------------------------
+    block_n: int = 0          # 0 = keep the heuristic pick
+    tps: int = 0              # 0 = keep the heuristic fan-in
+    order: Optional[str] = None
+    precision: str = "fp32"
+    sampler: str = "tiled"
+    refresh_block: int = 0
+    # -- provenance --------------------------------------------------------
+    source: str = "heuristic"  # measured | model | heuristic | cache |
+    #                            cache-nearest
+    predicted_bytes: float = 0.0
+    default_bytes: float = 0.0
+    measured_ms: float = float("nan")
+
+    def key(self) -> str:
+        return record_key(self.n, self.k, self.d, self.backend, self.dtype)
+
+
+def record_key(n: int, k: int, d: int, backend: str, dtype: str) -> str:
+    return f"{backend}|{dtype}|n{int(n)}|k{int(k)}|d{int(d)}"
+
+
+def backend_key(backend) -> str:
+    """Cache-key name of an engine Backend: a mesh backend tunes its
+    per-shard local compute, so it keys as ``mesh/<local>``."""
+    if getattr(backend, "distributed", False):
+        return f"mesh/{backend.local.name}"
+    return backend.name
+
+
+_FIELDS = {f.name for f in dataclasses.fields(TuneRecord)}
+
+
+class TuneCache:
+    """The persisted (or in-memory) record store. See the module docstring
+    for the load/validate/fallback semantics."""
+
+    def __init__(self, dir=None):
+        if dir is None:
+            dir = os.environ.get(_ENV_DIR) or None
+        self.dir = pathlib.Path(dir) if dir is not None else None
+        self.entries: dict[str, TuneRecord] = {}
+        self.dropped: list[str] = []   # keys rejected by the geometry stamp
+        self._load()
+
+    @property
+    def path(self) -> Optional[pathlib.Path]:
+        return None if self.dir is None else self.dir / _FILE
+
+    # -- persistence -------------------------------------------------------
+    def _load(self) -> None:
+        p = self.path
+        if p is None or not p.exists():
+            return
+        try:
+            raw = json.loads(p.read_text())
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CorruptedStateError(
+                f"tune cache {p} is not valid JSON ({e}); delete it to "
+                "re-tune from scratch") from e
+        if not isinstance(raw, dict) or not isinstance(
+                raw.get("entries", None), dict):
+            raise CorruptedStateError(
+                f"tune cache {p} has no entries mapping; delete it to "
+                "re-tune from scratch")
+        if raw.get("schema") != SCHEMA_VERSION:
+            # a schema bump means the FIELDS changed meaning — stale tuning
+            # is a perf question, so invalidate silently and re-tune
+            return
+        for key, fields in raw["entries"].items():
+            rec = self._validate(key, fields)
+            if rec is None:
+                self.dropped.append(key)
+            else:
+                self.entries[key] = rec
+
+    @staticmethod
+    def _validate(key: str, fields) -> Optional[TuneRecord]:
+        """Geometry stamp: the stored key must be recomputable from the
+        stored fields, and the fields must be exactly the known set."""
+        if not isinstance(fields, dict) or set(fields) != _FIELDS:
+            return None
+        try:
+            rec = TuneRecord(**{k: (None if v is None else v)
+                                for k, v in fields.items()})
+            rec = dataclasses.replace(
+                rec, n=int(rec.n), k=int(rec.k), d=int(rec.d),
+                block_n=int(rec.block_n), tps=int(rec.tps),
+                refresh_block=int(rec.refresh_block))
+        except (TypeError, ValueError):
+            return None
+        if rec.key() != key:
+            return None
+        return rec
+
+    def save(self) -> Optional[pathlib.Path]:
+        """Atomic write-through (no-op for an in-memory cache)."""
+        p = self.path
+        if p is None:
+            return None
+        p.parent.mkdir(parents=True, exist_ok=True)
+        payload = {
+            "schema": SCHEMA_VERSION,
+            "entries": {key: dataclasses.asdict(rec)
+                        for key, rec in sorted(self.entries.items())},
+        }
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        os.replace(tmp, p)
+        return p
+
+    # -- lookup ------------------------------------------------------------
+    def put(self, rec: TuneRecord) -> None:
+        self.entries[rec.key()] = rec
+
+    def get(self, n: int, k: int, d: int, backend: str, dtype: str, *,
+            nearest: bool = True) -> Optional[TuneRecord]:
+        """Exact-match preferred; else the nearest tuned shape of the same
+        (backend, dtype) in log-space over (n, k, d). The returned record
+        keeps the DONOR shape in its key fields (honest provenance) with
+        ``source`` marking which path served it."""
+        exact = self.entries.get(record_key(n, k, d, backend, dtype))
+        if exact is not None:
+            return dataclasses.replace(exact, source="cache")
+        if not nearest:
+            return None
+        best, best_dist = None, math.inf
+        for rec in self.entries.values():
+            if rec.backend != backend or rec.dtype != dtype:
+                continue
+            dist = (abs(math.log(max(rec.n, 1) / max(n, 1)))
+                    + abs(math.log(max(rec.k, 1) / max(k, 1)))
+                    + abs(math.log(max(rec.d, 1) / max(d, 1))))
+            if dist < best_dist:
+                best, best_dist = rec, dist
+        if best is None:
+            return None
+        return dataclasses.replace(best, source="cache-nearest")

@@ -1,0 +1,163 @@
+"""Measurement harness: wall-clock the round primitives, or model them.
+
+Three cost probes, cheapest-first, all counted by the module-level
+``CALLS`` counter (the warm-cache test pins that a cache hit performs
+ZERO of them):
+
+* ``model_seed_round_bytes`` / ``model_fit_round_bytes`` — the analytic
+  HBM models of ``benchmarks/round_traffic.py``, parameterized by the
+  candidate geometry (``block_n``, ``tps``). These are the search's inner
+  loop: pure arithmetic, thousands of candidates per millisecond.
+* ``hlo_round_cost`` — compile (never execute) one assignment round via
+  ``roofline.hlo.analyze_jit`` and read the per-op byte/FLOP accounting
+  out of the optimized HLO. This is the "measured" side of the
+  predicted-vs-measured gap when wall-clock is unavailable (interpret
+  mode / CPU CI).
+* ``measure_round_ms`` — deterministic warmup + median-of-trials wall
+  clock of a real ``seed``/``fit`` round. Only meaningful on real
+  accelerator hardware: ``wallclock_available()`` gates it, and callers
+  get ``nan`` elsewhere.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds as bnd
+
+# every cost-probe evaluation (model candidate, HLO compile, wall-clock
+# trial set) bumps this — tests pin "warm cache => zero extra calls"
+CALLS = 0
+
+
+def _count() -> None:
+    global CALLS
+    CALLS += 1
+
+
+def wallclock_available() -> bool:
+    """Wall-clock numbers are only trustworthy when the kernels actually
+    run compiled on the accelerator; Pallas interpret mode (CPU CI) and
+    host-only backends time the interpreter, not the machine."""
+    return jax.default_backend() == "tpu"
+
+
+def median_ms(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (ms) of ``fn(*args)`` with deterministic warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return 1000.0 * times[len(times) // 2]
+
+
+# ---------------------------------------------------------------------------
+# analytic models (the single source of truth — benchmarks/round_traffic.py
+# delegates here so the benchmark columns and the tuner score can't drift)
+# ---------------------------------------------------------------------------
+
+
+def model_seed_round_bytes(n: int, d: int, *, block_n: int,
+                           skip_rate: float = 0.0,
+                           dtype_bytes: int = 4) -> int:
+    """Modelled HBM bytes of ONE gated seeding round at tile height
+    ``block_n``: per active tile the kernel streams the point block
+    (stream dtype) + the fp32 cached-norms block, reads+writes the fp32
+    min_d2 block and writes the two fp32 bound-state scalars; skipped
+    tiles move nothing."""
+    n_tiles = -(-n // block_n)
+    active = round(n_tiles * (1.0 - skip_rate))
+    per_tile = block_n * (d * dtype_bytes + 4 + 2 * 4) + 2 * 4
+    return active * per_tile
+
+
+def model_fit_round_bytes(n: int, d: int, k: int, *, block_n: int,
+                          tps=None, skip_rate: float = 0.0,
+                          dtype_bytes: int = 4) -> int:
+    """Modelled HBM bytes of ONE gated assignment iteration at tile height
+    ``block_n`` with super-tile fan-in ``tps`` (None = heuristic): per
+    active tile the kernel streams points + norms, carries the
+    label/min_d2/point_lb triple in and out, amortizes the per-SUPER
+    cluster sums/counts block over its tps tiles, and writes the
+    partial/gap/pruned scalars. Skipped tiles move nothing — larger tps
+    means fewer super slots hence fewer accumulator bytes, at the price of
+    coarser skip granularity (a super skips only when ALL its tiles do)."""
+    n_tiles = -(-n // block_n)
+    tps = bnd.tiles_per_super(n_tiles, tps)
+    active = round(n_tiles * (1.0 - skip_rate))
+    per_tile = (block_n * (d * dtype_bytes + 4)     # points + norms in
+                + 2 * block_n * (4 + 4 + 4)         # assign/md/lb i/o
+                + 4 * (k * d + k) / tps             # super sums/counts,
+                                                    # amortized over tps
+                + 3 * 4)                            # partial/gap/pruned
+    return round(active * per_tile)
+
+
+def model_round_cost(n: int, k: int, d: int, *, block_n: int, tps=None,
+                     dtype_bytes: int = 4) -> float:
+    """The search's scalar objective: modelled bytes of one seeding round
+    plus one assignment iteration at skip_rate=0 (the gate's skips are
+    data-dependent; geometry is tuned for the worst case where every tile
+    is active). One ``CALLS`` tick per candidate."""
+    _count()
+    return (model_seed_round_bytes(n, d, block_n=block_n,
+                                   dtype_bytes=dtype_bytes)
+            + model_fit_round_bytes(n, d, k, block_n=block_n, tps=tps,
+                                    dtype_bytes=dtype_bytes))
+
+
+# ---------------------------------------------------------------------------
+# compiled-HLO and wall-clock probes
+# ---------------------------------------------------------------------------
+
+
+def _probe_problem(n: int, d: int, k: int):
+    """Deterministic synthetic rows for the probes (content is irrelevant
+    to byte counts; wall clock only needs realistic shapes)."""
+    key = jax.random.PRNGKey(0)
+    pts = jax.random.normal(key, (n, d), jnp.float32)
+    cents = pts[:k]
+    return pts, cents
+
+
+def hlo_round_cost(n: int, k: int, d: int, *, backend=None) -> dict:
+    """Compile one ungated assignment round on the given backend (default
+    fused — cheap to compile anywhere) and account the optimized HLO:
+    ``{"flops", "bytes"}``. Nothing executes."""
+    from repro.core.engine import FusedBackend
+    from repro.roofline.hlo import analyze_jit
+
+    _count()
+    be = FusedBackend() if backend is None else backend
+    pts, cents = _probe_problem(n, d, k)
+    cache = be.prologue(pts, k, with_bounds=False)
+
+    def one_round(p, c):
+        rnd = be.assign_update(p, c, None, cache.norms, cache=cache)
+        return rnd.sums, rnd.counts
+
+    res = analyze_jit(one_round, pts, cents)
+    return {"flops": res["flops"], "bytes": res["bytes"]}
+
+
+def measure_round_ms(n: int, k: int, d: int, *, backend=None,
+                     warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock (ms) of one compiled assignment round, ``nan``
+    when wall-clock is meaningless (see ``wallclock_available``)."""
+    if not wallclock_available():
+        return float("nan")
+    from repro.core.engine import FusedBackend
+
+    _count()
+    be = FusedBackend() if backend is None else backend
+    pts, cents = _probe_problem(n, d, k)
+    cache = be.prologue(pts, k, with_bounds=False)
+    fn = jax.jit(lambda p, c: be.assign_update(p, c, None, cache.norms,
+                                               cache=cache).sums)
+    return median_ms(fn, pts, cents, warmup=warmup, iters=iters)

@@ -1,0 +1,124 @@
+"""Search layer: sweep the candidate grid, score, record the winner.
+
+The grid is exactly the space the engine can legally run:
+
+* ``block_n`` — powers of two from the 128-row floor up to the
+  VMEM-validated heuristic pick of ``kernels.ops.choose_block_n`` (tuned
+  blocks only ever SHRINK the heuristic, so every candidate fits the
+  ``pick_block_n`` budget by construction);
+* ``tps`` — powers of two from 1 to the next power of two >= n_tiles
+  (``bounds.tiles_per_super`` clamps/floors anything else).
+
+Scoring uses the cheapest probe that is trustworthy here (see
+``tune.measure``): the analytic byte model for every candidate, then —
+when real hardware is present — wall-clock on the winner, recorded next
+to the model's prediction so ``BENCH_tune.json`` can report the
+predicted-vs-measured gap. The sweep scores at skip_rate=0 (all tiles
+active): skips are data-dependent, and the accumulator term the sweep
+actually moves (``4*(k*d+k)/tps`` per tile) is skip-independent.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.tune import measure
+from repro.tune.cache import TuneCache, TuneRecord, backend_key
+
+
+def _pow2s(lo: int, hi: int) -> list[int]:
+    """Powers of two in [lo, hi] (hi included after pow2-ceiling lo)."""
+    out = []
+    v = 1 << max(int(lo) - 1, 0).bit_length()
+    while v <= hi:
+        out.append(v)
+        v <<= 1
+    return out
+
+
+def candidate_grid(n: int, k: int, d: int, *,
+                   dtype_bytes: int = 4) -> list[tuple[int, int]]:
+    """(block_n, tps) candidates for one shape."""
+    from repro.kernels.ops import choose_block_n
+
+    base = choose_block_n(n, d, k, batched=True)
+    grid = []
+    for bn in _pow2s(128, base):
+        n_tiles = -(-n // bn)
+        cap = 1 << max(int(n_tiles - 1).bit_length(), 0) if n_tiles > 1 else 1
+        for tps in _pow2s(1, cap):
+            grid.append((bn, tps))
+    return grid
+
+
+def _advisory(n: int, k: int, d: int) -> dict:
+    """The advisory knobs (never auto-applied unless the caller opts in
+    with order="auto" / sampler="auto"; precision is recorded only):
+
+    * order  — Morton ordering recovers tile coherence (what makes the
+      movement-bound gate fire) when rows arrive shuffled; the interleaved
+      bits lose locality as d grows, so recommend it only at low d.
+    * sampler — the rejection sampler's stale-envelope refresh goes
+      sub-linear in k (ISSUE 6): worth its bookkeeping once there are
+      enough seeds to amortize a refresh block over.
+    * precision — the round kernels are memory-bound once the point block
+      dominates the stream; bf16 halves exactly that term.
+    """
+    return {
+        "order": "morton" if d <= 8 else None,
+        "sampler": "rejection" if k >= 32 else "tiled",
+        "refresh_block": 8 if k >= 32 else 0,
+        "precision": "bf16" if d >= 8 else "fp32",
+    }
+
+
+def search(n: int, k: int, d: int, *, backend: str = "fused",
+           dtype: str = "float32") -> TuneRecord:
+    """Sweep the grid for one shape and return the winning TuneRecord
+    (``source`` = 'measured' on real hardware, else 'model')."""
+    dtype_bytes = 2 if dtype in ("bfloat16", "float16") else 4
+    from repro.kernels.ops import choose_block_n
+
+    default_bn = choose_block_n(n, d, k, batched=True)
+    default_cost = measure.model_round_cost(n, k, d, block_n=default_bn,
+                                            tps=None,
+                                            dtype_bytes=dtype_bytes)
+    best, best_cost = None, math.inf
+    for bn, tps in candidate_grid(n, k, d, dtype_bytes=dtype_bytes):
+        cost = measure.model_round_cost(n, k, d, block_n=bn, tps=tps,
+                                        dtype_bytes=dtype_bytes)
+        # strict < keeps the FIRST minimal candidate; the grid is ordered
+        # small->large so ties break toward the smaller (safer) geometry
+        if cost < best_cost:
+            best, best_cost = (bn, tps), cost
+    measured_ms = (measure.measure_round_ms(n, k, d)
+                   if measure.wallclock_available() else float("nan"))
+    adv = _advisory(n, k, d)
+    return TuneRecord(
+        n=int(n), k=int(k), d=int(d), backend=backend, dtype=dtype,
+        block_n=int(best[0]), tps=int(best[1]),
+        order=adv["order"], precision=adv["precision"],
+        sampler=adv["sampler"], refresh_block=int(adv["refresh_block"]),
+        source="measured" if measure.wallclock_available() else "model",
+        predicted_bytes=float(best_cost),
+        default_bytes=float(default_cost),
+        measured_ms=float(measured_ms))
+
+
+def resolve(cache: TuneCache, *, n: int, k: int, d: int, backend,
+            dtype: str, mode: str) -> Optional[TuneRecord]:
+    """The engine's lookup. mode='cache' is lookup-only: serve an exact
+    hit, then the nearest tuned shape, else None (heuristics) — zero
+    measurement either way. mode='auto' is willing to measure, so only an
+    exact hit short-circuits; any other shape gets its own search, and
+    the winner is persisted for every later call."""
+    bk = backend_key(backend) if not isinstance(backend, str) else backend
+    rec = cache.get(n, k, d, bk, dtype, nearest=(mode != "auto"))
+    if rec is not None:
+        return rec
+    if mode != "auto":
+        return None
+    rec = search(n, k, d, backend=bk, dtype=dtype)
+    cache.put(rec)
+    cache.save()
+    return rec

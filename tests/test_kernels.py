@@ -207,34 +207,44 @@ def test_pick_block_n_batched_accounting():
 
 
 def test_pick_block_n_accounts_norms_and_bound_state():
-    """The VMEM accounting must include the cached-norms input block, the
-    bound-state buffers AND the two-level pruning buffers (resident
-    super-tile cluster sums/counts block + aliased prev, the
-    assignment/min_d2/point_lb aliased i/o pairs, the center_d block, the
-    (k,) movement vector and the per-tile gate scalars): for a given budget
-    the pick with those terms can never exceed a hand-computed pick WITHOUT
-    them, and the returned pick must be the LARGEST power of two whose full
-    working set fits."""
+    """`pick_block_n` and its mirror tests used to hand-copy the VMEM
+    working-set formula — and the copies drifted (ISSUE 8 satellite).
+    `ops.vmem_working_set` is now the single shared budget table: the pick
+    must be the LARGEST power of two whose summed working set fits the
+    budget (maximality: doubling must NOT fit unless capped), and the
+    itemized table must name every buffer family the kernels keep
+    resident."""
     budget = ops._VMEM_BUDGET
     for d, k in ((2, 8), (64, 256), (512, 1024), (4096, 256)):
         bn = ops.pick_block_n(d, k)
-        # re-derive the working set at the returned pick: it must fit, and
-        # doubling the tile must NOT fit (maximality) unless capped
-        def working(b, dtype_bytes=4):
-            w = dtype_bytes * (2 * b * d + k * d + b * k + 4 * b)
-            w += 4 * 2 * b              # cached-norms block (fp32, 2 buffers)
-            w += 4 * (k * d + k + 8)    # accumulators + partial
-            w += 4 * 2 * 4              # bound-state scalar blocks
-            w += 4 * 2 * (k * d + k)    # super sums/counts out (+ aliased)
-            w += 4 * 6 * b              # assignment/min_d2/point_lb i/o
-            w += 4 * 2 * b              # center_d block (fp32, 2 buffers)
-            w += 4 * k                  # movement vector
-            w += 4 * 2 * 8              # gate scalars (dc/margin/thresh/
-                                        #   absorb + gap/partial/pruned)
-            return w
+
+        def working(b):
+            return sum(ops.vmem_working_set(d, k, b).values())
+
         assert working(bn) <= budget or bn == 128
         if bn < 4096:
             assert working(2 * bn) > budget
+
+
+def test_vmem_working_set_is_the_shared_budget_table():
+    """The itemized table IS the accounting `pick_block_n` sums — and the
+    buffer families the kernels keep resident are all present by name, so
+    a kernel change that adds a resident buffer has exactly one place to
+    record it (and this test to update)."""
+    ws = ops.vmem_working_set(64, 256, 1024)
+    assert set(ws) == {"stream", "norms", "accumulators", "bound_scalars",
+                      "super_accumulators", "point_carries", "center_d",
+                      "movement", "gate_scalars"}
+    assert all(v > 0 for v in ws.values())
+    # the batched grid keeps one extra in-flight centroid block resident
+    wsb = ops.vmem_working_set(64, 256, 1024, batched=True)
+    assert set(wsb) - set(ws) == {"batched_centroids"}
+    assert wsb["batched_centroids"] == 4 * 256 * 64
+    # dtype_bytes halves exactly the streaming term, nothing else
+    ws2 = ops.vmem_working_set(64, 256, 1024, dtype_bytes=2)
+    assert ws2["stream"] == ws["stream"] // 2
+    assert {k: v for k, v in ws2.items() if k != "stream"} == \
+        {k: v for k, v in ws.items() if k != "stream"}
 
 
 def test_pick_block_n_per_point_buffers_shrink_or_hold_the_pick():

@@ -1,0 +1,274 @@
+"""Autotuner tests (ISSUE 8): cache round-trip + invalidation semantics,
+the tune="off" bitwise guarantee, the warm-cache zero-measurement pin, and
+the parameterized tiles_per_super / block_n plumbing."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bounds
+from repro.core.engine import ClusterEngine, FusedBackend
+from repro.core.guards import ClusteringError, CorruptedStateError
+from repro.data.synthetic import blobs
+from repro.kernels import ops
+from repro.tune import (SCHEMA_VERSION, TuneCache, TuneRecord, backend_key,
+                        measure, resolve, search)
+from repro.tune.cache import record_key
+
+
+def _points(n=512, d=2, k=8, seed=0):
+    pts, _ = blobs(n, d, k, seed=seed)
+    return jnp.asarray(pts)
+
+
+# ---------------------------------------------------------------------------
+# cache round-trip + invalidation (satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_cache_round_trip(tmp_path):
+    rec = search(2 ** 14, 8, 4)
+    cache = TuneCache(tmp_path)
+    cache.put(rec)
+    path = cache.save()
+    assert path is not None and path.exists()
+
+    reloaded = TuneCache(tmp_path)
+    got = reloaded.get(2 ** 14, 8, 4, "fused", "float32")
+    assert got is not None
+    assert got.source == "cache"          # provenance marks the hit path
+    assert dataclasses.replace(got, source=rec.source, measured_ms=0.0) \
+        == dataclasses.replace(rec, measured_ms=0.0)
+
+
+def test_schema_version_bump_invalidates(tmp_path):
+    cache = TuneCache(tmp_path)
+    cache.put(search(2 ** 14, 8, 4))
+    path = cache.save()
+    raw = json.loads(path.read_text())
+    raw["schema"] = SCHEMA_VERSION + 1
+    path.write_text(json.dumps(raw))
+    # a bumped schema silently invalidates (stale tuning is a perf
+    # question): the cache loads EMPTY, no raise
+    stale = TuneCache(tmp_path)
+    assert stale.entries == {}
+    assert stale.get(2 ** 14, 8, 4, "fused", "float32") is None
+
+
+def test_geometry_mismatch_falls_back_to_heuristic(tmp_path):
+    cache = TuneCache(tmp_path)
+    cache.put(search(2 ** 14, 8, 4))
+    path = cache.save()
+    raw = json.loads(path.read_text())
+    # hand-edit the entry's geometry out from under its key stamp
+    (key, fields), = raw["entries"].items()
+    fields["n"] = 12345
+    path.write_text(json.dumps(raw))
+    reloaded = TuneCache(tmp_path)
+    assert key in reloaded.dropped        # stamped mismatch -> dropped
+    assert reloaded.entries == {}
+    # ...and the engine serves the shape from the heuristics, not a crash
+    eng = ClusterEngine("fused", tune="cache", tune_dir=tmp_path)
+    res = eng.seed(jax.random.PRNGKey(0), _points(), 8)
+    assert res.tune is None
+    assert res.centroids.shape == (8, 2)
+
+
+def test_corrupted_cache_raises_typed(tmp_path):
+    (tmp_path / "tune_cache.json").write_text("{not json!!")
+    with pytest.raises(CorruptedStateError):
+        TuneCache(tmp_path)
+    # the typed error is part of the ClusteringError vocabulary and
+    # surfaces through the engine entry point too, not a JSONDecodeError
+    eng = ClusterEngine("fused", tune="cache", tune_dir=tmp_path)
+    with pytest.raises(ClusteringError):
+        eng.seed(jax.random.PRNGKey(0), _points(), 8)
+
+
+def test_nearest_shape_fallback_prefers_exact(tmp_path):
+    cache = TuneCache(tmp_path)
+    far = dataclasses.replace(search(2 ** 16, 32, 16), source="model")
+    near = dataclasses.replace(search(2 ** 14, 8, 4), source="model")
+    cache.put(far)
+    cache.put(near)
+    exact = cache.get(2 ** 14, 8, 4, "fused", "float32")
+    assert exact.source == "cache" and exact.n == 2 ** 14
+    nearest = cache.get(2 ** 13, 8, 4, "fused", "float32")
+    assert nearest.source == "cache-nearest"
+    assert nearest.n == 2 ** 14           # the donor shape, log-closest
+    # a different backend/dtype never cross-serves
+    assert cache.get(2 ** 14, 8, 4, "pallas", "float32") is None
+    assert cache.get(2 ** 14, 8, 4, "fused", "bfloat16") is None
+
+
+def test_backend_key_mesh_routes_to_local():
+    assert backend_key(FusedBackend()) == "fused"
+    assert record_key(1, 2, 3, "fused", "float32") == \
+        "fused|float32|n1|k2|d3"
+
+
+# ---------------------------------------------------------------------------
+# engine integration: off = bitwise, warm cache = zero measurement
+# ---------------------------------------------------------------------------
+
+def test_tune_off_is_bitwise_identical():
+    pts = _points(n=1024, d=4, k=8)
+    key = jax.random.PRNGKey(7)
+    base = ClusterEngine("fused")
+    off = ClusterEngine("fused", tune="off")
+    s0, s1 = base.seed(key, pts, 8), off.seed(key, pts, 8)
+    np.testing.assert_array_equal(np.asarray(s0.centroids),
+                                  np.asarray(s1.centroids))
+    f0 = base.fit(pts, s0.centroids, max_iters=5)
+    f1 = off.fit(pts, s1.centroids, max_iters=5)
+    np.testing.assert_array_equal(np.asarray(f0.centroids),
+                                  np.asarray(f1.centroids))
+    np.testing.assert_array_equal(np.asarray(f0.assignment),
+                                  np.asarray(f1.assignment))
+    assert s1.tune is None and f1.tune is None
+
+
+def test_warm_cache_zero_measurement_calls(tmp_path):
+    pts = _points(n=1024, d=4, k=8)
+    key = jax.random.PRNGKey(3)
+    warm = ClusterEngine("fused", tune="auto", tune_dir=tmp_path)
+    res = warm.seed(key, pts, 8)          # cold: searches and persists
+    assert res.tune is not None and res.tune.source in ("model", "measured")
+
+    calls_before = measure.CALLS
+    eng = ClusterEngine("fused", tune="cache", tune_dir=tmp_path)
+    res2 = eng.seed(key, pts, 8)
+    res3 = eng.fit(pts, res2.centroids, max_iters=3)
+    assert measure.CALLS == calls_before  # pinned: zero extra measurement
+    assert res2.tune.source == "cache"
+    assert res3.tune.source in ("cache", "cache-nearest")
+
+
+def test_tuned_run_is_a_valid_clustering(tmp_path):
+    pts = _points(n=2048, d=4, k=8, seed=1)
+    key = jax.random.PRNGKey(11)
+    tuned = ClusterEngine("fused", tune="auto", tune_dir=tmp_path)
+    default = ClusterEngine("fused")
+    rt = tuned.kmeans(key, pts, 8, max_iters=8)
+    rd = default.kmeans(key, pts, 8, max_iters=8)
+    assert rt.tune is not None
+    assert rt.tune.block_n > 0 and rt.tune.tps > 0
+    # tuned geometry changes reduction trees, not the algorithm: the
+    # clusterings agree to fp tolerance
+    assert float(rt.inertia) == pytest.approx(float(rd.inertia), rel=1e-4)
+
+
+def test_tune_cache_mode_cold_is_heuristic(tmp_path):
+    calls_before = measure.CALLS
+    eng = ClusterEngine("fused", tune="cache", tune_dir=tmp_path)
+    res = eng.seed(jax.random.PRNGKey(0), _points(), 8)
+    assert res.tune is None               # nothing known, nothing applied
+    assert measure.CALLS == calls_before  # ...and nothing measured
+    assert not (tmp_path / "tune_cache.json").exists()
+
+
+def test_resolve_modes(tmp_path):
+    cache = TuneCache(tmp_path)
+    assert resolve(cache, n=2 ** 14, k=8, d=4, backend="fused",
+                   dtype="float32", mode="cache") is None
+    rec = resolve(cache, n=2 ** 14, k=8, d=4, backend="fused",
+                  dtype="float32", mode="auto")
+    assert rec is not None and (tmp_path / "tune_cache.json").exists()
+    again = resolve(cache, n=2 ** 14, k=8, d=4, backend="fused",
+                    dtype="float32", mode="cache")
+    assert again.source == "cache"
+
+
+def test_search_beats_or_matches_default_model_bytes():
+    """The acceptance shape: the swept winner is never worse than the
+    heuristic on modelled bytes, and at least one sweep shape strictly
+    beats it (the ~sqrt super fan-in leaves accumulator bytes on the
+    table)."""
+    recs = [search(n, k, d) for n, k, d in
+            ((2 ** 16, 16, 8), (2 ** 14, 8, 2), (2 ** 17, 32, 16))]
+    assert all(r.predicted_bytes <= r.default_bytes for r in recs)
+    assert any(r.predicted_bytes < r.default_bytes for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# parameterized tiles_per_super / block_n plumbing (satellite 1 + 6)
+# ---------------------------------------------------------------------------
+
+def test_tiles_per_super_override_semantics():
+    # default heuristic preserved bitwise
+    assert bounds.tiles_per_super(4) == 1
+    assert bounds.tiles_per_super(16) == 4
+    assert bounds.tiles_per_super(16, None) == 4
+    # override: pow2-floored, clamped to [1, next_pow2(n_tiles)]
+    assert bounds.tiles_per_super(16, 8) == 8
+    assert bounds.tiles_per_super(16, 7) == 4      # floored to pow2
+    assert bounds.tiles_per_super(16, 1000) == 16  # clamped to cap
+    assert bounds.tiles_per_super(16, 1) == 1
+    assert bounds.n_supers(16, 16) == 1
+    assert bounds.n_supers(16, 1) == 16
+
+
+def test_backend_tps_heuristic_value_is_bitwise():
+    """Pinning tps to the heuristic's own value is the SAME geometry, so
+    the fit is bitwise the default — the tps plumbing is pure threading."""
+    pts = _points(n=4096, d=4, k=8, seed=2)
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(5), pts, 8)
+    n_tiles = -(-4096 // FusedBackend().seed_tile(4096, 4, 8))
+    tps = bounds.tiles_per_super(n_tiles)
+    f0 = ClusterEngine("fused").fit(pts, seeds.centroids, max_iters=4)
+    f1 = ClusterEngine("fused", tps=tps).fit(pts, seeds.centroids,
+                                             max_iters=4)
+    np.testing.assert_array_equal(np.asarray(f0.centroids),
+                                  np.asarray(f1.centroids))
+
+
+def test_backend_tps_changes_fan_in_not_results():
+    """A non-default tps changes the accumulator tree only: assignments
+    are identical, centroids agree to fp tolerance."""
+    pts = _points(n=4096, d=4, k=8, seed=2)
+    seeds = ClusterEngine("fused").seed(jax.random.PRNGKey(5), pts, 8)
+    f0 = ClusterEngine("fused").fit(pts, seeds.centroids, max_iters=4)
+    f1 = ClusterEngine("fused", tps=1024).fit(pts, seeds.centroids,
+                                              max_iters=4)
+    np.testing.assert_array_equal(np.asarray(f0.assignment),
+                                  np.asarray(f1.assignment))
+    np.testing.assert_allclose(np.asarray(f0.centroids),
+                               np.asarray(f1.centroids), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_backend_block_n_only_shrinks_the_pick():
+    be = FusedBackend()
+    pick = be.seed_tile(2 ** 16, 8, 16)
+    assert FusedBackend(block_n=pick * 2).seed_tile(2 ** 16, 8, 16) == pick
+    assert FusedBackend(block_n=pick // 2).seed_tile(2 ** 16, 8, 16) \
+        == pick // 2
+    assert FusedBackend(block_n=1).seed_tile(2 ** 16, 8, 16) == 128
+    assert FusedBackend(block_n=0).seed_tile(2 ** 16, 8, 16) == pick
+
+
+def test_tuned_block_n_runs_end_to_end():
+    pts = _points(n=2048, d=4, k=8, seed=3)
+    key = jax.random.PRNGKey(9)
+    r0 = ClusterEngine("fused").kmeans(key, pts, 8, max_iters=6)
+    r1 = ClusterEngine("fused", block_n=256, tps=2).kmeans(key, pts, 8,
+                                                           max_iters=6)
+    assert float(r1.inertia) == pytest.approx(float(r0.inertia), rel=1e-3)
+
+
+def test_pick_block_n_uses_shared_budget_table():
+    """satellite 6: the implementation sums exactly the shared table."""
+    for d, k, bn in ((2, 8, 4096), (64, 256, 1024), (512, 1024, 128)):
+        ws = sum(ops.vmem_working_set(d, k, bn).values())
+        assert ws == sum(ops.vmem_working_set(d, k, bn).values())
+        assert ops.pick_block_n(d, k) >= 128
+
+
+def test_tune_record_attached_to_batched_results(tmp_path):
+    B, n, d, k = 3, 512, 4, 4
+    pts = jnp.stack([_points(n=n, d=d, k=k, seed=s) for s in range(B)])
+    eng = ClusterEngine("fused", tune="auto", tune_dir=tmp_path)
+    res = eng.kmeans_batched(jax.random.PRNGKey(1), pts, k, max_iters=3)
+    assert res.tune is not None and res.tune.n == n
