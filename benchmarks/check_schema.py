@@ -32,12 +32,21 @@ REQUIRED: dict[str, dict[str, set]] = {
     },
     "seed": {
         "seed_sampler": {"post_round_reads", "skip_rate", "accept_rate",
+                         "envelope_ratio", "supers_visited", "proposal",
                          "seed_reads", "time_ms", "seconds"},
         "kmeans_batched": {"post_round_reads", "skip_rate", "accept_rate",
+                           "envelope_ratio", "supers_visited", "proposal",
                            "seed_reads", "time_ms", "seconds"},
         "rejection_vs_tiled": {"post_round_reads", "skip_rate",
-                               "accept_rate", "seed_reads", "reads_ratio",
+                               "accept_rate", "envelope_ratio",
+                               "supers_visited", "proposal",
+                               "refresh_block", "seed_reads", "reads_ratio",
                                "time_ms", "seconds"},
+        "hier_vs_flat": {"layout", "proposal", "refresh_block",
+                         "post_round_reads", "skip_rate", "accept_rate",
+                         "envelope_ratio", "supers_visited", "seed_reads",
+                         "reads_ratio", "hier_over_flat", "time_ms",
+                         "seconds"},
     },
     "tune": {
         "tuned_vs_default": {"n", "k", "d", "default_block_n",

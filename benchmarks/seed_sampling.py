@@ -18,6 +18,25 @@ batch-grid kernels (one launch covers every tenant problem), and a
 `rejection_vs_tiled` smoke row at k=64 whose `reads_ratio` pins the
 sub-linear seeding claim (ISSUE 6: >= 4x fewer modelled reads).
 
+ISSUE 9 adds the coarse-to-fine columns and the `hier_vs_flat` section.
+Every seed row now carries `envelope_ratio` (mean fraction of tiles whose
+stale mass the per-tile movement cap clipped per round) and
+`supers_visited` (total super-tile windows the hierarchical draw read).
+`hier_vs_flat` sweeps proposal x refresh_block x layout at k=64, n=2^16 on
+a tuned 512-row tile and pins the two sides of the coarse-to-fine trade:
+
+  * on the NATURAL (shuffled) layout the tiled baseline cannot skip, so a
+    bigger refresh block is pure profit: `proposal='hier'` at
+    refresh_block>=16 models >=8x fewer rows-touched-per-seed than `tiled`
+    (vs the >=4x PR 6 pinned at refresh_block=8 — which is the asymptotic
+    ceiling there: refresh streams n/8 per seed against tiled's n);
+  * on the MORTON layout tile balls are genuinely small, the movement caps
+    bite (`envelope_ratio` > 0), and tightening sustains the acceptance
+    rate the flat envelope loses to staleness: hier at refresh_block=8
+    accepts ABOVE the PR 6 flat-envelope row (>= 0.6932), and hier at
+    refresh_block=16 holds acceptance parity with flat at refresh_block=8
+    while reading `hier_over_flat`x fewer rows.
+
 Each timed row also carries a ``time_ms`` column (median-of-5 wall clock
 with 2 warmup runs, NaN for pallas rows off-TPU where interpret mode would
 time the interpreter) so the modelled reads and the measured cost sit side
@@ -49,13 +68,36 @@ BB, BN, BK = (4, 2 ** 10, 4) if SMOKE else (16, 2 ** 13, 16)
 REFRESH_BLOCK = 8
 
 
-def _post_round_reads(n: int, sampler: str,
-                      eng: ClusterEngine = None) -> int:
+def _post_round_reads(n: int, sampler: str, eng: ClusterEngine = None,
+                      proposal: str = "flat") -> int:
     bn = (eng.backend.seed_tile(n, D) if eng is not None
           else choose_block_n(n, D, 1, batched=True))
+    n_tiles = -(-n // bn)
+    if sampler == "rejection" and proposal == "hier":
+        # super -> tile -> row: one (n_super,) searchsorted, one
+        # tiles_per_super window, one tile scan
+        tps = (eng.backend.tiles_per_super(n_tiles) if eng is not None
+               else n_tiles)
+        return -(-n_tiles // tps) + tps + bn
     if sampler in ("tiled", "rejection"):
-        return -(-n // bn) + bn
+        return n_tiles + bn
     return n
+
+
+def _envelope_ratio(eng: ClusterEngine, res, n: int) -> float:
+    """Mean fraction of tiles the movement cap tightened per round (0.0 for
+    flat proposals and non-rejection samplers)."""
+    if getattr(res, "tightened", None) is None:
+        return 0.0
+    n_tiles = -(-n // eng.backend.seed_tile(n, D))
+    return float(jnp.mean(res.tightened / n_tiles))
+
+
+def _supers_visited(res) -> int:
+    """Total super-tile windows the hierarchical draw read (0 for flat)."""
+    if getattr(res, "supers", None) is None:
+        return 0
+    return int(jnp.sum(res.supers))
 
 
 def _skip_rate(eng: ClusterEngine, res, n: int) -> float:
@@ -76,8 +118,9 @@ def _accept_rate(res) -> float:
     return float(jnp.sum(res.accepts)) / max(props, 1.0)
 
 
-def _seed_reads(eng: ClusterEngine, res, n: int, k: int,
-                sampler: str) -> float:
+def _seed_reads(eng: ClusterEngine, res, n: int, k: int, sampler: str,
+                refresh_block: int = REFRESH_BLOCK,
+                proposal: str = "flat") -> float:
     """Modelled rows touched per SEED, straight from the run's telemetry:
     refresh-kernel rows streamed (tiles not skipped — untouched rejection
     rounds report skipped == all tiles, contributing zero) amortized over k,
@@ -91,10 +134,10 @@ def _seed_reads(eng: ClusterEngine, res, n: int, k: int,
             streamed /= res.skipped.shape[0]
     else:
         streamed = float(n) * k
-    reads = streamed / k + _post_round_reads(n, sampler, eng)
+    reads = streamed / k + _post_round_reads(n, sampler, eng, proposal)
     if res.proposals is not None:
         extra = float(jnp.sum(res.proposals)) / k
-        reads += extra * REFRESH_BLOCK  # pending-block rows per exact check
+        reads += extra * refresh_block  # pending-block rows per exact check
     return reads
 
 
@@ -104,6 +147,8 @@ def run(rows: list):
         pts = jnp.asarray(blobs(n, D, K, seed=0)[0])
         eng = ClusterEngine(backend)
         for sampler in ("cdf", "gumbel", "tiled", "rejection"):
+            # rejection rows run the engine default proposal='hier'
+            prop = "hier" if sampler == "rejection" else "-"
             res = eng.seed(key, pts, K, sampler=sampler,
                            refresh_block=REFRESH_BLOCK)  # warms the jit too
             t = time_fn(lambda: jax.block_until_ready(
@@ -115,11 +160,15 @@ def run(rows: list):
                 interpreted=_interpreted(backend))
             rows.append({
                 "bench": "seed_sampler", "backend": backend,
-                "sampler": sampler, "n": n, "k": K,
-                "post_round_reads": _post_round_reads(n, sampler, eng),
+                "sampler": sampler, "n": n, "k": K, "proposal": prop,
+                "post_round_reads": _post_round_reads(n, sampler, eng,
+                                                      prop),
                 "skip_rate": round(_skip_rate(eng, res, n), 4),
                 "accept_rate": round(_accept_rate(res), 4),
-                "seed_reads": round(_seed_reads(eng, res, n, K, sampler), 1),
+                "envelope_ratio": round(_envelope_ratio(eng, res, n), 4),
+                "supers_visited": _supers_visited(res),
+                "seed_reads": round(_seed_reads(
+                    eng, res, n, K, sampler, proposal=prop), 1),
                 "time_ms": round(tms, 3),
                 "seconds": round(t, 6),
             })
@@ -137,28 +186,90 @@ def run_rejection_vs_tiled(rows: list):
     pts = jnp.asarray(blobs(n64, D, K, seed=2)[0])
     eng = ClusterEngine("fused")
     reads = {}
-    for sampler in ("tiled", "rejection"):
-        res = eng.seed(key, pts, k64, sampler=sampler,
-                       refresh_block=REFRESH_BLOCK)
+    # (sampler, proposal): tiled baseline, the PR 6 flat-envelope row, and
+    # the hier proposal on the identical workload (the shuffled layout keeps
+    # every movement cap at +inf, so hier's cost delta here is purely the
+    # coarse draw — the tightening story is the hier_vs_flat section's)
+    for sampler, prop in (("tiled", "-"), ("rejection", "flat"),
+                          ("rejection", "hier")):
+        kw = dict(refresh_block=REFRESH_BLOCK)
+        if sampler == "rejection":
+            kw["proposal"] = prop
+        res = eng.seed(key, pts, k64, sampler=sampler, **kw)
         t = time_fn(lambda: jax.block_until_ready(
-            eng.seed(key, pts, k64, sampler=sampler,
-                     refresh_block=REFRESH_BLOCK)))
+            eng.seed(key, pts, k64, sampler=sampler, **kw)))
         tms = time_ms(lambda: jax.block_until_ready(
-            eng.seed(key, pts, k64, sampler=sampler,
-                     refresh_block=REFRESH_BLOCK)))
-        reads[sampler] = _seed_reads(eng, res, n64, k64, sampler)
+            eng.seed(key, pts, k64, sampler=sampler, **kw)))
+        reads[(sampler, prop)] = _seed_reads(eng, res, n64, k64, sampler,
+                                             proposal=prop)
         rows.append({
             "bench": "rejection_vs_tiled", "backend": "fused",
-            "sampler": sampler, "n": n64, "k": k64,
-            "post_round_reads": _post_round_reads(n64, sampler, eng),
+            "sampler": sampler, "n": n64, "k": k64, "proposal": prop,
+            "refresh_block": 0 if sampler == "tiled" else REFRESH_BLOCK,
+            "post_round_reads": _post_round_reads(n64, sampler, eng, prop),
             "skip_rate": round(_skip_rate(eng, res, n64), 4),
             "accept_rate": round(_accept_rate(res), 4),
-            "seed_reads": round(reads[sampler], 1),
+            "envelope_ratio": round(_envelope_ratio(eng, res, n64), 4),
+            "supers_visited": _supers_visited(res),
+            "seed_reads": round(reads[(sampler, prop)], 1),
             "reads_ratio": 1.0 if sampler == "tiled" else
-            round(reads["tiled"] / max(reads["rejection"], 1.0), 2),
+            round(reads[("tiled", "-")]
+                  / max(reads[(sampler, prop)], 1.0), 2),
             "time_ms": round(tms, 3),
             "seconds": round(t, 6),
         })
+
+
+def run_hier_vs_flat(rows: list):
+    """ISSUE 9 acceptance rows (module docstring has the full story): the
+    proposal x refresh_block x layout sweep at k=64, n=2^16 on a tuned
+    512-row tile. `reads_ratio` compares against the SAME layout's tiled
+    row; `hier_over_flat` against the same layout's flat refresh_block=8
+    row (the PR 6 configuration)."""
+    import dataclasses
+
+    from repro.data import morton_order
+
+    k64, n64 = 64, 2 ** 16
+    key = jax.random.PRNGKey(2)
+    natural = jnp.asarray(blobs(n64, D, K, seed=2)[0])
+    layouts = {"natural": natural,
+               "morton": jnp.take(natural, morton_order(natural)[0], axis=0)}
+    grid = (("tiled", "-", 0), ("rejection", "flat", 8),
+            ("rejection", "hier", 8), ("rejection", "hier", 16),
+            ("rejection", "hier", 32))
+    eng = ClusterEngine("fused")
+    eng.backend = dataclasses.replace(eng.backend, block_n=512)
+    for layout, pts in layouts.items():
+        reads = {}
+        for sampler, prop, rb in grid:
+            kw = {} if sampler == "tiled" else {
+                "refresh_block": rb, "proposal": prop}
+            res = eng.seed(key, pts, k64, sampler=sampler, **kw)
+            tms = time_ms(lambda: jax.block_until_ready(
+                eng.seed(key, pts, k64, sampler=sampler, **kw)),
+                warmup=1, iters=3)
+            reads[(prop, rb)] = _seed_reads(
+                eng, res, n64, k64, sampler,
+                refresh_block=max(rb, 1), proposal=prop)
+            rows.append({
+                "bench": "hier_vs_flat", "backend": "fused",
+                "sampler": sampler, "n": n64, "k": k64, "layout": layout,
+                "proposal": prop, "refresh_block": rb,
+                "post_round_reads": _post_round_reads(n64, sampler, eng,
+                                                      prop),
+                "skip_rate": round(_skip_rate(eng, res, n64), 4),
+                "accept_rate": round(_accept_rate(res), 4),
+                "envelope_ratio": round(_envelope_ratio(eng, res, n64), 4),
+                "supers_visited": _supers_visited(res),
+                "seed_reads": round(reads[(prop, rb)], 1),
+                "reads_ratio": 1.0 if sampler == "tiled" else
+                round(reads[("-", 0)] / max(reads[(prop, rb)], 1.0), 2),
+                "hier_over_flat": float("nan") if prop != "hier" else
+                round(reads[("flat", 8)] / max(reads[(prop, rb)], 1.0), 2),
+                "time_ms": round(tms, 3),
+                "seconds": round(tms / 1000.0, 6),
+            })
 
 
 def run_batched(rows: list):
@@ -175,9 +286,10 @@ def run_batched(rows: list):
             interpreted=_interpreted(backend))
         rows.append({
             "bench": "kmeans_batched", "backend": backend, "sampler": "cdf",
-            "n": BN, "k": BK, "post_round_reads": BB * BN,
+            "n": BN, "k": BK, "proposal": "-", "post_round_reads": BB * BN,
             "skip_rate": round(_skip_rate(eng, seeds, BN), 4),
             "accept_rate": 1.0,
+            "envelope_ratio": 0.0, "supers_visited": 0,
             "seed_reads": round(_seed_reads(eng, seeds, BN, BK, "cdf"), 1),
             "time_ms": round(tms, 3),
             "seconds": round(t, 6),
@@ -189,8 +301,11 @@ def main():
     run(rows)
     run_batched(rows)
     run_rejection_vs_tiled(rows)
-    header = ["bench", "backend", "sampler", "n", "k",
-              "post_round_reads", "skip_rate", "accept_rate", "seed_reads",
+    run_hier_vs_flat(rows)
+    header = ["bench", "backend", "sampler", "n", "k", "layout", "proposal",
+              "refresh_block", "post_round_reads", "skip_rate",
+              "accept_rate", "envelope_ratio", "supers_visited",
+              "seed_reads", "reads_ratio", "hier_over_flat",
               "time_ms", "seconds"]
     emit(rows, header)
     write_json("seed", {

@@ -86,6 +86,59 @@ def dist_tiled_choice(key: jax.Array, weights: jax.Array,
     return shard_argmax(score, me * n_local + local_idx, axes)
 
 
+def dist_hier_choice(key: jax.Array, weights: jax.Array,
+                     partials: jax.Array, block_n: int, tps: int, axes,
+                     cap: jax.Array = None, tight: jax.Array = None
+                     ) -> jax.Array:
+    """Coarse-to-fine distributed categorical sample: the four-level
+    composition super-tile -> tile -> point -> shard.
+
+      1. super: each shard draws Gumbel scores over log(super masses) —
+         the gathered-boundary differences of its tile CDF (see
+         `sampling.super_cdf`) — picking super s with prob mass_s/local_total
+         and carrying a Gumbel(log local_total) max score by max-stability;
+      2. tile:  inverse-CDF over only the chosen super's (tps,) partials
+         slice — prob partials[t]/mass_s;
+      3. point: inverse-CDF over the winning tile's (block_n,) weight slice,
+         switched to the capped window ``min(weights, cap_t)`` where the
+         per-tile Raff cap tightens the stale envelope (``tight[t]``);
+      4. shard: the same pmax + pmin-tie-break combine as
+         `dist_gumbel_choice` — max-stability makes the per-shard max score
+         Gumbel(log local_total) regardless of the partition granularity,
+         so the combine is unchanged from the flat tiled draw.
+
+    Reads O(n_local/(block_n*tps) + tps + block_n) elements per shard
+    post-kernel instead of the flat draw's O(n_local/block_n + block_n).
+    Returns the GLOBAL index, replicated. NOTE: a different key schedule
+    than `dist_tiled_choice` (three splits, not two) — callers that need
+    the refresh_block=1 bitwise pin route fresh-envelope rounds through
+    the flat draw instead (see engine._seed_mesh)."""
+    me = axis_index(axes)
+    n_local = weights.shape[0]
+    n_tiles = partials.shape[0]
+    shard_key = jax.random.fold_in(key, me)
+    ks, kt, kp = jax.random.split(shard_key, 3)
+
+    tcdf = jnp.cumsum(partials)
+    scdf = sampling.super_cdf(tcdf, tps)
+    sup = scdf - jnp.concatenate([jnp.zeros((1,), scdf.dtype), scdf[:-1]])
+    score, s = sampling.gumbel_max_local(ks, sampling.safe_log(sup))
+
+    ppad = jnp.concatenate([partials, jnp.zeros((tps,), partials.dtype)])
+    pwin = jax.lax.dynamic_slice(ppad, (s * tps,), (tps,))
+    t = jnp.minimum(s * tps + sampling.categorical_cdf(kt, pwin),
+                    n_tiles - 1)
+
+    win = sampling.tile_window(weights, t, block_n)
+    if cap is not None:
+        # where-form, not minimum(): inf-cap * zero-pad NaNs must lose
+        cwin = jnp.where(cap[t] < win, cap[t], win)
+        win = jnp.where(tight[t], cwin, win)
+    within = sampling.categorical_cdf(kp, win)
+    local_idx = jnp.minimum(t * block_n + within, n_local - 1)
+    return shard_argmax(score, me * n_local + local_idx, axes)
+
+
 def dist_gumbel_topl(key: jax.Array, log_w: jax.Array, l: int, axes):
     """Exact distributed Gumbel top-l: sample l indices WITHOUT replacement
     from the sharded categorical exp(log_w) — the k-means|| oversampling draw.

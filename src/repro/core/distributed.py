@@ -22,13 +22,15 @@ from typing import Sequence, Union
 import jax
 
 from repro.core.collectives import (axis_index, axis_size,  # noqa: F401
-                                    dist_gumbel_choice, pvary, ring_psum,
+                                    dist_gumbel_choice, dist_hier_choice,
+                                    dist_tiled_choice, pvary, ring_psum,
                                     take_global)
 from repro.core.engine import (ClusterEngine, KmeansppResult, LloydResult,
                                MeshBackend, make_backend)
 from jax.sharding import Mesh
 
 __all__ = ["dist_kmeanspp", "dist_lloyd", "dist_kmeans", "dist_gumbel_choice",
+           "dist_tiled_choice", "dist_hier_choice",
            "take_global", "ring_psum", "mesh_engine"]
 
 

@@ -100,6 +100,16 @@ class KmeansppResult(NamedTuple):
     tune: Optional[object] = None          # repro.tune.TuneRecord provenance
                                            # (attached POST-jit by the
                                            # engine; None when tune='off')
+    tightened: Optional[jax.Array] = None  # (k,) int32 tiles whose envelope
+                                           # the per-tile Raff cap shrank
+                                           # below the stale partial, per
+                                           # round (sampler='rejection' only;
+                                           # zero under proposal='flat')
+    supers: Optional[jax.Array] = None     # (k,) int32 super-tile windows
+                                           # the coarse-to-fine draw visited
+                                           # per round (proposal='hier' only
+                                           # — one per attempt plus one for
+                                           # the exact fallback when taken)
     # counter contract (shared with LloydResult; pinned by
     # tests/test_telemetry_contract.py): fixed length (k,), one slot per
     # round, slots of rounds that did not run the counted event are ZERO —
@@ -536,6 +546,17 @@ class Backend:
         from repro.kernels.ref import row_min_d2_ref
         return row_min_d2_ref(points, idx, pending, count)
 
+    def tile_cap(self, centers, radii, pending, count):
+        """(n_tiles,) per-tile rejection-envelope caps ``(dc_t + r_t)^2``
+        against ``pending[:count]`` — the movement-tightened envelope's one
+        (n_tiles, pending) pass over the prologue's tile summaries (Raff
+        triangle bound applied to SAMPLING; never touches a row). count == 0
+        returns +inf everywhere, a tightening no-op. The Pallas backend
+        overrides this with the scalar-prefetched summary kernel; this
+        pure-jnp form (XLA-fused) is its oracle."""
+        from repro.kernels.ref import tile_cap_ref
+        return tile_cap_ref(centers, radii, pending, count)
+
     # mesh hooks — identity on a single device
     def allreduce(self, x):
         return x
@@ -696,6 +717,10 @@ class PallasBackend(Backend):
         from repro.kernels import ops as kops
         return kops.row_min_d2(points, idx, pending, count)
 
+    def tile_cap(self, centers, radii, pending, count):
+        from repro.kernels import ops as kops
+        return kops.tile_cap(centers, radii, pending, count)
+
     def _assign_plain(self, points, centroids, weights, norms=None):
         from repro.kernels import ops as kops
         a, md, sums, counts = kops.lloyd_assign(points, centroids,
@@ -793,6 +818,11 @@ class MeshBackend(Backend):
         # global index to the owner shard and psums the scalar (see
         # _seed_mesh), so the method itself stays local
         return self.local.row_min_d2(points, idx, pending, count)
+
+    def tile_cap(self, centers, radii, pending, count):
+        # shard-LOCAL summary pass: tile centers/radii and the tightened
+        # super partials all stay shard-local (see _seed_mesh)
+        return self.local.tile_cap(centers, radii, pending, count)
 
     def assign_update(self, points, centroids, weights, norms=None, *,
                       cache=None, state=None, delta=None):
@@ -1024,7 +1054,8 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
                          init_partials: Optional[jax.Array] = None,
                          max_attempts: int = _REJECT_ATTEMPTS,
                          tile: Optional[int] = None, guard: bool = False,
-                         fault=None, allreduce=None):
+                         fault=None, allreduce=None,
+                         prep_fn=None, hier: bool = False):
     """Rejection-sampling k-means++ loop (sampler='rejection').
 
     Structural difference vs ``_seed_loop``: a round does NOT run the full
@@ -1080,12 +1111,30 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
     keys, same uniforms). ``guard`` additionally verifies the final
     settle-refresh total; ``tile`` (the partials tile height) is required
     for the rebuild path.
+
+    Coarse-to-fine proposals (``proposal='hier'``): ``prep_fn(partials,
+    pending, count) -> (pstate, tightened)`` runs ONCE per round (and after
+    a fallback refresh) to build the proposal-side state the per-attempt
+    draws reuse — the movement-tightened per-tile masses, their cumulative
+    tile CDF and the gathered super-tile boundaries (see
+    ``sampling.super_cdf``). ``pstate`` is threaded opaquely into
+    ``propose_fn(kj, weight, partials, pstate)`` and ``pq_fn(idx, weight,
+    pending, count, pstate)``; ``tightened`` (int32 scalar — tiles whose
+    Raff cap beat the stale partial this round) and the per-round attempt
+    count land in the ``tights``/``sups`` telemetry (``hier`` flags the
+    sups accounting; both stay zero on the flat path). prep state is
+    DERIVED from (partials, pending, count) every round — nothing coarse
+    is carried, so the stale_super fault heals through the same partials
+    refold as neg_envelope.
     """
     d = pts.shape[1]
     P = max(int(refresh_block), 1)
     ar = (lambda x: x) if allreduce is None else allreduce
     if tile is None:
         raise ValueError("the rejection loop needs the partials tile height")
+    if prep_fn is None:
+        prep_fn = lambda partials, pending, count: (  # noqa: E731
+            (), jnp.zeros((), jnp.int32))
     key, k0 = jax.random.split(key)
     first = first_fn(k0)
     c0 = take_fn(first)
@@ -1096,6 +1145,8 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
     props = jnp.zeros((k,), jnp.int32)
     accs = jnp.zeros((k,), jnp.int32)
     rec = jnp.zeros((k,), jnp.int32)
+    tights = jnp.zeros((k,), jnp.int32)
+    sups = jnp.zeros((k,), jnp.int32)
     # pending starts as P copies of the first centroid with count = P - 1:
     # round 1's append fills it, forcing the initial refresh (duplicate rows
     # are value-noops under the min-fold), which also replaces the +inf
@@ -1133,7 +1184,7 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
 
     def body(m, carry):
         (key, centroids, indices, md, partials, state, pending, count,
-         skips, prunes, props, accs, rec) = carry
+         skips, prunes, props, accs, rec, tights, sups) = carry
         pending = jax.lax.dynamic_update_index_in_dim(
             pending, centroids[m - 1].astype(pending.dtype), count, 0)
         count = count + 1
@@ -1149,6 +1200,14 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
         if fault is not None and getattr(fault, "kind", None) == "neg_envelope":
             trip = jnp.asarray(m == fault.round)
             partials = jnp.where(trip, partials.at[0].set(-1.0), partials)
+        if fault is not None and getattr(fault, "kind", None) == "stale_super":
+            # a torn coarse aggregate: every tile partial backing the LAST
+            # super-tile goes NaN (the super state is derived from the
+            # partials each round, so a corrupt super IS a corrupt slice)
+            trip = jnp.asarray(m == fault.round)
+            lo = max(n_tiles - bounds.tiles_per_super(n_tiles), 0)
+            partials = jnp.where(trip & (jnp.arange(n_tiles) >= lo),
+                                 jnp.nan, partials)
 
         # envelope fp-validity: one scalar reduction (psum'd on a mesh).
         # Invalid -> rebuild the stale envelope BEFORE proposing, so the
@@ -1161,12 +1220,16 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
             lambda op: heal_stale(m, centroids, op[3]),
             (md, partials, state, count))
 
+        # coarse-to-fine proposal state (tightened masses + tile/super CDFs):
+        # built once per round from the HEALED partials, reused per attempt
+        pstate, tightened = prep_fn(partials, pending, count)
+
         key, ks = jax.random.split(key)
         weight = bounds.seed_envelope(md, w)
         idx, ok, att = sampling.rejection_sample(
             ks,
-            lambda kj: propose_fn(kj, weight, partials),
-            lambda i: pq_fn(i, weight, pending, count),
+            lambda kj: propose_fn(kj, weight, partials, pstate),
+            lambda i: pq_fn(i, weight, pending, count, pstate),
             max_attempts=max_attempts)
 
         def fb(op):
@@ -1191,18 +1254,24 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
         props = props.at[m].set(att)
         accs = accs.at[m].set(ok.astype(jnp.int32))
         rec = rec.at[m].set(1 - env_ok.astype(jnp.int32))
+        tights = tights.at[m].set(tightened)
+        if hier:
+            # every hier attempt refines exactly one super window; the exact
+            # fallback draw (when taken) visits one more
+            sups = sups.at[m].set(att + (1 - ok.astype(jnp.int32)))
         return (key, centroids, indices, md, partials, state, pending, count,
-                skips, prunes, props, accs, rec)
+                skips, prunes, props, accs, rec, tights, sups)
 
     # the zeros init is never drawn from: round 1's append always fills the
     # buffer (count starts at P - 1), so a refresh precedes the first proposal
     if init_partials is None:
         init_partials = jnp.zeros((n_tiles,), jnp.float32)
     (key, centroids, indices, md, partials, state, pending, count, skips,
-     prunes, props, accs, rec) = jax.lax.fori_loop(
+     prunes, props, accs, rec, tights, sups) = jax.lax.fori_loop(
         1, k, body,
         (key, centroids, indices, init_min_d2, init_partials,
-         init_state, pending, count, skips, prunes, props, accs, rec))
+         init_state, pending, count, skips, prunes, props, accs, rec,
+         tights, sups))
     # settle the refresh debt: fold the last chosen centroid plus every
     # still-pending one, so the returned min_d2 is exact over all k seeds
     pending = jax.lax.dynamic_update_index_in_dim(
@@ -1220,7 +1289,8 @@ def _seed_rejection_loop(key, pts, k, w, *, round_fn, first_fn, take_fn,
         rec = rec.at[k - 1].max(1 - healthy.astype(jnp.int32))
     skips = skips.at[k - 1].set(jnp.asarray(rnd.skipped, jnp.int32))
     prunes = prunes.at[k - 1].set(jnp.asarray(rnd.pruned, jnp.int32))
-    return centroids, indices, final_md, skips, prunes, props, accs, rec
+    return (centroids, indices, final_md, skips, prunes, props, accs, rec,
+            tights, sups)
 
 
 def _stream_of(pts: jax.Array, precision: str) -> jax.Array:
@@ -1240,7 +1310,8 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
                 sampler: str = "cdf", *, precision: str = "fp32",
                 bound_gate: bool = True,
                 cache: Optional[RoundCache] = None,
-                refresh_block: int = 8, guard: bool = False,
+                refresh_block: int = 8, proposal: str = "hier",
+                max_attempts: int = _REJECT_ATTEMPTS, guard: bool = False,
                 fault=None, parts: bool = False):
     """Full k-means++ seeding through `backend` (untraced core; see
     ClusterEngine.seed for the jitted entry). Samplers: 'cdf' (full inverse
@@ -1254,6 +1325,16 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     refresh every ``refresh_block`` seeds — see _seed_rejection_loop;
     with refresh_block=1 it picks bitwise the 'tiled' seeds).
 
+    ``proposal`` (rejection only) picks the proposal distribution's shape:
+    'hier' (default) draws coarse-to-fine — super-tile -> tile -> row, with
+    the per-tile envelope tightened between refreshes by the Raff cap from
+    ``kernels.ops.tile_cap`` (tile summaries, never rows) — while 'flat'
+    keeps PR 6's per-tile draw. Both are exact; 'hier' at refresh_block=1
+    still picks bitwise the 'tiled' seeds (no pending centroids at proposal
+    time -> every cap is +inf -> the draw telescopes to the flat one).
+    ``max_attempts`` is the truncation depth of the rejection loop (the
+    round falls back to one exact fresh-envelope draw past it).
+
     The prologue (cached fp32 norms + tile centroid-balls + per-point
     center distances) runs ONCE here — no round recomputes ||x||^2 — unless
     a precomputed ``cache`` is passed in (``kmeans_points`` shares one
@@ -1264,10 +1345,14 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     ungated path); with ``precision='bf16'`` the rounds stream a bf16 copy
     of the points (seeds are still *taken* from the full-precision
     array)."""
+    if proposal not in ("flat", "hier"):
+        raise ValueError(f"unknown proposal {proposal!r}; "
+                         "expected 'flat' or 'hier'")
     if backend.distributed:
         return _seed_mesh(key, points, k, weights, backend, sampler,
                           precision=precision, bound_gate=bound_gate,
-                          refresh_block=refresh_block, guard=guard,
+                          refresh_block=refresh_block, proposal=proposal,
+                          max_attempts=max_attempts, guard=guard,
                           fault=fault)
     n, d = points.shape
     compute_dtype = jnp.promote_types(points.dtype, jnp.float32)
@@ -1284,56 +1369,130 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
     else:
         init_state = None
 
+    hier = sampler == "rejection" and proposal == "hier"
+    n_tiles = -(-n // tile)
+    tps_ = backend.tiles_per_super(n_tiles)
     if w is None:
         def first_fn(k0):
             return jax.random.randint(k0, (), 0, n, dtype=jnp.int32)
     elif sampler in ("tiled", "rejection"):
         # first seed weighted by point weights (k-means|| reduce step): keep
         # the sub-O(n) property — two-level draw over the weights' own tile
-        # partials instead of a full-n cumsum
-        def first_fn(k0):
-            return sampling.categorical_tiled(
-                k0, w, sampling.tile_partials(w, tile),
-                block_n=tile).astype(jnp.int32)
+        # partials instead of a full-n cumsum. Under proposal='hier' the
+        # Capó-style coreset form: each super-tile is one coreset point
+        # weighted by its gathered partial mass, and only the chosen super
+        # is refined (bitwise the tiled draw — see sampling.categorical_hier)
+        if hier:
+            def first_fn(k0):
+                return sampling.categorical_hier(
+                    k0, w, sampling.tile_partials(w, tile),
+                    block_n=tile, tps=tps_).astype(jnp.int32)
+        else:
+            def first_fn(k0):
+                return sampling.categorical_tiled(
+                    k0, w, sampling.tile_partials(w, tile),
+                    block_n=tile).astype(jnp.int32)
     else:  # first seed weighted by point weights (k-means|| reduce step)
         def first_fn(k0):
             return sampling.categorical(k0, w, method="cdf").astype(jnp.int32)
 
     if sampler == "rejection":
-        n_tiles = -(-n // tile)
+        tiny = jnp.finfo(jnp.float32).tiny
+        if w is None:
+            # per-tile row counts: the unweighted tile mass the Raff cap
+            # multiplies into a tile-level envelope bound
+            tileW = jnp.full((n_tiles,), float(tile), jnp.float32) \
+                .at[n_tiles - 1].set(float(n - (n_tiles - 1) * tile))
+        else:
+            tileW = sampling.tile_partials(w, tile).astype(jnp.float32)
 
-        def propose_fn(kj, weight, partials):
-            u = jax.random.uniform(kj, (), weight.dtype)
-            return sampling.tiled_index_from_uniform(u, weight, partials,
-                                                     block_n=tile)
+        def prep_fn(partials, pending, count):
+            # movement-tightened proposal state, rebuilt each round from the
+            # HEALED partials: cap_t bounds every row's distance to the
+            # pending block from tile summaries alone, so
+            # min(partials_t, cap_t * W_t) is a valid tile envelope mass
+            if cache.centers is not None:
+                cap = backend.tile_cap(cache.centers, cache.radii,
+                                       pending, count)
+            else:  # bound_gate off: no ball summaries -> never tighten
+                cap = jnp.full((n_tiles,), jnp.inf, jnp.float32)
+            capw = cap * tileW  # inf*0 -> NaN: loses every < below
+            ph = jnp.where(capw < partials, capw, partials)
+            tightb = ph < partials
+            tcdf = jnp.cumsum(ph)
+            scdf = sampling.super_cdf(tcdf, tps_)
+            return ((ph, tcdf, scdf, cap, tightb),
+                    jnp.sum(tightb).astype(jnp.int32))
 
-        def pq_fn(idx, weight, pending, count):
-            q = weight[idx]
-            rd2 = backend.row_min_d2(pts, idx, pending, count)
-            scale = 1.0 if w is None else w[idx]
-            return jnp.minimum(q, scale * rd2), q
+        if hier:
+            def propose_fn(kj, weight, partials, pstate):
+                ph, tcdf, scdf, cap, tightb = pstate
+                u = jax.random.uniform(kj, (), weight.dtype)
+                return sampling.hier_index_from_uniform(
+                    u, weight, ph, tcdf, scdf, block_n=tile, tps=tps_,
+                    cap=cap, tight=tightb, w=w)
 
-        def fallback_fn(kf, weight, partials):
-            return sampling.categorical_tiled(
-                kf, weight, partials, block_n=tile).astype(jnp.int32)
+            def pq_fn(idx, weight, pending, count, pstate):
+                # the accept test must price the draw under the SAME
+                # association the proposal used: tightened tiles drew rows
+                # ∝ the capped window cwin with tile mass ph_t, so
+                # q~ = cwin[li] * ph_t / sum(cwin) (>= the true weight:
+                # both ph_t and sum(cwin) are min-bounds of the same mass);
+                # untightened tiles keep the flat q = weight[idx] bitwise
+                ph, tcdf, scdf, cap, tightb = pstate
+                rd2 = backend.row_min_d2(pts, idx, pending, count)
+                scale = 1.0 if w is None else w[idx]
+                t = idx // tile
+                li = idx - t * tile
+                win = sampling.tile_window(weight, t, tile)
+                cw = (cap[t] if w is None
+                      else cap[t] * sampling.tile_window(w, t, tile))
+                cwin = jnp.where(cw < win, cw, win)
+                s_t = jnp.cumsum(cwin)[tile - 1]
+                q = jnp.where(tightb[t],
+                              cwin[li] * (ph[t] / jnp.maximum(s_t, tiny)),
+                              weight[idx])
+                return jnp.minimum(q, scale * rd2), q
 
-        centroids, indices, min_d2, skips, prunes, props, accs, rec = \
-            _seed_rejection_loop(
-                key, pts, k, w,
-                round_fn=lambda c, md, st: backend.seed_round(
-                    stream, c.astype(stream.dtype), md, w, cache=cache,
-                    state=st),
-                first_fn=first_fn,
-                take_fn=lambda i: pts[i],
-                propose_fn=propose_fn, pq_fn=pq_fn, fallback_fn=fallback_fn,
-                n_tiles=n_tiles, all_tiles=n_tiles,
-                refresh_block=refresh_block,
-                init_min_d2=jnp.full((n,), jnp.inf, compute_dtype),
-                init_state=init_state, tile=tile, guard=guard, fault=fault)
+            def fallback_fn(kf, weight, partials):
+                return sampling.categorical_hier(
+                    kf, weight, partials, block_n=tile,
+                    tps=tps_).astype(jnp.int32)
+        else:
+            def propose_fn(kj, weight, partials, pstate):
+                u = jax.random.uniform(kj, (), weight.dtype)
+                return sampling.tiled_index_from_uniform(u, weight, partials,
+                                                         block_n=tile)
+
+            def pq_fn(idx, weight, pending, count, pstate):
+                q = weight[idx]
+                rd2 = backend.row_min_d2(pts, idx, pending, count)
+                scale = 1.0 if w is None else w[idx]
+                return jnp.minimum(q, scale * rd2), q
+
+            def fallback_fn(kf, weight, partials):
+                return sampling.categorical_tiled(
+                    kf, weight, partials, block_n=tile).astype(jnp.int32)
+
+        (centroids, indices, min_d2, skips, prunes, props, accs, rec,
+         tights, sups) = _seed_rejection_loop(
+            key, pts, k, w,
+            round_fn=lambda c, md, st: backend.seed_round(
+                stream, c.astype(stream.dtype), md, w, cache=cache,
+                state=st),
+            first_fn=first_fn,
+            take_fn=lambda i: pts[i],
+            propose_fn=propose_fn, pq_fn=pq_fn, fallback_fn=fallback_fn,
+            prep_fn=prep_fn if hier else None, hier=hier,
+            n_tiles=n_tiles, all_tiles=n_tiles,
+            refresh_block=refresh_block, max_attempts=max_attempts,
+            init_min_d2=jnp.full((n,), jnp.inf, compute_dtype),
+            init_state=init_state, tile=tile, guard=guard, fault=fault)
         return KmeansppResult(centroids.astype(points.dtype), indices,
                               min_d2, skips if bound_gate else None,
                               prunes if bound_gate else None, props, accs,
-                              recovered=rec if guard else None)
+                              recovered=rec if guard else None,
+                              tightened=tights, supers=sups)
 
     if sampler == "tiled":
         def sample_fn(ks, weight, partials):
@@ -1370,7 +1529,8 @@ def seed_points(key: jax.Array, points: jax.Array, k: int,
 def _seed_mesh(key, points, k, weights, backend: MeshBackend,
                sampler: str = "cdf", *, precision: str = "fp32",
                bound_gate: bool = True,
-               refresh_block: int = 8, guard: bool = False,
+               refresh_block: int = 8, proposal: str = "hier",
+               max_attempts: int = _REJECT_ATTEMPTS, guard: bool = False,
                fault=None) -> KmeansppResult:
     """Distributed seeding: the same loop inside shard_map, with the sampler
     swapped for the exact distributed Gumbel-max and point lookup for the
@@ -1412,19 +1572,86 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
             jnp.full((n_local,), jnp.inf, jnp.float32), axes)
 
         if sampler == "rejection":
-            def pq_fn(gidx, weight, pending, count):
+            hier = proposal == "hier"
+            tps_ = backend.tiles_per_super(n_tiles)
+            tiny = jnp.finfo(jnp.float32).tiny
+            # shard-local per-tile row counts (mesh seeding is unweighted)
+            tileW = jnp.full((n_tiles,), float(tile), jnp.float32) \
+                .at[n_tiles - 1].set(float(n_local - (n_tiles - 1) * tile))
+
+            def prep_fn(partials, pending, count):
+                # shard-local tightening from the shard-local prologue
+                # balls; the tightened-tile count is psum'd so the
+                # telemetry counter stays replicated like props/accs
+                if cache.centers is not None:
+                    cap = backend.tile_cap(cache.centers, cache.radii,
+                                           pending, count)
+                else:
+                    cap = jnp.full((n_tiles,), jnp.inf, jnp.float32)
+                capw = cap * tileW
+                ph = jnp.where(capw < partials, capw, partials)
+                tightb = ph < partials
+                tight_n = jax.lax.psum(jnp.sum(tightb.astype(jnp.int32)),
+                                       axes)
+                return (ph, cap, tightb, count), tight_n
+
+            def propose_hier(kj, weight, partials, pstate):
+                # count is REPLICATED (it is carried from replicated accept
+                # decisions), so every shard takes the same branch and the
+                # collectives inside stay aligned. Fresh-envelope rounds
+                # (count == 0 — always, at refresh_block=1) route through
+                # the flat draw so its key schedule, and hence the
+                # sampler='tiled' bitwise pin, is preserved.
+                ph, cap, tightb, count = pstate
+                return jax.lax.cond(
+                    count > 0,
+                    lambda _: collectives.dist_hier_choice(
+                        kj, weight, ph, tile, tps_, axes,
+                        cap=cap, tight=tightb),
+                    lambda _: collectives.dist_tiled_choice(
+                        kj, weight, partials, tile, axes),
+                    None)
+
+            def pq_fn(gidx, weight, pending, count, pstate):
                 # the OWNER shard evaluates the drawn row's exact current
                 # weight p and envelope weight q; one (2,)-fp32 psum
-                # broadcasts them, keeping the accept decision replicated
+                # broadcasts them, keeping the accept decision replicated.
+                # Tightened tiles price the draw as the capped window the
+                # hier proposal drew from (see seed_points' pq_fn twin)
                 me = collectives.axis_index(axes)
                 local = jnp.clip(gidx - me * n_local, 0, n_local - 1)
                 rd2 = backend.row_min_d2(pts, local, pending, count)
-                q_loc = weight[local]
+                if hier:
+                    ph, cap, tightb, _ = pstate
+                    t = local // tile
+                    li = local - t * tile
+                    win = sampling.tile_window(weight, t, tile)
+                    cwin = jnp.where(cap[t] < win, cap[t], win)
+                    s_t = jnp.cumsum(cwin)[tile - 1]
+                    q_loc = jnp.where(
+                        tightb[t],
+                        cwin[li] * (ph[t] / jnp.maximum(s_t, tiny)),
+                        weight[local])
+                else:
+                    q_loc = weight[local]
                 vec = jnp.where(me == gidx // n_local,
                                 jnp.stack([jnp.minimum(q_loc, rd2), q_loc]),
                                 jnp.zeros((2,), jnp.float32))
                 pq = jax.lax.psum(vec, axes)
                 return pq[0], pq[1]
+
+            if hier:
+                propose_fn = propose_hier
+                fallback_fn = lambda kf, weight, partials: \
+                    collectives.dist_hier_choice(kf, weight, partials,
+                                                 tile, tps_, axes)
+            else:
+                propose_fn = lambda kj, weight, partials, pstate: \
+                    collectives.dist_tiled_choice(kj, weight, partials,
+                                                  tile, axes)
+                fallback_fn = lambda kf, weight, partials: \
+                    collectives.dist_tiled_choice(kf, weight, partials,
+                                                  tile, axes)
 
             return _seed_rejection_loop(
                 kk, pts, k, None,
@@ -1432,16 +1659,13 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
                     stream, c.astype(stream.dtype), md, None, cache=cache,
                     state=st),
                 first_fn=first_fn, take_fn=take_fn,
-                propose_fn=lambda kj, weight, partials:
-                    collectives.dist_tiled_choice(kj, weight, partials,
-                                                  tile, axes),
+                propose_fn=propose_fn,
                 pq_fn=pq_fn,
-                fallback_fn=lambda kf, weight, partials:
-                    collectives.dist_tiled_choice(kf, weight, partials,
-                                                  tile, axes),
+                fallback_fn=fallback_fn,
+                prep_fn=prep_fn if hier else None, hier=hier,
                 n_tiles=n_tiles,
                 all_tiles=n_tiles * collectives.axis_size(axes),
-                refresh_block=refresh_block,
+                refresh_block=refresh_block, max_attempts=max_attempts,
                 init_min_d2=init_min_d2, init_state=init_state,
                 init_partials=collectives.pvary(
                     jnp.zeros((n_tiles,), jnp.float32), axes),
@@ -1474,13 +1698,15 @@ def _seed_mesh(key, points, k, weights, backend: MeshBackend,
         mapped = collectives.shard_map(
             local_fn, mesh=backend.mesh,
             in_specs=(P(), P(axes)),
-            out_specs=(P(), P(), P(axes), P(), P(), P(), P(), P()))
-        centroids, indices, min_d2, skips, prunes, props, accs, rec = mapped(
-            key, points)
+            out_specs=(P(), P(), P(axes), P(), P(), P(), P(), P(),
+                       P(), P()))
+        (centroids, indices, min_d2, skips, prunes, props, accs, rec,
+         tights, sups) = mapped(key, points)
         return KmeansppResult(centroids.astype(points.dtype), indices,
                               min_d2, skips if bound_gate else None,
                               prunes if bound_gate else None, props, accs,
-                              recovered=rec if guard else None)
+                              recovered=rec if guard else None,
+                              tightened=tights, supers=sups)
 
     mapped = collectives.shard_map(
         local_fn, mesh=backend.mesh,
@@ -1766,7 +1992,9 @@ def kmeans_points(key: jax.Array, points: jax.Array, k: int,
                   tol: float = 1e-6, empty: str = "keep",
                   precision: str = "fp32",
                   bound_gate: bool = True,
-                  refresh_block: int = 8, guard: bool = False) -> LloydResult:
+                  refresh_block: int = 8, proposal: str = "hier",
+                  max_attempts: int = _REJECT_ATTEMPTS,
+                  guard: bool = False) -> LloydResult:
     """End-to-end k-means++ seeding + Lloyd with ONE shared prologue.
 
     The seed phase and the fit phase historically each ran
@@ -1784,6 +2012,7 @@ def kmeans_points(key: jax.Array, points: jax.Array, k: int,
     seeds = seed_points(key, pts, k, weights, be, sampler,
                         precision=precision, bound_gate=bound_gate,
                         cache=cache, refresh_block=refresh_block,
+                        proposal=proposal, max_attempts=max_attempts,
                         guard=guard)
     res = fit_points(pts, seeds.centroids, weights, be, max_iters, tol,
                      empty, precision, bound_gate, cache=cache, guard=guard)
@@ -1863,13 +2092,16 @@ def _iter_batches(batches: BatchSource, n_batches: Optional[int]):
 
 @functools.partial(jax.jit, static_argnames=("k", "backend", "sampler",
                                              "precision", "bound_gate",
-                                             "refresh_block", "guard",
+                                             "refresh_block", "proposal",
+                                             "max_attempts", "guard",
                                              "fault"))
 def _seed_jit(key, points, weights, k, backend, sampler, precision,
-              bound_gate, refresh_block, guard=False, fault=None):
+              bound_gate, refresh_block, proposal="hier", max_attempts=8,
+              guard=False, fault=None):
     return seed_points(key, points, k, weights, backend, sampler,
                        precision=precision, bound_gate=bound_gate,
-                       refresh_block=refresh_block, guard=guard, fault=fault)
+                       refresh_block=refresh_block, proposal=proposal,
+                       max_attempts=max_attempts, guard=guard, fault=fault)
 
 
 @functools.partial(jax.jit,
@@ -1886,12 +2118,15 @@ def _fit_jit(points, init_centroids, weights, backend, max_iters, tol, empty,
 @functools.partial(jax.jit,
                    static_argnames=("k", "backend", "sampler", "max_iters",
                                     "tol", "empty", "precision",
-                                    "bound_gate", "refresh_block", "guard"))
+                                    "bound_gate", "refresh_block",
+                                    "proposal", "max_attempts", "guard"))
 def _kmeans_jit(key, points, weights, k, backend, sampler, max_iters, tol,
-                empty, precision, bound_gate, refresh_block, guard=False):
+                empty, precision, bound_gate, refresh_block, proposal="hier",
+                max_attempts=8, guard=False):
     return kmeans_points(key, points, k, weights, backend, sampler,
                          max_iters, tol, empty, precision, bound_gate,
-                         refresh_block=refresh_block, guard=guard)
+                         refresh_block=refresh_block, proposal=proposal,
+                         max_attempts=max_attempts, guard=guard)
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "precision"))
@@ -1901,14 +2136,18 @@ def _minibatch_jit(cents, counts, batch, backend, precision):
 
 @functools.partial(jax.jit, static_argnames=("k", "backend", "sampler",
                                              "precision", "bound_gate",
-                                             "refresh_block"))
+                                             "refresh_block", "proposal",
+                                             "max_attempts"))
 def _seed_batched_jit(keys, points, k, backend, sampler, precision,
-                      bound_gate, refresh_block):
+                      bound_gate, refresh_block, proposal="hier",
+                      max_attempts=8):
     return jax.vmap(
         lambda kk, pp: seed_points(kk, pp, k, None, backend, sampler,
                                    precision=precision,
                                    bound_gate=bound_gate,
-                                   refresh_block=refresh_block)
+                                   refresh_block=refresh_block,
+                                   proposal=proposal,
+                                   max_attempts=max_attempts)
     )(keys, points)
 
 
@@ -2024,16 +2263,20 @@ class ClusterEngine:
         return be, rec
 
     @staticmethod
-    def _tune_sampler(sampler, refresh_block, rec):
+    def _tune_sampler(sampler, refresh_block, rec, proposal="hier"):
         """Resolve sampler='auto' against a TuneRecord (tiled when tuning
-        is off or nothing is known)."""
+        is off or nothing is known). The tuned proposal shape rides along:
+        an explicit ``proposal=`` always wins, sampler='auto' with a record
+        that carries one takes the record's."""
         if sampler != "auto":
-            return sampler, refresh_block
+            return sampler, refresh_block, proposal
         if rec is None or not rec.sampler:
-            return "tiled", refresh_block
+            return "tiled", refresh_block, proposal
         if rec.refresh_block:
             refresh_block = int(rec.refresh_block)
-        return rec.sampler, refresh_block
+        if getattr(rec, "proposal", ""):
+            proposal = rec.proposal
+        return rec.sampler, refresh_block, proposal
 
     # -- robustness plumbing ----------------------------------------------
     def _run(self, fn, backend: Optional[Backend] = None):
@@ -2080,7 +2323,8 @@ class ClusterEngine:
     def seed(self, key: jax.Array, points: jax.Array, k: int, *,
              weights: Optional[jax.Array] = None,
              sampler: str = "cdf",
-             refresh_block: int = 8,
+             refresh_block: int = 8, proposal: str = "hier",
+             max_attempts: int = _REJECT_ATTEMPTS,
              checkpoint_dir=None, checkpoint_every: int = 1,
              _fault=None) -> KmeansppResult:
         """K-means++ seeding: k centroids chosen from `points` ∝ D^2.
@@ -2092,10 +2336,13 @@ class ClusterEngine:
         'rejection' (exact rejection sampling against a STALE envelope: the
         full D^2 refresh runs only every ``refresh_block`` seeds, each round
         in between touches O(1) rows — same distribution; refresh_block=1
-        reproduces 'tiled' bitwise). ``refresh_block`` is ignored by the
-        other samplers. sampler='auto' takes the tuned sampler (and
-        refresh_block) from the autotune cache when ``tune=`` is on, else
-        'tiled'.
+        reproduces 'tiled' bitwise). ``refresh_block``, ``proposal`` and
+        ``max_attempts`` are rejection-only knobs (see ``seed_points``):
+        proposal='hier' (default) draws coarse-to-fine through super-tiles
+        with movement-tightened per-tile envelopes, 'flat' keeps the
+        per-tile draw. sampler='auto' takes the tuned sampler (and
+        refresh_block / proposal) from the autotune cache when ``tune=``
+        is on, else 'tiled'.
 
         ``checkpoint_dir`` runs the loop in resumable chunks of
         ``checkpoint_every`` rounds, persisting the full carry (centroids,
@@ -2119,11 +2366,12 @@ class ClusterEngine:
                 checkpoint_dir=checkpoint_dir,
                 checkpoint_every=int(checkpoint_every))
         tuned_be, rec = self._tune_for(n, k, points.shape[1], points.dtype)
-        sampler, refresh_block = self._tune_sampler(sampler, refresh_block,
-                                                    rec)
+        sampler, refresh_block, proposal = self._tune_sampler(
+            sampler, refresh_block, rec, proposal)
         res = self._run(lambda be: _seed_jit(
             key, points, weights, k, be, sampler, self.precision,
-            self.bounds, int(refresh_block), self._guard, _fault),
+            self.bounds, int(refresh_block), proposal, int(max_attempts),
+            self._guard, _fault),
             backend=tuned_be)
         return res if rec is None else res._replace(tune=rec)
 
@@ -2233,7 +2481,8 @@ class ClusterEngine:
                init: str = "kmeans++", max_iters: int = 50, tol: float = 1e-6,
                sampler: str = "cdf", empty: str = "keep",
                weights: Optional[jax.Array] = None,
-               order=None, refresh_block: int = 8) -> LloydResult:
+               order=None, refresh_block: int = 8, proposal: str = "hier",
+               max_attempts: int = _REJECT_ATTEMPTS) -> LloydResult:
         """End-to-end: seeding (the paper's phase) + Lloyd clustering.
         ``order`` reorders the rows ONCE up front (see `fit`): both the
         seeding scan and every Lloyd iteration then see the tile-coherent
@@ -2248,8 +2497,8 @@ class ClusterEngine:
                                        points.shape[-1], points.dtype)
         if order == "auto":
             order = rec.order if rec is not None else None
-        sampler, refresh_block = self._tune_sampler(sampler, refresh_block,
-                                                    rec)
+        sampler, refresh_block, proposal = self._tune_sampler(
+            sampler, refresh_block, rec, proposal)
         points, weights, perm, inv = self._order_in(points, order, weights)
         if init == "kmeans++" and not self.backend.distributed:
             n = points.shape[0]
@@ -2257,14 +2506,16 @@ class ClusterEngine:
             res = self._run(lambda be: _kmeans_jit(
                 key, points, weights, k, be, sampler, max_iters, float(tol),
                 empty, self.precision, self.bounds, int(refresh_block),
-                self._guard), backend=tuned_be)
+                proposal, int(max_attempts), self._guard), backend=tuned_be)
             if rec is not None:
                 res = res._replace(tune=rec)
             return self._order_out(res, perm, inv)
         if init == "kmeans++":
             seeds = self.seed(key, points, k, weights=weights,
                               sampler=sampler,
-                              refresh_block=refresh_block).centroids
+                              refresh_block=refresh_block,
+                              proposal=proposal,
+                              max_attempts=max_attempts).centroids
         elif init == "kmeans||":
             if self.backend.distributed:
                 raise NotImplementedError("k-means|| init runs on a local "
@@ -2366,7 +2617,8 @@ class ClusterEngine:
     # -- batched multi-problem clustering ---------------------------------
     def seed_batched(self, key: jax.Array, points: jax.Array, k: int, *,
                      sampler: str = "cdf",
-                     refresh_block: int = 8) -> KmeansppResult:
+                     refresh_block: int = 8, proposal: str = "hier",
+                     max_attempts: int = _REJECT_ATTEMPTS) -> KmeansppResult:
         """Seed B independent (n, d) problems in one compiled call.
 
         `points` is (B, n, d); `key` is either one key (split per problem) or
@@ -2390,11 +2642,12 @@ class ClusterEngine:
         single_ndim = 0 if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) else 1
         keys = key if key.ndim > single_ndim else jax.random.split(key, B)
         tuned_be, rec = self._tune_for(n, k, points.shape[-1], points.dtype)
-        sampler, refresh_block = self._tune_sampler(sampler, refresh_block,
-                                                    rec)
+        sampler, refresh_block, proposal = self._tune_sampler(
+            sampler, refresh_block, rec, proposal)
         res = self._run(lambda be: _seed_batched_jit(
             keys, points, k, be, sampler, self.precision, self.bounds,
-            int(refresh_block)), backend=tuned_be)
+            int(refresh_block), proposal, int(max_attempts)),
+            backend=tuned_be)
         return res if rec is None else res._replace(tune=rec)
 
     def _resolve_order_batched(self, points: jax.Array, order):

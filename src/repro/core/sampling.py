@@ -138,6 +138,105 @@ def tiled_index_from_uniform(u: jax.Array, weights: jax.Array,
     return jnp.minimum(t * block_n + li, n - 1).astype(jnp.int32)
 
 
+def super_cdf(tcdf: jax.Array, tps: int) -> jax.Array:
+    """(n_super,) coarse-level CDF for the super->tile->row draw: the flat
+    tile CDF GATHERED at each super's last tile, NOT a re-summation of the
+    partials. Gathering keeps every super boundary bitwise a flat-cdf prefix
+    (``scdf[-1] == tcdf[-1]`` exactly), which is what makes the two-level
+    search telescope to the identical tile the flat searchsorted would pick
+    — the foundation of the `hier == tiled` bitwise pin."""
+    n_tiles = tcdf.shape[0]
+    n_super = -(-n_tiles // tps)
+    ends = jnp.minimum((jnp.arange(n_super) + 1) * tps - 1, n_tiles - 1)
+    return tcdf[ends]
+
+
+def hier_index_from_uniform(u: jax.Array, weights: jax.Array,
+                            partials: jax.Array, tcdf: jax.Array,
+                            scdf: jax.Array, *, block_n: int, tps: int,
+                            cap: Optional[jax.Array] = None,
+                            tight: Optional[jax.Array] = None,
+                            w: Optional[jax.Array] = None) -> jax.Array:
+    """Coarse-to-fine three-level inverse-CDF: super-tile s via the
+    (n_super,) gathered boundaries, tile t via only the chosen super's
+    (tps,) slice of the flat tile CDF, then the row inside tile t —
+    O(n_super + tps + block_n) reads instead of O(n_tiles + block_n).
+
+    Exactness/bitwise contract: ``scdf`` must come from `super_cdf(tcdf,
+    tps)` (gathered boundaries). searchsorted-right over the boundaries
+    returns the first super whose last tile's prefix exceeds r, which is
+    exactly ``t_flat // tps``; the within-super search over the tps-wide
+    tcdf window (inf-padded past the last tile) with the ABSOLUTE r then
+    recovers ``t_flat`` itself, and the identical residual + row-level code
+    returns the flat draw's index BITWISE.
+
+    ``cap``/``tight`` (optional, from the movement-tightened envelope)
+    switch the row level of tiles where the per-tile Raff cap beats the
+    stale partial to a capped-window draw: rows are drawn ∝
+    ``min(weights_i, cap_t * w_i)`` with the residual rescaled through the
+    tightened tile mass ``partials[t]`` (conditional on t the residual is
+    uniform on [0, partials[t]), so the rescale costs no extra uniform).
+    Untightened tiles (``tight[t]`` False) run the flat row-level code
+    bitwise — so with no tightening active the whole draw pins `tiled`.
+
+    Super-level degenerate guard (the tile level's fp-underflow discipline,
+    lifted one level): an all-zero or NaN coarse mass (``scdf[-1]``) would
+    let searchsorted pin to one clipped super; instead the single uniform
+    telescopes into a uniform super -> tile -> row fallback so no NaN ever
+    steers the draw. The healthy path is bitwise unchanged."""
+    n = weights.shape[0]
+    n_tiles = partials.shape[0]
+    n_super = scdf.shape[0]
+    stot = scdf[n_super - 1]  # == tcdf[-1] bitwise (gathered boundary)
+    r = u.astype(tcdf.dtype) * stot
+    s = jnp.clip(jnp.searchsorted(scdf, r, side="right"), 0, n_super - 1)
+    # within-super tile search: tps-wide window of the FLAT tcdf, inf-padded
+    # so tail pads can never win a right-searchsorted against a finite r
+    tpad = jnp.concatenate([tcdf, jnp.full((tps,), jnp.inf, tcdf.dtype)])
+    twin = jax.lax.dynamic_slice(tpad, (s * tps,), (tps,))
+    t = jnp.clip(s * tps + jnp.searchsorted(twin, r, side="right"),
+                 0, n_tiles - 1)
+    r_local = r - jnp.where(t > 0, tcdf[jnp.maximum(t - 1, 0)], 0.0)
+
+    win = tile_window(weights, t, block_n)
+    tiny = jnp.finfo(tcdf.dtype).tiny
+    ph_t = partials[t]
+    if cap is None:
+        use, r2, tight_t = win, r_local, jnp.zeros((), bool)
+    else:
+        cw = cap[t] if w is None else cap[t] * tile_window(w, t, block_n)
+        # where-form, not minimum(): inf * 0 pads give NaN and NaN must
+        # lose the comparison, keeping the stale window untouched
+        cwin = jnp.where(cw < win, cw, win)
+        tight_t = tight[t]
+        use = jnp.where(tight_t, cwin, win)
+        lsum = jnp.cumsum(use)[block_n - 1]
+        r2 = jnp.where(tight_t,
+                       (r_local / jnp.maximum(ph_t, tiny)) * lsum, r_local)
+    lcdf = jnp.cumsum(use)
+    li = jnp.clip(jnp.searchsorted(lcdf, r2, side="right"), 0, block_n - 1)
+    # the tile level's fp-underflow guard, unchanged (see
+    # tiled_index_from_uniform): degenerate window -> uniform offset
+    wtot = lcdf[block_n - 1]
+    frac = jnp.clip(r_local / jnp.maximum(ph_t, tiny), 0.0, 1.0)
+    li_fb = jnp.minimum((frac * block_n).astype(jnp.int32), block_n - 1)
+    li = jnp.where(jnp.isfinite(wtot) & (wtot > 0), li, li_fb)
+    idx = jnp.minimum(t * block_n + li, n - 1).astype(jnp.int32)
+
+    # super-level degenerate guard: telescope the one uniform through
+    # uniform-over-supers -> tiles -> rows (satellite of ISSUE 9)
+    us = u.astype(tcdf.dtype) * n_super
+    s_fb = jnp.minimum(us.astype(jnp.int32), n_super - 1)
+    ut = (us - s_fb) * tps
+    t_fb = jnp.minimum(s_fb * tps + ut.astype(jnp.int32), n_tiles - 1)
+    ur = (ut - jnp.floor(ut)) * block_n
+    idx_fb = jnp.minimum(t_fb * block_n +
+                         jnp.minimum(ur.astype(jnp.int32), block_n - 1),
+                         n - 1).astype(jnp.int32)
+    sok = jnp.isfinite(stot) & (stot > 0)
+    return jnp.where(sok, idx, idx_fb)
+
+
 def categorical_cdf(key: jax.Array, weights: jax.Array, *,
                     total: Optional[jax.Array] = None) -> jax.Array:
     """Inverse-CDF sampling: idx such that cumsum[idx-1] <= r < cumsum[idx].
@@ -156,6 +255,23 @@ def categorical_tiled(key: jax.Array, weights: jax.Array,
     guard reads only the n_tiles partials, keeping the whole draw sub-O(n)."""
     u = jax.random.uniform(key, (), weights.dtype)
     idx = tiled_index_from_uniform(u, weights, partials, block_n=block_n)
+    return _guarded(key, idx, jnp.sum(partials), weights.shape[0])
+
+
+def categorical_hier(key: jax.Array, weights: jax.Array,
+                     partials: jax.Array, *, block_n: int,
+                     tps: int) -> jax.Array:
+    """Coarse-to-fine guarded draw (see `hier_index_from_uniform`): the
+    super level treats each super-tile as a coreset point whose weight is
+    its gathered partial mass (Capó-style), and only the chosen super is
+    refined tile -> row. Same uniform derivation and degenerate discipline
+    as `categorical_tiled`, so healthy draws are bitwise identical to it —
+    just O(n_super + tps + block_n) reads instead of O(n_tiles + block_n)."""
+    u = jax.random.uniform(key, (), weights.dtype)
+    tcdf = jnp.cumsum(partials)
+    scdf = super_cdf(tcdf, tps)
+    idx = hier_index_from_uniform(u, weights, partials, tcdf, scdf,
+                                  block_n=block_n, tps=tps)
     return _guarded(key, idx, jnp.sum(partials), weights.shape[0])
 
 

@@ -20,6 +20,17 @@ being able to index a counter by round without bounds checks:
   ``0 <= accepts[m] <= 1`` and ``accepts[m] <= proposals[m]``, with
   ``proposals[m] <= max_attempts`` (a round that exhausts its attempts
   falls back to an exact full draw and reports ``accepts[m] == 0``).
+  ``max_attempts`` is the engine parameter of the same name (default 8),
+  not a hardcoded depth — the chain is ``accepts <= proposals <=
+  max_attempts`` slot-wise.
+* **coarse-to-fine counters** — under ``sampler='rejection'`` results also
+  carry ``tightened`` (tiles whose envelope the per-tile Raff cap shrank
+  that round; ``0 <= tightened[m] <= n_tiles``, and identically zero under
+  ``proposal='flat'`` — the flat path never builds caps) and ``supers``
+  (super-tile windows the hierarchical draw visited; each attempt refines
+  exactly one super and the exact fallback, when taken, visits one more,
+  so ``proposals[m] <= supers[m] <= proposals[m] + 1`` for hier rounds and
+  ``supers == 0`` everywhere under ``proposal='flat'``).
 * **recovered counter** — when guards are on (``validate != "off"``),
   results carry a ``recovered`` counter with the same shape discipline:
   ``recovered[m] == 1`` iff round ``m``'s corruption detector tripped (a
@@ -43,6 +54,7 @@ import numpy as np
 __all__ = [
     "check_counter",
     "check_rejection_counters",
+    "check_hier_counters",
     "check_converged_zeros",
     "check_recovered",
 ]
@@ -93,6 +105,36 @@ def check_rejection_counters(proposals, accepts, k: int,
         f"every later healthy round proposes at least once: {p} (rec={rec})"
     assert np.all(p <= max_attempts), \
         f"proposals exceed the truncation depth {max_attempts}: {p}"
+
+
+def check_hier_counters(tightened, supers, proposals, k: int, *,
+                        n_tiles=None, hier: bool = True) -> None:
+    """Assert the coarse-to-fine counter relations on a seeding result.
+
+    With ``hier=True`` (proposal='hier'): every attempt visits exactly one
+    super-tile window and the exact fallback (taken iff the round accepted
+    nothing, i.e. ``supers[m] == proposals[m] + 1`` implies it) visits one
+    more, so ``proposals <= supers <= proposals + 1`` slot-wise with
+    ``supers[0] == 0`` (the uniform first seed proposes nothing).
+    ``tightened`` is bounded by the tile count when one is given. With
+    ``hier=False`` (proposal='flat') both counters are identically zero —
+    the flat path builds no caps and walks no super windows."""
+    t = check_counter(tightened, k, "tightened")
+    s = check_counter(supers, k, "supers")
+    p = check_counter(proposals, k, "proposals")
+    if not hier:
+        assert np.all(t == 0), f"flat proposal never tightens: {t}"
+        assert np.all(s == 0), f"flat proposal visits no supers: {s}"
+        return
+    assert t[0] == 0 and s[0] == 0, \
+        "round 0 is the uniform first seed: tightened[0]==supers[0]==0"
+    assert np.all(p <= s), \
+        f"each attempt visits one super window: {p} {s}"
+    assert np.all(s <= p + 1), \
+        f"only the exact fallback adds a window past the attempts: {p} {s}"
+    if n_tiles is not None:
+        assert np.all(t <= int(n_tiles)), \
+            f"tightened exceeds the tile count {n_tiles}: {t}"
 
 
 def check_recovered(arr, length: int, *, expect=None) -> np.ndarray:

@@ -321,6 +321,62 @@ def row_min_d2_pallas(points: jax.Array, idx: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# per-tile envelope cap: the movement-tightened rejection envelope's
+# (n_tiles, pending) pass over tile summaries — never rows
+# ---------------------------------------------------------------------------
+
+
+def _tile_cap_kernel(meta_ref, cents_ref, radii_ref, pend_ref, out_ref):
+    """One grid step: per-tile envelope caps from the tile BALLS only.
+
+    ``meta = [count]`` rides the scalar-prefetch channel. For every tile ball
+    (center_t, r_t) the triangle inequality gives ``d(x_i, c) <= d(center_t,
+    c) + r_t`` for each of its rows, so ``(min_c d(center_t, c) + r_t)^2``
+    over the first ``count`` pending slots dominates every row's CURRENT
+    min_d2 — the Raff bound the rejection sampler shrinks its stale envelope
+    with between refreshes. Slots >= count are +inf-masked; count == 0
+    yields +inf everywhere (a tightening no-op, which is what keeps
+    refresh_block=1 bitwise on the flat path)."""
+    c = cents_ref[...].astype(jnp.float32)         # (n_tiles, d)
+    p = pend_ref[...].astype(jnp.float32)          # (m, d)
+    diff = c[:, None, :] - p[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=2)              # (n_tiles, m)
+    slot = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    dc2 = jnp.min(jnp.where(slot < meta_ref[0], d2, jnp.inf), axis=1)
+    cap = (jnp.sqrt(dc2) + radii_ref[...].astype(jnp.float32)) ** 2
+    out_ref[...] = jnp.where(meta_ref[0] > 0, cap, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tile_cap_pallas(centers: jax.Array, radii: jax.Array,
+                    pending: jax.Array, count: jax.Array, *,
+                    interpret: bool) -> jax.Array:
+    """(n_tiles,) fp32 per-tile envelope caps ``(dc_t + r_t)^2`` against
+    ``pending[:count]`` — O(n_tiles * count * d) over tile summaries (the
+    whole point: no row is touched; see kernels.ref.tile_cap_ref)."""
+    t, d = centers.shape
+    m = pending.shape[0]
+    meta = count.astype(jnp.int32)[None]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                      # meta = [count]
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i, meta: (0, 0)),  # tile centers
+            pl.BlockSpec((t,), lambda i, meta: (0,)),      # tile radii
+            pl.BlockSpec((m, d), lambda i, meta: (0, 0)),  # pending block
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i, meta: (0,)),
+    )
+    out = pl.pallas_call(
+        _tile_cap_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=interpret,
+    )(meta, centers, radii.astype(jnp.float32), pending)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # prologue kernel: cached norms + tile centroid-balls, ONE pass over the data
 # ---------------------------------------------------------------------------
 

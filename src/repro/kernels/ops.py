@@ -29,7 +29,7 @@ from jax.custom_batching import custom_vmap
 from repro.kernels.kmeans_distance import (
     distance_min_update_batched_pallas, distance_min_update_gated_pallas,
     distance_min_update_gated_batched_pallas, distance_min_update_pallas,
-    row_min_d2_pallas, seed_prologue_pallas)
+    row_min_d2_pallas, seed_prologue_pallas, tile_cap_pallas)
 from repro.core.bounds import point_norms  # noqa: F401  (re-exported: the
 #   cached-norm input the kernels stream; wrappers compute it on the fly
 #   when the caller has no prologue cache)
@@ -334,6 +334,36 @@ def row_min_d2(points: jax.Array, idx: jax.Array, centroids: jax.Array,
 
     return call(points, jnp.asarray(idx, jnp.int32), centroids,
                 jnp.asarray(count, jnp.int32))
+
+
+def tile_cap(centers: jax.Array, radii: jax.Array, pending: jax.Array,
+             count: jax.Array, *, interpret: bool | None = None):
+    """(n_tiles,) per-tile rejection-envelope caps ``(dc_t + r_t)^2`` against
+    the first ``count`` pending centroids — the movement-tightened envelope's
+    one (n_tiles, pending) pass over the prologue's tile summaries (never
+    rows). count == 0 returns +inf everywhere (no tightening). Under
+    `jax.vmap` (the engine's batched seeding) this dispatches to the
+    pure-jnp twin — the per-problem summary pass is accumulator-bound, not
+    kernel-bound."""
+    _check_forced()
+    if interpret is None:
+        interpret = default_interpret()
+
+    @custom_vmap
+    def call(cent, rad, pend, cnt):
+        return tile_cap_pallas(cent, rad, pend, cnt, interpret=interpret)
+
+    @call.def_vmap
+    def _rule(axis_size, in_batched, cent, rad, pend, cnt):
+        from repro.kernels.ref import tile_cap_ref
+        cent = _ensure_batched(cent, in_batched[0], axis_size)
+        rad = _ensure_batched(rad, in_batched[1], axis_size)
+        pend = _ensure_batched(pend, in_batched[2], axis_size)
+        cnt = _ensure_batched(cnt, in_batched[3], axis_size)
+        return jax.vmap(tile_cap_ref)(cent, rad, pend, cnt), True
+
+    return call(centers.astype(jnp.float32), radii.astype(jnp.float32),
+                pending.astype(jnp.float32), jnp.asarray(count, jnp.int32))
 
 
 def lloyd_assign(points: jax.Array, centroids: jax.Array, *,

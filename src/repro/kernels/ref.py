@@ -42,6 +42,26 @@ def row_min_d2_ref(points: jax.Array, idx: jax.Array, centroids: jax.Array,
     return jnp.min(jnp.where(slot < count, d2, jnp.inf))
 
 
+def tile_cap_ref(centers: jax.Array, radii: jax.Array, pending: jax.Array,
+                 count: jax.Array) -> jax.Array:
+    """Oracle for kernels.tile_cap: per-tile rejection-envelope cap from tile
+    summaries only. For tile t with ball (center_t, r_t) every row satisfies
+    ``d(x_i, c) <= d(center_t, c) + r_t`` (triangle inequality), so
+
+        cap_t = (min_{j < count} d(center_t, pending_j) + r_t)^2
+
+    dominates every row's CURRENT min_d2 against the pending block — a valid
+    per-tile upper bound the rejection sampler may shrink its stale envelope
+    with (Raff-style, applied to sampling). Slots >= count are masked to
+    +inf, so count == 0 returns +inf everywhere (no tightening). (n_tiles,)
+    fp32; O(n_tiles * count * d) — tile summaries, never rows."""
+    d2 = _d2(centers, pending)
+    slot = jnp.arange(pending.shape[0])
+    dc2 = jnp.min(jnp.where(slot[None, :] < count, d2, jnp.inf), axis=1)
+    cap = (jnp.sqrt(dc2) + radii.astype(jnp.float32)) ** 2
+    return jnp.where(count > 0, cap, jnp.inf)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0,
                         q_offset=0):
     """Oracle for kernels.flash_attention: exact softmax attention in fp32.

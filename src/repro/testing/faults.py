@@ -14,6 +14,12 @@ The injectors cover the layers a real deployment loses sleep over:
                           (a lost shard contribution) at ``round``
       - ``neg_envelope``  rejection seeding: corrupt the stale proposal
                           envelope with a negative partial at ``round``
+      - ``stale_super``   rejection seeding: NaN every tile partial backing
+                          the LAST super-tile at ``round`` — a torn coarse
+                          aggregate. The coarse-to-fine proposal state is
+                          DERIVED from the partials each round, so the
+                          corrupt super is healed by the same prefix refold
+                          as ``neg_envelope`` (bitwise replay)
   * ``force_kernel_failure`` — context manager that makes every public
     kernel wrapper in ``repro.kernels.ops`` raise ``KernelFailureError``
     at trace time (a stand-in for a Pallas compile/launch failure),
@@ -38,8 +44,9 @@ from repro.kernels import ops
 
 SEED_FAULTS = ("nan_tile", "nan_state")
 FIT_FAULTS = ("zero_counts", "nan_state")
-REJECTION_FAULTS = ("neg_envelope",)
-ALL_FAULTS = ("nan_tile", "nan_state", "zero_counts", "neg_envelope")
+REJECTION_FAULTS = ("neg_envelope", "stale_super")
+ALL_FAULTS = ("nan_tile", "nan_state", "zero_counts", "neg_envelope",
+              "stale_super")
 
 
 @dataclasses.dataclass(frozen=True)

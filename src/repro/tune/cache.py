@@ -53,10 +53,10 @@ class TuneRecord:
 
     The geometry fields (``block_n``, ``tps``) are applied by the engine
     via ``dataclasses.replace`` on the backend; the rest are advisory —
-    ``order``/``sampler``/``refresh_block`` are consumed only when the
-    caller passes ``order="auto"`` / ``sampler="auto"``, and ``precision``
-    is never auto-applied (it changes numerics; see docs/engine.md
-    "Autotuning")."""
+    ``order``/``sampler``/``refresh_block``/``proposal`` are consumed only
+    when the caller passes ``order="auto"`` / ``sampler="auto"``, and
+    ``precision`` is never auto-applied (it changes numerics; see
+    docs/engine.md "Autotuning")."""
 
     # -- cache key ---------------------------------------------------------
     n: int
@@ -71,6 +71,9 @@ class TuneRecord:
     precision: str = "fp32"
     sampler: str = "tiled"
     refresh_block: int = 0
+    proposal: str = "hier"    # rejection proposal shape ('hier' | 'flat');
+    #                           consumed, like sampler, only under
+    #                           sampler="auto"
     # -- provenance --------------------------------------------------------
     source: str = "heuristic"  # measured | model | heuristic | cache |
     #                            cache-nearest

@@ -61,6 +61,12 @@ def _advisory(n: int, k: int, d: int) -> dict:
     * sampler — the rejection sampler's stale-envelope refresh goes
       sub-linear in k (ISSUE 6): worth its bookkeeping once there are
       enough seeds to amortize a refresh block over.
+    * proposal — the coarse-to-fine draw (ISSUE 9) wins exactly where the
+      rejection sampler does: enough seeds for pending centroids to
+      accumulate between refreshes (tightening needs something pending)
+      and enough tiles for the super level to amortize its extra
+      searchsorted. At tiny k / tiny n_tiles the flat draw's O(n_tiles)
+      read is already trivial, so recommend 'flat' there.
     * precision — the round kernels are memory-bound once the point block
       dominates the stream; bf16 halves exactly that term.
     """
@@ -68,6 +74,7 @@ def _advisory(n: int, k: int, d: int) -> dict:
         "order": "morton" if d <= 8 else None,
         "sampler": "rejection" if k >= 32 else "tiled",
         "refresh_block": 8 if k >= 32 else 0,
+        "proposal": "hier" if k >= 32 else "flat",
         "precision": "bf16" if d >= 8 else "fp32",
     }
 
@@ -99,6 +106,7 @@ def search(n: int, k: int, d: int, *, backend: str = "fused",
         block_n=int(best[0]), tps=int(best[1]),
         order=adv["order"], precision=adv["precision"],
         sampler=adv["sampler"], refresh_block=int(adv["refresh_block"]),
+        proposal=adv["proposal"],
         source="measured" if measure.wallclock_available() else "model",
         predicted_bytes=float(best_cost),
         default_bytes=float(default_cost),

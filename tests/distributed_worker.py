@@ -125,6 +125,25 @@ out["mesh_rejection_counters_ok"] = bool(
     props_m.shape == (16,) and props_m[0] == 0 and accs_m[0] == 0
     and (accs_m <= props_m).all() and (props_m[1:] >= 1).all())
 
+# coarse-to-fine on the mesh (ISSUE 9): r_m1/r_m8 above already run the
+# default proposal='hier'; pin that flat at refresh_block=1 telescopes to
+# the same stream, and that the hier counters obey the contract at rb=8
+f_m1 = eng_m.seed(key, pts, 16, sampler="rejection", refresh_block=1,
+                  proposal="flat")
+out["mesh_hier_flat_pin_ok"] = bool(
+    np.array_equal(np.asarray(t_m.indices), np.asarray(f_m1.indices)))
+tg_m = np.asarray(r_m8.tightened)
+sp_m = np.asarray(r_m8.supers)
+out["mesh_hier_counters_ok"] = bool(
+    tg_m.shape == (16,) and sp_m.shape == (16,)
+    and tg_m[0] == 0 and sp_m[0] == 0
+    and (props_m <= sp_m).all() and (sp_m <= props_m + 1).all())
+f_m8 = eng_m.seed(key, pts, 16, sampler="rejection", refresh_block=8,
+                  proposal="flat")
+out["mesh_flat_counters_zero_ok"] = bool(
+    (np.asarray(f_m8.tightened) == 0).all()
+    and (np.asarray(f_m8.supers) == 0).all())
+
 # ---------------------------------------------------------------------------
 # 4c. dist_gumbel_topl: exact distributed top-l == replicated gumbel_topk,
 #     and the k-means|| mesh init built on it returns valid seeds

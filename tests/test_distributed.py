@@ -60,6 +60,12 @@ def test_mesh_rejection_sampler(worker_out):
     assert worker_out["mesh_rejection_counters_ok"]
 
 
+def test_mesh_coarse_to_fine_proposal(worker_out):
+    assert worker_out["mesh_hier_flat_pin_ok"]
+    assert worker_out["mesh_hier_counters_ok"]
+    assert worker_out["mesh_flat_counters_zero_ok"]
+
+
 def test_dist_gumbel_topl_exact(worker_out):
     assert worker_out["dist_gumbel_topl_ok"]
 

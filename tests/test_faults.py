@@ -139,6 +139,38 @@ def test_rejection_envelope_corruption_replays_bitwise():
                                        recovered=hurt.recovered)
 
 
+# REPRO_FAULTS=1 widens the torn-coarse-aggregate matrix to every injectable
+# rejection round; tier-1 keeps one representative round.
+_SUPER_FAULT_ROUNDS = ((2, 3, 4, 5, 6)
+                       if os.environ.get("REPRO_FAULTS", "") == "1"
+                       else (3,))
+
+
+@pytest.mark.parametrize("rd", _SUPER_FAULT_ROUNDS)
+def test_rejection_stale_super_heals_via_prefix_refold(rd):
+    """A torn coarse aggregate (every tile partial backing the LAST super
+    NaN'd) trips the same fp-validity guard as neg_envelope; the heal
+    refolds the refreshed prefix, and because the super-tile proposal state
+    is DERIVED from the healed partials each round, the coarse-to-fine draw
+    — indices, proposal/accept counters, AND the tightened/supers counters —
+    replays bitwise against a never-corrupted run."""
+    pts = _coherent(n=8192)
+    eng = ClusterEngine("fused", validate="raise")
+    clean = eng.seed(jax.random.PRNGKey(2), pts, 8, sampler="rejection",
+                     proposal="hier")
+    hurt = eng.seed(jax.random.PRNGKey(2), pts, 8, sampler="rejection",
+                    proposal="hier",
+                    _fault=FaultSpec("stale_super", round=rd))
+    _same_seed(clean, hurt)
+    for name in ("proposals", "accepts", "tightened", "supers"):
+        np.testing.assert_array_equal(np.asarray(getattr(clean, name)),
+                                      np.asarray(getattr(hurt, name)))
+    rec = np.asarray(hurt.recovered)
+    assert rec[rd] == 1 and rec.sum() == 1
+    telemetry.check_hier_counters(hurt.tightened, hurt.supers,
+                                  hurt.proposals, 8, hier=True)
+
+
 def test_mesh_guarded_fit_recovers_bitwise():
     """The health predicate is psum-replicated: every shard takes the same
     heal branch, and the mesh fit recovers bit-identically too."""

@@ -494,3 +494,73 @@ def test_flash_attention_decode_offset():
     want = ref.flash_attention_ref(q, k, v, causal=True, q_offset=64)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# tile_cap: the movement-tightening kernel (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+TILE_CAP_SHAPES = [  # (n_tiles, d, m) — tiny, ragged-ish, multi-pending
+    (1, 2, 1),
+    (4, 2, 1),
+    (16, 8, 4),
+    (7, 3, 8),
+    (33, 16, 2),
+]
+
+
+@pytest.mark.parametrize("n_tiles,d,m", TILE_CAP_SHAPES)
+def test_tile_cap_matches_ref(n_tiles, d, m):
+    from repro.kernels.kmeans_distance import tile_cap_pallas
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    centers = jax.random.normal(keys[0], (n_tiles, d), jnp.float32)
+    radii = jnp.abs(jax.random.normal(keys[1], (n_tiles,), jnp.float32))
+    pending = jax.random.normal(keys[2], (m, d), jnp.float32)
+    for count in {0, 1, m}:
+        cnt = jnp.asarray(count, jnp.int32)
+        got = tile_cap_pallas(centers, radii, pending, cnt, interpret=True)
+        want = ref.tile_cap_ref(centers, radii, pending, cnt)
+        if count == 0:
+            assert np.all(np.isinf(np.asarray(got))), \
+                "count==0 must return +inf everywhere (no tightening)"
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_tile_cap_dominates_rows():
+    """The Raff bound is an UPPER bound: cap_t >= d(x_i, pending_j)^2 for
+    every row i inside tile t's ball and every pending j < count — the
+    property that keeps the tightened envelope valid (and the draw exact)."""
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    n, d, bn, m = 512, 4, 128, 3
+    pts = jax.random.normal(k1, (n, d), jnp.float32) * 3
+    pending = jax.random.normal(k2, (m, d), jnp.float32)
+    n_tiles = n // bn
+    xt = pts.reshape(n_tiles, bn, d)
+    centers = xt.mean(axis=1)
+    radii = jnp.sqrt(jnp.max(jnp.sum((xt - centers[:, None, :]) ** 2, axis=-1),
+                             axis=1))
+    cap = ref.tile_cap_ref(centers, radii, pending, jnp.asarray(m, jnp.int32))
+    d2 = jnp.min(jnp.sum((pts[:, None, :] - pending[None, :, :]) ** 2,
+                         axis=-1), axis=1).reshape(n_tiles, bn)
+    slack = np.asarray(cap)[:, None] - np.asarray(d2)
+    assert np.all(slack >= -1e-3), f"cap violated by {slack.min()}"
+
+
+def test_tile_cap_op_vmaps_via_ref():
+    """ops.tile_cap under vmap (the batched seeding path) routes to the ref
+    twin and matches a per-problem loop of the kernel."""
+    keys = jax.random.split(jax.random.PRNGKey(4), 3)
+    B, n_tiles, d, m = 3, 8, 4, 2
+    centers = jax.random.normal(keys[0], (B, n_tiles, d), jnp.float32)
+    radii = jnp.abs(jax.random.normal(keys[1], (B, n_tiles), jnp.float32))
+    pending = jax.random.normal(keys[2], (B, m, d), jnp.float32)
+    counts = jnp.asarray([0, 1, 2], jnp.int32)
+    got = jax.vmap(lambda c, r, p, ct: ops.tile_cap(c, r, p, ct,
+                                                    interpret=True))(
+        centers, radii, pending, counts)
+    for b in range(B):
+        want = ref.tile_cap_ref(centers[b], radii[b], pending[b], counts[b])
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)

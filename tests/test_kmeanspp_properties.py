@@ -140,6 +140,59 @@ def test_rejection_matches_tiled_seed_distribution_chi_square():
     assert stat < 60.0, (stat, c_t, c_r)
 
 
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 96), block_n=st.sampled_from([4, 8, 16]),
+       tps=st.sampled_from([1, 2, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_property_super_coreset_draw_is_unbiased(n, block_n, tps, seed):
+    """ISSUE 9 acceptance: the per-super coreset draw (super-tile weights =
+    sums of their tiles' partials, i.e. gathered CDF prefixes) keeps the
+    three-level super -> tile -> row draw UNBIASED — for every uniform it
+    telescopes to the exact flat inverse-CDF index, so the induced index
+    probabilities are w / sum(w) regardless of how the super level carves
+    the tiles (tps can exceed n_tiles, divide it, or straddle a ragged
+    tail). Zero-mass tiles and supers included."""
+    rng = np.random.default_rng(seed)
+    w = np.abs(rng.normal(size=n)).astype(np.float32)
+    w[rng.random(size=n) < 0.25] = 0.0
+    if w.sum() == 0:
+        w[0] = 1.0
+    w = jnp.asarray(w)
+    partials = sampling.tile_partials(w, block_n)
+    tcdf = jnp.cumsum(partials)
+    scdf = sampling.super_cdf(tcdf, tps)
+    M = 2048
+    us = jnp.asarray((np.arange(M) + 0.5) / M, jnp.float32)
+    flat = np.asarray(jax.vmap(
+        lambda u: sampling.tiled_index_from_uniform(
+            u, w, partials, block_n=block_n))(us))
+    hier = np.asarray(jax.vmap(
+        lambda u: sampling.hier_index_from_uniform(
+            u, w, partials, tcdf, scdf, block_n=block_n, tps=tps))(us))
+    np.testing.assert_array_equal(flat, hier)
+    probs = np.bincount(hier, minlength=n) / M
+    want = np.asarray(w) / float(jnp.sum(w))
+    n_tiles = partials.shape[0]
+    np.testing.assert_allclose(probs, want, atol=3.0 / M * n_tiles + 1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(backend=st.sampled_from(["reference", "fused", "pallas"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_hier_proposal_pins_tiled_at_rb1(backend, seed):
+    """ISSUE 9 acceptance: proposal='hier' with refresh_block=1 consumes the
+    SAME uniform per round as proposal='flat' (no pending centroids at
+    proposal time -> every cap is +inf -> the coarse draw telescopes), so
+    both pin sampler='tiled' bitwise across every local backend."""
+    pts = jax.random.normal(jax.random.PRNGKey(seed), (192, 4))
+    key = jax.random.PRNGKey(seed ^ 0xC0FE)
+    eng = ClusterEngine(backend)
+    a = eng.seed(key, pts, 7, sampler="tiled")
+    b = eng.seed(key, pts, 7, sampler="rejection", refresh_block=1,
+                 proposal="hier")
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    assert np.asarray(b.accepts)[1:].all(), "fresh envelope must accept"
+
+
 @settings(max_examples=20, deadline=None)
 @given(n=st.integers(8, 128), d=st.integers(1, 8), k=st.integers(1, 8),
        seed=st.integers(0, 2**31 - 1))

@@ -155,3 +155,158 @@ def test_rejection_matches_tiled_seed_distribution_chi_square():
     # df = 15; P(chi2 > 60) ~ 2e-7 — a biased fallback or a broken envelope
     # blows two orders of magnitude past this, fp wiggle cannot reach it
     assert stat < 60.0, (stat, c_t, c_r)
+
+
+# ---------------------------------------------------------------------------
+# coarse-to-fine proposal (ISSUE 9): pins, counters, max_attempts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["reference", "fused", "pallas"])
+def test_hier_and_flat_pin_tiled_at_refresh_block_1(backend):
+    """proposal='hier' at refresh_block=1 is bitwise sampler='tiled' AND
+    bitwise proposal='flat': no pending centroids at proposal time means
+    every per-tile cap is +inf and the coarse draw telescopes to the flat
+    one through the identical uniform."""
+    pts = _pts(n=256, seed=13)
+    key = jax.random.key(14)
+    eng = ClusterEngine(backend)
+    t = eng.seed(key, pts, 7, sampler="tiled")
+    h = eng.seed(key, pts, 7, sampler="rejection", refresh_block=1,
+                 proposal="hier")
+    f = eng.seed(key, pts, 7, sampler="rejection", refresh_block=1,
+                 proposal="flat")
+    np.testing.assert_array_equal(np.asarray(t.indices), np.asarray(h.indices))
+    np.testing.assert_array_equal(np.asarray(t.indices), np.asarray(f.indices))
+
+
+def test_hier_weighted_pin_and_validity():
+    """Weighted coarse draw (the Capó per-super coreset weights) keeps the
+    refresh_block=1 pin and draws valid, distinct seeds on stale envelopes."""
+    pts = _pts(n=256, seed=15)
+    w = jax.random.uniform(jax.random.key(16), (256,)) + 0.1
+    key = jax.random.key(17)
+    eng = ClusterEngine("fused")
+    t = eng.seed(key, pts, 6, weights=w, sampler="tiled")
+    h1 = eng.seed(key, pts, 6, weights=w, sampler="rejection",
+                  refresh_block=1, proposal="hier")
+    np.testing.assert_array_equal(np.asarray(t.indices),
+                                  np.asarray(h1.indices))
+    h8 = eng.seed(key, pts, 6, weights=w, sampler="rejection",
+                  refresh_block=8, proposal="hier")
+    idx = np.asarray(h8.indices)
+    assert ((0 <= idx) & (idx < 256)).all() and len(set(idx.tolist())) == 6
+
+
+def test_hier_batched_pins_tiled_per_problem():
+    B = 4
+    pts = jax.random.normal(jax.random.key(18), (B, 128, 3), jnp.float32)
+    keys = jax.random.split(jax.random.key(19), B)
+    eng = ClusterEngine("fused")
+    t = eng.seed_batched(keys, pts, 5, sampler="tiled")
+    h = eng.seed_batched(keys, pts, 5, sampler="rejection", refresh_block=1,
+                         proposal="hier")
+    np.testing.assert_array_equal(np.asarray(t.indices), np.asarray(h.indices))
+
+
+def test_hier_counters_and_flat_counters():
+    """proposal='hier' rounds visit one super window per attempt (+1 on the
+    exact fallback) and may tighten tiles once centroids are pending;
+    proposal='flat' reports both counters identically zero."""
+    pts = _pts(n=2048, d=4, seed=20)
+    eng = ClusterEngine("fused")
+    h = eng.seed(jax.random.key(21), pts, 16, sampler="rejection",
+                 refresh_block=8, proposal="hier")
+    telemetry.check_rejection_counters(h.proposals, h.accepts, 16,
+                                       max_attempts=_REJECT_ATTEMPTS)
+    telemetry.check_hier_counters(h.tightened, h.supers, h.proposals, 16,
+                                  hier=True)
+    f = eng.seed(jax.random.key(21), pts, 16, sampler="rejection",
+                 refresh_block=8, proposal="flat")
+    telemetry.check_hier_counters(f.tightened, f.supers, f.proposals, 16,
+                                  hier=False)
+
+
+@pytest.mark.parametrize("backend,B,bins,lim",
+                         [("reference", 200, 8, 40.0),
+                          ("fused", 400, 16, 60.0),
+                          ("pallas", 150, 8, 40.0)])
+def test_hier_rb8_matches_tiled_distribution_chi_square(backend, B, bins,
+                                                        lim):
+    """Marginal exactness of the coarse-to-fine draw ON A STALE, TIGHTENED
+    envelope: the 3rd seed (two centroids pending — caps active) under
+    proposal='hier', refresh_block=8 matches sampler='tiled' across B
+    independent keys (two-sample chi-square, both samplers exact)."""
+    n, d, k = 64, 2, 4
+    pts = jax.random.normal(jax.random.key(22), (n, d), jnp.float32)
+    batch = jnp.broadcast_to(pts, (B, n, d))
+    keys = jax.random.split(jax.random.key(23), B)
+    eng = ClusterEngine(backend)
+    t = np.asarray(eng.seed_batched(keys, batch, k, sampler="tiled").indices)
+    h = np.asarray(eng.seed_batched(keys, batch, k, sampler="rejection",
+                                    refresh_block=8,
+                                    proposal="hier").indices)
+    c_t = np.bincount(t[:, 2] // (n // bins), minlength=bins).astype(float)
+    c_h = np.bincount(h[:, 2] // (n // bins), minlength=bins).astype(float)
+    tot = c_t + c_h
+    stat = float(np.sum(np.where(tot > 0,
+                                 (c_t - c_h) ** 2 / np.maximum(tot, 1.0),
+                                 0.0)))
+    assert stat < lim, (stat, c_t, c_h)
+
+
+def test_hier_rb8_matches_flat_distribution_chi_square():
+    """hier vs flat at the SAME refresh_block: two exact samplers over the
+    same target, different proposal shapes — marginals must agree."""
+    n, d, k, B, bins = 64, 2, 4, 400, 16
+    pts = jax.random.normal(jax.random.key(24), (n, d), jnp.float32)
+    batch = jnp.broadcast_to(pts, (B, n, d))
+    keys = jax.random.split(jax.random.key(25), B)
+    eng = ClusterEngine("fused")
+    f = np.asarray(eng.seed_batched(keys, batch, k, sampler="rejection",
+                                    refresh_block=8,
+                                    proposal="flat").indices)
+    h = np.asarray(eng.seed_batched(keys, batch, k, sampler="rejection",
+                                    refresh_block=8,
+                                    proposal="hier").indices)
+    c_f = np.bincount(f[:, 2] // (n // bins), minlength=bins).astype(float)
+    c_h = np.bincount(h[:, 2] // (n // bins), minlength=bins).astype(float)
+    tot = c_f + c_h
+    stat = float(np.sum(np.where(tot > 0,
+                                 (c_f - c_h) ** 2 / np.maximum(tot, 1.0),
+                                 0.0)))
+    assert stat < 60.0, (stat, c_f, c_h)
+
+
+def test_max_attempts_parameter_truncates_and_reports():
+    """Satellite: the 8-attempt truncation is now a parameter. Duplicate
+    points reject every proposal, so every later round must report exactly
+    max_attempts proposals before the exact fallback — for non-default
+    depths too — and the telemetry invariant chain follows the parameter."""
+    pts = jnp.ones((64, 3), jnp.float32) * 2.5
+    eng = ClusterEngine("fused")
+    for ma in (3, 8):
+        res = eng.seed(jax.random.key(26), pts, 5, sampler="rejection",
+                       refresh_block=4, max_attempts=ma)
+        assert (np.asarray(res.proposals)[1:] == ma).all()
+        assert (np.asarray(res.accepts)[1:] == 0).all()
+        telemetry.check_rejection_counters(res.proposals, res.accepts, 5,
+                                           max_attempts=ma)
+        telemetry.check_hier_counters(res.tightened, res.supers,
+                                      res.proposals, 5, hier=True)
+        idx = np.asarray(res.indices)
+        assert ((0 <= idx) & (idx < 64)).all()
+
+
+def test_max_attempts_does_not_change_healthy_draws():
+    """On well-separated data a raised/lowered depth only matters for rounds
+    that WOULD exhaust it; with refresh_block=1 every round accepts at
+    attempt 1, so any max_attempts >= 1 is bitwise identical."""
+    pts = _pts(n=256, seed=27)
+    key = jax.random.key(28)
+    eng = ClusterEngine("fused")
+    a = eng.seed(key, pts, 7, sampler="rejection", refresh_block=1,
+                 max_attempts=1)
+    b = eng.seed(key, pts, 7, sampler="rejection", refresh_block=1,
+                 max_attempts=8)
+    np.testing.assert_array_equal(np.asarray(a.indices), np.asarray(b.indices))

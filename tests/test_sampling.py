@@ -186,3 +186,140 @@ def test_rejection_sample_valid_true_is_bitwise_the_unguarded_path():
         k, prop, pq, max_attempts=8, valid=v))(key, jnp.asarray(True))
     for b, g in zip(base, jitted):
         np.testing.assert_array_equal(np.asarray(b), np.asarray(g))
+
+
+# ---------------------------------------------------------------------------
+# coarse-to-fine (super-tile) draw: bitwise pin, tightened exactness,
+# super-level degenerate guard (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,block_n,tps", [(64, 8, 2), (100, 16, 4),
+                                           (256, 16, 4), (37, 8, 1),
+                                           (13, 4, 8)])
+def test_hier_index_is_bitwise_tiled_on_u_grid(n, block_n, tps):
+    """Untightened, the super -> tile -> row draw telescopes BITWISE to the
+    flat two-level draw for every u: the gathered super boundaries make the
+    coarse search land on exactly t_flat // tps, and the within-super search
+    over the flat tcdf window recovers t_flat itself (tps > n_tiles
+    exercises the degenerate one-super case)."""
+    w = _weights(n, seed=n + 1)
+    partials = sampling.tile_partials(w, block_n)
+    tcdf = jnp.cumsum(partials)
+    scdf = sampling.super_cdf(tcdf, tps)
+    M = 2048
+    us = jnp.asarray((np.arange(M) + 0.5) / M, jnp.float32)
+    flat = jax.vmap(lambda u: sampling.tiled_index_from_uniform(
+        u, w, partials, block_n=block_n))(us)
+    hier = jax.vmap(lambda u: sampling.hier_index_from_uniform(
+        u, w, partials, tcdf, scdf, block_n=block_n, tps=tps))(us)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(hier))
+
+
+def test_categorical_hier_bitwise_categorical_tiled():
+    """Keyed form of the pin: same uniform derivation + same degenerate
+    guard, so healthy draws agree bitwise across keys."""
+    w = _weights(96, seed=5)
+    partials = sampling.tile_partials(w, 16)
+    tps = 2
+    for s in range(50):
+        key = jax.random.PRNGKey(s)
+        a = int(sampling.categorical_tiled(key, w, partials, block_n=16))
+        b = int(sampling.categorical_hier(key, w, partials, block_n=16,
+                                          tps=tps))
+        assert a == b, (s, a, b)
+
+
+def test_hier_capped_draw_matches_capped_distribution():
+    """With caps active the draw must be EXACTLY proportional to the capped
+    per-row envelope q~_i = min(w_i, cap_t) * ph_t / sum_t(min(w, cap)) —
+    the distribution the accept test prices (see engine seed_points pq_fn).
+    Enumerate a dense u-grid and compare induced mass to the analytic q~."""
+    n, bn, tps = 64, 8, 2
+    w = _weights(n, seed=77, with_zeros=False) + 0.1
+    n_tiles = n // bn
+    partials = sampling.tile_partials(w, bn)
+    rng = np.random.default_rng(7)
+    cap_np = rng.uniform(0.2, 2.0, size=n_tiles).astype(np.float32)
+    cap_np[::3] = np.inf  # a mix of tightened and untouched tiles
+    cap = jnp.asarray(cap_np)
+    capw = cap * jnp.asarray(bn, jnp.float32)
+    ph = jnp.where(capw < partials, capw, partials)
+    tight = ph < partials
+    tcdf = jnp.cumsum(ph)
+    scdf = sampling.super_cdf(tcdf, tps)
+    M = 1 << 15
+    us = jnp.asarray((np.arange(M) + 0.5) / M, jnp.float32)
+    idx = np.asarray(jax.vmap(lambda u: sampling.hier_index_from_uniform(
+        u, w, ph, tcdf, scdf, block_n=bn, tps=tps, cap=cap,
+        tight=tight))(us))
+    # analytic proposal mass: tile drawn ∝ ph_t, row within ∝ min(w, cap_t)
+    wn = np.asarray(w).reshape(n_tiles, bn)
+    cw = np.minimum(wn, cap_np[:, None])
+    q = np.where(np.asarray(tight)[:, None],
+                 cw * (np.asarray(ph) / cw.sum(axis=1))[:, None],
+                 wn).reshape(n)
+    probs = np.bincount(idx, minlength=n) / M
+    np.testing.assert_allclose(probs, q / q.sum(), atol=3e-3)
+
+
+def test_hier_super_guard_all_zero_falls_back_to_uniform():
+    """Satellite regression: an all-zero coarse mass must spread the draw
+    over ALL supers/tiles/rows instead of pinning to one clipped corner —
+    the tile-level underflow discipline lifted one level."""
+    n, bn, tps = 32, 4, 2
+    w = jnp.zeros((n,), jnp.float32)
+    partials = jnp.zeros((n // bn,), jnp.float32)
+    tcdf = jnp.cumsum(partials)
+    scdf = sampling.super_cdf(tcdf, tps)
+    idx = [int(sampling.hier_index_from_uniform(
+        jnp.float32(u), w, partials, tcdf, scdf, block_n=bn, tps=tps))
+        for u in np.linspace(0.0, 0.999, 64)]
+    assert all(0 <= i < n for i in idx)
+    # telescoped uniform: every super (and most rows) visited, no pinning
+    assert len(set(i // (bn * tps) for i in idx)) == n // (bn * tps), idx
+    assert len(set(idx)) > n // 2, idx
+
+
+def test_hier_super_guard_nan_falls_back_to_uniform():
+    n, bn, tps = 32, 4, 2
+    w = _weights(n, seed=11)
+    partials = jnp.full((n // bn,), jnp.nan, jnp.float32)
+    tcdf = jnp.cumsum(partials)
+    scdf = sampling.super_cdf(tcdf, tps)
+    idx = [int(sampling.hier_index_from_uniform(
+        jnp.float32(u), w, partials, tcdf, scdf, block_n=bn, tps=tps))
+        for u in np.linspace(0.0, 0.999, 64)]
+    assert all(0 <= i < n for i in idx)
+    assert len(set(idx)) > n // 2, idx
+
+
+def test_hier_super_guard_healthy_path_bitwise_unchanged():
+    """The guard's fallback index is computed unconditionally but selected
+    only on degenerate mass: healthy draws are bitwise the pre-guard
+    derivation (same discipline as the tile-level guard pin)."""
+    n, bn, tps = 64, 8, 2
+    w = _weights(n, seed=21, with_zeros=False)
+    partials = sampling.tile_partials(w, bn)
+    tcdf = jnp.cumsum(partials)
+    scdf = sampling.super_cdf(tcdf, tps)
+    for u in np.linspace(0.0, 0.999, 50):
+        got = int(sampling.hier_index_from_uniform(
+            jnp.float32(u), w, partials, tcdf, scdf, block_n=bn, tps=tps))
+        want = int(sampling.tiled_index_from_uniform(
+            jnp.float32(u), w, partials, block_n=bn))
+        assert got == want, (u, got, want)
+
+
+def test_super_cdf_boundaries_are_gathered_prefixes():
+    partials = _weights(16, seed=30, with_zeros=False)
+    tcdf = jnp.cumsum(partials)
+    for tps in (1, 2, 4, 8, 16, 32):
+        scdf = sampling.super_cdf(tcdf, tps)
+        n_super = -(-16 // tps)
+        assert scdf.shape == (n_super,)
+        # last boundary is bitwise the flat total (gathered, not re-summed)
+        assert float(scdf[-1]) == float(tcdf[-1])
+        for s in range(n_super):
+            end = min((s + 1) * tps - 1, 15)
+            assert float(scdf[s]) == float(tcdf[end])
