@@ -95,7 +95,7 @@ def run_cache(rows: list, cache: TuneCache):
             "key": key, "source": rec.source,
             "tuned_block_n": rec.block_n, "tuned_tps": rec.tps,
             "sampler": rec.sampler, "order": str(rec.order),
-            "precision": rec.precision,
+            "precision": rec.precision, "nprobe": rec.nprobe,
             "persisted": str(persisted) if persisted else "",
         })
 
@@ -109,7 +109,7 @@ def main():
               "default_block_n", "default_tps", "tuned_block_n", "tuned_tps",
               "default_bytes", "tuned_bytes", "improvement",
               "model_fit_bytes", "hlo_fit_bytes", "predicted_gap",
-              "key", "source", "sampler", "order", "precision",
+              "key", "source", "sampler", "order", "precision", "nprobe",
               "persisted", "time_ms"]
     emit(rows, header)
     write_json("tune", {

@@ -55,7 +55,17 @@ REQUIRED: dict[str, dict[str, set]] = {
                              "model_fit_bytes", "hlo_fit_bytes",
                              "predicted_gap", "source", "time_ms"},
         "tune_cache": {"key", "source", "tuned_block_n", "tuned_tps",
-                       "sampler", "order", "precision"},
+                       "sampler", "order", "precision", "nprobe"},
+    },
+    "ivf": {
+        "ivf_scan": {"layout", "nlist", "nprobe", "probed_tiles_mean",
+                     "gate_skip_rate", "bytes_per_query",
+                     "bytes_per_query_nogate", "bytes_full", "bytes_ratio",
+                     "recall_at10", "recall_at10_nogate", "time_ms",
+                     "seconds"},
+        "ivf_adc": {"nlist", "nprobe", "n_sub", "probed_tiles_mean",
+                    "bytes_per_query", "bytes_exact", "bytes_ratio",
+                    "recall_at10", "time_ms", "seconds"},
     },
 }
 

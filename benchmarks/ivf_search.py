@@ -1,0 +1,174 @@
+"""IVF search traffic — bytes-per-query and recall vs nprobe (ISSUE 10).
+
+The serving claim: a label-sorted layout makes query cost scale with
+``nprobe/nlist`` instead of ``n``, and the kth-distance tile gate skips
+additional traffic at ZERO recall change (it is a value-noop — the scan's
+results are bitwise identical with the gate off). This module measures the
+modelled HBM traffic per query under the byte accounting the round/seed
+benchmarks use (counting what the scan actually streams):
+
+  routing          (n_super + nlist) centroid rows + their norms/radii,
+                   per query — the price of EXACT top-nprobe routing.
+  ball summaries   (d+1)*4 bytes per PROBED tile (read even when the gate
+                   then skips the tile — the gate reads the ball to decide).
+  row stream       block_n*(d+1)*4 bytes per SCANNED tile (probed minus
+                   gate-skipped): rows + cached norms. The ADC path streams
+                   block_n*(n_sub + 8) instead (uint8 codes + int32 list id
+                   + fp32 ||x_hat||^2) plus a resident per-query LUT.
+
+Sections:
+
+  ivf_scan  layout in {label, none} x nprobe sweep: probed tiles,
+            gate skip rate, bytes_per_query (and with the gate off),
+            bytes_ratio vs a brute-force scan of all n rows, recall@10
+            both gated and ungated (always equal — the value-noop check
+            rides along in every row), wall clock.
+  ivf_adc   same sweep on the PQ index: ADC bytes vs the exact path at the
+            same nprobe, recall@10 of reconstructed-distance ranking.
+
+Acceptance hooks: bytes_ratio >= 4 at nprobe = nlist/8 on the label
+layout; gate_skip_rate > 0 with recall_at10 == recall_at10_nogate.
+
+Emits BENCH_ivf.json via REPRO_BENCH_OUT; benchmarks/BENCH_ivf.json is the
+checked-in smoke-mode baseline."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SMOKE, emit, sweep, time_ms, write_json
+from repro.data.synthetic import blobs
+from repro.serve.ivf import IvfIndex
+
+# (n, d, nlist, n_queries)
+SHAPES = sweep([
+    (4096, 16, 32, 32),
+    (65536, 32, 64, 64),
+], smoke_take=1)
+
+K = 10
+N_SUB = 4
+
+
+def _nprobes(nlist: int) -> list[int]:
+    return sorted({max(1, nlist // f) for f in (1, 2, 4, 8)}, reverse=True)
+
+
+def _recall(found: np.ndarray, truth: np.ndarray) -> float:
+    hits = sum(len(set(found[q]) & set(truth[q])) for q in range(len(truth)))
+    return hits / truth.size
+
+
+def _scan_bytes(idx: IvfIndex, res, *, row_unit: float,
+                resident: float = 0.0) -> float:
+    """Modelled per-query HBM bytes for one search: routing + probed-tile
+    ball summaries + the row stream over tiles the gate let through."""
+    d = idx.points.shape[1]
+    n_sup = idx.super_centers.shape[0]
+    route = (n_sup * (d + 2) + idx.nlist * (d + 1)) * 4.0
+    probed = float(np.mean(np.asarray(res.probed_tiles)))
+    scanned = probed - float(np.mean(np.asarray(res.gate_skipped)))
+    balls = probed * (d + 1) * 4.0
+    return route + resident + balls + scanned * idx.block_n * row_unit
+
+
+def run_scan(rows: list) -> None:
+    for n, d, nlist, n_q in SHAPES:
+        pts, _ = blobs(n, d, nlist, seed=0)
+        queries = jnp.asarray(blobs(n_q, d, nlist, seed=1)[0])
+        indexes = {
+            "label": IvfIndex.build(jnp.asarray(pts), nlist, layout="label"),
+            "none": IvfIndex.build(jnp.asarray(pts), nlist, layout="none"),
+        }
+        truth = np.asarray(indexes["label"].exhaustive(queries, K)[0])
+        bytes_full = n * (d + 1) * 4.0
+        for layout, idx in indexes.items():
+            for nprobe in _nprobes(nlist):
+                t0 = time.time()
+                res = idx.search(queries, K, nprobe=nprobe, gate=True)
+                off = idx.search(queries, K, nprobe=nprobe, gate=False)
+                unit = (d + 1) * 4.0
+                bq = _scan_bytes(idx, res, row_unit=unit)
+                bq_off = _scan_bytes(idx, off, row_unit=unit)
+                probed = float(np.mean(np.asarray(res.probed_tiles)))
+                skip = (float(np.mean(np.asarray(res.gate_skipped)))
+                        / max(probed, 1.0))
+                ms = time_ms(
+                    lambda: idx.search(queries, K, nprobe=nprobe,
+                                       backend="fused"))
+                rows.append({
+                    "bench": "ivf_scan", "layout": layout,
+                    "n": n, "d": d, "nlist": nlist, "nprobe": nprobe,
+                    "block_n": idx.block_n, "n_tiles": idx.n_tiles,
+                    "probed_tiles_mean": round(probed, 2),
+                    "gate_skip_rate": round(skip, 4),
+                    "bytes_per_query": round(bq),
+                    "bytes_per_query_nogate": round(bq_off),
+                    "bytes_full": round(bytes_full),
+                    "bytes_ratio": round(bytes_full / max(bq, 1.0), 2),
+                    "recall_at10": round(
+                        _recall(np.asarray(res.indices), truth), 4),
+                    "recall_at10_nogate": round(
+                        _recall(np.asarray(off.indices), truth), 4),
+                    "time_ms": round(ms, 3),
+                    "seconds": round(time.time() - t0, 2),
+                })
+
+
+def run_adc(rows: list) -> None:
+    for n, d, nlist, n_q in SHAPES:
+        pts, _ = blobs(n, d, nlist, seed=0)
+        queries = jnp.asarray(blobs(n_q, d, nlist, seed=1)[0])
+        idx = IvfIndex.build(jnp.asarray(pts), nlist, pq_nsub=N_SUB)
+        truth = np.asarray(idx.exhaustive(queries, K)[0])
+        n_codes = idx.pq.codebook.centroids.shape[1]
+        resident = (N_SUB * n_codes + nlist) * 4.0     # per-query LUT+qdots
+        for nprobe in _nprobes(nlist):
+            t0 = time.time()
+            res = idx.search(queries, K, nprobe=nprobe, mode="adc")
+            exact = idx.search(queries, K, nprobe=nprobe, mode="exact")
+            adc_unit = N_SUB * 1.0 + 8.0               # codes + label + u
+            bq = _scan_bytes(idx, res, row_unit=adc_unit, resident=resident)
+            bq_exact = _scan_bytes(idx, exact, row_unit=(d + 1) * 4.0)
+            ms = time_ms(
+                lambda: idx.search(queries, K, nprobe=nprobe, mode="adc",
+                                   backend="fused"))
+            rows.append({
+                "bench": "ivf_adc", "layout": "label",
+                "n": n, "d": d, "nlist": nlist, "nprobe": nprobe,
+                "n_sub": N_SUB,
+                "probed_tiles_mean": round(
+                    float(np.mean(np.asarray(res.probed_tiles))), 2),
+                "bytes_per_query": round(bq),
+                "bytes_exact": round(bq_exact),
+                "bytes_ratio": round(bq_exact / max(bq, 1.0), 2),
+                "recall_at10": round(
+                    _recall(np.asarray(res.indices), truth), 4),
+                "time_ms": round(ms, 3),
+                "seconds": round(time.time() - t0, 2),
+            })
+
+
+def main():
+    rows: list = []
+    run_scan(rows)
+    run_adc(rows)
+    header = ["bench", "layout", "n", "d", "nlist", "nprobe", "n_sub",
+              "block_n", "n_tiles", "probed_tiles_mean", "gate_skip_rate",
+              "bytes_per_query", "bytes_per_query_nogate", "bytes_exact",
+              "bytes_full", "bytes_ratio", "recall_at10",
+              "recall_at10_nogate", "time_ms", "seconds"]
+    emit(rows, header)
+    write_json("ivf", {
+        "meta": {"smoke": SMOKE, "k": K, "n_sub": N_SUB,
+                 "shapes": [list(s) for s in SHAPES],
+                 "jax_backend": jax.default_backend()},
+        "rows": rows,
+    })
+
+
+if __name__ == "__main__":
+    main()

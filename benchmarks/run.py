@@ -9,8 +9,8 @@ import sys
 import time
 
 from benchmarks import (autotune, dist_scaling, fig1_global, fig2_constant,
-                        fig3_texture, minibatch, quality_parity, roofline,
-                        round_traffic, seed_sampling)
+                        fig3_texture, ivf_search, minibatch, quality_parity,
+                        roofline, round_traffic, seed_sampling)
 
 MODULES = {
     "fig1": fig1_global,
@@ -23,6 +23,7 @@ MODULES = {
     "seed": seed_sampling,
     "round": round_traffic,
     "tune": autotune,
+    "ivf": ivf_search,
 }
 
 

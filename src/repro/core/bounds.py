@@ -460,6 +460,31 @@ def decay_gap(gap: jax.Array, active: jax.Array, fresh_gap: jax.Array,
     return jnp.where(active, fresh_gap, gap - delta_max)
 
 
+def ivf_gate_skip(dc: jax.Array, radius: jax.Array, center_norm: jax.Array,
+                  q_norm: jax.Array, tau: jax.Array) -> jax.Array:
+    """The IVF scan's per-tile kth-distance gate: True when tile t provably
+    cannot beat the carried kth-best distance ``tau``.
+
+    ``dc = d(q, center_t)``: by the triangle inequality every row x of the
+    tile has ``d(q, x) >= dc - r_t``, so when ``(max(dc - r_t, 0))^2 >= tau``
+    no candidate in the tile can enter the top-k. The fp32 slack mirrors
+    :func:`seed_gate` — the scan evaluates candidate d2 in the matmul form,
+    whose cancellation error is ABSOLUTE in the operand magnitude
+    ``(||center|| + r + ||q||)^2`` — so a tile is only skipped when the
+    kernel's OWN fp32 d2 values provably all exceed ``tau`` STRICTLY.
+    Strictness matters for the bitwise value-noop: the blocked top-k merge
+    orders by ``(d2, row)`` lexicographically, so a skipped candidate with
+    ``d2 == tau`` but a smaller row id could otherwise displace the
+    incumbent kth entry. With the positive margin, skipping implies
+    ``d2 > tau`` for every row — gated and ungated scans return bitwise
+    identical top-k (tested). ``tau = +inf`` (top-k not yet full) never
+    skips. Shared verbatim by the Pallas scan kernels and the pure-jnp
+    model."""
+    lo = jnp.maximum(dc - radius, 0.0)
+    margin = _ABS * (center_norm + radius + jnp.sqrt(q_norm)) ** 2
+    return lo * lo >= tau * (1.0 + _REL) + margin
+
+
 def compact_ids(active: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Compaction for the scalar-prefetched index map: returns
     ``(ids_clamped (n_tiles,) int32, n_active () int32)``.

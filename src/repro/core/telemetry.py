@@ -57,6 +57,7 @@ __all__ = [
     "check_hier_counters",
     "check_converged_zeros",
     "check_recovered",
+    "check_ivf_counters",
 ]
 
 
@@ -135,6 +136,32 @@ def check_hier_counters(tightened, supers, proposals, k: int, *,
     if n_tiles is not None:
         assert np.all(t <= int(n_tiles)), \
             f"tightened exceeds the tile count {n_tiles}: {t}"
+
+
+def check_ivf_counters(probed_lists, probed_tiles, gate_skipped, *,
+                       n_queries: int, nlist: int, n_tiles: int) -> None:
+    """Assert the IVF search counter relations on a
+    :class:`~repro.serve.ivf.SearchResult` (same per-slot discipline as the
+    round counters, one slot per QUERY instead of per round):
+
+    * ``probed_lists[q] <= nlist`` — routing never selects more inverted
+      lists than exist;
+    * ``probed_tiles[q] <= n_tiles`` and ``probed_tiles[q] >= 1`` — the
+      compacted tile map visits at least one tile (``compact_ids``' floor)
+      and never more than the layout holds;
+    * ``0 <= gate_skipped[q] <= probed_tiles[q]`` — the kth-distance ball
+      gate can only skip tiles the probe map actually visited.
+    """
+    pl_ = check_counter(probed_lists, n_queries, "probed_lists")
+    pt = check_counter(probed_tiles, n_queries, "probed_tiles")
+    gs = check_counter(gate_skipped, n_queries, "gate_skipped")
+    assert np.all(pl_ <= nlist), \
+        f"probed_lists exceeds nlist={nlist}: {pl_}"
+    assert np.all(pt >= 1), f"probed_tiles below compact_ids' floor: {pt}"
+    assert np.all(pt <= n_tiles), \
+        f"probed_tiles exceeds n_tiles={n_tiles}: {pt}"
+    assert np.all(gs <= pt), \
+        f"gate skipped more tiles than were probed: {gs} vs {pt}"
 
 
 def check_recovered(arr, length: int, *, expect=None) -> np.ndarray:

@@ -1,0 +1,48 @@
+"""Blocked lexicographic top-k: THE merge the IVF scan carries across tiles.
+
+A streaming top-k over tile-blocked candidates is only bitwise equal to a
+global top-k when the per-merge order is a strict TOTAL order — plain
+``lax.top_k`` on distances leaves ties ordered by visit order, which differs
+between a brute-force pass and a tile-blocked scan. Every merge here sorts
+by the lexicographic key ``(value, index)`` (``jax.lax.sort`` with
+``num_keys=2``): indices are unique, so the order is total, every merge is
+associative over candidate batches, and the scan's carried top-k equals the
+global sort's first k rows bitwise no matter how the candidates were
+blocked — the exactness anchor ``serve.ivf`` pins at ``nprobe == nlist``.
+
+Sentinels: empty slots hold ``(+inf, INT32_MAX)``, which lexicographically
+trails every real candidate (a finite d2 beats +inf; a real index beats the
+sentinel on a +inf tie), so partially-filled merges need no masking. Shared
+verbatim by the Pallas scan kernels, their pure-jnp twins, and the
+brute-force oracle, so all three tie-break identically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IDX_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def init_topk(k: int) -> tuple[jax.Array, jax.Array]:
+    """Empty carried top-k: (+inf values, INT32_MAX indices)."""
+    return (jnp.full((k,), jnp.inf, jnp.float32),
+            jnp.full((k,), IDX_SENTINEL, jnp.int32))
+
+
+def lex_topk(vals: jax.Array, idxs: jax.Array,
+             k: int) -> tuple[jax.Array, jax.Array]:
+    """Smallest k of (vals, idxs) under the lexicographic (value, index)
+    order — ascending sort with num_keys=2, first k rows."""
+    sv, si = jax.lax.sort((vals.astype(jnp.float32), idxs.astype(jnp.int32)),
+                          num_keys=2)
+    return sv[:k], si[:k]
+
+
+def merge_topk(top_vals: jax.Array, top_idxs: jax.Array, cand_vals: jax.Array,
+               cand_idxs: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """One blocked-merge step: carried top-k + a candidate block -> new
+    top-k. Associative over blocks (total order), so any tiling of the
+    candidate stream yields the global :func:`lex_topk` bitwise."""
+    return lex_topk(jnp.concatenate([top_vals, cand_vals]),
+                    jnp.concatenate([top_idxs, cand_idxs]), k)

@@ -73,11 +73,31 @@ def morton_order(points: jax.Array, *,
     return perm, inverse_permutation(perm)
 
 
-def label_sort_order(labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+def label_sort_order(labels: jax.Array, *, nlist: int | None = None,
+                     return_offsets: bool = False):
     """Stable sort by label — the strongest tile coherence when a (coarse)
-    clustering is already known. Returns (perm, inv) int32."""
+    clustering is already known. Returns (perm, inv) int32.
+
+    With ``return_offsets=True`` (requires static ``nlist``, the number of
+    label values) the return grows to ``(perm, inv, starts, counts)``: after
+    applying ``perm``, label ``l``'s rows occupy the contiguous run
+    ``[starts[l], starts[l] + counts[l])`` — the inverted-list boundary
+    offsets IVF build and compaction callers used to recompute with a second
+    sort. Offsets obey ``starts == exclusive-cumsum(counts)`` and
+    ``counts.sum() == n`` (the invariant ``serve.ivf`` revalidates at query
+    time). The historical two-tuple shape is the default, so existing
+    callers are untouched."""
     perm = jnp.argsort(labels, stable=True).astype(jnp.int32)
-    return perm, inverse_permutation(perm)
+    inv = inverse_permutation(perm)
+    if not return_offsets:
+        return perm, inv
+    if nlist is None:
+        raise ValueError("label_sort_order(return_offsets=True) needs a "
+                         "static nlist= (counts are fixed-shape)")
+    counts = jnp.bincount(labels.astype(jnp.int32), length=nlist) \
+        .astype(jnp.int32)
+    starts = (jnp.cumsum(counts) - counts).astype(jnp.int32)
+    return perm, inv, starts, counts
 
 
 def spatial_order(points: jax.Array, *, method: str = "morton",

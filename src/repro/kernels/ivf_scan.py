@@ -1,0 +1,312 @@
+"""Gated cluster-local IVF scan kernels (batched top-k query serving).
+
+A trained k-means model IS an inverted-file index: ``serve.ivf`` routes each
+query to its top-``nprobe`` centroids and scans only those clusters' tiles.
+The two kernels here are the scan: grid ``(Q, n_tiles)`` where the inner
+dimension streams a PER-QUERY compacted probed-tile id list through the
+scalar-prefetch channel — the same trick as ``kmeans_distance``'s gated
+round kernel (`core.bounds.compact_ids`), so tiles outside the probed lists
+are neither fetched nor computed; trailing steps revisit the last probed
+tile (already VMEM-resident) and are compute-gated off by ``pl.when``.
+
+Two scoring paths share the scan skeleton:
+
+* **exact** (`ivf_scan_pallas`) — matmul-form fp32 D^2 against the raw rows
+  (cached ``||x||^2`` streamed like every round kernel);
+* **PQ/ADC** (`ivf_adc_scan_pallas`) — distances to the PQ-RECONSTRUCTED
+  rows ``x̂ = c_list + decode(code)``, assembled without ever
+  materializing ``x̂``: ``‖q − x̂‖² = ‖q‖² − 2(q·c_list + q·r̂) + ‖x̂‖²``
+  where ``q·r̂`` is a per-query inner-product LUT contracted against the
+  uint8 codes via the one-hot-matmul MXU pattern of ``pq_decode``, and
+  ``q·c_list`` reuses the routing dots through a one-hot over the streamed
+  row labels. ``‖x̂‖²`` is a per-row build-time constant.
+
+Layered on top, the per-tile triangle-inequality gate
+(`core.bounds.ivf_gate_skip`): a probed tile whose ball provably cannot
+beat the carried kth-best distance is skipped as a bitwise value-noop (the
+ADC path gates against balls computed over the RECONSTRUCTED rows, so its
+scores — true distances to x̂ — satisfy the same triangle bound). The fp32
+blocked top-k ``(d2, row)``-lexicographic merge (`core.topk.merge_topk`)
+is carried across tiles in VMEM scratch, making the scan bitwise equal to
+a global brute-force top-k at ``nprobe == nlist``.
+
+Raw kernels take ``interpret`` EXPLICITLY — ``kernels.ops`` chooses the
+on-TPU/off-TPU default, as everywhere else.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# the ONE definition of the kth-distance ball gate and of the lexicographic
+# blocked merge — the pure-jnp twins in kernels.ref evaluate the same
+# functions, so kernel and model share a single source of truth
+from repro.core.bounds import ivf_gate_skip as _gate_skip
+from repro.core.topk import IDX_SENTINEL, merge_topk
+
+
+def _tile_ball(q, ctr_ref, rad_ref):
+    """(dc, radius, ||center||, ||q||^2) for the gate, from the streamed
+    (1, d) ball-center block + (1,) radius block."""
+    ctr = ctr_ref[...].astype(jnp.float32)
+    diff = ctr - q
+    dc = jnp.sqrt(jnp.sum(diff * diff))
+    cn = jnp.sqrt(jnp.sum(ctr * ctr))
+    return dc, rad_ref[0], cn
+
+
+def _merge_block(tv_scr, ti_scr, d2, row, n_valid, *, k):
+    """Mask padded rows to the (+inf, INT32_MAX) sentinel and fold the block
+    into the carried top-k scratch."""
+    valid = row < n_valid
+    cv = jnp.where(valid, d2, jnp.inf)
+    ci = jnp.where(valid, row, IDX_SENTINEL)
+    nv, ni = merge_topk(tv_scr[...], ti_scr[...], cv, ci, k)
+    tv_scr[...] = nv
+    ti_scr[...] = ni
+
+
+def _ivf_scan_kernel(ids_ref, nact_ref, nv_ref, q_ref, pts_ref, xn_ref,
+                     ctr_ref, rad_ref, dist_ref, idx_ref, skip_ref,
+                     tv_scr, ti_scr, ns_scr, *, block_n: int, k: int,
+                     gate: bool):
+    """Grid step (qi, i) scores probed tile ``ids[qi, i]`` for query qi;
+    steps past ``n_active[qi]`` are no-ops. Top-k scratch carries across the
+    sequential inner dimension; outputs are written at the final step."""
+    qi = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        tv_scr[...] = jnp.full_like(tv_scr, jnp.inf)
+        ti_scr[...] = jnp.full_like(ti_scr, IDX_SENTINEL)
+        ns_scr[0] = 0
+
+    @pl.when(i < nact_ref[qi])
+    def _visit():
+        t = ids_ref[qi, i]
+        q = q_ref[...].astype(jnp.float32)              # (1, d)
+        qn = jnp.sum(q * q)
+        if gate:
+            dc, r, cn = _tile_ball(q, ctr_ref, rad_ref)
+            skip = _gate_skip(dc, r, cn, qn, tv_scr[k - 1])
+        else:
+            skip = jnp.full((), False)
+        ns_scr[0] += skip.astype(jnp.int32)
+
+        @pl.when(jnp.logical_not(skip))
+        def _score():
+            xn = xn_ref[...].astype(jnp.float32)        # (block_n,)
+            dots = jax.lax.dot_general(
+                pts_ref[...], q.astype(pts_ref.dtype),
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)[:, 0]
+            d2 = jnp.maximum(xn - 2.0 * dots + qn, 0.0)
+            row = t * block_n + jax.lax.broadcasted_iota(
+                jnp.int32, (block_n,), 0)
+            _merge_block(tv_scr, ti_scr, d2, row, nv_ref[0], k=k)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _finalize():
+        dist_ref[0, :] = tv_scr[...]
+        idx_ref[0, :] = ti_scr[...]
+        skip_ref[0] = ns_scr[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "gate", "interpret"))
+def ivf_scan_pallas(queries: jax.Array, points: jax.Array, norms: jax.Array,
+                    centers: jax.Array, radii: jax.Array, ids: jax.Array,
+                    n_active: jax.Array, *, k: int, block_n: int, gate: bool,
+                    interpret: bool):
+    """Exact gated cluster-local scan.
+
+    queries (Q, d); points (n, d) label-sorted rows; norms (n,) cached fp32
+    ``||x||^2``; centers/radii the tile ball summaries; ids (Q, n_tiles) /
+    n_active (Q,) the per-query compacted probed-tile maps
+    (`core.bounds.compact_ids` over the probed-list coverage). Returns
+    ``(dists (Q, k) fp32, rows (Q, k) int32, gate_skipped (Q,) int32)`` —
+    rows index the SORTED layout (the caller maps through its permutation);
+    unfilled slots hold the (+inf, INT32_MAX) sentinel."""
+    Q, d = queries.shape
+    n = points.shape[0]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
+    nv = jnp.array([n], jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                   # ids, n_active, n_valid
+        grid=(Q, grid),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda qi, i, ids, na, nv: (qi, 0)),
+            pl.BlockSpec((block_n, d),
+                         lambda qi, i, ids, na, nv: (ids[qi, i], 0)),
+            pl.BlockSpec((block_n,),
+                         lambda qi, i, ids, na, nv: (ids[qi, i],)),
+            pl.BlockSpec((1, d), lambda qi, i, ids, na, nv: (ids[qi, i], 0)),
+            pl.BlockSpec((1,), lambda qi, i, ids, na, nv: (ids[qi, i],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda qi, i, ids, na, nv: (qi, 0)),
+            pl.BlockSpec((1, k), lambda qi, i, ids, na, nv: (qi, 0)),
+            pl.BlockSpec((1,), lambda qi, i, ids, na, nv: (qi,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k,), jnp.float32),
+            pltpu.VMEM((k,), jnp.int32),
+            pltpu.VMEM((1,), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ivf_scan_kernel, block_n=block_n, k=k, gate=gate),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids.astype(jnp.int32), n_active.astype(jnp.int32), nv,
+      queries, pts, nrm, centers.astype(jnp.float32),
+      radii.astype(jnp.float32))
+
+
+def _ivf_adc_kernel(ids_ref, nact_ref, nv_ref, q_ref, lut_ref, qdot_ref,
+                    codes_ref, lab_ref, u_ref, ctr_ref, rad_ref,
+                    dist_ref, idx_ref, skip_ref, tv_scr, ti_scr, ns_scr, *,
+                    block_n: int, k: int, gate: bool):
+    """ADC twin of `_ivf_scan_kernel`: scores are exact distances to the
+    PQ-reconstructed rows, assembled from the per-query LUT + routing dots +
+    per-row ``||x̂||^2`` — codes stream at n_sub bytes/row instead of the
+    raw 4d. The gate compares against balls over the RECONSTRUCTED rows, so
+    it is a value-noop for ADC scores too."""
+    qi = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        tv_scr[...] = jnp.full_like(tv_scr, jnp.inf)
+        ti_scr[...] = jnp.full_like(ti_scr, IDX_SENTINEL)
+        ns_scr[0] = 0
+
+    @pl.when(i < nact_ref[qi])
+    def _visit():
+        t = ids_ref[qi, i]
+        q = q_ref[...].astype(jnp.float32)              # (1, d)
+        qn = jnp.sum(q * q)
+        if gate:
+            dc, r, cn = _tile_ball(q, ctr_ref, rad_ref)
+            skip = _gate_skip(dc, r, cn, qn, tv_scr[k - 1])
+        else:
+            skip = jnp.full((), False)
+        ns_scr[0] += skip.astype(jnp.int32)
+
+        @pl.when(jnp.logical_not(skip))
+        def _score():
+            codes = codes_ref[...]                      # (block_n, n_sub) u8
+            n_sub = codes.shape[1]
+            n_codes = lut_ref.shape[2]
+            nlist = qdot_ref.shape[1]
+            # q·r̂ per row: one-hot(codes) contracted against the LUT — the
+            # pq_decode one-hot-matmul lookup, flattened to a single MXU dot
+            onehot = (codes[:, :, None].astype(jnp.int32)
+                      == jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_codes),
+                                                  2)).astype(jnp.float32)
+            qr = jax.lax.dot_general(
+                onehot.reshape(block_n, n_sub * n_codes),
+                lut_ref[0].reshape(n_sub * n_codes),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)     # (block_n,)
+            # q·c_list per row: one-hot over the streamed labels against the
+            # per-query routing dots (same MXU-gather idiom)
+            onl = (lab_ref[...][:, None]
+                   == jax.lax.broadcasted_iota(jnp.int32, (1, nlist), 1)
+                   ).astype(jnp.float32)
+            qc = jax.lax.dot_general(onl, qdot_ref[0],
+                                     (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            d2 = jnp.maximum(qn - 2.0 * (qr + qc)
+                             + u_ref[...].astype(jnp.float32), 0.0)
+            row = t * block_n + jax.lax.broadcasted_iota(
+                jnp.int32, (block_n,), 0)
+            _merge_block(tv_scr, ti_scr, d2, row, nv_ref[0], k=k)
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _finalize():
+        dist_ref[0, :] = tv_scr[...]
+        idx_ref[0, :] = ti_scr[...]
+        skip_ref[0] = ns_scr[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "gate", "interpret"))
+def ivf_adc_scan_pallas(queries: jax.Array, lut: jax.Array, qdots: jax.Array,
+                        codes: jax.Array, labels: jax.Array, u: jax.Array,
+                        centers: jax.Array, radii: jax.Array, ids: jax.Array,
+                        n_active: jax.Array, *, k: int, block_n: int,
+                        gate: bool, interpret: bool):
+    """PQ/ADC gated cluster-local scan.
+
+    queries (Q, d); lut (Q, n_sub, n_codes) per-query inner-product LUT
+    ``lut[s, c] = q_s · codebook[s, c]`` over the RESIDUAL codebook; qdots
+    (Q, nlist) routing dots ``q · centroid_l``; codes (n, n_sub) uint8;
+    labels (n,) int32 per-row list ids; u (n,) fp32 ``||x̂||^2``;
+    centers/radii the tile balls over the reconstructed rows. Returns the
+    `ivf_scan_pallas` triple with ADC distances."""
+    Q, d = queries.shape
+    n, n_sub = codes.shape
+    n_codes = lut.shape[2]
+    nlist = qdots.shape[1]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    cds = jnp.pad(codes, ((0, pad), (0, 0)))
+    lab = jnp.pad(labels.astype(jnp.int32), (0, pad))
+    up = jnp.pad(u.astype(jnp.float32), (0, pad))
+    nv = jnp.array([n], jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                   # ids, n_active, n_valid
+        grid=(Q, grid),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda qi, i, ids, na, nv: (qi, 0)),
+            pl.BlockSpec((1, n_sub, n_codes),
+                         lambda qi, i, ids, na, nv: (qi, 0, 0)),
+            pl.BlockSpec((1, nlist), lambda qi, i, ids, na, nv: (qi, 0)),
+            pl.BlockSpec((block_n, n_sub),
+                         lambda qi, i, ids, na, nv: (ids[qi, i], 0)),
+            pl.BlockSpec((block_n,),
+                         lambda qi, i, ids, na, nv: (ids[qi, i],)),
+            pl.BlockSpec((block_n,),
+                         lambda qi, i, ids, na, nv: (ids[qi, i],)),
+            pl.BlockSpec((1, d), lambda qi, i, ids, na, nv: (ids[qi, i], 0)),
+            pl.BlockSpec((1,), lambda qi, i, ids, na, nv: (ids[qi, i],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda qi, i, ids, na, nv: (qi, 0)),
+            pl.BlockSpec((1, k), lambda qi, i, ids, na, nv: (qi, 0)),
+            pl.BlockSpec((1,), lambda qi, i, ids, na, nv: (qi,)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k,), jnp.float32),
+            pltpu.VMEM((k,), jnp.int32),
+            pltpu.VMEM((1,), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ivf_adc_kernel, block_n=block_n, k=k, gate=gate),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids.astype(jnp.int32), n_active.astype(jnp.int32), nv,
+      queries, lut.astype(jnp.float32), qdots.astype(jnp.float32), cds, lab,
+      up, centers.astype(jnp.float32), radii.astype(jnp.float32))

@@ -526,3 +526,45 @@ def lloyd_assign_gated(points: jax.Array, centroids: jax.Array,
                prev_assign, prev_min_d2, prev_lb, prev_partials, prev_gaps,
                prev_super_sums, prev_super_counts, ids, n_active)
     return out + (skipped,)
+
+
+def ivf_scan(queries: jax.Array, points: jax.Array, norms: jax.Array,
+             centers: jax.Array, radii: jax.Array, ids: jax.Array,
+             n_active: jax.Array, *, k: int, block_n: int,
+             gate: bool = True, interpret: bool | None = None):
+    """Batched gated cluster-local exact scan (IVF serving's inner loop).
+
+    ``ids``/``n_active`` are the per-query compacted probed-tile maps
+    (`core.bounds.compact_ids` over the probed-list tile coverage);
+    ``centers``/``radii`` the prologue's ball summaries at the SAME
+    ``block_n``. Already batched over queries by its grid, so no
+    custom_vmap rule is needed. Returns (dists (Q, k) fp32, rows (Q, k)
+    int32 into the sorted layout, gate_skipped (Q,) int32)."""
+    from repro.kernels.ivf_scan import ivf_scan_pallas
+
+    _check_forced()
+    if interpret is None:
+        interpret = default_interpret()
+    return ivf_scan_pallas(queries, points, norms.astype(jnp.float32),
+                           centers, radii, ids, n_active, k=k,
+                           block_n=block_n, gate=gate, interpret=interpret)
+
+
+def ivf_adc_scan(queries: jax.Array, lut: jax.Array, qdots: jax.Array,
+                 codes: jax.Array, labels: jax.Array, u: jax.Array,
+                 centers: jax.Array, radii: jax.Array, ids: jax.Array,
+                 n_active: jax.Array, *, k: int, block_n: int,
+                 gate: bool = True, interpret: bool | None = None):
+    """Batched gated PQ/ADC scan: per-query LUT + routing dots against
+    streamed uint8 codes (n_sub bytes/row instead of 4d). ``centers``/
+    ``radii`` must be the balls over the RECONSTRUCTED rows so the gate is
+    exact for ADC scores. Same return triple as :func:`ivf_scan`."""
+    from repro.kernels.ivf_scan import ivf_adc_scan_pallas
+
+    _check_forced()
+    if interpret is None:
+        interpret = default_interpret()
+    return ivf_adc_scan_pallas(queries, lut, qdots, codes, labels,
+                               u.astype(jnp.float32), centers, radii, ids,
+                               n_active, k=k, block_n=block_n, gate=gate,
+                               interpret=interpret)

@@ -1,9 +1,29 @@
 """Pure-jnp oracles for the Pallas kernels. Every kernel test sweeps shapes and
-dtypes and asserts allclose against these."""
+dtypes and asserts allclose against these.
+
+The IVF twins (`ivf_scan_ref`, `ivf_adc_scan_ref`) are BITWISE mirrors, not
+merely allclose oracles: they replay the exact op sequence of the Pallas scan
+kernels — ``lax.map`` over queries (NOT vmap, so no batched 3-D contraction
+changes the arithmetic), the same shared gate predicate and lexicographic
+merge, ``jnp.where``-selected carries standing in for ``pl.when``. One
+deliberate deviation: scores are computed for the WHOLE padded array in one
+dot per query and sliced per tile from the materialized result, instead of
+dotting each (block_n, d) tile inside the loop. Per-row dot results are
+invariant to the operand's row count (the fused==pallas precedent), so the
+full-array rows equal the kernel's tile-dot rows bitwise — whereas a dot fed
+by a ``dynamic_slice`` inside the same jit gets the slice fused into it with
+a DIFFERENT accumulation order (observed 1-ulp drift on CPU), which would
+break the mirror. `ivf_bruteforce_topk` is the independent ground truth the
+exactness tests pin both against at ``nprobe == nlist``."""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.bounds import ivf_gate_skip
+from repro.core.topk import IDX_SENTINEL, init_topk, lex_topk, merge_topk
 
 
 def _d2(x: jax.Array, c: jax.Array) -> jax.Array:
@@ -142,3 +162,166 @@ def lloyd_assign_tiled_ref(points: jax.Array, centroids: jax.Array,
     super_counts = jnp.pad(tile_counts, ((0, spad), (0, 0))) \
         .reshape(-1, tps, k).sum(axis=1)
     return a, m, partials, gaps, super_sums, super_counts
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def ivf_bruteforce_topk(queries: jax.Array, points: jax.Array,
+                        norms: jax.Array, *, k: int):
+    """Ground-truth batched top-k: every query against EVERY row, one
+    lexicographic sort. Shares the scan kernels' arithmetic — cached
+    ``||x||^2``, a (n, d) x (1, d) fp32 dot per query (per-row results are
+    invariant to row-block height, the fused==pallas precedent), the same
+    ``max(xn - 2 dots + qn, 0)`` op order, and `core.topk`'s (value, index)
+    tie-break — so the gated scan at ``nprobe == nlist`` must match it
+    BITWISE, which is exactly what the exactness tests assert.
+
+    Returns (dists (Q, k) fp32, rows (Q, k) int32)."""
+    n = points.shape[0]
+    nrm = norms.astype(jnp.float32)
+    rows = jnp.arange(n, dtype=jnp.int32)
+
+    def one(q_row):
+        q = q_row[None, :].astype(jnp.float32)
+        qn = jnp.sum(q * q)
+        dots = jax.lax.dot_general(points, q.astype(points.dtype),
+                                   (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)[:, 0]
+        d2 = jnp.maximum(nrm - 2.0 * dots + qn, 0.0)
+        return lex_topk(d2, rows, k)
+
+    return jax.lax.map(one, queries)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "gate"))
+def ivf_scan_ref(queries: jax.Array, points: jax.Array, norms: jax.Array,
+                 centers: jax.Array, radii: jax.Array, ids: jax.Array,
+                 n_active: jax.Array, *, k: int, block_n: int, gate: bool):
+    """Bitwise twin of kernels.ivf_scan.ivf_scan_pallas: the gated
+    cluster-local exact scan replayed in pure jnp — ``lax.map`` over queries,
+    ``fori_loop`` over the compacted tile stream, ``jnp.where``-selected
+    carries mirroring ``pl.when``. Same signature and returns."""
+    n, d = points.shape
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    pts = jnp.pad(points, ((0, pad), (0, 0)))
+    nrm = jnp.pad(norms.astype(jnp.float32), (0, pad))
+    ctr = centers.astype(jnp.float32)
+    rad = radii.astype(jnp.float32)
+    iota = jnp.arange(block_n, dtype=jnp.int32)
+
+    def one(args):
+        q_row, tile_ids, nact = args
+        q = q_row[None, :].astype(jnp.float32)
+        qn = jnp.sum(q * q)
+        # whole-array scores once, sliced per tile below (see module note:
+        # bitwise equal to the kernel's per-tile dots, unlike a sliced-
+        # operand dot inside the loop)
+        dots = jax.lax.dot_general(
+            pts, q.astype(pts.dtype), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)[:, 0]
+        d2_all = jnp.maximum(nrm - 2.0 * dots + qn, 0.0)
+
+        def step(i, carry):
+            tv, ti, ns = carry
+            t = tile_ids[i]
+            visit = i < nact
+            if gate:
+                c = jax.lax.dynamic_slice(ctr, (t, 0), (1, d))
+                diff = c - q
+                dc = jnp.sqrt(jnp.sum(diff * diff))
+                cn = jnp.sqrt(jnp.sum(c * c))
+                skip = ivf_gate_skip(dc, rad[t], cn, qn, tv[k - 1])
+            else:
+                skip = jnp.full((), False)
+            ns = ns + jnp.where(visit, skip.astype(jnp.int32), 0)
+            d2 = jax.lax.dynamic_slice(d2_all, (t * block_n,), (block_n,))
+            row = t * block_n + iota
+            valid = row < n
+            cv = jnp.where(valid, d2, jnp.inf)
+            ci = jnp.where(valid, row, IDX_SENTINEL)
+            nv_, ni_ = merge_topk(tv, ti, cv, ci, k)
+            take = visit & jnp.logical_not(skip)
+            return (jnp.where(take, nv_, tv), jnp.where(take, ni_, ti), ns)
+
+        tv0, ti0 = init_topk(k)
+        return jax.lax.fori_loop(0, grid, step,
+                                 (tv0, ti0, jnp.zeros((), jnp.int32)))
+
+    return jax.lax.map(one, (queries, ids.astype(jnp.int32),
+                             n_active.astype(jnp.int32)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "gate"))
+def ivf_adc_scan_ref(queries: jax.Array, lut: jax.Array, qdots: jax.Array,
+                     codes: jax.Array, labels: jax.Array, u: jax.Array,
+                     centers: jax.Array, radii: jax.Array, ids: jax.Array,
+                     n_active: jax.Array, *, k: int, block_n: int,
+                     gate: bool):
+    """Bitwise twin of kernels.ivf_scan.ivf_adc_scan_pallas: the PQ/ADC
+    gated scan — per-query LUT contraction against one-hot codes, routing
+    dots gathered through one-hot labels — replayed in pure jnp. Same
+    signature and returns."""
+    n, n_sub = codes.shape
+    n_codes = lut.shape[2]
+    nlist = qdots.shape[1]
+    pad = (-n) % block_n
+    grid = (n + pad) // block_n
+    cds = jnp.pad(codes, ((0, pad), (0, 0)))
+    lab = jnp.pad(labels.astype(jnp.int32), (0, pad))
+    up = jnp.pad(u.astype(jnp.float32), (0, pad))
+    d = queries.shape[1]
+    ctr = centers.astype(jnp.float32)
+    rad = radii.astype(jnp.float32)
+    iota = jnp.arange(block_n, dtype=jnp.int32)
+    code_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_codes), 2)
+    list_iota = jax.lax.broadcasted_iota(jnp.int32, (1, nlist), 1)
+
+    def one(args):
+        q_row, q_lut, q_dot, tile_ids, nact = args
+        q = q_row[None, :].astype(jnp.float32)
+        qn = jnp.sum(q * q)
+        flat_lut = q_lut.astype(jnp.float32).reshape(n_sub * n_codes)
+        qd = q_dot.astype(jnp.float32)
+        # whole-array ADC scores once, sliced per tile below (see module
+        # note on bitwise row-count invariance of the one-hot dots)
+        n_pad = n + pad
+        onehot = (cds[:, :, None].astype(jnp.int32)
+                  == code_iota).astype(jnp.float32)
+        qr = jax.lax.dot_general(
+            onehot.reshape(n_pad, n_sub * n_codes), flat_lut,
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        onl = (lab[:, None] == list_iota).astype(jnp.float32)
+        qc = jax.lax.dot_general(onl, qd, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        d2_all = jnp.maximum(qn - 2.0 * (qr + qc) + up, 0.0)
+
+        def step(i, carry):
+            tv, ti, ns = carry
+            t = tile_ids[i]
+            visit = i < nact
+            if gate:
+                c = jax.lax.dynamic_slice(ctr, (t, 0), (1, d))
+                diff = c - q
+                dc = jnp.sqrt(jnp.sum(diff * diff))
+                cn = jnp.sqrt(jnp.sum(c * c))
+                skip = ivf_gate_skip(dc, rad[t], cn, qn, tv[k - 1])
+            else:
+                skip = jnp.full((), False)
+            ns = ns + jnp.where(visit, skip.astype(jnp.int32), 0)
+            d2 = jax.lax.dynamic_slice(d2_all, (t * block_n,), (block_n,))
+            row = t * block_n + iota
+            valid = row < n
+            cv = jnp.where(valid, d2, jnp.inf)
+            ci = jnp.where(valid, row, IDX_SENTINEL)
+            nv_, ni_ = merge_topk(tv, ti, cv, ci, k)
+            take = visit & jnp.logical_not(skip)
+            return (jnp.where(take, nv_, tv), jnp.where(take, ni_, ti), ns)
+
+        tv0, ti0 = init_topk(k)
+        return jax.lax.fori_loop(0, grid, step,
+                                 (tv0, ti0, jnp.zeros((), jnp.int32)))
+
+    return jax.lax.map(one, (queries, lut, qdots, ids.astype(jnp.int32),
+                             n_active.astype(jnp.int32)))

@@ -1,5 +1,8 @@
-"""repro.serve — batched serving engine + k-means++ KV product quantization."""
+"""repro.serve — batched serving engine, k-means++ KV product quantization,
+and IVF vector search over trained models."""
 from repro.serve.engine import Engine, RequestError, ServeConfig
 from repro.serve import kvquant
+from repro.serve.ivf import IvfIndex, IvfPq, SearchResult, default_nprobe
 
-__all__ = ["Engine", "RequestError", "ServeConfig", "kvquant"]
+__all__ = ["Engine", "RequestError", "ServeConfig", "kvquant",
+           "IvfIndex", "IvfPq", "SearchResult", "default_nprobe"]

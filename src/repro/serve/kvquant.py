@@ -23,11 +23,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import ClusterEngine
+from repro.core.guards import InvalidInputError, check_policy, guard_points
 from repro.core.kmeanspp import pairwise_d2
 
 
 class PQCodebook(NamedTuple):
     centroids: jax.Array      # (n_sub, 256, d_sub)
+
+
+def _check_codebook(cb: PQCodebook, *, what: str) -> None:
+    """Shape abuse is never sanitizable (core.guards policy): an empty or
+    malformed codebook raises typed regardless of the validate mode."""
+    c = jnp.asarray(cb.centroids)
+    if c.ndim != 3 or c.size == 0:
+        raise InvalidInputError(
+            f"{what}: codebook centroids must be a non-empty "
+            f"(n_sub, n_codes, d_sub) array, got shape {c.shape}")
+
+
+def _check_subspaces(d: int, n_sub: int, *, what: str) -> None:
+    if n_sub < 1 or d % n_sub != 0:
+        raise InvalidInputError(
+            f"{what}: d={d} must split into n_sub={n_sub} equal sub-vectors "
+            f"(d % n_sub == 0, n_sub >= 1)")
 
 
 class PQCache(NamedTuple):
@@ -72,14 +90,21 @@ def build_codebook(key: jax.Array, vectors: jax.Array, *, n_sub: int,
                    n_codes: int = 256, lloyd_iters: int = 10,
                    sample: int = 16384,
                    engine: Optional[ClusterEngine] = None,
-                   order=None) -> PQCodebook:
+                   order=None, validate: str = "raise") -> PQCodebook:
     """vectors (N, d) -> PQ codebook. d % n_sub == 0. The n_sub sub-space
     clusterings run as one batched multi-problem sweep through `engine`
     (default: the fused ClusterEngine; pass ClusterEngine('pallas') for the
     batch-grid kernels). ``order='morton'`` reorders each sub-space sample
-    into a tile-coherent layout for the bound-gated kernels."""
+    into a tile-coherent layout for the bound-gated kernels.
+
+    ``validate`` is the core.guards entry policy: 'raise' (typed
+    InvalidInputError on non-finite rows), 'sanitize' (zero offending rows
+    — a NaN training row would otherwise poison whole sub-space codebooks),
+    or 'off'. Shape abuse (d % n_sub != 0) always raises typed."""
+    check_policy(validate)
     N, d = vectors.shape
-    assert d % n_sub == 0, (d, n_sub)
+    _check_subspaces(d, n_sub, what="build_codebook")
+    vectors = guard_points(vectors, validate, name="vectors")
     dsub = d // n_sub
     take = min(sample, N)
     stride = max(N // take, 1)
@@ -90,9 +115,19 @@ def build_codebook(key: jax.Array, vectors: jax.Array, *, n_sub: int,
     return PQCodebook(cents)
 
 
-def encode(vectors: jax.Array, cb: PQCodebook) -> jax.Array:
-    """(..., d) -> (..., n_sub) uint8 codes."""
+def encode(vectors: jax.Array, cb: PQCodebook, *,
+           validate: str = "raise") -> jax.Array:
+    """(..., d) -> (..., n_sub) uint8 codes. ``validate`` guards the entry
+    (core.guards policy): non-finite rows raise/zero/pass; an empty codebook
+    or a d that does not match the codebook always raises typed."""
+    check_policy(validate)
+    _check_codebook(cb, what="encode")
     n_sub, n_codes, dsub = cb.centroids.shape
+    if vectors.shape[-1] != n_sub * dsub:
+        raise InvalidInputError(
+            f"encode: vectors dimension {vectors.shape[-1]} != codebook's "
+            f"n_sub * d_sub = {n_sub * dsub}")
+    vectors = guard_points(vectors, validate, name="vectors")
     lead = vectors.shape[:-1]
     x = vectors.reshape(-1, n_sub, dsub).astype(jnp.float32)
 
@@ -104,9 +139,19 @@ def encode(vectors: jax.Array, cb: PQCodebook) -> jax.Array:
     return codes.reshape(*lead, n_sub)
 
 
-def decode(codes: jax.Array, cb: PQCodebook) -> jax.Array:
-    """(..., n_sub) uint8 -> (..., d) reconstruction."""
+def decode(codes: jax.Array, cb: PQCodebook, *,
+           validate: str = "raise") -> jax.Array:
+    """(..., n_sub) uint8 -> (..., d) reconstruction. ``validate`` is
+    accepted for entry-policy symmetry with :func:`encode` (codes are
+    integers, so there are no non-finite rows to guard); an empty codebook
+    or a code width that does not match it always raises typed."""
+    check_policy(validate)
+    _check_codebook(cb, what="decode")
     n_sub, n_codes, dsub = cb.centroids.shape
+    if codes.shape[-1] != n_sub:
+        raise InvalidInputError(
+            f"decode: codes width {codes.shape[-1]} != codebook's "
+            f"n_sub = {n_sub}")
     lead = codes.shape[:-1]
     c = codes.reshape(-1, n_sub)
     parts = [cb.centroids[s][c[:, s]] for s in range(n_sub)]

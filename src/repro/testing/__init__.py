@@ -5,8 +5,9 @@ the ``FaultSpec`` it receives (any hashable object with ``.kind`` and
 ``.round`` works as the static ``_fault`` argument), so the core package
 has no dependency on this one.
 """
-from repro.testing.faults import (FaultSpec, flaky_read_fn, force_kernel_failure,
+from repro.testing.faults import (FaultSpec, corrupt_list_offsets,
+                                  flaky_read_fn, force_kernel_failure,
                                   kill_prefetch)
 
-__all__ = ["FaultSpec", "flaky_read_fn", "force_kernel_failure",
-           "kill_prefetch"]
+__all__ = ["FaultSpec", "corrupt_list_offsets", "flaky_read_fn",
+           "force_kernel_failure", "kill_prefetch"]

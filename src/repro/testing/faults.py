@@ -27,6 +27,11 @@ The injectors cover the layers a real deployment loses sleep over:
   * ``flaky_read_fn`` / ``kill_prefetch`` — host-side pipeline faults:
     transient reader failures (retry path) and a dead prefetch thread
     (typed ``PipelineError`` path).
+  * ``corrupt_list_offsets`` — serving-index state corruption: returns an
+    ``IvfIndex`` whose ``starts``/``counts`` offset table disagrees with
+    the stored layout (torn write / stale checkpoint half-merge). The
+    index's always-on offset revalidation must catch it: ``search`` raises
+    typed ``CorruptedStateError``, never silently-wrong neighbors.
 
 The contract the fault matrix asserts (tests/test_faults.py): every fault
 either RECOVERS BITWISE (guarded loops heal and the final result equals a
@@ -95,6 +100,35 @@ def flaky_read_fn(read_fn: Callable[[int], dict], *, fail_steps: dict
         return read_fn(s)
 
     return flaky
+
+
+IVF_OFFSET_FAULTS = ("shifted_start", "short_count", "negative_count")
+
+
+def corrupt_list_offsets(index, *, kind: str = "shifted_start"):
+    """Return a copy of an ``serve.ivf.IvfIndex`` with a corrupted offset
+    table (the rest of the index untouched — exactly the torn-state shape
+    a half-applied checkpoint restore produces):
+
+      - ``shifted_start``   one list's start drifts off the cumsum layout
+      - ``short_count``     one list under-reports its size (sum != n)
+      - ``negative_count``  one count goes negative
+
+    Every kind violates an invariant ``IvfIndex.search`` revalidates before
+    trusting the table, so the corrupted index must raise typed
+    ``CorruptedStateError`` on search — never return silently-wrong
+    neighbors."""
+    import jax.numpy as jnp
+
+    if kind not in IVF_OFFSET_FAULTS:
+        raise ValueError(
+            f"unknown offset fault {kind!r}; one of {IVF_OFFSET_FAULTS}")
+    if kind == "shifted_start":
+        return index._replace(starts=index.starts.at[-1].add(1))
+    if kind == "short_count":
+        return index._replace(counts=index.counts.at[0].add(-1))
+    return index._replace(
+        counts=index.counts.at[0].set(jnp.int32(-1)))
 
 
 def kill_prefetch(pipeline) -> None:

@@ -74,6 +74,10 @@ class TuneRecord:
     proposal: str = "hier"    # rejection proposal shape ('hier' | 'flat');
     #                           consumed, like sampler, only under
     #                           sampler="auto"
+    nprobe: int = 0           # advisory IVF probe width for serving a
+    #                           trained model of this shape (k = nlist);
+    #                           0 = no recommendation. serve.ivf consults
+    #                           it when search() is called with nprobe=None
     # -- provenance --------------------------------------------------------
     source: str = "heuristic"  # measured | model | heuristic | cache |
     #                            cache-nearest

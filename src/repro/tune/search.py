@@ -69,6 +69,10 @@ def _advisory(n: int, k: int, d: int) -> dict:
       read is already trivial, so recommend 'flat' there.
     * precision — the round kernels are memory-bound once the point block
       dominates the stream; bf16 halves exactly that term.
+    * nprobe — IVF serving width for a model of this shape (k = nlist):
+      k/8 keeps modelled scan traffic ~1/8 of a full pass while recall on
+      clustered data stays high (see BENCH_ivf.json); tiny k degenerates
+      to probing everything, where IVF buys nothing anyway.
     """
     return {
         "order": "morton" if d <= 8 else None,
@@ -76,6 +80,7 @@ def _advisory(n: int, k: int, d: int) -> dict:
         "refresh_block": 8 if k >= 32 else 0,
         "proposal": "hier" if k >= 32 else "flat",
         "precision": "bf16" if d >= 8 else "fp32",
+        "nprobe": max(1, k // 8),
     }
 
 
@@ -106,7 +111,7 @@ def search(n: int, k: int, d: int, *, backend: str = "fused",
         block_n=int(best[0]), tps=int(best[1]),
         order=adv["order"], precision=adv["precision"],
         sampler=adv["sampler"], refresh_block=int(adv["refresh_block"]),
-        proposal=adv["proposal"],
+        proposal=adv["proposal"], nprobe=int(adv["nprobe"]),
         source="measured" if measure.wallclock_available() else "model",
         predicted_bytes=float(best_cost),
         default_bytes=float(default_cost),

@@ -359,3 +359,49 @@ def test_minibatch_surfaces_pipeline_error_with_step():
     with pytest.raises(PipelineError, match="read_fn failed") as ei:
         eng.fit_minibatch(np.zeros((4, 2), np.float32), pipe, n_batches=16)
     assert ei.value.step == boom
+
+
+# ---------------------------------------------------------------------------
+# serving-index state corruption: a poisoned offset table must raise typed,
+# never return silently-wrong neighbors
+# ---------------------------------------------------------------------------
+
+
+def _small_index():
+    from repro.serve import IvfIndex
+    pts, _ = blobs(1024, 8, 8, seed=3)
+    return IvfIndex.build(jnp.asarray(pts), 8, block_n=128)
+
+
+@pytest.mark.parametrize("kind", ["shifted_start", "short_count",
+                                  "negative_count"])
+def test_corrupt_list_offsets_raises_typed_on_search(kind):
+    from repro.core.guards import CorruptedStateError
+    from repro.testing.faults import corrupt_list_offsets
+
+    idx = _small_index()
+    qs = jnp.asarray(blobs(4, 8, 8, seed=4)[0])
+    # sanity: the uncorrupted index serves
+    idx.search(qs, 5, nprobe=8)
+    bad = corrupt_list_offsets(idx, kind=kind)
+    with pytest.raises(CorruptedStateError, match="rebuild the index"):
+        bad.search(qs, 5, nprobe=8)
+    # the check is always on — validate='off' relaxes input guards only
+    with pytest.raises(CorruptedStateError):
+        bad.search(qs, 5, nprobe=8, validate="off")
+
+
+def test_ivf_search_survives_forced_kernel_failure_via_fallback():
+    """A forced Pallas failure walks the scan dispatch down the fallback
+    chain to the bitwise-identical ref twin instead of surfacing."""
+    idx = _small_index()
+    qs = jnp.asarray(blobs(4, 8, 8, seed=4)[0])
+    clean = idx.search(qs, 5, nprobe=8, backend="pallas")
+    with force_kernel_failure("ivf scan down"):
+        with pytest.raises(KernelFailureError):
+            idx.search(qs, 5, nprobe=8, backend="reference")
+    # chain exhausted -> typed raise; pallas entry would need a non-forced
+    # fused hop, which the force blocks too — both end typed, never silent
+    hurt = idx.search(qs, 5, nprobe=8, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(clean.indices),
+                                  np.asarray(hurt.indices))

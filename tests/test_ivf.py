@@ -1,0 +1,304 @@
+"""IVF search (ISSUE 10 tentpole): exactness, gating, ADC, and telemetry.
+
+The load-bearing claims, each pinned bitwise where the design promises
+bitwise: the exact path at ``nprobe == nlist`` IS brute force (all three
+scan backends), the kth-distance tile gate is a value-noop, the Pallas
+kernels and their pure-jnp twins are bit-identical on arbitrary probe
+maps, ADC equals decode-then-exact within fp tolerance, and the offset /
+counter contracts hold."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bounds, telemetry
+from repro.core.guards import InvalidInputError
+from repro.core.topk import IDX_SENTINEL, init_topk, lex_topk, merge_topk
+from repro.data.ordering import label_sort_order
+from repro.data.synthetic import blobs
+from repro.kernels import ops as kops
+from repro.kernels.ref import ivf_bruteforce_topk, ivf_scan_ref
+from repro.serve import IvfIndex, default_nprobe, kvquant
+
+BACKENDS = ("reference", "fused", "pallas")
+
+
+def _eq(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.fixture(scope="module")
+def index():
+    pts, _ = blobs(4000, 16, 32, seed=0)
+    return IvfIndex.build(jnp.asarray(pts), 32, block_n=128)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    return jnp.asarray(blobs(48, 16, 32, seed=1)[0])
+
+
+# ---------------------------------------------------------------------------
+# exactness: nprobe == nlist is brute force, bitwise, on every backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_full_probe_is_bruteforce_bitwise(index, queries, backend):
+    ei, ev = index.exhaustive(queries, 10)
+    r = index.search(queries, 10, nprobe=index.nlist, backend=backend)
+    _eq(r.indices, ei)
+    _eq(r.dists, ev)
+
+
+def test_backends_agree_bitwise_at_partial_probe(index, queries):
+    outs = [index.search(queries, 10, nprobe=8, backend=be)
+            for be in BACKENDS]
+    for r in outs[1:]:
+        _eq(r.indices, outs[0].indices)
+        _eq(r.dists, outs[0].dists)
+        _eq(r.gate_skipped, outs[0].gate_skipped)
+
+
+def test_scattered_layout_still_exact_at_full_probe():
+    pts, _ = blobs(2000, 8, 16, seed=2)
+    idx = IvfIndex.build(jnp.asarray(pts), 16, block_n=128, layout="none")
+    # layout='none' keeps caller order: perm is the identity
+    _eq(idx.perm, jnp.arange(2000, dtype=jnp.int32))
+    qs = jnp.asarray(blobs(16, 8, 16, seed=3)[0])
+    ei, ev = idx.exhaustive(qs, 5)
+    r = idx.search(qs, 5, nprobe=16)
+    _eq(r.indices, ei)
+    _eq(r.dists, ev)
+
+
+def test_k_exceeding_n_pads_with_sentinels():
+    pts, _ = blobs(300, 4, 4, seed=5)
+    idx = IvfIndex.build(jnp.asarray(pts), 4, block_n=128)
+    qs = jnp.asarray(blobs(3, 4, 4, seed=6)[0])
+    r = idx.search(qs, 310, nprobe=4)
+    assert r.indices.shape == (3, 310)
+    assert np.all(np.asarray(r.indices[:, 300:]) == IDX_SENTINEL)
+    assert np.all(np.isinf(np.asarray(r.dists[:, 300:])))
+    ei, ev = idx.exhaustive(qs, 310)
+    _eq(r.indices, ei)
+    _eq(r.dists, ev)
+
+
+# ---------------------------------------------------------------------------
+# recall at partial probe on clustered data
+# ---------------------------------------------------------------------------
+
+
+def test_recall_at_quarter_probe(index, queries):
+    ei, _ = index.exhaustive(queries, 10)
+    r = index.search(queries, 10, nprobe=index.nlist // 4)
+    ei, ri = np.asarray(ei), np.asarray(r.indices)
+    recall = np.mean([len(set(ri[q]) & set(ei[q])) / 10
+                      for q in range(ri.shape[0])])
+    assert recall >= 0.95, recall
+    # partial probing actually probes partially
+    assert np.asarray(r.probed_tiles).max() < index.n_tiles
+
+
+# ---------------------------------------------------------------------------
+# the kth-distance tile gate: skips traffic, never values
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nprobe", [8, 32])
+def test_gate_is_value_noop(index, queries, nprobe):
+    gated = index.search(queries, 10, nprobe=nprobe, gate=True)
+    plain = index.search(queries, 10, nprobe=nprobe, gate=False)
+    _eq(gated.indices, plain.indices)
+    _eq(gated.dists, plain.dists)
+    assert np.all(np.asarray(plain.gate_skipped) == 0)
+
+
+def test_gate_fires_on_clustered_data(index, queries):
+    r = index.search(queries, 10, nprobe=index.nlist, gate=True)
+    assert int(np.asarray(r.gate_skipped).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# kernel twins: pallas == pure-jnp ref, bitwise, on arbitrary probe maps
+# ---------------------------------------------------------------------------
+
+
+def test_scan_kernel_matches_ref_bitwise_on_random_probe_maps():
+    rng = np.random.default_rng(7)
+    n, d, Q, k, bn = 900, 8, 5, 6, 128
+    pts = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    qs = jnp.asarray(rng.normal(size=(Q, d)).astype(np.float32))
+    rc = bounds.prologue(pts, bn)
+    grid = -(-n // bn)
+    active = jnp.asarray(rng.random((Q, grid)) < 0.5)
+    ids, nact = jax.vmap(bounds.compact_ids)(active)
+    for gate in (True, False):
+        a = kops.ivf_scan(qs, pts, rc.norms, rc.centers, rc.radii, ids,
+                          nact, k=k, block_n=bn, gate=gate)
+        b = ivf_scan_ref(qs, pts, rc.norms, rc.centers, rc.radii, ids,
+                         nact, k=k, block_n=bn, gate=gate)
+        for x, y in zip(a, b):
+            _eq(x, y)
+
+
+def test_adc_kernel_matches_ref_bitwise(index, queries):
+    pts, _ = blobs(1500, 8, 8, seed=8)
+    idx = IvfIndex.build(jnp.asarray(pts), 8, block_n=128, pq_nsub=4)
+    qs = jnp.asarray(blobs(6, 8, 8, seed=9)[0])
+    outs = [idx.search(qs, 5, nprobe=8, mode="adc", backend=b)
+            for b in ("pallas", "fused")]
+    _eq(outs[0].indices, outs[1].indices)
+    _eq(outs[0].dists, outs[1].dists)
+    _eq(outs[0].gate_skipped, outs[1].gate_skipped)
+
+
+# ---------------------------------------------------------------------------
+# ADC path: exact distances to the PQ reconstruction
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def pq_index():
+    pts, _ = blobs(4000, 16, 32, seed=0)
+    return IvfIndex.build(jnp.asarray(pts), 32, block_n=128, pq_nsub=4)
+
+
+def test_adc_equals_decode_then_exact(pq_index, queries):
+    r = pq_index.search(queries, 10, nprobe=pq_index.nlist, mode="adc")
+    xhat = (kvquant.decode(pq_index.pq.codes,
+                           pq_index.pq.codebook).astype(jnp.float32)
+            + pq_index.centroids[pq_index.labels])
+    ev, ei = ivf_bruteforce_topk(queries, xhat, bounds.point_norms(xhat),
+                                 k=10)
+    np.testing.assert_allclose(np.asarray(r.dists), np.asarray(ev),
+                               rtol=1e-4, atol=1e-4)
+    _eq(r.indices, np.asarray(pq_index.perm)[np.asarray(ei)])
+
+
+def test_adc_gate_is_value_noop(pq_index, queries):
+    a = pq_index.search(queries, 10, nprobe=8, mode="adc", gate=True)
+    b = pq_index.search(queries, 10, nprobe=8, mode="adc", gate=False)
+    _eq(a.indices, b.indices)
+    _eq(a.dists, b.dists)
+
+
+def test_adc_requires_pq_storage(index, queries):
+    with pytest.raises(InvalidInputError, match="pq_nsub"):
+        index.search(queries, 5, mode="adc")
+
+
+# ---------------------------------------------------------------------------
+# telemetry + offsets + entry guards
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nprobe", [4, 16, 32])
+def test_counter_contract(index, queries, nprobe):
+    r = index.search(queries, 10, nprobe=nprobe)
+    telemetry.check_ivf_counters(
+        r.probed_lists, r.probed_tiles, r.gate_skipped,
+        n_queries=queries.shape[0], nlist=index.nlist,
+        n_tiles=index.n_tiles)
+    assert np.all(np.asarray(r.probed_lists) <= nprobe)
+
+
+def test_label_sort_order_offsets():
+    labels = jnp.asarray(np.random.default_rng(0).integers(0, 5, 200)
+                         .astype(np.int32))
+    perm, inv, starts, counts = label_sort_order(labels, nlist=5,
+                                                 return_offsets=True)
+    _eq(starts, jnp.cumsum(counts) - counts)
+    assert int(counts.sum()) == 200
+    srt = np.asarray(labels)[np.asarray(perm)]
+    for l in range(5):
+        s, c = int(starts[l]), int(counts[l])
+        assert np.all(srt[s:s + c] == l)
+    # historical 2-tuple shape untouched; offsets demand a static nlist
+    assert len(label_sort_order(labels)) == 2
+    with pytest.raises(ValueError, match="nlist"):
+        label_sort_order(labels, return_offsets=True)
+
+
+def test_build_and_search_validate_guards(index):
+    pts, _ = blobs(500, 8, 4, seed=10)
+    bad = np.asarray(pts).copy()
+    bad[3] = np.nan
+    with pytest.raises(InvalidInputError, match="non-finite"):
+        IvfIndex.build(bad, 4)
+    idx = IvfIndex.build(jnp.asarray(pts), 4, block_n=128)
+    badq = np.zeros((2, 8), np.float32)
+    badq[0, 0] = np.inf
+    with pytest.raises(InvalidInputError, match="non-finite"):
+        idx.search(badq, 3)
+    r = idx.search(np.asarray(badq), 3, validate="sanitize")
+    assert np.isfinite(np.asarray(r.dists)).all()
+    with pytest.raises(InvalidInputError, match="layout"):
+        IvfIndex.build(jnp.asarray(pts), 4, layout="zorder")
+    with pytest.raises(InvalidInputError, match="mode"):
+        index.search(jnp.zeros((1, 16)), 3, mode="fuzzy")
+
+
+def test_kvquant_entry_guards():
+    key = jax.random.PRNGKey(0)
+    vecs = jnp.asarray(np.random.default_rng(1).normal(size=(256, 8))
+                       .astype(np.float32))
+    with pytest.raises(InvalidInputError, match="n_sub"):
+        kvquant.build_codebook(key, vecs, n_sub=3)
+    bad = np.asarray(vecs).copy()
+    bad[0, 0] = np.nan
+    with pytest.raises(InvalidInputError, match="non-finite"):
+        kvquant.build_codebook(key, bad, n_sub=4)
+    cb = kvquant.build_codebook(key, vecs, n_sub=4, n_codes=16)
+    with pytest.raises(InvalidInputError, match="dimension"):
+        kvquant.encode(jnp.zeros((2, 6)), cb)
+    with pytest.raises(InvalidInputError, match="n_sub"):
+        kvquant.decode(jnp.zeros((2, 3), jnp.uint8), cb)
+    empty = kvquant.PQCodebook(jnp.zeros((0, 0, 0)))
+    with pytest.raises(InvalidInputError, match="codebook"):
+        kvquant.encode(vecs, empty)
+    with pytest.raises(InvalidInputError, match="policy"):
+        kvquant.encode(vecs, cb, validate="lenient")
+    # sanitize zeroes the poisoned row and round-trips
+    codes = kvquant.encode(bad, cb, validate="sanitize")
+    assert codes.shape == (256, 4)
+
+
+def test_default_nprobe_heuristic_and_advisory(tmp_path, monkeypatch):
+    from repro import tune
+
+    monkeypatch.delenv("REPRO_TUNE_CACHE", raising=False)
+    assert default_nprobe(4000, 32, 16) == 4
+    assert default_nprobe(4000, 4, 16) == 1
+    # a persisted advisory record wins over the heuristic
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path))
+    cache = tune.TuneCache(str(tmp_path))
+    cache.put(tune.TuneRecord(n=4000, k=32, d=16, backend="ivf",
+                              dtype="float32", nprobe=12))
+    cache.save()
+    assert default_nprobe(4000, 32, 16) == 12
+
+
+# ---------------------------------------------------------------------------
+# the lexicographic top-k primitive: blocked merge == global sort
+# ---------------------------------------------------------------------------
+
+
+def test_merge_topk_is_blocking_invariant():
+    rng = np.random.default_rng(11)
+    vals = jnp.asarray(rng.random(257).astype(np.float32))
+    idxs = jnp.arange(257, dtype=jnp.int32)
+    want = lex_topk(vals, idxs, 9)
+    tv, ti = init_topk(9)
+    for lo in range(0, 257, 64):     # uneven final block on purpose
+        tv, ti = merge_topk(tv, ti, vals[lo:lo + 64], idxs[lo:lo + 64], 9)
+    _eq(tv, want[0])
+    _eq(ti, want[1])
+
+
+def test_lex_topk_breaks_ties_by_index():
+    vals = jnp.asarray([1.0, 0.5, 0.5, 2.0], jnp.float32)
+    idxs = jnp.asarray([3, 2, 1, 0], jnp.int32)
+    tv, ti = lex_topk(vals, idxs, 2)
+    _eq(ti, jnp.asarray([1, 2], jnp.int32))
