@@ -175,7 +175,7 @@ class IvfIndex(NamedTuple):
 
         # routing hierarchy: pow2 groups of ~sqrt(nlist) consecutive
         # centroids; ball stats over REAL members only (masked pad)
-        g = 1 << ((int(nlist - 1).bit_length() + 1) // 2) if nlist > 1 else 1
+        g = _super_group_size(int(nlist))
         n_sup = -(-nlist // g)
         cpad = jnp.pad(centroids, ((0, n_sup * g - nlist), (0, 0)))
         member = (jnp.arange(n_sup * g) < nlist).reshape(n_sup, g)
@@ -376,6 +376,14 @@ def default_nprobe(n: int, nlist: int, d: int) -> int:
     return max(1, int(nlist) // 8)
 
 
+def _super_group_size(nlist: int) -> int:
+    """Centroids per super group: the pow2 nearest ~sqrt(nlist). Build and
+    routing must agree on this — ``sup_of_list`` in :func:`_route` is
+    reconstructed from it, and any mismatch maps centroids to the wrong
+    super ball, breaking the exact-routing guarantee."""
+    return 1 << ((int(nlist - 1).bit_length() + 1) // 2) if nlist > 1 else 1
+
+
 @functools.partial(jax.jit, static_argnames=("nprobe",))
 def _route(q, centroids, centroid_norms, sup_c, sup_r, sup_sizes, *,
            nprobe: int):
@@ -393,8 +401,7 @@ def _route(q, centroids, centroid_norms, sup_c, sup_r, sup_sizes, *,
     rerank). Returns (probed (Q, nlist) bool, qdots (Q, nlist) fp32 — the
     routing dots the ADC path reuses)."""
     nlist = centroids.shape[0]
-    n_sup, _ = sup_c.shape
-    g = -(-nlist // n_sup)
+    g = _super_group_size(nlist)
     qn = jnp.sum(q * q, axis=1)                                # (Q,)
 
     sc2 = jnp.sum(sup_c * sup_c, axis=1)

@@ -85,6 +85,35 @@ def test_k_exceeding_n_pads_with_sentinels():
     _eq(r.dists, ev)
 
 
+@pytest.mark.parametrize("nlist", [5, 20])
+def test_routing_exact_at_partial_probe_for_non_pow2_nlist(nlist):
+    # non-pow2 nlist is where the build-time pow2 super-group size differs
+    # from a naive ceil(nlist/n_sup) rederivation; routing must still
+    # probe exactly the true top-nprobe centroids
+    from repro.serve import ivf as ivf_mod
+
+    pts, _ = blobs(3000, 12, nlist, seed=12)
+    idx = IvfIndex.build(jnp.asarray(pts), nlist, block_n=128)
+    qs = jnp.asarray(blobs(24, 12, nlist, seed=13)[0])
+    qn = jnp.sum(qs * qs, axis=1)
+    cd2 = np.asarray(jnp.maximum(
+        qn[:, None] - 2.0 * (qs @ idx.centroids.T)
+        + idx.centroid_norms[None, :], 0.0))
+    for nprobe in (1, 2, nlist // 2, nlist):
+        probed, _ = ivf_mod._route(
+            qs, idx.centroids, idx.centroid_norms, idx.super_centers,
+            idx.super_radii, idx.super_sizes, nprobe=nprobe)
+        p = np.asarray(probed)
+        assert np.all(p.sum(axis=1) == nprobe)
+        true = np.argsort(cd2, axis=1)[:, :nprobe]
+        assert np.all(np.take_along_axis(p, true, axis=1))
+    # and the end-to-end exactness anchor holds at full probe
+    ei, ev = idx.exhaustive(qs, 7)
+    r = idx.search(qs, 7, nprobe=nlist)
+    _eq(r.indices, ei)
+    _eq(r.dists, ev)
+
+
 # ---------------------------------------------------------------------------
 # recall at partial probe on clustered data
 # ---------------------------------------------------------------------------
